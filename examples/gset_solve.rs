@@ -1,0 +1,44 @@
+//! Gset benchmark mini-run: synthesize a Table I instance and race the
+//! full Table II solver line-up on it (scaled-down budgets; the full
+//! run is `cargo bench --bench table2_quality`).
+//!
+//!     cargo run --release --example gset_solve -- --instance G11 --sweeps 500
+
+use snowball::baselines::{table2_lineup, Budget};
+use snowball::cli::Args;
+use snowball::graph::gset::{self, GsetId};
+use snowball::problems::MaxCut;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let name = args.get_or("instance", "G11");
+    let sweeps: u64 = args.get_parse_or("sweeps", 500u64)?;
+    let seed: u64 = args.get_parse_or("seed", 42u64)?;
+
+    let id = GsetId::ALL
+        .iter()
+        .copied()
+        .find(|i| i.name().eq_ignore_ascii_case(&name))
+        .ok_or_else(|| anyhow::anyhow!("unknown instance {name}"))?;
+    let g = gset::load_or_synthesize(id, None, seed);
+    println!(
+        "{}: |V|={} |E|={} density={:.2}% (synthesized to Table I stats)",
+        id.name(),
+        g.n,
+        g.edge_count(),
+        g.density() * 100.0
+    );
+    let problem = MaxCut::new(g);
+
+    println!("{:>8} {:>10} {:>12}", "solver", "cut", "ms");
+    for solver in table2_lineup() {
+        let r = solver.solve(problem.model(), Budget::sweeps(sweeps), seed);
+        println!(
+            "{:>8} {:>10} {:>12.1}",
+            solver.name(),
+            problem.cut_of_energy(r.best_energy),
+            r.wall.as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}

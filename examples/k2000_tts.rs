@@ -1,0 +1,168 @@
+//! **End-to-end driver** (DESIGN.md §6): the paper's headline experiment
+//! on a real workload — TTS(0.99) on the K2000 Max-Cut instance
+//! (complete graph, 2000 spins, J ∈ {±1}), exercising the full stack:
+//!
+//!  1. workload construction (graph substrate, Table I statistics),
+//!  2. the L3 coordinator fanning replicas over the thread pool
+//!     (native engine, both RSA and RWA modes),
+//!  3. the AOT **XLA backend** (L1 Pallas + L2 JAX scan loaded via PJRT)
+//!     advancing a chain chunk-by-chunk with the coupling matrix resident
+//!     on device — proving all three layers compose at K2000 scale,
+//!  4. TTS(0.99) statistics (Eq. 32) + FPGA cycle-model projection.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example k2000_tts -- [--replicas 16] [--sweeps 1500]
+//!         [--threshold 32500] [--xla-chunks 2]
+
+use snowball::cli::Args;
+use snowball::coordinator::{Backend, Coordinator, JobSpec};
+use snowball::engine::{Mode, Schedule};
+use snowball::graph::gset::{self, GsetId};
+use snowball::harness;
+use snowball::hwsim::{Geometry, HwModel};
+use snowball::problems::MaxCut;
+use snowball::runtime::{chunk::ChunkState, ArtifactManifest, ChunkRunner, Runtime};
+use snowball::tts;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let replicas: u32 = args.get_parse_or("replicas", 12u32)?;
+    let sweeps: u64 = args.get_parse_or("sweeps", 800u64)?;
+    let threshold: i64 = args.get_parse_or("threshold", 32_500i64)?;
+    let xla_chunks: u64 = args.get_parse_or("xla-chunks", 2u64)?;
+    let seed: u64 = args.get_parse_or("seed", 1u64)?;
+
+    println!("== K2000 end-to-end driver ==");
+    let g = gset::load_or_synthesize(GsetId::K2000, None, seed);
+    let problem = MaxCut::new(g);
+    let model = problem.model();
+    let n = model.len() as u64;
+    let target_energy = problem.energy_of_cut(threshold);
+    println!(
+        "instance: N={} |E|={} threshold cut {} (energy {})",
+        n,
+        problem.graph.edge_count(),
+        threshold,
+        target_energy
+    );
+
+    // ---- native coordinator runs: RSA and RWA --------------------------
+    let coord = Coordinator::start(0);
+    let schedule = Schedule::Geometric { t0: 10.0, t1: 0.05 };
+    let hw = HwModel::default();
+    let geom = Geometry { n: n as usize, planes: 1 };
+    let mut rows: Vec<tts::TtsRow> = Vec::new();
+    for mode in [Mode::RouletteWheel, Mode::RandomScan] {
+        let steps = sweeps * n;
+        let id = coord.submit(JobSpec {
+            model: Arc::new(model.clone()),
+            label: format!("K2000-{}", mode.name()),
+            mode,
+            schedule: schedule.clone(),
+            steps,
+            replicas,
+            seed,
+            target_energy: Some(target_energy),
+            backend: Backend::Native,
+        });
+        let result = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;
+        let est = result.successes(target_energy);
+        let t_a = result.mean_replica_seconds();
+        let best_cut = problem.cut_of_energy(result.best_energy());
+        println!(
+            "{}: best cut {} | P_a {}/{} | t_a {:.1} ms | TTS(0.99) {}",
+            mode.name(),
+            best_cut,
+            est.successes,
+            est.runs,
+            t_a * 1e3,
+            harness::fmt_ms(tts::tts99(t_a, est))
+        );
+        rows.push(tts::TtsRow::measured(mode.name(), "CPU (native)", t_a, est));
+        // FPGA @300MHz projection via the cycle model.
+        let report = match mode {
+            Mode::RandomScan => hw.random_scan_run(geom, steps, steps / 2),
+            _ => hw.roulette_run(geom, steps),
+        };
+        rows.push(tts::TtsRow::measured(
+            &format!("{} (FPGA-projected)", mode.name()),
+            "FPGA @300MHz",
+            report.end_to_end_seconds,
+            est,
+        ));
+    }
+    coord.shutdown();
+
+    // ---- XLA backend: the AOT artifact at K2000 scale -------------------
+    match (ArtifactManifest::discover(), Runtime::cpu()) {
+        (Ok(manifest), Ok(rt)) => {
+            if let Some(spec) = manifest.find_padded("anneal_chunk", n as usize) {
+                let chunk_len = spec.chunk.unwrap();
+                println!(
+                    "\nXLA backend: artifact {} (N={} chunk={})",
+                    spec.name, spec.n, chunk_len
+                );
+                let runner = ChunkRunner::new(&rt, spec, model, seed)?;
+                let spins = snowball::ising::SpinVec::random(
+                    model.len(),
+                    &snowball::rng::StatelessRng::new(seed),
+                );
+                let mut state = ChunkState::init(model, spins);
+                let total = chunk_len * xla_chunks;
+                let temps = schedule.materialize(total);
+                let start = std::time::Instant::now();
+                for c in 0..xla_chunks {
+                    let lo = (c * chunk_len) as usize;
+                    runner.run_chunk(&rt, &mut state, &temps[lo..lo + chunk_len as usize])?;
+                }
+                let wall = start.elapsed();
+                println!(
+                    "XLA: {} steps in {:?} ({:.1} us/step), energy {} -> cut {}",
+                    total,
+                    wall,
+                    wall.as_secs_f64() * 1e6 / total as f64,
+                    state.energy,
+                    problem.cut_of_energy(state.energy as i64)
+                );
+                println!("(composition proof: rust/tests/xla_parity.rs asserts bit-parity with the native engine)");
+            } else {
+                println!("\nXLA backend: no anneal_chunk artifact ≥ N={n}; run `make artifacts`");
+            }
+        }
+        (m, r) => {
+            println!(
+                "\nXLA backend unavailable ({})",
+                m.err().map(|e| e.to_string()).unwrap_or_else(|| r
+                    .err()
+                    .map(|e| e.to_string())
+                    .unwrap_or_default())
+            );
+        }
+    }
+
+    // ---- summary table --------------------------------------------------
+    println!();
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.machine.clone(),
+                r.hardware.clone(),
+                format!("{:.3}", r.t_a_ms),
+                format!("{:.2}", r.p_a),
+                if r.tts99_ms.is_finite() { format!("{:.3}", r.tts99_ms) } else { "inf".into() },
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        harness::render_table(
+            "K2000 TTS(0.99) summary",
+            &["Machine", "Hardware", "t_a [ms]", "P_a", "TTS(0.99) [ms]"],
+            &table
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,13 @@
+// profile: RWA dense hot path, N=2000, constant T
+use snowball::engine::{EngineConfig, Mode, Schedule, SnowballEngine};
+fn main() {
+    let rng = snowball::rng::StatelessRng::new(1);
+    let g = snowball::graph::generators::complete(2000, &[-1, 1], &rng);
+    let p = snowball::problems::MaxCut::new(g);
+    let mut cfg = EngineConfig::new(Mode::RouletteWheel, 30_000, 3);
+    cfg.schedule = Schedule::Constant(1.0);
+    let mut e = SnowballEngine::new(p.model(), cfg);
+    let start = std::time::Instant::now();
+    let r = e.run();
+    println!("{} steps, {:?}, {} flips, E={}", r.steps, start.elapsed(), r.flips, r.final_energy);
+}

@@ -1,0 +1,62 @@
+//! Service demo: start the coordinator + TCP service, then act as a
+//! client — submit jobs, poll status, fetch results and metrics over the
+//! line protocol. This is the "host software" view of the Ising machine.
+//!
+//!     cargo run --release --example serve
+
+use snowball::coordinator::{Coordinator, Service};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(stream, "{req}").expect("write");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read");
+    let line = line.trim().to_string();
+    println!("> {req}\n< {line}");
+    line
+}
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(0);
+    let svc = Service::bind(coord, "127.0.0.1:0")?;
+    let addr = svc.serve_in_background();
+    println!("service on {addr}\n");
+
+    let mut s = TcpStream::connect(addr)?;
+    let mut r = BufReader::new(s.try_clone()?);
+
+    request(&mut s, &mut r, "PING");
+    // Two concurrent jobs of different sizes.
+    let j1 = request(&mut s, &mut r, "SOLVE instance=er:128:600 mode=rwa steps=30000 replicas=6 seed=3 target=-260");
+    let j2 = request(&mut s, &mut r, "SOLVE instance=G11 mode=rsa steps=200000 replicas=4 seed=5");
+    let id1: u64 = j1.rsplit('=').next().unwrap().parse()?;
+    let id2: u64 = j2.rsplit('=').next().unwrap().parse()?;
+
+    for id in [id1, id2] {
+        loop {
+            let st = request(&mut s, &mut r, &format!("STATUS id={id}"));
+            if st.contains("state=done") {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        request(&mut s, &mut r, &format!("RESULT id={id} target=-260"));
+    }
+    // Metrics dump (multi-line; read until END).
+    writeln!(s, "METRICS")?;
+    println!("> METRICS");
+    let mut line = String::new();
+    loop {
+        line.clear();
+        r.read_line(&mut line)?;
+        let t = line.trim_end();
+        println!("< {t}");
+        if t.ends_with("END") {
+            break;
+        }
+    }
+    request(&mut s, &mut r, "QUIT");
+    println!("\nserve demo OK");
+    Ok(())
+}

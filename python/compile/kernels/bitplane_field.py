@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: bit-plane local-field initialization.
+
+FPGA → TPU adaptation of the Hamming-weight accumulator (Eqs. 14–16).
+The FPGA streams 64-coupler words through popcount units; the MXU-shaped
+equivalent is a plane-weighted mat-vec: with signed planes
+``P_b = B⁺_b − B⁻_b ∈ {−1,0,1}``,
+
+    u^(J) = Σ_b 2^b · (P_b @ s),
+
+one (block × N) tile of each plane resident in VMEM per grid step — the
+BlockSpec plays the role the row-major BRAM bursts did. Products are
+exact in f32 (entries ±1, partial sums ≤ N < 2^24) and accumulated in
+f64 across planes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 64
+
+
+def _kernel(planes_ref, weights_ref, s_ref, o_ref):
+    """Accumulate Σ_b 2^b (P_b @ s) for one row block."""
+    planes = planes_ref[...]  # [B, block, N] f32
+    s = s_ref[...]  # [N] f32
+    w = weights_ref[...]  # [B] f32 (2^b)
+    # Per-plane mat-vec on the MXU; weighted f64 accumulation.
+    prods = jnp.einsum("brn,n->br", planes, s, preferred_element_type=jnp.float32)
+    acc = jnp.sum(prods.astype(jnp.float64) * w.astype(jnp.float64)[:, None], axis=0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def field_init(planes_signed, s, row_block=ROW_BLOCK):
+    """Coupler-induced local fields from signed bit-planes.
+
+    planes_signed: f32[B, N, N] with entries in {−1, 0, +1}
+    s:             f32[N] spins (±1)
+    →              f64[N]  (u^(J) = Σ_j J_ij s_j)
+    """
+    b, n, _ = planes_signed.shape
+    if n % row_block != 0:
+        row_block = n
+    weights = jnp.asarray([float(1 << p) for p in range(b)], dtype=jnp.float32)
+    grid = (n // row_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, row_block, n), lambda i: (0, i, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(planes_signed, weights, s)

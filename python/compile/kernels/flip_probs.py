@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: per-spin Glauber flip probabilities (Q16).
+
+The FPGA evaluates all N candidate flips in parallel lanes through the
+piecewise-linear LUT (paper §IV-B3a/c). On a TPU-shaped machine the same
+structure is a VPU-vectorized PWL over spin blocks held in VMEM; the
+BlockSpec below expresses the lane blocking the hardware did with BRAM
+port pairs (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom
+calls the CPU PJRT plugin cannot run; interpret mode lowers to plain HLO
+with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pwl
+
+# Spin-lane block per grid step (the FPGA's eval_lanes analogue; a VPU
+# lane multiple).
+BLOCK = 256
+
+
+def _kernel(s_ref, u_ref, temp_ref, table_ref, o_ref):
+    """One block: ΔE = 2·s·u, then the PWL LUT at ΔE/T (Eqs. 24–25).
+
+    The Q16 segment table arrives as an input (pallas kernels cannot
+    capture array constants), shared across all grid steps.
+    """
+    s = s_ref[...].astype(jnp.float64)
+    u = u_ref[...]
+    temp = temp_ref[0]
+    de = 2.0 * s * u
+    o_ref[...] = pwl.flip_prob_q16_with_table(de, temp, table_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def flip_probs_q16(s, u, temp, block=BLOCK):
+    """Q16 flip probabilities for all spins.
+
+    s:    f32[N] spins (±1)
+    u:    f64[N] local fields (integer-valued)
+    temp: f64[1] temperature
+    →     u32[N]
+    """
+    n = s.shape[0]
+    if n % block != 0:
+        # Small instances: fall back to a single block.
+        block = n
+    grid = (n // block,)
+    table = jnp.asarray(pwl.TABLE_F64)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((pwl.SEGMENTS + 2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(s, u, temp, table)

@@ -1,0 +1,104 @@
+"""Piecewise-linear Glauber LUT — jnp mirror of ``rust/src/engine/lut.rs``.
+
+The Q16 table and evaluation order are replicated operation-for-operation
+in f64 so the XLA chunk and the Rust engine compute *identical* flip
+probabilities (parity asserted by ``python/tests/test_pwl_parity.py`` and
+``rust/tests/xla_parity.rs``).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+ONE_Q16 = 1 << 16
+SEGMENTS = 256
+Z_MAX = 16.0
+_STEP = 2.0 * Z_MAX / SEGMENTS
+INV_STEP = 1.0 / _STEP
+
+
+def glauber_exact(z):
+    """Exact Glauber flip probability 1/(1+e^z)."""
+    return 1.0 / (1.0 + np.exp(z))
+
+
+def build_table():
+    """Q16 endpoint table, identical to ``PwlLogistic::new(256, 16.0)``."""
+    zs = -Z_MAX + _STEP * np.arange(SEGMENTS + 1)
+    vals = np.array(
+        # Python round() is banker's; Rust f64::round() rounds half away
+        # from zero — use floor(x+0.5) which matches for positive values.
+        [math.floor(glauber_exact(z) * ONE_Q16 + 0.5) for z in zs],
+        dtype=np.uint32,
+    )
+    return vals
+
+
+TABLE = build_table()
+# f64 view used inside lowered graphs, padded with a duplicated tail entry
+# so idx+1 is always in range (mirrors rust `table_f64`). NB: the
+# xla_extension 0.5.1 runtime that executes our AOT artifacts mis-executes
+# HLO `gather` (returns index garbage — see DESIGN.md §AOT-constraints),
+# so all table lookups below are one-hot contractions instead of
+# `table[idx]`. On a real TPU that is also the natural MXU formulation of
+# a small LUT.
+TABLE_F64 = np.concatenate([TABLE.astype(np.float64), TABLE[-1:].astype(np.float64)])
+
+
+def eval_q16(z, table_f64=None):
+    """PWL evaluation at f64 ``z`` (1-D) → uint32 Q16.
+
+    Bit-identical to rust ``PwlLogistic::eval_q16``: clamp position into
+    [0, SEGMENTS], floor to segment index, lerp between padded-f64 table
+    endpoints, truncate to u32.
+    """
+    z = jnp.asarray(z, dtype=jnp.float64)
+    table_f = jnp.asarray(TABLE_F64) if table_f64 is None else table_f64
+    pos = jnp.clip((z + Z_MAX) * INV_STEP, 0.0, float(SEGMENTS))
+    idx = jnp.floor(pos).astype(jnp.int32)  # 0..=SEGMENTS
+    frac = pos - idx.astype(jnp.float64)
+    # Gather-free segment lookup: one-hot row per lane. The contraction
+    # runs in f32 — exact, because the one-hot has a single 1 per row and
+    # every table value is an integer ≤ 2^16 (< 2^24) — and converts to
+    # f64 only for the lerp, matching the Rust datapath bit-for-bit at
+    # half the memory traffic of an f64 one-hot (§Perf L2).
+    eq = idx[..., None] == jnp.arange(SEGMENTS + 1, dtype=jnp.int32)
+    onehot = jnp.where(eq, 1.0, 0.0).astype(jnp.float32)
+    table32 = table_f.astype(jnp.float32)  # exact: integers ≤ 2^16
+    a = (onehot @ table32[: SEGMENTS + 1]).astype(jnp.float64)
+    b = (onehot @ table32[1 : SEGMENTS + 2]).astype(jnp.float64)
+    return (a + (b - a) * frac).astype(jnp.uint32)  # f64 → u32 truncation
+
+
+def flip_prob_q16(delta_e, temp):
+    """Glauber flip probability in Q16 (rust ``flip_prob_q16``).
+
+    ``delta_e`` f64 (integer-valued), ``temp`` f64 scalar or array.
+    Handles the T <= 0 zero-temperature limits of Fig. 3.
+    """
+    return flip_prob_q16_with_table(delta_e, temp, jnp.asarray(TABLE_F64))
+
+
+def flip_prob_q16_with_table(delta_e, temp, table_f64):
+    """`flip_prob_q16` with an explicit table input (pallas kernels must
+    receive the table as an argument rather than a captured constant)."""
+    delta_e = jnp.asarray(delta_e, dtype=jnp.float64)
+    temp = jnp.asarray(temp, dtype=jnp.float64)
+    safe_t = jnp.where(temp > 0.0, temp, 1.0)
+    # Reciprocal-then-multiply, matching the Rust hot loop bit-for-bit
+    # (rust/src/engine/lut.rs::flip_prob_q16_inv).
+    interp = eval_q16(delta_e * (1.0 / safe_t), table_f64)
+    zero_t = jnp.where(
+        delta_e < 0,
+        jnp.uint32(ONE_Q16),
+        jnp.where(delta_e == 0, jnp.uint32(ONE_Q16 // 2), jnp.uint32(0)),
+    )
+    return jnp.where(temp > 0.0, interp, zero_t)
+
+
+# NB: endpoint constants used by eval_q16's domain clamp: TABLE[0] is
+# exactly ONE_Q16 and TABLE[-1] exactly 0 for (256 segments, z_max 16) —
+# asserted here so a table reconfiguration cannot silently break the
+# clamp shortcut above.
+assert TABLE[0] == ONE_Q16 and TABLE[-1] == 0

@@ -1,0 +1,123 @@
+"""Pure-numpy correctness oracles for the Pallas kernels and the chunk step.
+
+These deliberately avoid ``pallas_call`` and the jnp helper code paths,
+so a bug in the kernels cannot hide in a shared implementation:
+``flip_probs_ref`` re-derives the PWL from the table with python floats;
+``field_init_ref`` is an exact integer mat-vec; ``roulette_select_ref``
+mirrors the Rust prefix scan; ``chunk_step_ref`` is the per-step oracle
+for the full anneal chunk.
+"""
+
+import numpy as np
+
+from . import pwl, rng_py
+
+
+def flip_probs_ref(s, u, temp):
+    """Q16 flip probabilities, straight-line implementation."""
+    s = np.asarray(s, dtype=np.float64)
+    u = np.asarray(u, dtype=np.float64)
+    t = float(np.asarray(temp).reshape(-1)[0])
+    de = 2.0 * s * u
+    out = np.zeros(s.shape[0], dtype=np.uint32)
+    inv_t = 1.0 / t if t > 0.0 else 0.0
+    tf = pwl.TABLE_F64
+    for i, z_num in enumerate(de):
+        if t <= 0.0:
+            out[i] = pwl.ONE_Q16 if z_num < 0 else (pwl.ONE_Q16 // 2 if z_num == 0 else 0)
+            continue
+        # Mirrors rust eval_q16: reciprocal multiply, clamp, padded lerp.
+        z = z_num * inv_t
+        pos = (z + pwl.Z_MAX) * pwl.INV_STEP
+        pos = min(max(pos, 0.0), float(pwl.SEGMENTS))
+        idx = int(pos)
+        frac = pos - idx
+        a = tf[idx]
+        b = tf[idx + 1]
+        out[i] = np.uint32(int(a + (b - a) * frac))
+    return out
+
+
+def field_init_ref(planes_signed, s):
+    """Dense oracle: u = Σ_b 2^b (P_b @ s) in exact integer arithmetic."""
+    planes = np.asarray(planes_signed)
+    s64 = np.asarray(s, dtype=np.int64)
+    b = planes.shape[0]
+    acc = np.zeros(planes.shape[1], dtype=np.int64)
+    for p in range(b):
+        acc += (1 << p) * (planes[p].astype(np.int64) @ s64)
+    return acc.astype(np.float64)
+
+
+def roulette_select_ref(p_q16, r):
+    """First index j with cum(j) > r (rust prefix scan)."""
+    cum = np.cumsum(np.asarray(p_q16, dtype=np.uint64))
+    j = int(np.searchsorted(cum, r, side="right"))
+    return min(j, len(cum) - 1)
+
+
+def encode_planes(j_matrix):
+    """Integer coupling matrix → signed {−1,0,+1} planes (inputs for the
+    field_init kernel; inverse of plane reconstruction, Eq. 13)."""
+    j = np.asarray(j_matrix, dtype=np.int64)
+    bmax = int(np.abs(j).max()) if j.size else 0
+    planes_needed = max(1, int(bmax).bit_length())
+    mag = np.abs(j)
+    sign = np.sign(j)
+    planes = np.stack(
+        [((mag >> p) & 1) * sign for p in range(planes_needed)], axis=0
+    ).astype(np.float32)
+    return planes
+
+
+def energy_ref(j_matrix, h, s):
+    """H(s) = −½ sᵀJs − h·s (Eq. 1; J symmetric, zero diagonal)."""
+    j = np.asarray(j_matrix, dtype=np.float64)
+    s = np.asarray(s, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    return -0.5 * s @ j @ s - h @ s
+
+
+def local_fields_ref(j_matrix, h, s):
+    """u_i = h_i + Σ_j J_ij s_j."""
+    j = np.asarray(j_matrix, dtype=np.float64)
+    return np.asarray(h, dtype=np.float64) + j @ np.asarray(s, dtype=np.float64)
+
+
+def chunk_step_ref(j_matrix, s, u, energy, temp, seed, stage):
+    """One roulette step, python-int exact — the oracle for
+    ``model.anneal_chunk``. Mirrors ``SnowballEngine::step_roulette``
+    including the W == 0 random-scan fallback.
+
+    Returns (s, u, energy, flipped_index | None).
+    """
+    n = len(s)
+    p = flip_probs_ref(s, u, temp)
+    w = int(p.sum(dtype=np.uint64))
+    s = np.asarray(s, dtype=np.float64).copy()
+    u = np.asarray(u, dtype=np.float64).copy()
+    if w == 0:
+        jsite = rng_py.below(seed, stage, 0, rng_py.SALT_SITE, n)
+        pj = flip_probs_ref(s[jsite : jsite + 1], u[jsite : jsite + 1], temp)[0]
+        r = rng_py.u32(seed, stage, 0, rng_py.SALT_ACCEPT) >> 16
+        if r >= pj:
+            return s, u, energy, None
+        chosen = jsite
+    else:
+        r = rng_py.draw_below(seed, stage, w)
+        chosen = roulette_select_ref(p, r)
+    de = 2.0 * s[chosen] * u[chosen]
+    s_old = s[chosen]
+    s[chosen] = -s_old
+    energy = energy + de
+    u -= 2.0 * s_old * np.asarray(j_matrix, dtype=np.float64)[chosen]
+    return s, u, energy, chosen
+
+
+def anneal_chunk_ref(j_matrix, s, u, energy, temps, seed, step0):
+    """Full-chunk oracle: iterate ``chunk_step_ref`` over the schedule."""
+    trace = []
+    for t, temp in enumerate(temps):
+        s, u, energy, _ = chunk_step_ref(j_matrix, s, u, energy, temp, seed, step0 + t)
+        trace.append(energy)
+    return s, u, energy, np.asarray(trace, dtype=np.float64)

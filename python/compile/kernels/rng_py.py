@@ -1,0 +1,78 @@
+"""Pure-python-int mirror of the stateless RNG (exact uint64 semantics).
+
+Used by the numpy oracles (``ref.py``) and the golden-vector parity tests
+against both the jnp implementation (``rng_ref.py``) and the Rust one
+(``rust/src/rng.rs``).
+"""
+
+M64 = (1 << 64) - 1
+
+SALT_SITE = 0x01
+SALT_ACCEPT = 0x02
+SALT_ROULETTE = 0x03
+SALT_UNIFORMIZE = 0x04
+SALT_INIT = 0x05
+
+_GAMMA = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+_K2 = 0xC2B2AE3D27D4EB4F
+_K3 = 0x165667B19E3779F9
+
+
+def mix64(z):
+    z = (z + _GAMMA) & M64
+    z = ((z ^ (z >> 30)) * _MIX1) & M64
+    z = ((z ^ (z >> 27)) * _MIX2) & M64
+    return z ^ (z >> 31)
+
+
+def _rotr32(x):
+    return ((x >> 32) | (x << 32)) & M64
+
+
+def squares32(ctr, key):
+    x = (ctr * key) & M64
+    y = x
+    z = (y + key) & M64
+    x = _rotr32((x * x + y) & M64)
+    x = _rotr32((x * x + z) & M64)
+    x = _rotr32((x * x + y) & M64)
+    return ((x * x + z) & M64) >> 32
+
+
+def counter(stage, iter_, salt):
+    return mix64((stage * _GAMMA + iter_ * _K2 + salt * _K3) & M64)
+
+
+def u32(seed, stage, iter_, salt):
+    return squares32(counter(stage, iter_, salt), mix64(seed) | 1)
+
+
+def u64(seed, stage, iter_, salt):
+    lo = u32(seed, stage, iter_, salt)
+    hi = u32(seed, stage, iter_, salt ^ 0x8000000000000000)
+    return (hi << 32) | lo
+
+
+def below(seed, stage, iter_, salt, n):
+    return (u32(seed, stage, iter_, salt) * n) >> 32
+
+
+def unit_f32(seed, stage, iter_, salt):
+    return (u32(seed, stage, iter_, salt) >> 8) * (1.0 / 16777216.0)
+
+
+def draw_below(seed, stage, bound):
+    """rust ``SnowballEngine::draw_below`` (128-bit multiply high)."""
+    raw = u64(seed, stage, 0, SALT_ROULETTE)
+    return (raw * bound) >> 64
+
+
+def child_seed(seed, index):
+    return mix64(seed ^ mix64(index ^ _K2))
+
+
+def spin_words(seed, n_words):
+    """rust ``SpinVec::random``: one u64 draw per word, stage 0, salt INIT."""
+    return [u64(seed, 0, w, SALT_INIT) for w in range(n_words)]

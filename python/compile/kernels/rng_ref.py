@@ -1,0 +1,104 @@
+"""Stateless counter-based RNG — jnp mirror of ``rust/src/rng.rs``.
+
+The Rust engine and the AOT XLA chunk must draw *identical* randomness so
+their trajectories are bit-identical (the parity property asserted by
+``rust/tests/xla_parity.rs`` and ``python/tests/test_rng_parity.py``).
+Everything here is a pure function of (seed, stage, iter, salt), exactly
+like the hardware's stateless generator (paper §IV-B3d).
+
+All ops are uint64; ``jax_enable_x64`` must be on (aot.py sets it).
+"""
+
+import jax.numpy as jnp
+
+# Purpose salts (rust/src/rng.rs::salt).
+SALT_SITE = 0x01
+SALT_ACCEPT = 0x02
+SALT_ROULETTE = 0x03
+SALT_UNIFORMIZE = 0x04
+SALT_INIT = 0x05
+
+_GAMMA = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+_K2 = 0xC2B2AE3D27D4EB4F
+_K3 = 0x165667B19E3779F9
+
+_U64 = jnp.uint64
+
+
+def u64(x):
+    """Cast to uint64 (wrapping semantics in XLA integer arithmetic)."""
+    return jnp.asarray(x, dtype=_U64)
+
+
+def mix64(z):
+    """splitmix64 finalizer (rust ``mix64``)."""
+    z = u64(z) + u64(_GAMMA)
+    z = (z ^ (z >> u64(30))) * u64(_MIX1)
+    z = (z ^ (z >> u64(27))) * u64(_MIX2)
+    return z ^ (z >> u64(31))
+
+
+def _rotr32(x):
+    return (x >> u64(32)) | (x << u64(32))
+
+
+def squares32(ctr, key):
+    """Widynski squares RNG, 4 rounds (rust ``squares32``); returns uint32."""
+    ctr, key = u64(ctr), u64(key)
+    x = ctr * key
+    y = x
+    z = y + key
+    x = _rotr32(x * x + y)
+    x = _rotr32(x * x + z)
+    x = _rotr32(x * x + y)
+    return ((x * x + z) >> u64(32)).astype(jnp.uint32)
+
+
+def counter(stage, iter_, salt):
+    """Combine call indices into the squares counter (rust ``counter``)."""
+    return mix64(u64(stage) * u64(_GAMMA) + u64(iter_) * u64(_K2) + u64(salt) * u64(_K3))
+
+
+def rng_u32(seed, stage, iter_, salt):
+    """Uniform 32-bit draw (rust ``StatelessRng::u32``)."""
+    return squares32(counter(stage, iter_, salt), mix64(seed) | u64(1))
+
+
+def rng_u64(seed, stage, iter_, salt):
+    """Uniform 64-bit draw (two 32-bit lanes, rust ``StatelessRng::u64``)."""
+    lo = rng_u32(seed, stage, iter_, salt).astype(_U64)
+    hi = rng_u32(seed, stage, iter_, u64(salt) ^ u64(0x8000000000000000)).astype(_U64)
+    return (hi << u64(32)) | lo
+
+
+def rng_below(seed, stage, iter_, salt, n):
+    """Uniform integer in {0..n-1} via Eq. 22 (rust ``below``)."""
+    draw = rng_u32(seed, stage, iter_, salt).astype(_U64)
+    return ((draw * u64(n)) >> u64(32)).astype(jnp.uint32)
+
+
+def mulhi64(a, b):
+    """High 64 bits of a 64×64 product (rust ``(a as u128 * b) >> 64``)."""
+    a, b = u64(a), u64(b)
+    mask = u64(0xFFFFFFFF)
+    ah, al = a >> u64(32), a & mask
+    bh, bl = b >> u64(32), b & mask
+    lo = al * bl
+    m1 = ah * bl
+    m2 = al * bh
+    carry = ((lo >> u64(32)) + (m1 & mask) + (m2 & mask)) >> u64(32)
+    return ah * bh + (m1 >> u64(32)) + (m2 >> u64(32)) + carry
+
+
+def draw_below_u64(seed, stage, bound):
+    """Uniform in [0, bound) by 64-bit fixed-point multiply
+    (rust ``SnowballEngine::draw_below``, salt ROULETTE, iter 0)."""
+    raw = rng_u64(seed, stage, 0, SALT_ROULETTE)
+    return mulhi64(raw, bound)
+
+
+def child_seed(seed, index):
+    """Decorrelated child stream (rust ``StatelessRng::child``)."""
+    return mix64(u64(seed) ^ mix64(u64(index) ^ u64(_K2)))

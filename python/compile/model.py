@@ -1,0 +1,116 @@
+"""L2 JAX model: the Snowball parallel-mode (roulette-wheel) MCMC chunk.
+
+``anneal_chunk`` advances one chain by C steps inside a single
+``lax.scan`` — the XLA realization of Algorithm 1's parallel branch:
+
+  1. per-spin flip probabilities (L1 Pallas PWL kernel, Eq. 25),
+  2. aggregate weight W + roulette selection (Eq. 28–30),
+  3. W == 0 fallback to a random-scan Glauber update,
+  4. deterministic flip + asynchronous incremental field update (Eq. 31).
+
+Every arithmetic step mirrors ``rust/src/engine/snowball.rs`` exactly
+(same stateless RNG streams, same Q16 PWL quantization, same prefix-scan
+tie-breaking), so a chunked XLA run and the native Rust engine produce
+**bit-identical trajectories** — asserted by ``rust/tests/xla_parity.rs``
+and ``python/tests/test_model.py``.
+
+Everything is lowered AOT by ``aot.py``; Python never runs at request
+time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rng_ref as R
+from .kernels.flip_probs import flip_probs_q16
+
+ONE_Q16 = 1 << 16
+
+
+def _mode2_step(j_matrix, carry, inputs):
+    """One roulette-wheel step with random-scan fallback (branch-free:
+    both candidate selections are computed, `where` picks)."""
+    s, u, energy = carry
+    temp, stage, seed = inputs
+    n = s.shape[0]
+
+    # --- evaluate all lanes through the L1 kernel (Eq. 25) -------------
+    p = flip_probs_q16(s, u, temp[None])  # u32[N]
+    w = jnp.sum(p.astype(jnp.uint64))
+
+    # --- roulette selection (Eqs. 28–30) --------------------------------
+    r = R.draw_below_u64(seed, stage, jnp.maximum(w, R.u64(1)))
+    cum = jnp.cumsum(p.astype(jnp.uint64))
+    j_roulette = jnp.sum((cum <= r).astype(jnp.int32))
+    j_roulette = jnp.minimum(j_roulette, n - 1)
+
+    # --- W == 0 fallback: random-scan Glauber (Eqs. 22/26) --------------
+    # All scalar "indexing" below is gather-free (one-hot reductions):
+    # xla_extension 0.5.1 mis-executes HLO gather (DESIGN.md
+    # §AOT-constraints).
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    j_fallback = R.rng_below(seed, stage, 0, R.SALT_SITE, n).astype(jnp.int32)
+    accept_draw = R.rng_u32(seed, stage, 0, R.SALT_ACCEPT) >> jnp.uint32(16)
+    p_fallback = jnp.max(jnp.where(lanes == j_fallback, p, jnp.uint32(0)))
+    fallback_accept = accept_draw < p_fallback
+
+    use_roulette = w > R.u64(0)
+    chosen = jnp.where(use_roulette, j_roulette, j_fallback)
+    do_flip = jnp.where(use_roulette, True, fallback_accept)
+
+    # --- deterministic flip + asynchronous field update (Eq. 31) --------
+    onehot_f32 = jnp.where(lanes == chosen, 1.0, 0.0).astype(jnp.float32)
+    onehot_f64 = onehot_f32.astype(jnp.float64)
+    s_old = jnp.sum(s * onehot_f32)  # exact: single ±1 survives
+    u_chosen = jnp.sum(u * onehot_f64)
+    de = 2.0 * s_old.astype(jnp.float64) * u_chosen
+    flip_f = jnp.where(do_flip, 1.0, 0.0).astype(jnp.float64)
+    s_new = s * (1.0 - 2.0 * flip_f.astype(jnp.float32) * onehot_f32)
+    # Column stream: one-hot mat-vec extracts row `chosen` of J exactly
+    # (J entries are small integers, products exact in f32).
+    j_col = (onehot_f32 @ j_matrix).astype(jnp.float64)
+    u_new = u - 2.0 * flip_f * s_old.astype(jnp.float64) * j_col
+    e_new = energy + flip_f * de
+
+    return (s_new, u_new, e_new), e_new
+
+
+def anneal_chunk(j_matrix, s, u, energy, temps, seed, step0):
+    """Advance the chain by ``temps.shape[0]`` roulette steps.
+
+    j_matrix: f32[N,N] symmetric, zero diagonal
+    s:        f32[N] spins (±1)
+    u:        f64[N] local fields (h folded in)
+    energy:   f64[]  current H(s)
+    temps:    f64[C] per-step temperatures
+    seed:     u64[]  stateless RNG seed
+    step0:    u64[]  global step offset (RNG stage base)
+    returns   (s f32[N], u f64[N], energy f64[], trace f64[C])
+    """
+    c = temps.shape[0]
+    stages = R.u64(step0) + jnp.arange(c, dtype=jnp.uint64)
+    seeds = jnp.broadcast_to(R.u64(seed), (c,))
+
+    def body(carry, xs):
+        return _mode2_step(j_matrix, carry, xs)
+
+    (s, u, energy), trace = jax.lax.scan(body, (s, u, energy), (temps, stages, seeds))
+    return s, u, energy, trace
+
+
+def anneal_chunk_graph(j_matrix, s, u, energy, temps, seed, step0):
+    """Tuple-returning wrapper for AOT export."""
+    return anneal_chunk(j_matrix, s, u, energy, temps, seed, step0)
+
+
+def flip_probs_graph(s, u, temp):
+    """Standalone L1 kernel graph (exported as its own artifact for the
+    runtime microbench and kernel-level parity tests)."""
+    return (flip_probs_q16(s, u, temp),)
+
+
+def field_init_graph(planes_signed, s):
+    """Standalone bit-plane field-init graph (L1 kernel artifact)."""
+    from .kernels.bitplane_field import field_init
+
+    return (field_init(planes_signed, s),)

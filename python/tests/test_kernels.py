@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-numpy oracles (the core L1 correctness signal),
+with hypothesis sweeps over shapes, couplings and temperatures."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import pwl, ref
+from compile.kernels.bitplane_field import field_init
+from compile.kernels.flip_probs import flip_probs_q16
+
+
+def random_case(rng, n, umax=30):
+    s = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    u = rng.integers(-umax, umax + 1, n).astype(np.float64)
+    return s, u
+
+
+# ------------------------------------------------------------- PWL table
+
+
+def test_table_endpoints_and_monotonicity():
+    assert pwl.TABLE[0] == pwl.ONE_Q16
+    assert pwl.TABLE[-1] == 0
+    assert pwl.TABLE[pwl.SEGMENTS // 2] == pwl.ONE_Q16 // 2  # σ(0) = 1/2
+    assert (np.diff(pwl.TABLE.astype(np.int64)) <= 0).all()
+
+
+def test_pwl_max_error_small():
+    zs = np.linspace(-16, 16, 20001)
+    approx = ref.flip_probs_ref(np.ones_like(zs), zs / 2.0, 1.0) / pwl.ONE_Q16
+    exact = 1.0 / (1.0 + np.exp(zs))
+    assert np.abs(approx - exact).max() < 5e-4
+
+
+# -------------------------------------------------------- flip_probs (L1)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 333, 1024])
+@pytest.mark.parametrize("temp", [0.0, 0.05, 1.0, 8.0, 1e6])
+def test_flip_probs_kernel_matches_ref(n, temp):
+    rng = np.random.default_rng(n * 7 + 1)
+    s, u = random_case(rng, n)
+    got = np.asarray(flip_probs_q16(jnp.asarray(s), jnp.asarray(u), jnp.asarray([temp])))
+    want = ref.flip_probs_ref(s, u, temp)
+    assert (got == want).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    umax=st.integers(1, 5000),
+    temp=st.floats(0.001, 1000.0, allow_nan=False),
+    seed=st.integers(0, 2**31),
+)
+def test_flip_probs_hypothesis_sweep(n, umax, temp, seed):
+    rng = np.random.default_rng(seed)
+    s, u = random_case(rng, n, umax)
+    got = np.asarray(flip_probs_q16(jnp.asarray(s), jnp.asarray(u), jnp.asarray([temp])))
+    want = ref.flip_probs_ref(s, u, temp)
+    assert (got == want).all()
+
+
+def test_flip_probs_q16_range_and_sign_semantics():
+    rng = np.random.default_rng(0)
+    s, u = random_case(rng, 128)
+    got = np.asarray(flip_probs_q16(jnp.asarray(s), jnp.asarray(u), jnp.asarray([1.0])))
+    assert (got <= pwl.ONE_Q16).all()
+    de = 2 * s.astype(np.float64) * u
+    # Downhill moves more likely than uphill.
+    assert got[de < 0].min() >= got[de > 0].max()
+
+
+# ------------------------------------------------------ field_init (L1)
+
+
+@pytest.mark.parametrize("n,maxj", [(16, 1), (64, 7), (128, 127), (96, 30000)])
+def test_field_init_kernel_matches_ref(n, maxj):
+    rng = np.random.default_rng(n)
+    J = rng.integers(-maxj, maxj + 1, (n, n))
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = ref.encode_planes(J)
+    s = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    got = np.asarray(field_init(jnp.asarray(planes), jnp.asarray(s)))
+    want = ref.field_init_ref(planes, s)
+    assert (got == want).all()
+    # And the planes reconstruct the dense mat-vec exactly (Eq. 16).
+    assert np.array_equal(got, J.astype(np.float64) @ s.astype(np.float64))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 80), maxj=st.integers(1, 500), seed=st.integers(0, 2**31))
+def test_field_init_hypothesis_sweep(n, maxj, seed):
+    rng = np.random.default_rng(seed)
+    J = rng.integers(-maxj, maxj + 1, (n, n))
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = ref.encode_planes(J)
+    s = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    got = np.asarray(field_init(jnp.asarray(planes), jnp.asarray(s)))
+    assert np.array_equal(got, J.astype(np.float64) @ s.astype(np.float64))
+
+
+def test_encode_planes_roundtrip():
+    rng = np.random.default_rng(5)
+    J = rng.integers(-100, 101, (32, 32))
+    J = np.triu(J, 1)
+    J = J + J.T
+    planes = ref.encode_planes(J)
+    recon = sum((1 << b) * planes[b] for b in range(planes.shape[0]))
+    assert np.array_equal(recon, J)
+
+
+# --------------------------------------------------------------- roulette
+
+
+def test_roulette_select_matches_rust_semantics():
+    p = np.array([0, 10, 0, 5, 1], dtype=np.uint32)
+    # cum = [0,10,10,15,16]; first index with cum > r:
+    assert ref.roulette_select_ref(p, 0) == 1
+    assert ref.roulette_select_ref(p, 9) == 1
+    assert ref.roulette_select_ref(p, 10) == 3
+    assert ref.roulette_select_ref(p, 14) == 3
+    assert ref.roulette_select_ref(p, 15) == 4

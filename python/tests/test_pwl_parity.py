@@ -1,0 +1,64 @@
+"""Cross-language golden values for the Q16 PWL Glauber LUT.
+
+The same (ΔE, T) → Q16 pins live in rust
+(`rust/src/engine/lut.rs::tests::cross_language_golden_values`), so any
+drift in table construction or evaluation order breaks both suites
+loudly. jnp path, numpy oracle and pinned literals must all agree.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pwl, ref
+from compile.kernels.flip_probs import flip_probs_q16
+
+# (delta_e, temperature, expected Q16) — keep in sync with the Rust test.
+GOLDEN = [
+    (2, 1.0, 7812),
+    (-2, 1.0, 57724),
+    (3, 0.7, 891),
+    (0, 5.0, 32768),
+    (40, 1.0, 0),
+    (-40, 1.0, 65536),
+    (1, 0.05, 0),
+    (-1, 0.05, 65536),
+    (0, 0.0, 32768),
+    (-5, 0.0, 65536),
+    (5, 0.0, 0),
+]
+
+
+@pytest.mark.parametrize("de,t,expect", GOLDEN)
+def test_oracle_matches_golden(de, t, expect):
+    s = np.array([1.0], dtype=np.float32)
+    u = np.array([de / 2.0], dtype=np.float64)
+    assert int(ref.flip_probs_ref(s, u, t)[0]) == expect
+
+
+@pytest.mark.parametrize("de,t,expect", GOLDEN)
+def test_jnp_kernel_matches_golden(de, t, expect):
+    s = jnp.asarray([1.0], dtype=jnp.float32)
+    u = jnp.asarray([de / 2.0], dtype=jnp.float64)
+    got = int(np.asarray(flip_probs_q16(s, u, jnp.asarray([t], dtype=jnp.float64)))[0])
+    assert got == expect
+
+
+def test_table_midpoint_and_padding():
+    assert pwl.TABLE[pwl.SEGMENTS // 2] == pwl.ONE_Q16 // 2
+    assert len(pwl.TABLE_F64) == pwl.SEGMENTS + 2
+    assert pwl.TABLE_F64[-1] == pwl.TABLE_F64[-2]
+
+
+def test_detailed_balance_ratio_holds_through_q16():
+    # P(z)/P(-z) ≈ e^{-z} survives quantization to ~1e-3 (Eq. 8's basis).
+    for de, t in [(2, 1.0), (4, 2.0), (1, 0.5)]:
+        s = np.array([1.0, -1.0], dtype=np.float32)
+        u = np.array([de / 2.0, de / 2.0], dtype=np.float64)
+        p = ref.flip_probs_ref(s, u, t).astype(np.float64) / pwl.ONE_Q16
+        ratio = p[0] / p[1]
+        assert abs(ratio - np.exp(-de / t)) < 2e-3

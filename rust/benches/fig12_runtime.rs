@@ -1,0 +1,45 @@
+//! Regenerates **Fig 12** in isolation: per-solver runtime on each Gset
+//! instance at matched sweep budgets, with per-attempt normalization so
+//! the convergence-speed claim ("RWA/RSA runtime is fastest") can be
+//! separated from raw step cost.
+//!
+//!     cargo bench --bench fig12_runtime -- [--quick]
+
+use snowball::baselines::{table2_lineup, Budget};
+use snowball::cli::Args;
+use snowball::graph::gset::{self, GsetId};
+use snowball::harness as hx;
+use snowball::problems::MaxCut;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+    let sweeps: u64 = args.get_parse_or("sweeps", if quick { 100 } else { 1000 }).unwrap();
+    let seed: u64 = args.get_parse_or("seed", 42u64).unwrap();
+    let instances: Vec<GsetId> =
+        if quick { vec![GsetId::G11] } else { vec![GsetId::G11, GsetId::G18, GsetId::G6] };
+
+    let mut rows = Vec::new();
+    for id in &instances {
+        let g = gset::load_or_synthesize(*id, None, seed);
+        let p = MaxCut::new(g);
+        for solver in table2_lineup() {
+            let r = solver.solve(p.model(), Budget::sweeps(sweeps), seed);
+            rows.push(vec![
+                id.name().to_string(),
+                solver.name().to_string(),
+                hx::fmt_ms(r.wall.as_secs_f64()),
+                format!("{:.1}", r.wall.as_secs_f64() * 1e9 / r.attempts as f64),
+                p.cut_of_energy(r.best_energy).to_string(),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        hx::render_table(
+            "Fig 12: runtime per solver",
+            &["instance", "solver", "total ms", "ns/attempt", "cut"],
+            &rows
+        )
+    );
+}

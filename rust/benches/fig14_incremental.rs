@@ -1,0 +1,54 @@
+//! Regenerates **Fig 14**: kernel-only vs end-to-end (DMA included) vs
+//! naive (no incremental updates) runtime across Monte Carlo step
+//! counts, from both the FPGA cycle model (K2000 geometry, 300 MHz) and
+//! a measured CPU companion (incremental engine vs Θ(N²) recompute).
+//!
+//!     cargo bench --bench fig14_incremental -- [--quick]
+
+use snowball::cli::Args;
+use snowball::harness as hx;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+
+    // Cycle-model sweep (the paper's x-axis is MC steps).
+    let steps: Vec<u64> = vec![100, 1_000, 10_000, 100_000, 1_000_000];
+    let pts = hx::fig14_model(&steps);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.steps.to_string(),
+                format!("{:.4}", p.kernel_ms),
+                format!("{:.4}", p.end_to_end_ms),
+                format!("{:.4}", p.naive_ms),
+                format!("{:.1}x", p.naive_ms / p.end_to_end_ms),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        hx::render_table(
+            "Fig 14 (cycle model, K2000 @300MHz): runtime vs MC steps [ms]",
+            &["steps", "kernel-only", "end-to-end", "naive", "naive/e2e"],
+            &rows
+        )
+    );
+    let last = pts.last().unwrap();
+    println!(
+        "kernel/e2e overlap at 1M steps: {:.2}% (paper: ~100% ⇒ compute-bound)",
+        last.kernel_ms / last.end_to_end_ms * 100.0
+    );
+
+    // Measured CPU companion.
+    let n = if quick { 256 } else { 1024 };
+    let steps = if quick { 200 } else { 2000 };
+    let (inc, naive) = hx::fig14_measured(n, steps, 42);
+    println!(
+        "\nmeasured (CPU, N={n}, {steps} roulette steps): incremental {:.1} ms | naive {:.1} ms | {:.1}x",
+        inc * 1e3,
+        naive * 1e3,
+        naive / inc
+    );
+}

@@ -1,0 +1,49 @@
+//! Regenerates **Fig 15**: encode a 64×64 16-bit target field into
+//! coupler bit-planes (B = 16), anneal with the cosine schedule, decode
+//! the planes and report the pixel-exact 16-bit agreement (paper: 99.5%)
+//! plus the annealing energy trace (the 2-D/3-D landscape alignment).
+//!
+//! Also regenerates **Fig 2/3/8** (the small analytic figures).
+//!
+//!     cargo bench --bench fig15_bitplane
+
+use snowball::harness as hx;
+
+fn main() {
+    // ---- Fig 15 ---------------------------------------------------------
+    let r = hx::fig15(42);
+    println!("== Fig 15: 16-bit bit-plane field recovery ==");
+    println!("pixel-exact accuracy : {:.2}% (paper: 99.5%)", r.pixel_accuracy * 100.0);
+    println!("energy alignment     : {:.3} of the |F|1 bound", r.spin_alignment);
+    let trace: Vec<f64> = r.energy_trace.iter().map(|&(_, e)| e as f64).collect();
+    println!("cosine-anneal trace  : {}", hx::sparkline(&trace));
+    println!(
+        "trace endpoints      : H(start) = {}, H(end) = {}",
+        r.energy_trace.first().map(|&(_, e)| e).unwrap_or(0),
+        r.energy_trace.last().map(|&(_, e)| e).unwrap_or(0),
+    );
+
+    // ---- Fig 3 ----------------------------------------------------------
+    println!("\n== Fig 3: Glauber P_flip vs dE (exact | LUT) ==");
+    for (t, pts) in hx::fig3(&[0.25, 1.0, 4.0, 1e9], 4) {
+        let line: Vec<String> = pts
+            .iter()
+            .map(|(de, ex, ap)| format!("dE={de}: {ex:.3}|{ap:.3}"))
+            .collect();
+        println!("T={t:<8} {}", line.join("  "));
+    }
+
+    // ---- Fig 2 / Fig 8 --------------------------------------------------
+    let (model, landscape) = hx::fig2();
+    let min = landscape.iter().min().unwrap();
+    println!("\n== Fig 2: K5 landscape ==");
+    println!("N=5, 2^5 = {} configs, ground energy {min} (paper: -24)", landscape.len());
+    println!("landscape: {}", hx::sparkline(&landscape.iter().map(|&v| v as f64).collect::<Vec<_>>()));
+    assert_eq!(model.len(), 5);
+
+    let (e0, e1, moved) = hx::fig8();
+    println!("\n== Fig 8: 2-bit arithmetic-shift quantization ==");
+    println!("original : {}", hx::sparkline(&e0.iter().map(|&v| v as f64).collect::<Vec<_>>()));
+    println!("quantized: {}", hx::sparkline(&e1.iter().map(|&v| v as f64).collect::<Vec<_>>()));
+    println!("ground state moved: {moved} (the paper's precision-loss hazard)");
+}

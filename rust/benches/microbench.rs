@@ -1,0 +1,107 @@
+//! §Perf microbenchmarks: per-step cost of the engine hot paths across
+//! instance sizes and datapaths, plus the XLA chunk throughput when
+//! artifacts are available. These are the numbers EXPERIMENTS.md §Perf
+//! tracks before/after optimization.
+//!
+//!     cargo bench --bench microbench -- [--quick]
+
+use snowball::cli::Args;
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::graph::generators;
+use snowball::harness as hx;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+
+fn bench_engine(n: usize, mode: Mode, dp: Datapath, steps: u64) -> (f64, f64) {
+    let rng = StatelessRng::new(1);
+    let g = generators::complete(n, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let cfg = EngineConfig {
+        mode,
+        datapath: dp,
+        schedule: Schedule::Constant(1.0),
+        steps,
+        seed: 3,
+        planes: None,
+        trace_stride: 0,
+    };
+    let mut e = SnowballEngine::new(p.model(), cfg);
+    let start = std::time::Instant::now();
+    let r = e.run();
+    let total = start.elapsed().as_secs_f64();
+    (total * 1e9 / steps as f64, r.flips as f64 / steps as f64)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+    let sizes: Vec<usize> = if quick { vec![256, 1024] } else { vec![256, 512, 1024, 2000] };
+    let steps: u64 = if quick { 5_000 } else { 20_000 };
+
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        for (mode, dp, label) in [
+            (Mode::RandomScan, Datapath::Dense, "RSA/dense"),
+            (Mode::RouletteWheel, Datapath::Dense, "RWA/dense"),
+            (Mode::RouletteWheel, Datapath::BitPlane, "RWA/bitplane"),
+        ] {
+            let (ns, flip_rate) = bench_engine(n, mode, dp, steps);
+            rows.push(vec![
+                n.to_string(),
+                label.to_string(),
+                format!("{ns:.0}"),
+                format!("{:.0}", ns / n as f64 * 1000.0),
+                format!("{flip_rate:.2}"),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        hx::render_table(
+            "engine hot path (complete ±1 graphs)",
+            &["N", "mode/datapath", "ns/step", "ps/spin-step", "flip rate"],
+            &rows
+        )
+    );
+
+    // XLA chunk throughput, if artifacts are present.
+    if let (Ok(manifest), Ok(rt)) =
+        (snowball::runtime::ArtifactManifest::discover(), snowball::runtime::Runtime::cpu())
+    {
+        println!();
+        for spec in manifest.specs.iter().filter(|s| s.kind == "anneal_chunk") {
+            let n = spec.n;
+            let rng = StatelessRng::new(2);
+            let g = generators::complete(n, &[-1, 1], &rng);
+            let p = MaxCut::new(g);
+            let runner = match snowball::runtime::ChunkRunner::new(&rt, spec, p.model(), 7) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("{}: skipped ({e})", spec.name);
+                    continue;
+                }
+            };
+            let spins = snowball::ising::SpinVec::random(n, &rng);
+            let mut state = snowball::runtime::chunk::ChunkState::init(p.model(), spins);
+            let temps = vec![1.0f64; runner.chunk_len() as usize];
+            // Warm-up + timed chunks.
+            let _ = runner.run_chunk(&rt, &mut state, &temps);
+            let reps = if quick { 2 } else { 5 };
+            let start = std::time::Instant::now();
+            for _ in 0..reps {
+                runner.run_chunk(&rt, &mut state, &temps).unwrap();
+            }
+            let total = start.elapsed().as_secs_f64();
+            let steps = reps * runner.chunk_len();
+            println!(
+                "XLA {}: {:.1} us/step ({} steps in {:.1} ms)",
+                spec.name,
+                total * 1e6 / steps as f64,
+                steps,
+                total * 1e3
+            );
+        }
+    } else {
+        println!("\nXLA chunk bench skipped (no artifacts; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,79 @@
+//! Regenerates **Table II** (solution quality on the Gset Max-Cut
+//! instances) and its **Fig 12** runtime companion: the full 11-solver
+//! line-up (SFG MFG SFA MFA ASF AMF ASA Neal Tabu RWA RSA).
+//!
+//!     cargo bench --bench table2_quality            # full (6 instances)
+//!     cargo bench --bench table2_quality -- --quick # 2 instances, small budget
+//!
+//! Budget: every solver gets the same per-instance sweep budget (the
+//! ReAIM fairness criterion); absolute cut values depend on the
+//! synthesized instances (DESIGN.md §3) — the reproduction target is the
+//! ORDERING (RWA ≥ RSA ≥ annealed ReAIM family > Neal/Tabu).
+
+use snowball::cli::Args;
+use snowball::graph::gset::GsetId;
+use snowball::harness as hx;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+    let sweeps: u64 = args.get_parse_or("sweeps", if quick { 100 } else { 400 }).unwrap();
+    let seed: u64 = args.get_parse_or("seed", 42u64).unwrap();
+    let instances: Vec<GsetId> =
+        if quick { vec![GsetId::G11, GsetId::G18] } else { GsetId::TABLE2.to_vec() };
+
+    eprintln!("table2: {} instances, {sweeps} sweeps each, seed {seed}", instances.len());
+    let cells = hx::table2(&instances, sweeps, seed);
+
+    let solvers: Vec<String> = {
+        let mut v = Vec::new();
+        for c in &cells {
+            if !v.contains(&c.solver) {
+                v.push(c.solver.clone());
+            }
+        }
+        v
+    };
+    let mut header: Vec<&str> = vec![""];
+    header.extend(solvers.iter().map(|s| s.as_str()));
+    let mut cut_rows = Vec::new();
+    let mut ms_rows = Vec::new();
+    for id in &instances {
+        let mut cr = vec![id.name().to_string()];
+        let mut mr = vec![id.name().to_string()];
+        for s in &solvers {
+            let cell = cells.iter().find(|c| c.instance == id.name() && &c.solver == s).unwrap();
+            cr.push(cell.cut.to_string());
+            mr.push(hx::fmt_ms(cell.seconds));
+        }
+        cut_rows.push(cr);
+        ms_rows.push(mr);
+    }
+    print!("{}", hx::render_table("Table II: cut values (higher is better)", &header, &cut_rows));
+    println!();
+    print!("{}", hx::render_table("Fig 12: runtimes (ms)", &header, &ms_rows));
+
+    // Reproduction check: Snowball modes lead on every instance.
+    let mut wins = 0;
+    for id in &instances {
+        let best_other = cells
+            .iter()
+            .filter(|c| c.instance == id.name() && c.solver != "RWA" && c.solver != "RSA")
+            .map(|c| c.cut)
+            .max()
+            .unwrap();
+        let snowball_best = cells
+            .iter()
+            .filter(|c| c.instance == id.name() && (c.solver == "RWA" || c.solver == "RSA"))
+            .map(|c| c.cut)
+            .max()
+            .unwrap();
+        if snowball_best >= best_other {
+            wins += 1;
+        }
+    }
+    println!(
+        "\nreproduction shape: Snowball best-or-tied on {wins}/{} instances (paper: all)",
+        instances.len()
+    );
+}

@@ -1,0 +1,70 @@
+//! Regenerates **Table III** (TTS(0.99) on the K2000 Max-Cut instance)
+//! and **Fig 13** (speedup over the Neal baseline): every machine row
+//! reimplemented and measured on the same synthesized K2000, with FPGA
+//! cycle-model projections for the Snowball modes and the paper's
+//! reported rows printed alongside.
+//!
+//!     cargo bench --bench table3_tts
+//!     cargo bench --bench table3_tts -- --quick
+//!     cargo bench --bench table3_tts -- --threshold 33000 --runs 20 --sweeps 2000
+
+use snowball::cli::Args;
+use snowball::harness as hx;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+    let cfg = hx::TtsConfig {
+        // Default threshold 31500 (~94.5% of the SK optimum ≈ 33340):
+        // chosen so the default CPU budget resolves success probabilities
+        // across the whole line-up. Pass --threshold 33000 --sweeps 4000
+        // --runs 20 for the paper's exact bar (long run).
+        cut_threshold: args.get_parse_or("threshold", 31_500i64).unwrap(),
+        runs: args.get_parse_or("runs", if quick { 4 } else { 8 }).unwrap(),
+        sweeps: args.get_parse_or("sweeps", if quick { 150 } else { 400 }).unwrap(),
+        seed: args.get_parse_or("seed", 1u64).unwrap(),
+    };
+    eprintln!(
+        "table3: threshold {} | {} runs x {} sweeps",
+        cfg.cut_threshold, cfg.runs, cfg.sweeps
+    );
+    let (rows, best) = hx::table3(&cfg);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.machine.clone(),
+                r.hardware.clone(),
+                format!("{:.3}", r.t_a_ms),
+                format!("{:.2}", r.p_a),
+                if r.tts99_ms.is_finite() { format!("{:.3}", r.tts99_ms) } else { "inf".into() },
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        hx::render_table(
+            "Table III: TTS(0.99) on K2000 (measured)",
+            &["Machine", "Hardware", "t_a [ms]", "P_a", "TTS(0.99) [ms]"],
+            &table
+        )
+    );
+    println!("best cut observed: {best} (threshold {})", cfg.cut_threshold);
+
+    println!("\nFig 13: speedup over measured Neal");
+    for (name, s) in hx::fig13(&rows) {
+        if s.is_finite() {
+            println!("  {name:32} {s:>14.1}x");
+        } else {
+            println!("  {name:32} {:>14}", "n/a");
+        }
+    }
+
+    println!("\npaper-reported Table III rows (quoted for context):");
+    for r in hx::table3_quoted_rows() {
+        println!(
+            "  {:24} t_a={:<8} P_a={:<5} TTS(0.99)={} ms",
+            r.machine, r.t_a_ms, r.p_a, r.tts99_ms
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Shared infrastructure for the comparison solvers of Tables II/III.
+
+use crate::ising::{IsingModel, SpinVec};
+use std::time::Duration;
+
+/// A compute budget expressed in sweeps (1 sweep = N single-spin update
+/// attempts), the unit the annealing literature uses for fair comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub sweeps: u64,
+}
+
+impl Budget {
+    pub fn sweeps(sweeps: u64) -> Self {
+        Self { sweeps }
+    }
+
+    /// Total single-spin attempts for an `n`-spin instance.
+    pub fn attempts(&self, n: usize) -> u64 {
+        self.sweeps * n as u64
+    }
+}
+
+/// Outcome of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub best_energy: i64,
+    pub best_spins: SpinVec,
+    /// Single-spin update attempts actually performed.
+    pub attempts: u64,
+    pub wall: Duration,
+}
+
+/// A Table II/III comparator.
+pub trait Solver {
+    /// Short name as used in the paper's tables (e.g. "Neal", "SFG").
+    fn name(&self) -> &'static str;
+
+    /// Minimize `model` within `budget`, deterministically in `seed`.
+    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult;
+}
+
+/// Incrementally maintained chain state shared by the local-update
+/// baselines: spins, local fields and energy, with Θ(N) flip cost.
+pub struct ChainState {
+    pub spins: SpinVec,
+    pub u: Vec<i64>,
+    pub energy: i64,
+}
+
+impl ChainState {
+    pub fn new(model: &IsingModel, spins: SpinVec) -> Self {
+        let u = model.local_fields(&spins);
+        let energy = model.energy(&spins);
+        Self { spins, u, energy }
+    }
+
+    /// ΔE of flipping spin `i` under the current state.
+    #[inline(always)]
+    pub fn delta_e(&self, i: usize) -> i64 {
+        IsingModel::delta_e(self.spins.get(i), self.u[i])
+    }
+
+    /// Flip spin `i`, updating fields and energy (Eq. 12).
+    #[inline(always)]
+    pub fn flip(&mut self, model: &IsingModel, i: usize) {
+        let de = self.delta_e(i);
+        let s_old = self.spins.flip(i);
+        self.energy += de;
+        let factor = 2 * s_old as i64;
+        for (u, &jv) in self.u.iter_mut().zip(model.j_row(i).iter()) {
+            *u -= factor * jv as i64;
+        }
+    }
+}
+
+/// Track the best configuration seen.
+pub struct Best {
+    pub energy: i64,
+    pub spins: SpinVec,
+}
+
+impl Best {
+    pub fn new(state: &ChainState) -> Self {
+        Self { energy: state.energy, spins: state.spins.clone() }
+    }
+
+    #[inline(always)]
+    pub fn observe(&mut self, state: &ChainState) {
+        if state.energy < self.energy {
+            self.energy = state.energy;
+            self.spins = state.spins.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StatelessRng;
+    use crate::testutil::gen;
+
+    #[test]
+    fn chain_state_flip_consistency() {
+        let rng = StatelessRng::new(77);
+        let m = gen::model(&rng, 30, 5);
+        let mut st = ChainState::new(&m, gen::spins(&rng, 30));
+        for i in [3usize, 17, 3, 29, 0] {
+            st.flip(&m, i);
+        }
+        assert_eq!(st.energy, m.energy(&st.spins));
+        assert_eq!(st.u, m.local_fields(&st.spins));
+    }
+
+    #[test]
+    fn budget_attempts() {
+        assert_eq!(Budget::sweeps(10).attempts(100), 1000);
+    }
+}

@@ -1,0 +1,130 @@
+//! Comparison solvers: every algorithm Snowball is benchmarked against in
+//! Tables II and III (paper §V), reimplemented from their original
+//! descriptions (DESIGN.md §3 documents interpretation choices).
+
+pub mod checkerboard;
+pub mod cim;
+pub mod common;
+pub mod neal;
+pub mod reaim;
+pub mod sb;
+pub mod statica;
+pub mod tabu;
+
+pub use cim::Cim;
+pub use common::{Best, Budget, ChainState, SolveResult, Solver};
+pub use neal::Neal;
+pub use reaim::{ReAim, Variant};
+pub use sb::SimulatedBifurcation;
+pub use statica::Statica;
+pub use tabu::Tabu;
+
+use crate::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use crate::ising::IsingModel;
+
+/// Snowball itself, wrapped in the common [`Solver`] interface so the
+/// Table II/III harnesses treat it uniformly. One "sweep" of budget maps
+/// to N engine steps for RSA (one attempt each) and to N steps for RWA
+/// (each step evaluates all N spins but commits one flip — the paper's
+/// accounting, which is what makes the comparison fair in *steps*, while
+/// the runtime figures capture the differing per-step cost).
+pub struct SnowballSolver {
+    pub mode: Mode,
+    pub schedule: Schedule,
+    /// Engine steps per budget sweep; default N-steps-per-sweep.
+    pub steps_per_sweep: Option<u64>,
+}
+
+impl SnowballSolver {
+    pub fn rsa() -> Self {
+        Self {
+            mode: Mode::RandomScan,
+            schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+            steps_per_sweep: None,
+        }
+    }
+
+    pub fn rwa() -> Self {
+        Self {
+            mode: Mode::RouletteWheel,
+            schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+            steps_per_sweep: None,
+        }
+    }
+}
+
+impl Solver for SnowballSolver {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            Mode::RandomScan => "RSA",
+            Mode::RouletteWheel => "RWA",
+            Mode::RouletteUniformized => "RWA-U",
+        }
+    }
+
+    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+        let n = model.len() as u64;
+        let steps = match self.steps_per_sweep {
+            Some(sps) => budget.sweeps * sps,
+            None => budget.sweeps * n,
+        };
+        let cfg = EngineConfig {
+            mode: self.mode,
+            datapath: Datapath::Dense,
+            schedule: self.schedule.clone(),
+            steps,
+            seed,
+            planes: None,
+            trace_stride: 0,
+        };
+        let mut engine = SnowballEngine::new(model, cfg);
+        let r = engine.run();
+        SolveResult {
+            best_energy: r.best_energy,
+            best_spins: r.best_spins,
+            attempts: r.steps,
+            wall: r.wall,
+        }
+    }
+}
+
+/// The full Table II solver line-up, in column order:
+/// SFG MFG SFA MFA ASF AMF ASA Neal Tabu RWA RSA.
+pub fn table2_lineup() -> Vec<Box<dyn Solver>> {
+    let mut v: Vec<Box<dyn Solver>> = Vec::new();
+    for r in ReAim::all() {
+        v.push(Box::new(r));
+    }
+    v.push(Box::new(Neal::default()));
+    v.push(Box::new(Tabu::default()));
+    v.push(Box::new(SnowballSolver::rwa()));
+    v.push(Box::new(SnowballSolver::rsa()));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    #[test]
+    fn lineup_matches_table2_column_order() {
+        let names: Vec<&str> = table2_lineup().iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec!["SFG", "MFG", "SFA", "MFA", "ASF", "AMF", "ASA", "Neal", "Tabu", "RWA", "RSA"]
+        );
+    }
+
+    #[test]
+    fn snowball_solver_consistency() {
+        let rng = StatelessRng::new(9);
+        let p = MaxCut::new(generators::erdos_renyi(40, 160, &[-1, 1], &rng));
+        for s in [SnowballSolver::rsa(), SnowballSolver::rwa()] {
+            let r = s.solve(p.model(), Budget::sweeps(60), 3);
+            assert_eq!(r.best_energy, p.model().energy(&r.best_spins), "{}", s.name());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Signed bit-plane representation of the dense coupling matrix
+//! (paper §IV-B1) and the two access paths built on it:
+//!
+//! * **row-major planes + Hamming-weight accumulation** — from-scratch
+//!   local-field initialization (Eqs. 14–16);
+//! * **column-major planes + bit scanning** — Θ(N) incremental updates
+//!   after each accepted flip (Eqs. 17–20).
+//!
+//! `J_ij = Σ_b 2^b (B⁺_b(i,j) − B⁻_b(i,j))` (Eq. 13), with
+//! `B⁺, B⁻ ∈ {0,1}^{N×N}` packed 64 couplers per word exactly like the
+//! FPGA's BRAM words. This module is bit-faithful to the hardware
+//! datapath: every arithmetic step is a popcount, shift or integer add.
+
+pub mod planes;
+
+pub use planes::BitPlanes;

@@ -1,0 +1,276 @@
+//! Bit-plane storage and the Hamming-weight / bit-scan datapaths.
+
+use crate::ising::{IsingModel, SpinVec};
+
+/// Signed-magnitude bit-plane store for a dense `n × n` coupling matrix,
+/// in BOTH row-major and column-major layouts (paper §IV-B1: row-major
+/// feeds dense initialization, column-major feeds incremental updates).
+///
+/// Indexing: plane `b`, line `i`, word `w` → `[(b * n + i) * words + w]`.
+/// For the row arrays a "line" is a matrix row; for the column arrays it
+/// is a matrix column (i.e. `col_pos` holds B⁺ᵀ).
+#[derive(Clone, Debug)]
+pub struct BitPlanes {
+    n: usize,
+    b: u32,
+    words: usize,
+    row_pos: Vec<u64>,
+    row_neg: Vec<u64>,
+    col_pos: Vec<u64>,
+    col_neg: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// Encode a model's couplings. `planes` defaults to the minimum `B`
+    /// that represents every `|J_ij|` exactly; passing a larger `B`
+    /// reproduces the paper's configurable-precision setting.
+    pub fn encode(model: &IsingModel, planes: Option<u32>) -> Self {
+        let n = model.len();
+        let need = crate::problems::quantize::required_bits(model);
+        let b = planes.unwrap_or(need);
+        assert!(b >= need, "B = {b} planes cannot represent max |J| (needs {need})");
+        assert!(b <= 31);
+        let words = n.div_ceil(64);
+        let sz = b as usize * n * words;
+        let mut s = Self {
+            n,
+            b,
+            words,
+            row_pos: vec![0; sz],
+            row_neg: vec![0; sz],
+            col_pos: vec![0; sz],
+            col_neg: vec![0; sz],
+        };
+        for i in 0..n {
+            let row = model.j_row(i);
+            for (j, &v) in row.iter().enumerate() {
+                if v == 0 {
+                    continue;
+                }
+                let mag = v.unsigned_abs();
+                for plane in 0..b {
+                    if (mag >> plane) & 1 == 1 {
+                        if v > 0 {
+                            s.set_bit(true, plane, i, j);
+                        } else {
+                            s.set_bit(false, plane, i, j);
+                        }
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    fn set_bit(&mut self, positive: bool, plane: u32, i: usize, j: usize) {
+        let idx = (plane as usize * self.n + i) * self.words + (j >> 6);
+        let bit = 1u64 << (j & 63);
+        let tidx = (plane as usize * self.n + j) * self.words + (i >> 6);
+        let tbit = 1u64 << (i & 63);
+        if positive {
+            self.row_pos[idx] |= bit;
+            self.col_pos[tidx] |= tbit;
+        } else {
+            self.row_neg[idx] |= bit;
+            self.col_neg[tidx] |= tbit;
+        }
+    }
+
+    /// Number of spins.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the store is empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of magnitude planes `B`.
+    pub fn planes(&self) -> u32 {
+        self.b
+    }
+
+    /// 64-bit words per row (`W = ceil(N/64)`).
+    pub fn words_per_row(&self) -> usize {
+        self.words
+    }
+
+    /// Reconstruct `J_ij` from the planes (Eq. 13) — decode path used by
+    /// round-trip tests and the Fig. 15 field-recovery experiment.
+    pub fn decode_j(&self, i: usize, j: usize) -> i32 {
+        let mut v = 0i32;
+        for plane in 0..self.b {
+            let idx = (plane as usize * self.n + i) * self.words + (j >> 6);
+            let bit = 1u64 << (j & 63);
+            if self.row_pos[idx] & bit != 0 {
+                v += 1 << plane;
+            }
+            if self.row_neg[idx] & bit != 0 {
+                v -= 1 << plane;
+            }
+        }
+        v
+    }
+
+    /// Full decode to a dense model (zero fields).
+    pub fn decode(&self) -> IsingModel {
+        let mut j = vec![0i32; self.n * self.n];
+        for i in 0..self.n {
+            for k in 0..self.n {
+                j[i * self.n + k] = self.decode_j(i, k);
+            }
+        }
+        IsingModel::new(self.n, j, vec![0; self.n])
+    }
+
+    /// **Initialization path** (Eqs. 14–16): coupler-induced local fields
+    /// `u_i^(J) = Σ_j J_ij s_j` for every `i`, computed with per-word
+    /// Hamming weights over the row-major planes:
+    ///
+    /// `Δu⁺ = 2^b (2·popcnt(B⁺_word & x_word) − popcnt(B⁺_word))`, and the
+    /// negated analogue for B⁻. Only bitwise ops and integer adds — the
+    /// FPGA accumulator, word for word.
+    pub fn init_fields(&self, x: &SpinVec) -> Vec<i64> {
+        assert_eq!(x.len(), self.n);
+        let xw = x.words();
+        let mut u = vec![0i64; self.n];
+        for plane in 0..self.b as usize {
+            let wb = 1i64 << plane;
+            for i in 0..self.n {
+                let base = (plane * self.n + i) * self.words;
+                let mut acc = 0i64;
+                for w in 0..self.words {
+                    let p = self.row_pos[base + w];
+                    let ng = self.row_neg[base + w];
+                    let m_p = p.count_ones() as i64;
+                    let o_p = (p & xw[w]).count_ones() as i64;
+                    let m_n = ng.count_ones() as i64;
+                    let o_n = (ng & xw[w]).count_ones() as i64;
+                    acc += (2 * o_p - m_p) - (2 * o_n - m_n);
+                }
+                u[i] += wb * acc;
+            }
+        }
+        u
+    }
+
+    /// **Incremental path** (Eqs. 17–20): after spin `j` flips from
+    /// `s_j_old`, stream column `j` of the column-major planes and apply
+    /// `u_i ← u_i ∓ 2·2^b·s_j_old` at every set bit. Θ(B·W) words
+    /// scanned, Θ(deg j) adds.
+    pub fn incr_update(&self, u: &mut [i64], j: usize, s_j_old: i8) {
+        debug_assert_eq!(u.len(), self.n);
+        let s_old = s_j_old as i64;
+        for plane in 0..self.b as usize {
+            let delta = 2i64 * (1i64 << plane) * s_old;
+            let base = (plane * self.n + j) * self.words;
+            for w in 0..self.words {
+                // Positive planes: u_i -= 2·2^b·s_old (Eq. 19)
+                let mut bits = self.col_pos[base + w];
+                while bits != 0 {
+                    let t = bits.trailing_zeros() as usize;
+                    u[(w << 6) + t] -= delta;
+                    bits &= bits - 1;
+                }
+                // Negative planes: u_i += 2·2^b·s_old (Eq. 20)
+                let mut bits = self.col_neg[base + w];
+                while bits != 0 {
+                    let t = bits.trailing_zeros() as usize;
+                    u[(w << 6) + t] += delta;
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+
+    /// Bytes of on-chip storage the four plane arrays occupy — the
+    /// quantity the paper's "memory grows linearly in B" claim is about.
+    pub fn storage_bytes(&self) -> usize {
+        4 * self.b as usize * self.n * self.words * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{salt, StatelessRng};
+
+    fn random_model(n: usize, max_abs: i32, seed: u64) -> IsingModel {
+        let rng = StatelessRng::new(seed);
+        let mut m = IsingModel::zeros(n);
+        let mut idx = 0u64;
+        for i in 0..n {
+            for k in (i + 1)..n {
+                let v = rng.below(9, idx, salt::PROBLEM, (2 * max_abs + 1) as u32) as i32 - max_abs;
+                idx += 1;
+                if v != 0 {
+                    m.set_j(i, k, v);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let m = random_model(70, 100, 1);
+        let bp = BitPlanes::encode(&m, None);
+        assert_eq!(bp.planes(), 7); // 100 needs 7 bits
+        let d = bp.decode();
+        assert_eq!(d.j_matrix(), m.j_matrix());
+    }
+
+    #[test]
+    fn extra_planes_still_roundtrip() {
+        let m = random_model(20, 3, 2);
+        let bp = BitPlanes::encode(&m, Some(16));
+        assert_eq!(bp.planes(), 16);
+        assert_eq!(bp.decode().j_matrix(), m.j_matrix());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot represent")]
+    fn too_few_planes_rejected() {
+        let m = random_model(10, 9, 3); // needs 4 bits
+        BitPlanes::encode(&m, Some(2));
+    }
+
+    #[test]
+    fn init_fields_matches_dense() {
+        let m = random_model(130, 7, 4);
+        let bp = BitPlanes::encode(&m, None);
+        let rng = StatelessRng::new(5);
+        for t in 0..5u64 {
+            let s = SpinVec::random(130, &rng.child(t));
+            let dense: Vec<i64> =
+                (0..130).map(|i| m.local_field(&s, i) - m.h(i) as i64).collect();
+            assert_eq!(bp.init_fields(&s), dense, "trial {t}");
+        }
+    }
+
+    #[test]
+    fn incremental_matches_reinit_over_flip_sequence() {
+        let m = random_model(100, 15, 6);
+        let bp = BitPlanes::encode(&m, None);
+        let rng = StatelessRng::new(7);
+        let mut s = SpinVec::random(100, &rng);
+        let mut u = bp.init_fields(&s);
+        for t in 0..200u64 {
+            let j = rng.below(10, t, salt::SITE, 100) as usize;
+            let s_old = s.flip(j);
+            bp.incr_update(&mut u, j, s_old);
+            if t % 50 == 49 {
+                assert_eq!(u, bp.init_fields(&s), "drift after {} flips", t + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_grows_linearly_in_planes() {
+        let m = random_model(64, 1, 8);
+        let b2 = BitPlanes::encode(&m, Some(2)).storage_bytes();
+        let b8 = BitPlanes::encode(&m, Some(8)).storage_bytes();
+        assert_eq!(b8, 4 * b2);
+    }
+}

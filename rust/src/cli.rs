@@ -1,0 +1,126 @@
+//! Minimal dependency-free CLI argument parsing (the offline environment
+//! has no `clap`; this covers the `snowball` binary's needs).
+//!
+//! Grammar: `snowball <command> [--key value]... [--flag]... [positional]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // A leading option token means there is no subcommand (the
+        // examples parse straight options).
+        if it.peek().is_some_and(|a| !a.starts_with("--")) {
+            out.command = it.next().unwrap();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key value` unless the next token is another option
+                // or absent → boolean flag.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => {
+                        out.flags.insert(key.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key) || self.get(key).is_some_and(|v| v == "true" || v == "1")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string())).unwrap()
+    }
+
+    #[test]
+    fn commands_options_flags_positionals() {
+        // NB: `--key value` greedily consumes the next non-option token,
+        // so bare flags go last (or use `--flag --next-option` forms).
+        let a = parse(&["solve", "G6", "--steps", "100", "--mode", "rwa", "--verbose"]);
+        assert_eq!(a.command, "solve");
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("mode"), Some("rwa"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["G6"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["x", "--n", "42"]);
+        assert_eq!(a.get_parse_or("n", 7u64).unwrap(), 42);
+        assert_eq!(a.get_parse_or("m", 7u64).unwrap(), 7);
+        assert!(a.get_parse_or("n", 1.5f64).is_ok());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_parse_or("n", 7u64).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["x", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn leading_option_means_no_command() {
+        let a = parse(&["--instance", "G18", "--sweeps", "10"]);
+        assert_eq!(a.command, "");
+        assert_eq!(a.get("instance"), Some("G18"));
+        assert_eq!(a.get("sweeps"), Some("10"));
+    }
+}

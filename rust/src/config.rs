@@ -1,0 +1,232 @@
+//! Run-configuration files: a strict INI/TOML-subset parser so jobs and
+//! benchmark campaigns are declarative (`snowball solve --config run.toml`
+//! style), without external dependencies.
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs, `#`/`;`
+//! comments, quoted strings, integers, floats, booleans.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed configuration: `section → key → value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Value {
+        let t = raw.trim();
+        if let Some(stripped) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return Value::Str(stripped.to_string());
+        }
+        match t {
+            "true" => return Value::Bool(true),
+            "false" => return Value::Bool(false),
+            _ => {}
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Value::Float(f);
+        }
+        Value::Str(t.to_string())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Config {
+    /// Parse configuration text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), Value::parse(v));
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Build a JobSpec skeleton from a `[job]` section (instance name,
+    /// mode, schedule, steps, replicas, seed, target).
+    pub fn job(&self, seed_default: u64) -> Result<JobConfig> {
+        Ok(JobConfig {
+            instance: self.str_or("job", "instance", "G11"),
+            mode: crate::engine::Mode::parse(&self.str_or("job", "mode", "rwa"))?,
+            schedule: crate::engine::Schedule::parse(&self.str_or(
+                "job",
+                "schedule",
+                "geometric:8:0.05",
+            ))?,
+            steps: self.i64_or("job", "steps", 100_000) as u64,
+            replicas: self.i64_or("job", "replicas", 8) as u32,
+            seed: self.i64_or("job", "seed", seed_default as i64) as u64,
+            target: self.get("job", "target").and_then(|v| v.as_i64()),
+        })
+    }
+}
+
+/// Declarative job description (the `[job]` section).
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub instance: String,
+    pub mode: crate::engine::Mode,
+    pub schedule: crate::engine::Schedule,
+    pub steps: u64,
+    pub replicas: u32,
+    pub seed: u64,
+    pub target: Option<i64>,
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' | ';' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# campaign config
+[job]
+instance = "K2000"
+mode = "rwa"
+steps = 2000000
+replicas = 16
+target = -65000
+schedule = "geometric:10:0.05"
+
+[service]
+addr = "127.0.0.1:7878"   # bind here
+verbose = true
+tolerance = 0.25
+"#;
+
+    #[test]
+    fn parse_types_and_sections() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("job", "instance", ""), "K2000");
+        assert_eq!(c.i64_or("job", "steps", 0), 2_000_000);
+        assert_eq!(c.f64_or("service", "tolerance", 0.0), 0.25);
+        assert!(c.bool_or("service", "verbose", false));
+        assert_eq!(c.str_or("service", "addr", ""), "127.0.0.1:7878");
+        assert_eq!(c.sections().count(), 2);
+    }
+
+    #[test]
+    fn job_section_builds() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let j = c.job(1).unwrap();
+        assert_eq!(j.instance, "K2000");
+        assert_eq!(j.replicas, 16);
+        assert_eq!(j.target, Some(-65000));
+        assert!(matches!(j.mode, crate::engine::Mode::RouletteWheel));
+    }
+
+    #[test]
+    fn comments_and_defaults() {
+        let c = Config::parse("[a]\nx = 1 # trailing\ny = \"a # not comment\"\n").unwrap();
+        assert_eq!(c.i64_or("a", "x", 0), 1);
+        assert_eq!(c.str_or("a", "y", ""), "a # not comment");
+        assert_eq!(c.i64_or("a", "missing", 7), 7);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[a]\nnot a pair\n").is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Size-class batching for the XLA backend.
+//!
+//! AOT artifacts are compiled for fixed shapes; incoming instances are
+//! padded up to the nearest artifact size (padding spins carry zero
+//! couplings and frozen fields — see `runtime::chunk`). The batcher
+//! groups queued jobs by their assigned size class so one compiled
+//! executable serves each group, and tracks padding waste so operators
+//! can see when a new artifact size would pay off.
+
+/// Assignment of a job to a size class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// Index of the job in the submitted order.
+    pub job: usize,
+    /// Artifact size class chosen.
+    pub class_n: usize,
+}
+
+/// Result of batching a set of job sizes against the available classes.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    pub assignments: Vec<Assignment>,
+    /// Jobs too large for any class (must run on the native backend).
+    pub overflow: Vec<usize>,
+}
+
+impl BatchPlan {
+    /// Groups of job indices per class, in ascending class order.
+    pub fn groups(&self) -> Vec<(usize, Vec<usize>)> {
+        let mut map: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for a in &self.assignments {
+            map.entry(a.class_n).or_default().push(a.job);
+        }
+        map.into_iter().collect()
+    }
+
+    /// Fraction of padded lanes wasted, per class (`Σ(class−n)/Σclass`).
+    pub fn padding_waste(&self, sizes: &[usize]) -> f64 {
+        let mut padded = 0usize;
+        let mut used = 0usize;
+        for a in &self.assignments {
+            padded += a.class_n;
+            used += sizes[a.job];
+        }
+        if padded == 0 {
+            0.0
+        } else {
+            1.0 - used as f64 / padded as f64
+        }
+    }
+}
+
+/// Assign each job size to the smallest class that fits.
+pub fn plan(job_sizes: &[usize], classes: &[usize]) -> BatchPlan {
+    let mut sorted: Vec<usize> = classes.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut out = BatchPlan::default();
+    for (job, &n) in job_sizes.iter().enumerate() {
+        match sorted.iter().find(|&&c| c >= n) {
+            Some(&c) => out.assignments.push(Assignment { job, class_n: c }),
+            None => out.overflow.push(job),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smallest_fitting_class_wins() {
+        let p = plan(&[100, 256, 300, 2048, 5000], &[256, 2048]);
+        let classes: Vec<usize> = p.assignments.iter().map(|a| a.class_n).collect();
+        assert_eq!(classes, vec![256, 256, 2048, 2048]);
+        assert_eq!(p.overflow, vec![4]);
+    }
+
+    #[test]
+    fn groups_are_per_class() {
+        let p = plan(&[10, 300, 20], &[256, 2048]);
+        let g = p.groups();
+        assert_eq!(g, vec![(256, vec![0, 2]), (2048, vec![1])]);
+    }
+
+    #[test]
+    fn padding_waste_accounting() {
+        let sizes = [128usize, 256];
+        let p = plan(&sizes, &[256]);
+        // used = 384, padded = 512 → waste = 0.25
+        assert!((p.padding_waste(&sizes) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let p = plan(&[], &[256]);
+        assert!(p.assignments.is_empty() && p.overflow.is_empty());
+        assert_eq!(p.padding_waste(&[]), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Job specifications and results for the coordinator.
+
+use crate::engine::{Mode, Schedule};
+use crate::ising::IsingModel;
+use std::sync::Arc;
+
+/// A request to anneal one instance with R independent replicas.
+#[derive(Clone)]
+pub struct JobSpec {
+    /// The Ising instance (shared, read-only).
+    pub model: Arc<IsingModel>,
+    /// Human-readable instance label (e.g. "K2000").
+    pub label: String,
+    pub mode: Mode,
+    pub schedule: Schedule,
+    /// Engine steps per replica.
+    pub steps: u64,
+    /// Independent replicas (each gets a decorrelated child seed).
+    pub replicas: u32,
+    pub seed: u64,
+    /// Success threshold: a replica succeeds if `best_energy <= target`.
+    pub target_energy: Option<i64>,
+    /// Execution backend for this job.
+    pub backend: Backend,
+}
+
+/// Which execution engine runs the replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust engine (headline numbers).
+    Native,
+    /// AOT XLA artifact through the PJRT runtime (roulette mode only).
+    Xla,
+}
+
+/// Per-replica outcome.
+#[derive(Clone, Debug)]
+pub struct ReplicaResult {
+    pub replica: u32,
+    pub best_energy: i64,
+    pub flips: u64,
+    pub wall: std::time::Duration,
+}
+
+/// Aggregated job outcome.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job_id: u64,
+    pub label: String,
+    pub replicas: Vec<ReplicaResult>,
+    pub wall: std::time::Duration,
+}
+
+impl JobResult {
+    /// Best energy across replicas.
+    pub fn best_energy(&self) -> i64 {
+        self.replicas.iter().map(|r| r.best_energy).min().unwrap_or(i64::MAX)
+    }
+
+    /// Success estimate against a target energy.
+    pub fn successes(&self, target: i64) -> crate::tts::SuccessEstimate {
+        crate::tts::SuccessEstimate {
+            runs: self.replicas.len(),
+            successes: self.replicas.iter().filter(|r| r.best_energy <= target).count(),
+        }
+    }
+
+    /// Mean per-replica wall time in seconds (the `t_a` of Eq. 32).
+    pub fn mean_replica_seconds(&self) -> f64 {
+        if self.replicas.is_empty() {
+            return 0.0;
+        }
+        self.replicas.iter().map(|r| r.wall.as_secs_f64()).sum::<f64>() / self.replicas.len() as f64
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}

@@ -1,0 +1,143 @@
+//! Lightweight metrics: counters and latency histograms for the
+//! coordinator and service (std-only; exported in a Prometheus-like text
+//! format by `render`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed log-scale latency histogram (microseconds, powers of two up to
+/// ~17 minutes).
+const BUCKETS: usize = 30;
+
+/// A named set of counters and histograms.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+#[derive(Default)]
+struct Histogram {
+    counts: [u64; BUCKETS],
+    total_us: u64,
+    samples: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Add to a counter.
+    pub fn add(&self, name: &str, v: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Read a counter.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a latency observation.
+    pub fn observe(&self, name: &str, d: std::time::Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let bucket = (64 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        let mut map = self.histograms.lock().unwrap();
+        let h = map.entry(name.to_string()).or_default();
+        h.counts[bucket] += 1;
+        h.total_us += us;
+        h.samples += 1;
+    }
+
+    /// Mean latency in microseconds (None if unobserved).
+    pub fn mean_us(&self, name: &str) -> Option<f64> {
+        let map = self.histograms.lock().unwrap();
+        let h = map.get(name)?;
+        if h.samples == 0 {
+            return None;
+        }
+        Some(h.total_us as f64 / h.samples as f64)
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, name: &str, q: f64) -> Option<u64> {
+        let map = self.histograms.lock().unwrap();
+        let h = map.get(name)?;
+        if h.samples == 0 {
+            return None;
+        }
+        let target = (q * h.samples as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in h.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(1u64 << i);
+            }
+        }
+        Some(1u64 << (BUCKETS - 1))
+    }
+
+    /// Text rendering (for the service's METRICS command).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let mean = if h.samples == 0 { 0.0 } else { h.total_us as f64 / h.samples as f64 };
+            out.push_str(&format!("histogram {k} samples={} mean_us={mean:.1}\n", h.samples));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("jobs");
+        m.add("jobs", 4);
+        assert_eq!(m.get("jobs"), 5);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 400, 800] {
+            m.observe("lat", Duration::from_micros(us));
+        }
+        let mean = m.mean_us("lat").unwrap();
+        assert!((mean - 375.0).abs() < 1.0);
+        let p50 = m.quantile_us("lat", 0.5).unwrap();
+        assert!(p50 >= 128 && p50 <= 512, "p50 bucket {p50}");
+        assert!(m.quantile_us("lat", 1.0).unwrap() >= 800);
+    }
+
+    #[test]
+    fn render_lists_everything() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.observe("b", Duration::from_micros(10));
+        let r = m.render();
+        assert!(r.contains("counter a 1"));
+        assert!(r.contains("histogram b samples=1"));
+    }
+}

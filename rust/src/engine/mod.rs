@@ -1,0 +1,13 @@
+//! The Snowball engine (paper §IV): dual-mode MCMC spin selection,
+//! asynchronous single-spin updates, PWL Glauber LUT and annealing
+//! schedules.
+
+pub mod diagnostics;
+pub mod lut;
+pub mod schedule;
+pub mod snowball;
+pub mod tempering;
+
+pub use lut::{glauber_exact, PwlLogistic, ONE_Q16};
+pub use schedule::Schedule;
+pub use snowball::{Datapath, EngineConfig, Mode, RunResult, SnowballEngine, StepOutcome};

@@ -1,0 +1,123 @@
+//! Annealing schedules (paper Algorithm 1 `Cooling(T0, T1, t, K)`).
+//!
+//! The paper uses a linear schedule for the Fig. 4 demonstration and a
+//! cosine schedule for the Fig. 15 field-recovery experiment; the FPGA
+//! preloads an arbitrary programmable `{T_k}` table, which `Table`
+//! models.
+
+/// A temperature schedule over `K` annealing steps.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// Fixed temperature (plain MCMC sampling; detailed-balance regime).
+    Constant(f64),
+    /// Linear interpolation T0 → T1.
+    Linear { t0: f64, t1: f64 },
+    /// Geometric decay T0 → T1 (multiplicative; classic SA).
+    Geometric { t0: f64, t1: f64 },
+    /// Half-cosine ramp T0 → T1 (used in the Fig. 15 experiment).
+    Cosine { t0: f64, t1: f64 },
+    /// Explicit preloaded table, one entry per annealing stage — the
+    /// hardware's programmable `{T_k}` memory.
+    Table(Vec<f64>),
+}
+
+impl Schedule {
+    /// Temperature at step `t ∈ [0, k_total)`.
+    pub fn temperature(&self, t: u64, k_total: u64) -> f64 {
+        let frac = if k_total <= 1 { 0.0 } else { t as f64 / (k_total - 1) as f64 };
+        match self {
+            Schedule::Constant(v) => *v,
+            Schedule::Linear { t0, t1 } => t0 + (t1 - t0) * frac,
+            Schedule::Geometric { t0, t1 } => {
+                debug_assert!(*t0 > 0.0 && *t1 > 0.0);
+                t0 * (t1 / t0).powf(frac)
+            }
+            Schedule::Cosine { t0, t1 } => {
+                t1 + (t0 - t1) * 0.5 * (1.0 + (std::f64::consts::PI * frac).cos())
+            }
+            Schedule::Table(v) => {
+                if v.is_empty() {
+                    0.0
+                } else {
+                    let idx = ((t as usize) * v.len() / (k_total.max(1) as usize)).min(v.len() - 1);
+                    v[idx]
+                }
+            }
+        }
+    }
+
+    /// Materialize the schedule as a table of `k_total` temperatures —
+    /// what `make artifacts` bakes into the AOT chunk inputs and what the
+    /// FPGA would preload.
+    pub fn materialize(&self, k_total: u64) -> Vec<f64> {
+        (0..k_total).map(|t| self.temperature(t, k_total)).collect()
+    }
+
+    /// Parse `"kind:t0:t1"` / `"constant:t"` (CLI syntax).
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let get = |i: usize| -> anyhow::Result<f64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("schedule '{s}': missing field {i}"))?
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("schedule '{s}': {e}"))
+        };
+        match parts[0] {
+            "constant" => Ok(Schedule::Constant(get(1)?)),
+            "linear" => Ok(Schedule::Linear { t0: get(1)?, t1: get(2)? }),
+            "geometric" => Ok(Schedule::Geometric { t0: get(1)?, t1: get(2)? }),
+            "cosine" => Ok(Schedule::Cosine { t0: get(1)?, t1: get(2)? }),
+            other => anyhow::bail!("unknown schedule kind '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_endpoints() {
+        let s = Schedule::Linear { t0: 10.0, t1: 1.0 };
+        assert_eq!(s.temperature(0, 100), 10.0);
+        assert!((s.temperature(99, 100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometric_is_monotone_decreasing() {
+        let s = Schedule::Geometric { t0: 8.0, t1: 0.5 };
+        let temps = s.materialize(50);
+        for w in temps.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!((temps[0] - 8.0).abs() < 1e-12);
+        assert!((temps[49] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_shape() {
+        let s = Schedule::Cosine { t0: 4.0, t1: 0.0 };
+        assert!((s.temperature(0, 101) - 4.0).abs() < 1e-12);
+        assert!(s.temperature(100, 101).abs() < 1e-12);
+        // Mid-point is the arithmetic mean for cosine.
+        assert!((s.temperature(50, 101) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_lookup() {
+        let s = Schedule::Table(vec![3.0, 2.0, 1.0]);
+        assert_eq!(s.temperature(0, 3), 3.0);
+        assert_eq!(s.temperature(2, 3), 1.0);
+        // Resampled across more steps than entries.
+        assert_eq!(s.temperature(5, 6), 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert!(matches!(Schedule::parse("constant:2.5").unwrap(), Schedule::Constant(v) if v == 2.5));
+        assert!(matches!(Schedule::parse("linear:5:0").unwrap(), Schedule::Linear { .. }));
+        assert!(Schedule::parse("bogus:1").is_err());
+        assert!(Schedule::parse("linear:5").is_err());
+    }
+}

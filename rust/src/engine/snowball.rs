@@ -1,0 +1,583 @@
+//! The Snowball engine: dual-mode MCMC spin selection with asynchronous
+//! single-spin updates (paper §IV-A, Algorithm 1; hardware datapath of
+//! §IV-B3).
+//!
+//! Two selection modes share one datapath:
+//!
+//! * **Mode I — random-scan (RSA)**: uniform random site, Glauber accept.
+//!   Satisfies detailed balance wrt the Gibbs distribution (Eqs. 6–9).
+//! * **Mode II — roulette-wheel (RWA)**: flip probabilities for all N
+//!   spins are evaluated in parallel, ONE spin is sampled with probability
+//!   ∝ p_flip (Eq. 10/29) and flipped deterministically (rejection-free).
+//!   Falls back to Mode I when the aggregate weight degenerates (W == 0);
+//!   the optional *uniformized* variant compares W against W* = N and
+//!   null-transitions with probability 1 − W/W* (§IV-B3c).
+//!
+//! Exactly one spin is updated per step in either mode, and its effect is
+//! propagated to all local fields immediately (asynchronous update,
+//! Eq. 12/17) — `u` is never stale.
+//!
+//! Two interchangeable datapaths compute those field updates:
+//! `Datapath::Dense` walks the i32 coupling row (the CPU-fast hot path),
+//! `Datapath::BitPlane` streams the column-major bit-planes word by word
+//! (bit-faithful to the FPGA; same results, verified by tests).
+
+use super::lut::{PwlLogistic, ONE_Q16};
+use super::schedule::Schedule;
+use crate::bitplane::BitPlanes;
+use crate::ising::{IsingModel, SpinVec};
+use crate::rng::{salt, StatelessRng};
+
+/// Spin-selection mode (the paper's dual-mode switch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Mode I: random-scan + Glauber accept (RSA).
+    RandomScan,
+    /// Mode II: roulette-wheel selection, rejection-free (RWA).
+    RouletteWheel,
+    /// Mode II with uniformization against W* = N (null transitions).
+    RouletteUniformized,
+}
+
+impl Mode {
+    /// CLI names.
+    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+        match s {
+            "rsa" | "random-scan" => Ok(Mode::RandomScan),
+            "rwa" | "roulette" => Ok(Mode::RouletteWheel),
+            "rwa-uniform" | "uniformized" => Ok(Mode::RouletteUniformized),
+            other => anyhow::bail!("unknown mode '{other}' (rsa|rwa|rwa-uniform)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::RandomScan => "RSA",
+            Mode::RouletteWheel => "RWA",
+            Mode::RouletteUniformized => "RWA-U",
+        }
+    }
+}
+
+/// Which field-update datapath to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Datapath {
+    /// Dense i32 row walk (CPU hot path).
+    Dense,
+    /// Column-major bit-plane streaming (hardware-faithful, Eqs. 19–20).
+    BitPlane,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub mode: Mode,
+    pub datapath: Datapath,
+    pub schedule: Schedule,
+    /// Total Monte Carlo steps (one selected spin per step).
+    pub steps: u64,
+    pub seed: u64,
+    /// Bit-planes to allocate (None = minimum for the instance).
+    pub planes: Option<u32>,
+    /// Record `(step, energy)` every `trace_stride` steps (0 = off).
+    pub trace_stride: u64,
+}
+
+impl EngineConfig {
+    /// A sensible default: RWA, dense datapath, geometric cooling.
+    pub fn new(mode: Mode, steps: u64, seed: u64) -> Self {
+        Self {
+            mode,
+            datapath: Datapath::Dense,
+            schedule: Schedule::Geometric { t0: 10.0, t1: 0.05 },
+            steps,
+            seed,
+            planes: None,
+            trace_stride: 0,
+        }
+    }
+}
+
+/// Outcome of one run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub best_energy: i64,
+    pub best_step: u64,
+    pub best_spins: SpinVec,
+    pub final_energy: i64,
+    pub final_spins: SpinVec,
+    /// `(step, energy)` samples when tracing was enabled.
+    pub trace: Vec<(u64, i64)>,
+    pub steps: u64,
+    /// Accepted flips (== steps − nulls − rejected in Mode I).
+    pub flips: u64,
+    /// Mode II → Mode I fallbacks (W == 0).
+    pub fallbacks: u64,
+    /// Uniformized null transitions.
+    pub nulls: u64,
+    pub wall: std::time::Duration,
+}
+
+/// The Snowball engine over one Ising instance.
+pub struct SnowballEngine<'m> {
+    model: &'m IsingModel,
+    cfg: EngineConfig,
+    lut: PwlLogistic,
+    rng: StatelessRng,
+    bitplanes: Option<BitPlanes>,
+    // Mutable chain state.
+    spins: SpinVec,
+    /// Full local fields `u_i = u_i^(J) + h_i` (the engine folds h in at
+    /// init; both update paths only ever add coupler deltas, Eq. 12).
+    u: Vec<i64>,
+    energy: i64,
+    /// Scratch: per-spin flip probabilities (Q16) for Mode II.
+    p_q16: Vec<u32>,
+}
+
+impl<'m> SnowballEngine<'m> {
+    /// Build an engine; initial spins drawn from the stateless RNG.
+    pub fn new(model: &'m IsingModel, cfg: EngineConfig) -> Self {
+        let rng = StatelessRng::new(cfg.seed);
+        let spins = SpinVec::random(model.len(), &rng);
+        Self::with_spins(model, cfg, spins)
+    }
+
+    /// Build with an explicit initial configuration.
+    pub fn with_spins(model: &'m IsingModel, cfg: EngineConfig, spins: SpinVec) -> Self {
+        assert_eq!(spins.len(), model.len());
+        let rng = StatelessRng::new(cfg.seed);
+        let bitplanes = match cfg.datapath {
+            Datapath::BitPlane => Some(BitPlanes::encode(model, cfg.planes)),
+            Datapath::Dense => None,
+        };
+        let u = model.local_fields(&spins);
+        let energy = model.energy(&spins);
+        let n = model.len();
+        Self { model, cfg, lut: PwlLogistic::default(), rng, bitplanes, spins, u, energy, p_q16: vec![0; n] }
+    }
+
+    /// Current spins.
+    pub fn spins(&self) -> &SpinVec {
+        &self.spins
+    }
+
+    /// Current local fields.
+    pub fn fields(&self) -> &[i64] {
+        &self.u
+    }
+
+    /// Current (incrementally tracked) energy.
+    pub fn energy(&self) -> i64 {
+        self.energy
+    }
+
+    /// The PWL LUT in use.
+    pub fn lut(&self) -> &PwlLogistic {
+        &self.lut
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> RunResult {
+        let start = std::time::Instant::now();
+        let steps = self.cfg.steps;
+        let mut best_energy = self.energy;
+        let mut best_step = 0u64;
+        let mut best_spins = self.spins.clone();
+        let mut trace = Vec::new();
+        let mut flips = 0u64;
+        let mut fallbacks = 0u64;
+        let mut nulls = 0u64;
+        if self.cfg.trace_stride > 0 {
+            trace.push((0, self.energy));
+        }
+        for t in 0..steps {
+            let temp = self.cfg.schedule.temperature(t, steps);
+            let outcome = self.step(t, temp);
+            match outcome {
+                StepOutcome::Flipped(_) => flips += 1,
+                StepOutcome::FallbackFlipped(_) => {
+                    flips += 1;
+                    fallbacks += 1;
+                }
+                StepOutcome::FallbackRejected => fallbacks += 1,
+                StepOutcome::Null => nulls += 1,
+                StepOutcome::Rejected => {}
+            }
+            if self.energy < best_energy {
+                best_energy = self.energy;
+                best_step = t + 1;
+                best_spins = self.spins.clone();
+            }
+            if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
+                trace.push((t + 1, self.energy));
+            }
+        }
+        RunResult {
+            best_energy,
+            best_step,
+            best_spins,
+            final_energy: self.energy,
+            final_spins: self.spins.clone(),
+            trace,
+            steps,
+            flips,
+            fallbacks,
+            nulls,
+            wall: start.elapsed(),
+        }
+    }
+
+    /// One Monte Carlo step at temperature `temp` (public for tests and
+    /// the hardware-sim cycle accounting).
+    pub fn step(&mut self, t: u64, temp: f64) -> StepOutcome {
+        match self.cfg.mode {
+            Mode::RandomScan => self.step_random_scan(t, temp, false),
+            Mode::RouletteWheel => self.step_roulette(t, temp, false),
+            Mode::RouletteUniformized => self.step_roulette(t, temp, true),
+        }
+    }
+
+    /// Mode I (paper §IV-B3b): select uniformly, Glauber accept.
+    fn step_random_scan(&mut self, t: u64, temp: f64, is_fallback: bool) -> StepOutcome {
+        let n = self.model.len() as u32;
+        let j = self.rng.below(t, 0, salt::SITE, n) as usize; // Eq. 22
+        let de = IsingModel::delta_e(self.spins.get(j), self.u[j]); // Eq. 24
+        let p = self.lut.flip_prob_q16(de, temp); // Eq. 25
+        let r = self.rng.u32(t, 0, salt::ACCEPT) >> 16; // 16-bit uniform
+        if r < p {
+            self.apply_flip(j, de);
+            if is_fallback {
+                StepOutcome::FallbackFlipped(j)
+            } else {
+                StepOutcome::Flipped(j)
+            }
+        } else if is_fallback {
+            StepOutcome::FallbackRejected
+        } else {
+            StepOutcome::Rejected
+        }
+    }
+
+    /// Mode II (paper §IV-B3c): evaluate all spins, roulette-select one,
+    /// flip deterministically.
+    fn step_roulette(&mut self, t: u64, temp: f64, uniformized: bool) -> StepOutcome {
+        let n = self.model.len();
+        // Per-site flip probabilities (the FPGA evaluates these lanes in
+        // parallel; `p_q16` is the lane buffer). Hot loop: reciprocal
+        // temperature hoisted, word-wise spin-sign extraction.
+        let mut w_total: u64 = 0;
+        if temp > 0.0 {
+            let inv_t = 1.0 / temp;
+            // Integer-domain saturation thresholds: |ΔE| beyond these is
+            // guaranteed inside the LUT's flat head/tail runs, where the
+            // lerp equals the endpoint exactly — so the f64 path can be
+            // skipped without changing any output bit (the +1 slack
+            // absorbs reciprocal rounding; an over-estimate only sends a
+            // lane down the slow path, never to a wrong value).
+            let de_hi = (self.lut.sat_hi_z() * temp).ceil() as i64 + 1;
+            let de_lo = (self.lut.sat_lo_z() * temp).floor() as i64 - 1;
+            let (p_head, p_tail) = self.lut.sat_values();
+            let words = self.spins.words();
+            for i in 0..n {
+                // s_i = ±1 from the packed bit, branch-free.
+                let bit = (words[i >> 6] >> (i & 63)) & 1;
+                let s = (2 * bit as i64) - 1;
+                let de = 2 * s * self.u[i];
+                let p = if de >= de_hi {
+                    p_tail
+                } else if de <= de_lo {
+                    p_head
+                } else {
+                    self.lut.flip_prob_q16_inv(de, inv_t)
+                };
+                self.p_q16[i] = p;
+                w_total += p as u64;
+            }
+        } else {
+            for i in 0..n {
+                let de = IsingModel::delta_e(self.spins.get(i), self.u[i]);
+                let p = self.lut.flip_prob_q16(de, temp);
+                self.p_q16[i] = p;
+                w_total += p as u64;
+            }
+        }
+        if w_total == 0 {
+            // Degenerate aggregate weight → sequential fallback (paper:
+            // "falls back to a conventional one-site update").
+            return self.step_random_scan(t, temp, true);
+        }
+        // Uniformization: compare W against the fixed max rate W* = N
+        // (in Q16, N·2^16); null transition with probability 1 − W/W*.
+        let w_star = (n as u64) * ONE_Q16 as u64;
+        let draw_domain = if uniformized { w_star } else { w_total };
+        let r = self.draw_below(t, draw_domain);
+        if uniformized && r >= w_total {
+            return StepOutcome::Null;
+        }
+        // Prefix scan for the unique j with cum(j-1) <= r < cum(j).
+        let mut acc = 0u64;
+        let mut chosen = n - 1;
+        for i in 0..n {
+            acc += self.p_q16[i] as u64;
+            if r < acc {
+                chosen = i;
+                break;
+            }
+        }
+        let de = IsingModel::delta_e(self.spins.get(chosen), self.u[chosen]);
+        self.apply_flip(chosen, de);
+        StepOutcome::Flipped(chosen)
+    }
+
+    /// Uniform draw in [0, bound) from the stateless stream (64-bit
+    /// fixed-point multiply; bias < 2^-64).
+    #[inline(always)]
+    fn draw_below(&self, t: u64, bound: u64) -> u64 {
+        let raw = self.rng.u64(t, 0, salt::ROULETTE);
+        ((raw as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Flip spin `j` and propagate to all local fields (asynchronous
+    /// update, Eqs. 12/17/27/31) and the tracked energy.
+    fn apply_flip(&mut self, j: usize, de: i64) {
+        let s_old = self.spins.flip(j);
+        self.energy += de;
+        match self.cfg.datapath {
+            Datapath::Dense => {
+                // u_i ← u_i − 2 J_ij s_j_old over the dense row (J sym.).
+                let row = self.model.j_row(j);
+                let factor = 2 * s_old as i64;
+                for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
+                    *ui -= factor * jv as i64;
+                }
+            }
+            Datapath::BitPlane => {
+                self.bitplanes.as_ref().unwrap().incr_update(&mut self.u, j, s_old);
+            }
+        }
+    }
+}
+
+/// What a single step did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// A spin was flipped (index).
+    Flipped(usize),
+    /// Mode I rejected the proposal.
+    Rejected,
+    /// Mode II fell back to Mode I and flipped.
+    FallbackFlipped(usize),
+    /// Mode II fell back to Mode I and rejected.
+    FallbackRejected,
+    /// Uniformized null transition.
+    Null,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+
+    fn small_instance(seed: u64) -> MaxCut {
+        let rng = StatelessRng::new(seed);
+        MaxCut::new(generators::erdos_renyi(48, 200, &[-1, 1], &rng))
+    }
+
+    #[test]
+    fn energy_tracking_is_exact_all_modes_and_datapaths() {
+        let p = small_instance(101);
+        for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+            for dp in [Datapath::Dense, Datapath::BitPlane] {
+                let mut cfg = EngineConfig::new(mode, 300, 7);
+                cfg.datapath = dp;
+                let mut e = SnowballEngine::new(p.model(), cfg);
+                for t in 0..300 {
+                    e.step(t, 1.5);
+                }
+                assert_eq!(
+                    e.energy(),
+                    p.model().energy(e.spins()),
+                    "incremental energy drifted ({mode:?}, {dp:?})"
+                );
+                assert_eq!(
+                    e.fields(),
+                    &p.model().local_fields(e.spins())[..],
+                    "incremental fields drifted ({mode:?}, {dp:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_bitplane_paths_agree_exactly() {
+        let p = small_instance(102);
+        let mk = |dp| {
+            let mut cfg = EngineConfig::new(Mode::RouletteWheel, 500, 99);
+            cfg.datapath = dp;
+            let mut e = SnowballEngine::new(p.model(), cfg);
+            let r = e.run();
+            (r.best_energy, r.final_energy, r.flips)
+        };
+        assert_eq!(mk(Datapath::Dense), mk(Datapath::BitPlane));
+    }
+
+    #[test]
+    fn annealing_finds_low_energy() {
+        let p = small_instance(103);
+        let mut cfg = EngineConfig::new(Mode::RouletteWheel, 4000, 3);
+        cfg.schedule = Schedule::Geometric { t0: 6.0, t1: 0.02 };
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run();
+        // Random config has expected energy 0; the anneal must do far
+        // better (cut ≥ |E|·0.55 empirically on ±1 ER graphs).
+        let cut = p.cut_of_energy(r.best_energy);
+        assert!(cut > 0, "cut {cut} not positive");
+        assert!(r.best_energy < -40, "best energy {} too high", r.best_energy);
+    }
+
+    #[test]
+    fn rwa_is_rejection_free_at_positive_temperature() {
+        let p = small_instance(104);
+        let mut cfg = EngineConfig::new(Mode::RouletteWheel, 200, 11);
+        // Warm enough that p_flip never underflows the Q16 LUT: W > 0
+        // every step → no fallbacks, a flip every step (the paper's
+        // "rejection-free" property). (At very low T the Q16 lanes can
+        // all quantize to zero — that is exactly the W == 0 fallback
+        // case, covered by `rwa_falls_back_when_frozen`.)
+        cfg.schedule = Schedule::Constant(2.0);
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run();
+        assert_eq!(r.fallbacks, 0);
+        assert_eq!(r.flips, r.steps);
+    }
+
+    #[test]
+    fn rwa_falls_back_when_frozen() {
+        // Construct a state where every flip is strictly uphill: aligned
+        // 2-spin ferromagnet. At T = 0 all p == 0 → W == 0 → Mode II must
+        // fall back to Mode I (which then rejects the uphill move).
+        let mut m = IsingModel::zeros(2);
+        m.set_j(0, 1, 1);
+        let cfg = EngineConfig::new(Mode::RouletteWheel, 0, 13);
+        let mut e = SnowballEngine::with_spins(&m, cfg, SpinVec::from_spins(&[1, 1]));
+        for t in 0..20 {
+            match e.step(t, 0.0) {
+                StepOutcome::FallbackRejected => {}
+                other => panic!("expected FallbackRejected, got {other:?}"),
+            }
+        }
+        assert_eq!(e.energy(), -1, "ground state must be undisturbed");
+    }
+
+    #[test]
+    fn uniformized_mode_takes_null_transitions() {
+        let p = small_instance(106);
+        let mut cfg = EngineConfig::new(Mode::RouletteUniformized, 500, 17);
+        // Low temperature → small W → mostly null transitions.
+        cfg.schedule = Schedule::Constant(0.3);
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run();
+        assert!(r.nulls > 0, "uniformized chain never nulled");
+        assert_eq!(r.nulls + r.flips + r.fallbacks, r.steps);
+    }
+
+    #[test]
+    fn runs_are_reproducible_by_seed() {
+        let p = small_instance(107);
+        let run = |seed| {
+            let mut e = SnowballEngine::new(p.model(), EngineConfig::new(Mode::RouletteWheel, 300, seed));
+            e.run().final_energy
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn trace_records_at_stride() {
+        let p = small_instance(108);
+        let mut cfg = EngineConfig::new(Mode::RandomScan, 100, 1);
+        cfg.trace_stride = 25;
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run();
+        let steps: Vec<u64> = r.trace.iter().map(|&(s, _)| s).collect();
+        assert_eq!(steps, vec![0, 25, 50, 75, 100]);
+    }
+
+    /// Statistical check of the detailed-balance consequence: at fixed T
+    /// the random-scan chain's empirical distribution over a tiny model
+    /// matches the Gibbs distribution.
+    #[test]
+    fn rsa_samples_gibbs_on_tiny_model() {
+        let mut m = IsingModel::zeros(3);
+        m.set_j(0, 1, 1);
+        m.set_j(1, 2, -1);
+        m.set_h(0, 1);
+        let t = 2.0;
+        let mut cfg = EngineConfig::new(Mode::RandomScan, 0, 21);
+        cfg.schedule = Schedule::Constant(t);
+        let mut e = SnowballEngine::new(&m, cfg);
+        // Burn-in.
+        for step in 0..2000 {
+            e.step(step, t);
+        }
+        let mut counts = [0u64; 8];
+        let samples = 400_000u64;
+        for step in 0..samples {
+            e.step(2000 + step, t);
+            let idx = (0..3).fold(0usize, |a, i| a | ((e.spins().bit(i) as usize) << i));
+            counts[idx] += 1;
+        }
+        // Gibbs reference.
+        let energies = crate::problems::landscape::enumerate(&m);
+        let z: f64 = energies.iter().map(|&e| (-(e as f64) / t).exp()).sum();
+        for (idx, &c) in counts.iter().enumerate() {
+            let expect = (-(energies[idx] as f64) / t).exp() / z;
+            let got = c as f64 / samples as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "state {idx}: empirical {got:.4} vs Gibbs {expect:.4}"
+            );
+        }
+    }
+
+    /// Roulette selection frequencies must be proportional to p_flip
+    /// (Eq. 29): freeze the fields by zeroing J and using only h.
+    #[test]
+    fn roulette_selection_proportional_to_weights() {
+        let mut m = IsingModel::zeros(4);
+        // No couplings: flipping a spin never changes others' ΔE.
+        m.set_h(0, 2);
+        m.set_h(1, 1);
+        m.set_h(2, 0);
+        m.set_h(3, -1);
+        let t = 1.0;
+        let spins = SpinVec::from_spins(&[1, 1, 1, 1]);
+        let lut = PwlLogistic::default();
+        // Expected first-step weights: ΔE_i = 2 s_i h_i (u_i == h_i).
+        let w: Vec<f64> =
+            (0..4).map(|i| lut.flip_prob_q16(2 * m.h(i) as i64, t) as f64).collect();
+        let w_sum: f64 = w.iter().sum();
+        let mut counts = [0u64; 4];
+        let trials = 200_000u64;
+        for trial in 0..trials {
+            // Fresh engine with a distinct seed each trial; we only
+            // observe the FIRST selection from the fixed start state.
+            let mut cfg = EngineConfig::new(Mode::RouletteWheel, 0, trial);
+            cfg.schedule = Schedule::Constant(t);
+            let mut e2 = SnowballEngine::with_spins(&m, cfg, spins.clone());
+            if let StepOutcome::Flipped(j) = e2.step(0, t) {
+                counts[j] += 1;
+            }
+        }
+        for i in 0..4 {
+            let expect = w[i] / w_sum;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "spin {i}: selected {got:.4}, expected {expect:.4}"
+            );
+        }
+    }
+}

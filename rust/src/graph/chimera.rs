@@ -1,0 +1,241 @@
+//! Chimera hardware topology and minor embedding (paper §III-A, Fig. 5).
+//!
+//! Snowball's all-to-all architecture exists to *avoid* this machinery;
+//! building it makes the §III-A overhead argument quantitative: the
+//! classic triangle layout embeds `K_n` into an `m × m` Chimera with
+//! chains of length `⌈n/4⌉ + 1`, so `n` logical spins cost `Θ(n²/4)`
+//! physical qubits — the overhead Table/Fig-5 style analyses report.
+
+use super::Graph;
+
+/// A Chimera(m, m, 4) topology: an `m × m` grid of `K_{4,4}` unit cells.
+#[derive(Clone, Debug)]
+pub struct Chimera {
+    pub m: usize,
+}
+
+impl Chimera {
+    pub fn new(m: usize) -> Self {
+        Self { m }
+    }
+
+    /// Total physical qubits `8·m²`.
+    pub fn qubits(&self) -> usize {
+        8 * self.m * self.m
+    }
+
+    /// Qubit id for (row, col, side, index): side 0 = "left/vertical"
+    /// partition, side 1 = "right/horizontal"; index 0..4 within the
+    /// partition.
+    pub fn qubit(&self, row: usize, col: usize, side: usize, idx: usize) -> usize {
+        debug_assert!(row < self.m && col < self.m && side < 2 && idx < 4);
+        ((row * self.m + col) * 2 + side) * 4 + idx
+    }
+
+    /// The hardware graph: intra-cell `K_{4,4}` plus inter-cell couplers
+    /// (vertical qubits couple along columns, horizontal along rows).
+    pub fn graph(&self) -> Graph {
+        let mut g = Graph::empty(self.qubits());
+        for r in 0..self.m {
+            for c in 0..self.m {
+                // K_{4,4} inside the cell.
+                for a in 0..4 {
+                    for b in 0..4 {
+                        g.add_edge(
+                            self.qubit(r, c, 0, a) as u32,
+                            self.qubit(r, c, 1, b) as u32,
+                            1,
+                        );
+                    }
+                }
+                // Vertical chains: side-0 qubits to the cell below.
+                if r + 1 < self.m {
+                    for a in 0..4 {
+                        g.add_edge(
+                            self.qubit(r, c, 0, a) as u32,
+                            self.qubit(r + 1, c, 0, a) as u32,
+                            1,
+                        );
+                    }
+                }
+                // Horizontal chains: side-1 qubits to the cell right.
+                if c + 1 < self.m {
+                    for a in 0..4 {
+                        g.add_edge(
+                            self.qubit(r, c, 1, a) as u32,
+                            self.qubit(r, c + 1, 1, a) as u32,
+                            1,
+                        );
+                    }
+                }
+            }
+        }
+        g
+    }
+}
+
+/// A minor embedding: logical spin → chain of physical qubits.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub chains: Vec<Vec<usize>>,
+    pub chimera: Chimera,
+}
+
+impl Embedding {
+    /// Physical qubits used.
+    pub fn physical_spins(&self) -> usize {
+        self.chains.iter().map(|c| c.len()).sum()
+    }
+
+    /// Longest chain (ferromagnetic-chain length; drives chain-break
+    /// probability on real annealers).
+    pub fn max_chain(&self) -> usize {
+        self.chains.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    /// Overhead factor `physical / logical`.
+    pub fn overhead(&self) -> f64 {
+        self.physical_spins() as f64 / self.chains.len() as f64
+    }
+}
+
+/// Classic triangle-layout embedding of `K_n` into Chimera (Choi 2011):
+/// logical spin `i` (block `b_i = i/4`, lane `k = i mod 4`) occupies an
+/// L-shaped chain — a horizontal side-1 run across row `b_i`, columns
+/// `b_i..blocks`, and a vertical side-0 run down column `b_i`, rows
+/// `0..=b_i`, meeting at diagonal cell `(b_i, b_i)`. For `b_i < b_j` the
+/// chains cross at cell `(b_i, b_j)` where i's horizontal (side-1) qubit
+/// couples j's vertical (side-0) qubit through the intra-cell `K_{4,4}`.
+/// Requires `m ≥ ⌈n/4⌉`; returns None if it cannot fit.
+pub fn embed_complete(n: usize, chimera: &Chimera) -> Option<Embedding> {
+    let blocks = n.div_ceil(4);
+    if blocks > chimera.m {
+        return None;
+    }
+    let mut chains = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = i / 4;
+        let k = i % 4;
+        let mut chain = Vec::new();
+        // Horizontal run: side-1 qubit k across cells (b, b..blocks).
+        for c in b..blocks {
+            chain.push(chimera.qubit(b, c, 1, k));
+        }
+        // Vertical run: side-0 qubit k up cells (0..=b, b).
+        for r in 0..=b {
+            chain.push(chimera.qubit(r, b, 0, k));
+        }
+        chains.push(chain);
+    }
+    Some(Embedding { chains, chimera: chimera.clone() })
+}
+
+/// Verify an embedding against the hardware graph: chains are connected
+/// subtrees, chains are vertex-disjoint, and every logical edge (u, v)
+/// of the complete graph has at least one physical coupler between the
+/// two chains.
+pub fn verify_complete_embedding(emb: &Embedding) -> Result<(), String> {
+    let hw = emb.chimera.graph();
+    let mut adj: std::collections::HashMap<usize, Vec<usize>> = Default::default();
+    for e in &hw.edges {
+        adj.entry(e.u as usize).or_default().push(e.v as usize);
+        adj.entry(e.v as usize).or_default().push(e.u as usize);
+    }
+    // Disjointness.
+    let mut owner = std::collections::HashMap::new();
+    for (i, chain) in emb.chains.iter().enumerate() {
+        for &q in chain {
+            if owner.insert(q, i).is_some() {
+                return Err(format!("qubit {q} used by two chains"));
+            }
+        }
+    }
+    // Connectivity of each chain (BFS within chain vertices).
+    for (i, chain) in emb.chains.iter().enumerate() {
+        let set: std::collections::HashSet<usize> = chain.iter().copied().collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut queue = vec![chain[0]];
+        seen.insert(chain[0]);
+        while let Some(q) = queue.pop() {
+            for &nb in adj.get(&q).map(|v| v.as_slice()).unwrap_or(&[]) {
+                if set.contains(&nb) && seen.insert(nb) {
+                    queue.push(nb);
+                }
+            }
+        }
+        if seen.len() != chain.len() {
+            return Err(format!("chain {i} is disconnected"));
+        }
+    }
+    // Logical edge coverage.
+    let n = emb.chains.len();
+    for u in 0..n {
+        let cu: std::collections::HashSet<usize> = emb.chains[u].iter().copied().collect();
+        for v in (u + 1)..n {
+            let connected = emb.chains[v].iter().any(|&q| {
+                adj.get(&q).map(|nbs| nbs.iter().any(|nb| cu.contains(nb))).unwrap_or(false)
+            });
+            if !connected {
+                return Err(format!("logical edge ({u},{v}) has no physical coupler"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// §III-A overhead table row: embedding `K_n` cost vs all-to-all.
+pub fn overhead_row(n: usize) -> Option<(usize, usize, usize, f64)> {
+    let m = n.div_ceil(4);
+    let ch = Chimera::new(m);
+    let emb = embed_complete(n, &ch)?;
+    Some((n, emb.physical_spins(), emb.max_chain(), emb.overhead()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chimera_counts() {
+        let c = Chimera::new(2);
+        assert_eq!(c.qubits(), 32);
+        let g = c.graph();
+        // 4 cells × 16 intra + 1 col × 4 + ... : m=2 → inter: vertical
+        // 4 qubits × m cols × (m-1) = 8, horizontal 8. 4*16+16 = 80.
+        assert_eq!(g.edge_count(), 80);
+        assert!(!g.has_duplicate_edges());
+    }
+
+    #[test]
+    fn k6_embedding_like_fig5() {
+        // Fig 5: K6 on Chimera needs more than six physical spins.
+        let ch = Chimera::new(2);
+        let emb = embed_complete(6, &ch).expect("K6 fits Chimera(2)");
+        assert!(emb.physical_spins() > 6, "embedding must cost extra spins");
+        verify_complete_embedding(&emb).expect("valid embedding");
+    }
+
+    #[test]
+    fn larger_complete_graphs_verify() {
+        for n in [4usize, 8, 12, 16] {
+            let ch = Chimera::new(n.div_ceil(4));
+            let emb = embed_complete(n, &ch).expect("fits");
+            verify_complete_embedding(&emb).unwrap_or_else(|e| panic!("K{n}: {e}"));
+            // Quadratic-ish growth of physical spins.
+            assert!(emb.physical_spins() >= n * (n / 4).max(1));
+        }
+    }
+
+    #[test]
+    fn embedding_rejects_too_small_hardware() {
+        assert!(embed_complete(9, &Chimera::new(2)).is_none());
+    }
+
+    #[test]
+    fn overhead_grows_superlinearly() {
+        let (_, p16, _, o16) = overhead_row(16).unwrap();
+        let (_, p32, _, o32) = overhead_row(32).unwrap();
+        assert!(p32 > 2 * p16, "physical spins must grow superlinearly");
+        assert!(o32 > o16, "overhead factor must grow with n");
+    }
+}

@@ -1,0 +1,212 @@
+//! Random-graph generators for the Table I topology classes.
+//!
+//! All generators are driven by the stateless RNG so instance construction
+//! is a pure function of the seed — the same property the paper relies on
+//! for reproducible benchmarking.
+
+use super::Graph;
+use crate::rng::{salt, StatelessRng};
+
+/// Erdős–Rényi G(n, m): exactly `m` distinct edges sampled uniformly.
+/// Weights are drawn from `weights` uniformly at random.
+pub fn erdos_renyi(n: usize, m: usize, weights: &[i32], rng: &StatelessRng) -> Graph {
+    let max_m = n * (n - 1) / 2;
+    assert!(m <= max_m, "m = {m} exceeds the {max_m} possible edges");
+    let mut g = Graph::empty(n);
+    let mut seen = std::collections::HashSet::with_capacity(m * 2);
+    let mut draw = 0u64;
+    while g.edges.len() < m {
+        let u = rng.below(1, draw, salt::PROBLEM, n as u32);
+        let v = rng.below(2, draw, salt::PROBLEM, n as u32);
+        draw += 1;
+        if u == v {
+            continue;
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        if !seen.insert(((a as u64) << 32) | b as u64) {
+            continue;
+        }
+        let w = pick_weight(weights, rng, 3, draw);
+        g.add_edge(a, b, w);
+    }
+    g
+}
+
+/// Watts–Strogatz small-world: ring lattice with `k` nearest neighbours
+/// per side, each edge rewired with probability `beta`. Produces the
+/// "Small-world" rows of Table I (G18/G64-like).
+pub fn small_world(n: usize, k: usize, beta: f64, weights: &[i32], rng: &StatelessRng) -> Graph {
+    assert!(k >= 1 && 2 * k < n);
+    let mut seen = std::collections::HashSet::new();
+    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(n * k);
+    // Ring lattice.
+    for u in 0..n {
+        for d in 1..=k {
+            let v = (u + d) % n;
+            let (a, b) = if u < v { (u as u32, v as u32) } else { (v as u32, u as u32) };
+            if seen.insert(((a as u64) << 32) | b as u64) {
+                pairs.push((a, b));
+            }
+        }
+    }
+    // Rewire.
+    let mut out: Vec<(u32, u32)> = Vec::with_capacity(pairs.len());
+    for (idx, &(a, b)) in pairs.iter().enumerate() {
+        let t = idx as u64;
+        if rng.unit_f64(4, t, salt::PROBLEM) < beta {
+            // Rewire endpoint b to a uniform non-neighbour.
+            let mut attempt = 0u64;
+            loop {
+                let c = rng.below(5, t * 97 + attempt, salt::PROBLEM, n as u32);
+                attempt += 1;
+                if c == a {
+                    continue;
+                }
+                let (x, y) = if a < c { (a, c) } else { (c, a) };
+                let key = ((x as u64) << 32) | y as u64;
+                if seen.contains(&key) {
+                    if attempt > 64 {
+                        // Dense corner case: keep the original edge.
+                        out.push((a, b));
+                        break;
+                    }
+                    continue;
+                }
+                seen.remove(&(((a as u64) << 32) | b as u64));
+                seen.insert(key);
+                out.push((x, y));
+                break;
+            }
+        } else {
+            out.push((a, b));
+        }
+    }
+    let mut g = Graph::empty(n);
+    for (idx, (a, b)) in out.into_iter().enumerate() {
+        let w = pick_weight(weights, rng, 6, idx as u64);
+        g.add_edge(a, b, w);
+    }
+    g
+}
+
+/// 2-D torus (periodic grid) of `rows × cols` vertices, 4-neighbour
+/// connectivity — the "Torus" rows of Table I (G11/G62-like).
+pub fn torus(rows: usize, cols: usize, weights: &[i32], rng: &StatelessRng) -> Graph {
+    let n = rows * cols;
+    let mut g = Graph::empty(n);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut idx = 0u64;
+    for r in 0..rows {
+        for c in 0..cols {
+            let w1 = pick_weight(weights, rng, 7, idx);
+            idx += 1;
+            g.add_edge(id(r, c), id(r, (c + 1) % cols), w1);
+            let w2 = pick_weight(weights, rng, 7, idx);
+            idx += 1;
+            g.add_edge(id(r, c), id((r + 1) % rows, c), w2);
+        }
+    }
+    g
+}
+
+/// Complete graph K_n with weights drawn uniformly from `weights` —
+/// the K2000 construction of §V-A2 with `weights = [-1, +1]`.
+pub fn complete(n: usize, weights: &[i32], rng: &StatelessRng) -> Graph {
+    let mut g = Graph::empty(n);
+    let mut idx = 0u64;
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            let w = pick_weight(weights, rng, 8, idx);
+            idx += 1;
+            g.add_edge(u, v, w);
+        }
+    }
+    g
+}
+
+/// 2-D open grid (no wraparound) — substrate for the Fig. 4 "ISCA26"
+/// planted-ground-state demonstration.
+pub fn grid(rows: usize, cols: usize, w: i32) -> Graph {
+    let n = rows * cols;
+    let mut g = Graph::empty(n);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.add_edge(id(r, c), id(r, c + 1), w);
+            }
+            if r + 1 < rows {
+                g.add_edge(id(r, c), id(r + 1, c), w);
+            }
+        }
+    }
+    g
+}
+
+#[inline]
+fn pick_weight(weights: &[i32], rng: &StatelessRng, stage: u64, idx: u64) -> i32 {
+    debug_assert!(!weights.is_empty());
+    weights[rng.below(stage, idx, salt::PROBLEM, weights.len() as u32) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PM1: [i32; 2] = [-1, 1];
+
+    #[test]
+    fn erdos_renyi_exact_edge_count() {
+        let rng = StatelessRng::new(11);
+        let g = erdos_renyi(100, 500, &PM1, &rng);
+        assert_eq!(g.n, 100);
+        assert_eq!(g.edge_count(), 500);
+        assert!(!g.has_duplicate_edges());
+        let (p, m) = g.sign_counts();
+        assert_eq!(p + m, 500);
+        // ±1 uniform: both signs should appear in force.
+        assert!(p > 150 && m > 150, "sign split {p}/{m} too skewed");
+    }
+
+    #[test]
+    fn small_world_edge_count_preserved() {
+        let rng = StatelessRng::new(13);
+        let g = small_world(200, 3, 0.1, &PM1, &rng);
+        assert_eq!(g.edge_count(), 200 * 3);
+        assert!(!g.has_duplicate_edges());
+    }
+
+    #[test]
+    fn torus_has_2n_edges_and_degree_4() {
+        let rng = StatelessRng::new(17);
+        let g = torus(10, 8, &PM1, &rng);
+        assert_eq!(g.n, 80);
+        assert_eq!(g.edge_count(), 160);
+        assert!(g.degrees().iter().all(|&d| d == 4));
+        assert!(!g.has_duplicate_edges());
+    }
+
+    #[test]
+    fn complete_graph_density_one() {
+        let rng = StatelessRng::new(19);
+        let g = complete(50, &PM1, &rng);
+        assert_eq!(g.edge_count(), 50 * 49 / 2);
+        assert!((g.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_edge_count() {
+        let g = grid(3, 4, 1);
+        // horizontal: 3*3, vertical: 2*4
+        assert_eq!(g.edge_count(), 9 + 8);
+    }
+
+    #[test]
+    fn generators_are_deterministic_in_seed() {
+        let a = erdos_renyi(60, 200, &PM1, &StatelessRng::new(5));
+        let b = erdos_renyi(60, 200, &PM1, &StatelessRng::new(5));
+        assert_eq!(a.edges, b.edges);
+        let c = erdos_renyi(60, 200, &PM1, &StatelessRng::new(6));
+        assert_ne!(a.edges, c.edges);
+    }
+}

@@ -1,0 +1,282 @@
+//! Gset benchmark instances (Table I): parser for the Stanford file format
+//! plus an offline synthesizer.
+//!
+//! The real Gset files (`https://web.stanford.edu/~yyye/yyye/Gset/`) are
+//! not redistributable inside this repository and the build environment is
+//! offline, so `instance()` synthesizes graphs that match Table I exactly
+//! in topology class, |V|, |E| and the |E⁺|/|E⁻| sign split (weights are
+//! ±1, as in the signed Gset instances the paper uses). When a real file
+//! is present under `$GSET_DIR` (or `./data/gset/`), `load_or_synthesize`
+//! prefers it, so the harness transparently upgrades to the true instances
+//! when they are available. See DESIGN.md §3 for why this substitution
+//! preserves the evaluation's comparative structure.
+
+use super::{generators, Graph};
+use crate::rng::StatelessRng;
+use std::io::BufRead;
+use std::path::Path;
+
+/// The instances used in the paper's evaluation (Table I), plus K2000.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GsetId {
+    G6,
+    G61,
+    G18,
+    G64,
+    G11,
+    G62,
+    K2000,
+}
+
+impl GsetId {
+    /// All Table I instances in paper order.
+    pub const ALL: [GsetId; 7] =
+        [GsetId::G6, GsetId::G61, GsetId::G18, GsetId::G64, GsetId::G11, GsetId::G62, GsetId::K2000];
+
+    /// The six Gset instances of Table II (excludes K2000).
+    pub const TABLE2: [GsetId; 6] =
+        [GsetId::G6, GsetId::G61, GsetId::G18, GsetId::G64, GsetId::G11, GsetId::G62];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GsetId::G6 => "G6",
+            GsetId::G61 => "G61",
+            GsetId::G18 => "G18",
+            GsetId::G64 => "G64",
+            GsetId::G11 => "G11",
+            GsetId::G62 => "G62",
+            GsetId::K2000 => "K2000",
+        }
+    }
+
+    /// Table I row: (topology, |V|, |E|, |E+|, |E-|).
+    pub fn spec(self) -> InstanceSpec {
+        match self {
+            GsetId::G6 => InstanceSpec::new("Erdos-Renyi", 800, 19176, 9665, 9511),
+            GsetId::G61 => InstanceSpec::new("Erdos-Renyi", 7000, 17148, 8755, 8393),
+            GsetId::G18 => InstanceSpec::new("Small-world", 800, 4694, 2379, 2315),
+            GsetId::G64 => InstanceSpec::new("Small-world", 7000, 41459, 20993, 20466),
+            GsetId::G11 => InstanceSpec::new("Torus", 800, 1600, 817, 783),
+            GsetId::G62 => InstanceSpec::new("Torus", 7000, 14000, 6960, 7040),
+            GsetId::K2000 => InstanceSpec::new("Complete", 2000, 1999000, 998314, 1000686),
+        }
+    }
+}
+
+/// Target statistics for one benchmark instance (a Table I row).
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceSpec {
+    pub topology: &'static str,
+    pub v: usize,
+    pub e: usize,
+    pub e_pos: usize,
+    pub e_neg: usize,
+}
+
+impl InstanceSpec {
+    fn new(topology: &'static str, v: usize, e: usize, e_pos: usize, e_neg: usize) -> Self {
+        debug_assert_eq!(e_pos + e_neg, e);
+        Self { topology, v, e, e_pos, e_neg }
+    }
+
+    /// Edge density ρ (Table I last column).
+    pub fn density(&self) -> f64 {
+        2.0 * self.e as f64 / (self.v as f64 * (self.v as f64 - 1.0))
+    }
+}
+
+/// Parse a Gset-format file: first line `|V| |E|`, then one `u v w` edge
+/// per line (1-indexed vertices).
+pub fn parse<R: BufRead>(reader: R) -> anyhow::Result<Graph> {
+    let mut lines = reader.lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty Gset file"))??;
+    let mut it = header.split_whitespace();
+    let n: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad header"))?.parse()?;
+    let m: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad header"))?.parse()?;
+    let mut g = Graph::empty(n);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad edge line: {t}"))?.parse()?;
+        let v: u32 = it.next().ok_or_else(|| anyhow::anyhow!("bad edge line: {t}"))?.parse()?;
+        let w: i32 = it.next().ok_or_else(|| anyhow::anyhow!("bad edge line: {t}"))?.parse()?;
+        anyhow::ensure!(u >= 1 && v >= 1, "Gset vertices are 1-indexed");
+        g.add_edge(u - 1, v - 1, w);
+    }
+    anyhow::ensure!(g.edge_count() == m, "header says {m} edges, file has {}", g.edge_count());
+    Ok(g)
+}
+
+/// Write a graph in Gset format (for interchange with other solvers).
+pub fn write<W: std::io::Write>(g: &Graph, mut w: W) -> std::io::Result<()> {
+    writeln!(w, "{} {}", g.n, g.edge_count())?;
+    for e in &g.edges {
+        writeln!(w, "{} {} {}", e.u + 1, e.v + 1, e.w)?;
+    }
+    Ok(())
+}
+
+/// Synthesize an instance matching the Table I statistics. Pure function
+/// of `(id, seed)`.
+pub fn instance(id: GsetId, seed: u64) -> Graph {
+    let spec = id.spec();
+    let rng = StatelessRng::new(seed ^ (id as u64).wrapping_mul(0xA5A5_5A5A_0F0F_F0F0));
+    let mut g = match id {
+        GsetId::G6 | GsetId::G61 => erdos_renyi_matching(&spec, &rng),
+        GsetId::G18 | GsetId::G64 => small_world_matching(&spec, &rng),
+        GsetId::G11 | GsetId::G62 => torus_matching(&spec, &rng),
+        GsetId::K2000 => generators::complete(spec.v, &[-1, 1], &rng),
+    };
+    // Match the paper's realized |E+|/|E-| split exactly (Table I); for
+    // K2000 the paper draws ±1 uniformly and reports the realized split,
+    // which we reproduce by adjusting the tail of the draw.
+    force_sign_split(&mut g, spec.e_pos, spec.e_neg);
+    g
+}
+
+/// Load the real Gset file if present under `dir` (file named e.g. `G6`),
+/// else synthesize.
+pub fn load_or_synthesize(id: GsetId, dir: Option<&Path>, seed: u64) -> Graph {
+    let dirs: Vec<std::path::PathBuf> = match dir {
+        Some(d) => vec![d.to_path_buf()],
+        None => {
+            let mut v = vec![std::path::PathBuf::from("data/gset")];
+            if let Ok(env_dir) = std::env::var("GSET_DIR") {
+                v.insert(0, env_dir.into());
+            }
+            v
+        }
+    };
+    for d in dirs {
+        let path = d.join(id.name());
+        if let Ok(f) = std::fs::File::open(&path) {
+            if let Ok(g) = parse(std::io::BufReader::new(f)) {
+                return g;
+            }
+        }
+    }
+    instance(id, seed)
+}
+
+fn erdos_renyi_matching(spec: &InstanceSpec, rng: &StatelessRng) -> Graph {
+    generators::erdos_renyi(spec.v, spec.e, &[-1, 1], rng)
+}
+
+fn small_world_matching(spec: &InstanceSpec, rng: &StatelessRng) -> Graph {
+    // Watts–Strogatz gives exactly n·k edges; match |E| by a base ring of
+    // k = floor(|E|/n) plus an ER top-up of the remainder.
+    let k = spec.e / spec.v;
+    let mut g = if k >= 1 {
+        generators::small_world(spec.v, k, 0.1, &[-1, 1], rng)
+    } else {
+        Graph::empty(spec.v)
+    };
+    let missing = spec.e - g.edge_count();
+    if missing > 0 {
+        let mut seen: std::collections::HashSet<u64> =
+            g.edges.iter().map(|e| ((e.u as u64) << 32) | e.v as u64).collect();
+        let mut draw = 0u64;
+        let mut added = 0;
+        while added < missing {
+            let u = rng.below(21, draw, crate::rng::salt::PROBLEM, spec.v as u32);
+            let v = rng.below(22, draw, crate::rng::salt::PROBLEM, spec.v as u32);
+            draw += 1;
+            if u == v {
+                continue;
+            }
+            let (a, b) = if u < v { (u, v) } else { (v, u) };
+            if !seen.insert(((a as u64) << 32) | b as u64) {
+                continue;
+            }
+            g.add_edge(a, b, 1);
+            added += 1;
+        }
+    }
+    g
+}
+
+fn torus_matching(spec: &InstanceSpec, rng: &StatelessRng) -> Graph {
+    // |E| = 2|V| on a torus; pick near-square dims with rows*cols = |V|.
+    let mut rows = (spec.v as f64).sqrt() as usize;
+    while spec.v % rows != 0 {
+        rows -= 1;
+    }
+    let cols = spec.v / rows;
+    let g = generators::torus(rows, cols, &[-1, 1], rng);
+    debug_assert_eq!(g.edge_count(), 2 * spec.v);
+    g
+}
+
+/// Adjust edge signs in place so exactly `pos` edges are +1 and `neg` are
+/// −1 (weights are ±1 here by construction).
+fn force_sign_split(g: &mut Graph, pos: usize, neg: usize) {
+    assert_eq!(pos + neg, g.edge_count());
+    let mut cur_pos = g.edges.iter().filter(|e| e.w > 0).count();
+    for e in g.edges.iter_mut() {
+        if cur_pos > pos && e.w > 0 {
+            e.w = -1;
+            cur_pos -= 1;
+        } else if cur_pos < pos && e.w < 0 {
+            e.w = 1;
+            cur_pos += 1;
+        }
+    }
+    debug_assert_eq!(g.edges.iter().filter(|e| e.w > 0).count(), pos);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_instances_match_table1() {
+        // Skip the two |V| = 7000 instances here to keep unit tests fast;
+        // the integration suite covers them.
+        for id in [GsetId::G6, GsetId::G18, GsetId::G11] {
+            let spec = id.spec();
+            let g = instance(id, 42);
+            assert_eq!(g.n, spec.v, "{}: |V|", id.name());
+            assert_eq!(g.edge_count(), spec.e, "{}: |E|", id.name());
+            let (p, m) = g.sign_counts();
+            assert_eq!(p, spec.e_pos, "{}: |E+|", id.name());
+            assert_eq!(m, spec.e_neg, "{}: |E-|", id.name());
+            assert!(!g.has_duplicate_edges(), "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1, 1);
+        g.add_edge(1, 2, -1);
+        g.add_edge(2, 3, 1);
+        let mut buf = Vec::new();
+        write(&g, &mut buf).unwrap();
+        let g2 = parse(std::io::BufReader::new(&buf[..])).unwrap();
+        assert_eq!(g2.n, 4);
+        assert_eq!(g2.edges, g.edges);
+    }
+
+    #[test]
+    fn parse_rejects_bad_header() {
+        assert!(parse(std::io::BufReader::new(&b""[..])).is_err());
+        assert!(parse(std::io::BufReader::new(&b"3 1\n0 1 1\n"[..])).is_err()); // 0-indexed
+    }
+
+    #[test]
+    fn density_matches_paper() {
+        assert!((GsetId::G6.spec().density() - 0.06).abs() < 0.001);
+        assert!((GsetId::K2000.spec().density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = instance(GsetId::G11, 1);
+        let b = instance(GsetId::G11, 1);
+        assert_eq!(a.edges, b.edges);
+    }
+}

@@ -1,0 +1,130 @@
+//! Weighted undirected graphs: the problem side of the reproduction.
+//!
+//! Max-Cut / graph-partitioning instances live here as edge lists;
+//! `crate::problems` maps them onto `IsingModel`s. `generators` builds the
+//! topology classes of Table I (Erdős–Rényi, Watts–Strogatz small-world,
+//! torus, complete) and `gset` parses real Gset files or synthesizes
+//! instances matching the Table I statistics when the originals are not
+//! available offline (see DESIGN.md §3).
+
+pub mod chimera;
+pub mod generators;
+pub mod gset;
+
+/// An undirected edge `{u, v}` with integer weight `w`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+    pub w: i32,
+}
+
+/// An undirected weighted graph as an edge list (each edge stored once,
+/// with `u < v`).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// Number of vertices.
+    pub n: usize,
+    /// Edges with `u < v`, no duplicates.
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    /// Empty graph on `n` vertices.
+    pub fn empty(n: usize) -> Self {
+        Self { n, edges: Vec::new() }
+    }
+
+    /// Add edge `{u, v}` with weight `w`; normalizes to `u < v`.
+    /// Self-loops are rejected.
+    pub fn add_edge(&mut self, u: u32, v: u32, w: i32) {
+        assert_ne!(u, v, "self-loops are not allowed");
+        assert!((u as usize) < self.n && (v as usize) < self.n);
+        let (u, v) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push(Edge { u, v, w });
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Count of strictly positive / strictly negative edges
+    /// (`|E⁺|`, `|E⁻|` of Table I).
+    pub fn sign_counts(&self) -> (usize, usize) {
+        let pos = self.edges.iter().filter(|e| e.w > 0).count();
+        let neg = self.edges.iter().filter(|e| e.w < 0).count();
+        (pos, neg)
+    }
+
+    /// Edge density `ρ = 2|E| / (|V|(|V|−1))` (Table I).
+    pub fn density(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        2.0 * self.edges.len() as f64 / (self.n as f64 * (self.n as f64 - 1.0))
+    }
+
+    /// Total weight `Σ w_e`.
+    pub fn total_weight(&self) -> i64 {
+        self.edges.iter().map(|e| e.w as i64).sum()
+    }
+
+    /// Sum of |w_e| (used by quality normalizations).
+    pub fn total_abs_weight(&self) -> i64 {
+        self.edges.iter().map(|e| e.w.unsigned_abs() as i64).sum()
+    }
+
+    /// Vertex degrees.
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n];
+        for e in &self.edges {
+            d[e.u as usize] += 1;
+            d[e.v as usize] += 1;
+        }
+        d
+    }
+
+    /// Detect duplicate edges (same unordered pair listed twice).
+    pub fn has_duplicate_edges(&self) -> bool {
+        let mut seen = std::collections::HashSet::with_capacity(self.edges.len());
+        for e in &self.edges {
+            if !seen.insert(((e.u as u64) << 32) | e.v as u64) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_edge_normalizes_order() {
+        let mut g = Graph::empty(4);
+        g.add_edge(3, 1, 5);
+        assert_eq!(g.edges[0], Edge { u: 1, v: 3, w: 5 });
+    }
+
+    #[test]
+    fn density_of_complete_graph_is_one() {
+        let mut g = Graph::empty(5);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                g.add_edge(u, v, 1);
+            }
+        }
+        assert!((g.density() - 1.0).abs() < 1e-12);
+        assert_eq!(g.sign_counts(), (10, 0));
+        assert!(!g.has_duplicate_edges());
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn self_loop_rejected() {
+        let mut g = Graph::empty(2);
+        g.add_edge(1, 1, 1);
+    }
+}

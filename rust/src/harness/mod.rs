@@ -1,0 +1,9 @@
+//! Regeneration harness: one entry point per paper table/figure
+//! (DESIGN.md §5 experiment index). The bench binaries and the
+//! `snowball bench` CLI subcommand are thin wrappers over these.
+
+pub mod experiments;
+pub mod printers;
+
+pub use experiments::*;
+pub use printers::*;

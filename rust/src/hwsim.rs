@@ -1,0 +1,229 @@
+//! Cycle-approximate model of the Snowball FPGA implementation
+//! (paper §IV-B, §V; substitution for the AMD Alveo U250 — DESIGN.md §3).
+//!
+//! The model counts datapath work in units the architecture defines:
+//! 64-coupler words streamed, parallel lanes evaluated, adder-tree
+//! levels — then converts to time at the 300 MHz kernel clock the paper
+//! reports. It also models the PCIe DMA cost of loading the bit-planes,
+//! so the Fig. 14 kernel-only vs end-to-end vs naive comparison can be
+//! regenerated.
+//!
+//! This is a *first-order* model: it reproduces scaling shapes and
+//! relative costs (who wins, where incremental updates matter), not
+//! place-and-route timing.
+
+/// U250-class platform constants.
+#[derive(Clone, Copy, Debug)]
+pub struct HwParams {
+    /// Kernel clock (paper: 300 MHz).
+    pub clock_hz: f64,
+    /// Parallel evaluation lanes in the MCMC engine (spins evaluated per
+    /// cycle in Mode II; one BRAM port pair per lane).
+    pub eval_lanes: usize,
+    /// 64-bit coupler words processed per cycle during field init /
+    /// column updates (bounded by BRAM ports).
+    pub words_per_cycle: usize,
+    /// Host→device PCIe bandwidth (bytes/s) for DMA modeling.
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed DMA invocation latency (s).
+    pub dma_latency_s: f64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        Self {
+            clock_hz: 300e6,
+            eval_lanes: 64,
+            words_per_cycle: 16,
+            pcie_bytes_per_sec: 12e9, // PCIe gen3 x16 effective
+            dma_latency_s: 10e-6,
+        }
+    }
+}
+
+/// Instance geometry the cycle model needs.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    /// Spins.
+    pub n: usize,
+    /// Magnitude bit-planes B.
+    pub planes: u32,
+}
+
+impl Geometry {
+    /// Words per row, `W = ceil(N/64)`.
+    pub fn words(&self) -> usize {
+        self.n.div_ceil(64)
+    }
+
+    /// Bytes of coupler bit-planes shipped over DMA (B⁺/B⁻ × row/col).
+    pub fn plane_bytes(&self) -> usize {
+        4 * self.planes as usize * self.n * self.words() * 8
+    }
+}
+
+/// Cycle/time report for a run (the Fig. 14 quantities).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwReport {
+    pub init_cycles: u64,
+    pub step_cycles: u64,
+    pub kernel_seconds: f64,
+    pub dma_seconds: f64,
+    pub end_to_end_seconds: f64,
+}
+
+/// The cycle model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwModel {
+    pub params: HwParams,
+}
+
+impl HwModel {
+    pub fn new(params: HwParams) -> Self {
+        Self { params }
+    }
+
+    /// Cycles to initialize all local fields from the row-major planes
+    /// (Eqs. 14–16): stream `2·B·N·W` words (B⁺ and B⁻) through
+    /// `words_per_cycle` popcount units, plus an adder-tree drain.
+    pub fn init_cycles(&self, g: Geometry) -> u64 {
+        let words = 2 * g.planes as u64 * g.n as u64 * g.words() as u64;
+        let stream = words.div_ceil(self.params.words_per_cycle as u64);
+        let drain = (g.words() as u64).next_power_of_two().trailing_zeros() as u64 + 4;
+        stream + drain
+    }
+
+    /// Cycles for one Mode II (roulette) step: evaluate N lanes through
+    /// the LUT (`N / eval_lanes` cycles), accumulate W + select via the
+    /// comparator tree (log2 N levels), then the column-major incremental
+    /// update (`2·B·W` words).
+    pub fn roulette_step_cycles(&self, g: Geometry) -> u64 {
+        let eval = (g.n as u64).div_ceil(self.params.eval_lanes as u64);
+        let select = (g.n as u64).next_power_of_two().trailing_zeros() as u64 + 2;
+        eval + select + self.update_cycles(g)
+    }
+
+    /// Cycles for one Mode I (random-scan) step: single-site evaluate
+    /// (constant) + incremental update on accept.
+    pub fn random_scan_step_cycles(&self, g: Geometry, accepted: bool) -> u64 {
+        let eval = 6; // field read, ΔE, LUT, compare — pipelined constant
+        if accepted {
+            eval + self.update_cycles(g)
+        } else {
+            eval
+        }
+    }
+
+    /// Column-major incremental update: stream `2·B·W` words (Eqs. 19–20).
+    pub fn update_cycles(&self, g: Geometry) -> u64 {
+        let words = 2 * g.planes as u64 * g.words() as u64;
+        words.div_ceil(self.params.words_per_cycle as u64)
+    }
+
+    /// The *naive* alternative (Fig. 14 baseline): recompute every local
+    /// field from scratch after each flip — a full init per step.
+    pub fn naive_step_cycles(&self, g: Geometry) -> u64 {
+        let eval = (g.n as u64).div_ceil(self.params.eval_lanes as u64);
+        eval + self.init_cycles(g)
+    }
+
+    /// DMA time to ship the bit-planes (+ fields/h vectors) to the card.
+    pub fn dma_seconds(&self, g: Geometry) -> f64 {
+        let bytes = g.plane_bytes() + 2 * 8 * g.n;
+        self.params.dma_latency_s + bytes as f64 / self.params.pcie_bytes_per_sec
+    }
+
+    /// Full report for a run of `steps` Mode II steps (incremental).
+    pub fn roulette_run(&self, g: Geometry, steps: u64) -> HwReport {
+        let init = self.init_cycles(g);
+        let step = self.roulette_step_cycles(g) * steps;
+        self.report(g, init, step)
+    }
+
+    /// Full report for a run of `steps` naive (non-incremental) steps.
+    pub fn naive_run(&self, g: Geometry, steps: u64) -> HwReport {
+        let init = self.init_cycles(g);
+        let step = self.naive_step_cycles(g) * steps;
+        self.report(g, init, step)
+    }
+
+    /// Full report for a Mode I run with an observed acceptance count.
+    pub fn random_scan_run(&self, g: Geometry, steps: u64, accepted: u64) -> HwReport {
+        let init = self.init_cycles(g);
+        let rejected = steps - accepted.min(steps);
+        let step = self.random_scan_step_cycles(g, true) * accepted
+            + self.random_scan_step_cycles(g, false) * rejected;
+        self.report(g, init, step)
+    }
+
+    fn report(&self, g: Geometry, init_cycles: u64, step_cycles: u64) -> HwReport {
+        let kernel = (init_cycles + step_cycles) as f64 / self.params.clock_hz;
+        let dma = self.dma_seconds(g);
+        HwReport {
+            init_cycles,
+            step_cycles,
+            kernel_seconds: kernel,
+            dma_seconds: dma,
+            end_to_end_seconds: kernel + dma,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k2000() -> Geometry {
+        Geometry { n: 2000, planes: 1 }
+    }
+
+    #[test]
+    fn incremental_beats_naive_per_step() {
+        let hw = HwModel::default();
+        let g = k2000();
+        assert!(
+            hw.roulette_step_cycles(g) < hw.naive_step_cycles(g) / 10,
+            "incremental update must be an order of magnitude cheaper"
+        );
+    }
+
+    #[test]
+    fn compute_bound_at_scale() {
+        // Fig 14's claim: kernel time dominates DMA for realistic step
+        // counts (compute-bound), i.e. end-to-end ≈ kernel-only.
+        let hw = HwModel::default();
+        let g = k2000();
+        let r = hw.roulette_run(g, 200_000);
+        assert!(r.kernel_seconds / r.end_to_end_seconds > 0.95);
+    }
+
+    #[test]
+    fn init_scales_linearly_in_planes() {
+        let hw = HwModel::default();
+        let c1 = hw.init_cycles(Geometry { n: 1024, planes: 1 });
+        let c4 = hw.init_cycles(Geometry { n: 1024, planes: 4 });
+        // Linear up to the constant adder-tree drain.
+        assert!((c4 as f64 / c1 as f64) > 3.5 && (c4 as f64 / c1 as f64) < 4.5);
+    }
+
+    #[test]
+    fn rejected_steps_are_cheap() {
+        let hw = HwModel::default();
+        let g = k2000();
+        assert!(hw.random_scan_step_cycles(g, false) < hw.random_scan_step_cycles(g, true));
+        // With wide planes the update dominates: B = 8 planes.
+        let wide = Geometry { n: 2000, planes: 8 };
+        assert!(
+            hw.random_scan_step_cycles(wide, false) < hw.random_scan_step_cycles(wide, true) / 2
+        );
+    }
+
+    #[test]
+    fn dma_accounts_plane_bytes() {
+        let hw = HwModel::default();
+        let g = Geometry { n: 2048, planes: 2 };
+        // 4 arrays × 2 planes × 2048 rows × 32 words × 8 bytes = 4 MiB.
+        assert_eq!(g.plane_bytes(), 4 * 2 * 2048 * 32 * 8);
+        assert!(hw.dma_seconds(g) > hw.params.dma_latency_s);
+    }
+}

@@ -1,0 +1,8 @@
+//! Ising-model substrate: dense all-to-all instances and bit-packed spin
+//! configurations (paper §II-B).
+
+pub mod model;
+pub mod spins;
+
+pub use model::IsingModel;
+pub use spins::SpinVec;

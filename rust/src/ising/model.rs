@@ -1,0 +1,248 @@
+//! Dense all-to-all Ising model (paper §II-B).
+//!
+//! `H(s) = -Σ_{i<j} J_ij s_i s_j - Σ_i h_i s_i`  (Eq. 1)
+//!
+//! Couplings and fields are stored as `i32` integers — Snowball is a
+//! *digital* machine and all combinatorial-optimization encodings used in
+//! the paper (Max-Cut, graph partitioning) produce integer coefficients.
+//! Energies and local fields are accumulated in `i64`, which cannot
+//! overflow for any instance with `N · max|J| < 2^31` (K2000 uses
+//! `N = 2000`, `|J| = 1`).
+
+use super::spins::SpinVec;
+
+/// A dense, symmetric Ising instance over `n` spins.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IsingModel {
+    n: usize,
+    /// Row-major `n × n` coupling matrix; symmetric, zero diagonal.
+    j: Vec<i32>,
+    /// External fields, length `n`.
+    h: Vec<i32>,
+}
+
+impl IsingModel {
+    /// A model with all-zero couplings and fields.
+    pub fn zeros(n: usize) -> Self {
+        Self { n, j: vec![0; n * n], h: vec![0; n] }
+    }
+
+    /// Build from a dense row-major coupling matrix and field vector.
+    ///
+    /// The matrix is symmetrized (`(J + Jᵀ)/2` must be exact, i.e. equal
+    /// off-diagonal pairs are required) and the diagonal must be zero.
+    pub fn new(n: usize, j: Vec<i32>, h: Vec<i32>) -> Self {
+        assert_eq!(j.len(), n * n, "J must be n×n");
+        assert_eq!(h.len(), n, "h must have length n");
+        for i in 0..n {
+            assert_eq!(j[i * n + i], 0, "diagonal J[{i}][{i}] must be 0");
+            for k in (i + 1)..n {
+                assert_eq!(j[i * n + k], j[k * n + i], "J must be symmetric at ({i},{k})");
+            }
+        }
+        Self { n, j, h }
+    }
+
+    /// Number of spins.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the model has no spins.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Coupling `J_ij`.
+    #[inline(always)]
+    pub fn j(&self, i: usize, k: usize) -> i32 {
+        self.j[i * self.n + k]
+    }
+
+    /// Row `i` of the coupling matrix.
+    #[inline(always)]
+    pub fn j_row(&self, i: usize) -> &[i32] {
+        &self.j[i * self.n..(i + 1) * self.n]
+    }
+
+    /// The full row-major coupling matrix.
+    pub fn j_matrix(&self) -> &[i32] {
+        &self.j
+    }
+
+    /// External field `h_i`.
+    #[inline(always)]
+    pub fn h(&self, i: usize) -> i32 {
+        self.h[i]
+    }
+
+    /// The field vector.
+    pub fn h_vec(&self) -> &[i32] {
+        &self.h
+    }
+
+    /// Set a symmetric coupling pair `J_ij = J_ji = v` (i ≠ j).
+    pub fn set_j(&mut self, i: usize, k: usize, v: i32) {
+        assert_ne!(i, k, "diagonal couplings are not allowed");
+        self.j[i * self.n + k] = v;
+        self.j[k * self.n + i] = v;
+    }
+
+    /// Add to a symmetric coupling pair.
+    pub fn add_j(&mut self, i: usize, k: usize, v: i32) {
+        assert_ne!(i, k);
+        self.j[i * self.n + k] += v;
+        self.j[k * self.n + i] += v;
+    }
+
+    /// Set external field `h_i = v`.
+    pub fn set_h(&mut self, i: usize, v: i32) {
+        self.h[i] = v;
+    }
+
+    /// Largest absolute coefficient (used to size bit-planes).
+    pub fn max_abs_coeff(&self) -> i32 {
+        let jm = self.j.iter().map(|v| v.abs()).max().unwrap_or(0);
+        let hm = self.h.iter().map(|v| v.abs()).max().unwrap_or(0);
+        jm.max(hm)
+    }
+
+    /// Number of nonzero couplings (i < j).
+    pub fn coupling_count(&self) -> usize {
+        let mut c = 0;
+        for i in 0..self.n {
+            for k in (i + 1)..self.n {
+                if self.j[i * self.n + k] != 0 {
+                    c += 1;
+                }
+            }
+        }
+        c
+    }
+
+    /// Full Hamiltonian `H(s)` (Eq. 1). Θ(N²) — use only for
+    /// initialization and verification; the engines track energy
+    /// incrementally.
+    pub fn energy(&self, s: &SpinVec) -> i64 {
+        debug_assert_eq!(s.len(), self.n);
+        let mut pair = 0i64;
+        for i in 0..self.n {
+            let si = s.get(i) as i64;
+            let row = self.j_row(i);
+            let mut acc = 0i64;
+            for k in (i + 1)..self.n {
+                acc += row[k] as i64 * s.get(k) as i64;
+            }
+            pair += si * acc;
+        }
+        let field: i64 = (0..self.n).map(|i| self.h[i] as i64 * s.get(i) as i64).sum();
+        -pair - field
+    }
+
+    /// Local field `u_i = h_i + Σ_{j≠i} J_ij s_j` (defined below Eq. 2).
+    pub fn local_field(&self, s: &SpinVec, i: usize) -> i64 {
+        let row = self.j_row(i);
+        let mut acc = self.h[i] as i64;
+        for k in 0..self.n {
+            // J_ii == 0 so no need to exclude k == i.
+            acc += row[k] as i64 * s.get(k) as i64;
+        }
+        acc
+    }
+
+    /// All local fields, Θ(N²) from-scratch (the "initialization" path;
+    /// the bit-plane datapath in `crate::bitplane` computes the same thing
+    /// with Hamming-weight accumulation).
+    pub fn local_fields(&self, s: &SpinVec) -> Vec<i64> {
+        (0..self.n).map(|i| self.local_field(s, i)).collect()
+    }
+
+    /// Flip energy change `ΔE_i = H(s^(i→-i)) − H(s) = 2 s_i u_i` (Eq. 2).
+    #[inline(always)]
+    pub fn delta_e(s_i: i8, u_i: i64) -> i64 {
+        2 * s_i as i64 * u_i
+    }
+
+    /// Apply a single-spin flip to the energy: `H' = H + ΔE_i`.
+    /// (Helper for engines that track energy incrementally.)
+    #[inline(always)]
+    pub fn energy_after_flip(energy: i64, s_i: i8, u_i: i64) -> i64 {
+        energy + Self::delta_e(s_i, u_i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StatelessRng;
+
+    /// The worked K5 example from Fig. 2 has ground state energy −24 at
+    /// s = (+1,+1,−1,+1,−1); we reconstruct a compatible instance and
+    /// check the invariants that the paper states hold for any instance.
+    fn small_model() -> IsingModel {
+        let n = 4;
+        let mut m = IsingModel::zeros(n);
+        m.set_j(0, 1, 2);
+        m.set_j(0, 2, -1);
+        m.set_j(1, 3, 3);
+        m.set_j(2, 3, 1);
+        m.set_h(0, 1);
+        m.set_h(3, -2);
+        m
+    }
+
+    #[test]
+    fn energy_by_hand() {
+        let m = small_model();
+        let s = SpinVec::from_spins(&[1, 1, -1, -1]);
+        // pair: J01*1*1 + J02*1*(-1) + J13*1*(-1) + J23*(-1)(-1)
+        //     = 2 - (-1)*... => 2*1 + (-1)*(-1) + 3*(-1) + 1*1 = 2+1-3+1 = 1
+        // field: h0*1 + h3*(-1) = 1 + 2 = 3
+        assert_eq!(m.energy(&s), -1 - 3);
+    }
+
+    #[test]
+    fn delta_e_matches_energy_difference() {
+        let m = small_model();
+        let rng = StatelessRng::new(99);
+        for trial in 0..20u64 {
+            let mut s = SpinVec::random(m.len(), &rng.child(trial));
+            for i in 0..m.len() {
+                let e0 = m.energy(&s);
+                let u = m.local_field(&s, i);
+                let de = IsingModel::delta_e(s.get(i), u);
+                s.flip(i);
+                let e1 = m.energy(&s);
+                assert_eq!(e1 - e0, de, "ΔE mismatch at spin {i}");
+                s.flip(i); // restore
+            }
+        }
+    }
+
+    #[test]
+    fn local_fields_match_definition() {
+        let m = small_model();
+        let s = SpinVec::from_spins(&[1, -1, 1, -1]);
+        let u = m.local_fields(&s);
+        // u_0 = h0 + J01*s1 + J02*s2 = 1 - 2 - 1 = -2
+        assert_eq!(u[0], -2);
+        // u_3 = h3 + J13*s1 + J23*s2 = -2 - 3 + 1 = -4
+        assert_eq!(u[3], -4);
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn asymmetric_rejected() {
+        let mut j = vec![0i32; 4];
+        j[1] = 1; // J01 = 1, J10 = 0
+        IsingModel::new(2, j, vec![0, 0]);
+    }
+
+    #[test]
+    fn coupling_count_and_max_abs() {
+        let m = small_model();
+        assert_eq!(m.coupling_count(), 4);
+        assert_eq!(m.max_abs_coeff(), 3);
+    }
+}

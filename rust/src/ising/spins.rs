@@ -1,0 +1,205 @@
+//! Bit-packed spin configurations.
+//!
+//! The hardware encodes each spin `s_i ∈ {-1,+1}` as a bit
+//! `x_i = (s_i + 1)/2 ∈ {0,1}` and packs spins into `W = ceil(N/64)` 64-bit
+//! words (paper §IV-B). This module is the software mirror of that layout:
+//! the bit-plane Hamming-weight datapath (`crate::bitplane`) operates
+//! directly on these words with popcounts, exactly like the FPGA's
+//! word-parallel accumulator.
+
+use crate::rng::{salt, StatelessRng};
+
+/// A configuration of `n` spins, bit-packed 64 per word.
+///
+/// Bit j of word w holds spin index `64*w + j`; `1` encodes `s = +1`.
+/// Trailing bits past `n` are kept zero (class invariant) so popcount-based
+/// reductions never see garbage lanes.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct SpinVec {
+    n: usize,
+    words: Vec<u64>,
+}
+
+impl SpinVec {
+    /// All-down (-1) configuration.
+    pub fn all_down(n: usize) -> Self {
+        Self { n, words: vec![0; n.div_ceil(64)] }
+    }
+
+    /// All-up (+1) configuration.
+    pub fn all_up(n: usize) -> Self {
+        let mut v = Self::all_down(n);
+        for i in 0..n {
+            v.set(i, 1);
+        }
+        v
+    }
+
+    /// Uniformly random configuration from the stateless RNG
+    /// (stage 0, salt `INIT`, one draw per word).
+    pub fn random(n: usize, rng: &StatelessRng) -> Self {
+        let mut v = Self::all_down(n);
+        for w in 0..v.words.len() {
+            v.words[w] = rng.u64(0, w as u64, salt::INIT);
+        }
+        v.mask_tail();
+        v
+    }
+
+    /// Build from a slice of ±1 values.
+    pub fn from_spins(spins: &[i8]) -> Self {
+        let mut v = Self::all_down(spins.len());
+        for (i, &s) in spins.iter().enumerate() {
+            debug_assert!(s == 1 || s == -1);
+            v.set(i, s);
+        }
+        v
+    }
+
+    /// Number of spins.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the configuration is empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The packed 64-bit words (`x` encoding).
+    #[inline(always)]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Spin value at `i` as ±1.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> i8 {
+        debug_assert!(i < self.n);
+        if (self.words[i >> 6] >> (i & 63)) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Bit value at `i` (`x_i = (s_i+1)/2`).
+    #[inline(always)]
+    pub fn bit(&self, i: usize) -> u64 {
+        (self.words[i >> 6] >> (i & 63)) & 1
+    }
+
+    /// Set spin `i` to ±1.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, s: i8) {
+        debug_assert!(i < self.n && (s == 1 || s == -1));
+        let w = i >> 6;
+        let b = 1u64 << (i & 63);
+        if s == 1 {
+            self.words[w] |= b;
+        } else {
+            self.words[w] &= !b;
+        }
+    }
+
+    /// Flip spin `i`, returning its OLD value (±1) — the quantity the
+    /// incremental field update (Eq. 17) needs.
+    #[inline(always)]
+    pub fn flip(&mut self, i: usize) -> i8 {
+        debug_assert!(i < self.n);
+        let w = i >> 6;
+        let b = 1u64 << (i & 63);
+        let old = if self.words[w] & b != 0 { 1 } else { -1 };
+        self.words[w] ^= b;
+        old
+    }
+
+    /// Number of +1 spins.
+    pub fn count_up(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Magnetization `Σ s_i = 2·count_up − n`.
+    pub fn magnetization(&self) -> i64 {
+        2 * self.count_up() as i64 - self.n as i64
+    }
+
+    /// Unpack to a ±1 vector.
+    pub fn to_spins(&self) -> Vec<i8> {
+        (0..self.n).map(|i| self.get(i)).collect()
+    }
+
+    /// Hamming distance to another configuration of the same length.
+    pub fn hamming(&self, other: &Self) -> usize {
+        assert_eq!(self.n, other.n);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.n & 63;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_flip_roundtrip() {
+        let mut v = SpinVec::all_down(130);
+        assert_eq!(v.get(0), -1);
+        v.set(0, 1);
+        v.set(129, 1);
+        assert_eq!(v.get(0), 1);
+        assert_eq!(v.get(129), 1);
+        assert_eq!(v.count_up(), 2);
+        let old = v.flip(129);
+        assert_eq!(old, 1);
+        assert_eq!(v.get(129), -1);
+        let old = v.flip(64);
+        assert_eq!(old, -1);
+        assert_eq!(v.get(64), 1);
+    }
+
+    #[test]
+    fn random_tail_is_masked() {
+        let rng = StatelessRng::new(3);
+        let v = SpinVec::random(70, &rng);
+        let last = *v.words().last().unwrap();
+        assert_eq!(last >> 6, 0, "bits past n must be zero");
+    }
+
+    #[test]
+    fn from_to_spins_roundtrip() {
+        let spins: Vec<i8> = (0..97).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let v = SpinVec::from_spins(&spins);
+        assert_eq!(v.to_spins(), spins);
+    }
+
+    #[test]
+    fn magnetization_matches() {
+        let spins: Vec<i8> = vec![1, 1, -1, 1, -1];
+        let v = SpinVec::from_spins(&spins);
+        assert_eq!(v.magnetization(), 1);
+        assert_eq!(SpinVec::all_up(5).magnetization(), 5);
+        assert_eq!(SpinVec::all_down(5).magnetization(), -5);
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = SpinVec::from_spins(&[1, -1, 1, -1]);
+        let b = SpinVec::from_spins(&[1, 1, 1, 1]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # Snowball
+//!
+//! Reproduction of *"Snowball: A Scalable All-to-All Ising Machine with
+//! Dual-Mode Markov Chain Monte Carlo Spin Selection and Asynchronous
+//! Spin Updates for Fast Combinatorial Optimization"* as a three-layer
+//! Rust + JAX + Pallas system (see DESIGN.md).
+//!
+//! * [`ising`], [`graph`], [`problems`] — problem substrates.
+//! * [`bitplane`] — the paper's signed bit-plane coupler store with
+//!   Hamming-weight initialization and incremental column updates.
+//! * [`engine`] — the dual-mode MCMC engine (random-scan / roulette).
+//! * [`hwsim`] — cycle-approximate FPGA model (Alveo U250 substitution).
+//! * [`baselines`] — every comparator of Tables II/III.
+//! * [`tts`] — time-to-solution statistics (Eq. 32).
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts.
+//! * [`coordinator`] — job scheduling, replica batching, TCP service.
+//! * [`harness`] — regeneration of every paper table and figure.
+
+pub mod baselines;
+pub mod bitplane;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod harness;
+pub mod hwsim;
+pub mod ising;
+pub mod problems;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod tts;

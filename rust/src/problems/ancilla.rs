@@ -1,0 +1,177 @@
+//! Ancilla-based coupling bit-width reduction (paper §III-C, [42]).
+//!
+//! Hardware with only low-precision couplers can represent a
+//! high-precision `J_ij` by splitting it across auxiliary spins that are
+//! chained to the originals — at the cost of more spins and denser
+//! connectivity, "directly hurting scalability and time-to-solution"
+//! (§III-C). This module implements the split so that cost is
+//! measurable, and Snowball's bit-plane alternative can be compared
+//! against it quantitatively.
+//!
+//! Construction: a coupling with `|J| > Jmax` is decomposed as
+//! `J = Σ_k c_k` with `|c_k| ≤ Jmax`. The first part `c_0` stays on the
+//! original pair (i, j); each further part `c_k` is carried by an
+//! ancilla `a_k` that is ferromagnetically locked to spin `i` (strength
+//! `F`) and coupled to `j` with `c_k`. In the locked subspace
+//! (`s_{a_k} = s_i`, enforced for `F` large enough) the effective
+//! Hamiltonian equals the original.
+
+use crate::ising::{IsingModel, SpinVec};
+
+/// Result of an ancilla reduction.
+pub struct Reduced {
+    pub model: IsingModel,
+    /// Original spin count (ancillas are indices ≥ this).
+    pub original_n: usize,
+    /// `ancilla[k] = (ancilla index, locked-to spin)`.
+    pub ancillas: Vec<(usize, usize)>,
+    /// Lock strength used.
+    pub lock: i32,
+}
+
+/// Reduce a model so every coupling magnitude is ≤ `j_max`.
+pub fn reduce_bitwidth(model: &IsingModel, j_max: i32) -> Reduced {
+    assert!(j_max >= 1);
+    let n = model.len();
+    // Count ancillas needed: each oversized |J| needs ceil(|J|/Jmax) - 1.
+    let mut extra = Vec::new(); // (i, j, leftover parts)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = model.j(i, j);
+            if v.abs() > j_max {
+                extra.push((i, j, v));
+            }
+        }
+    }
+    let total_parts: usize =
+        extra.iter().map(|&(_, _, v)| (v.abs() as usize).div_ceil(j_max as usize) - 1).sum();
+    let big_n = n + total_parts;
+    // Lock strength: must exceed the energy any single ancilla's other
+    // couplings can gain by breaking the chain: |c_k| ≤ j_max, plus h=0
+    // on ancillas → F > j_max suffices with margin 2×.
+    let lock = 2 * j_max + 1;
+    let mut out = IsingModel::zeros(big_n);
+    for i in 0..n {
+        out.set_h(i, model.h(i));
+        for j in (i + 1)..n {
+            let v = model.j(i, j);
+            if v != 0 && v.abs() <= j_max {
+                out.set_j(i, j, v);
+            }
+        }
+    }
+    let mut next = n;
+    let mut ancillas = Vec::new();
+    for (i, j, v) in extra {
+        let sign = v.signum();
+        let mut rem = v.abs();
+        // First chunk on the original pair.
+        let c0 = rem.min(j_max);
+        out.set_j(i, j, sign * c0);
+        rem -= c0;
+        while rem > 0 {
+            let c = rem.min(j_max);
+            rem -= c;
+            let a = next;
+            next += 1;
+            out.set_j(a, i, lock); // ferromagnetic lock to i
+            out.set_j(a, j, sign * c); // carries this chunk
+            ancillas.push((a, i));
+        }
+    }
+    Reduced { model: out, original_n: n, ancillas, lock }
+}
+
+impl Reduced {
+    /// Extend an original configuration with locked ancillas.
+    pub fn extend(&self, s: &SpinVec) -> SpinVec {
+        assert_eq!(s.len(), self.original_n);
+        let mut spins: Vec<i8> = s.to_spins();
+        spins.resize(self.model.len(), 1);
+        for &(a, i) in &self.ancillas {
+            spins[a] = s.get(i);
+        }
+        SpinVec::from_spins(&spins)
+    }
+
+    /// Energy offset between reduced (locked) and original models:
+    /// every locked ancilla contributes `−lock` (chain satisfied).
+    pub fn offset(&self) -> i64 {
+        -(self.lock as i64) * self.ancillas.len() as i64
+    }
+
+    /// Spin-count inflation factor — the §III-C scalability cost.
+    pub fn inflation(&self) -> f64 {
+        self.model.len() as f64 / self.original_n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StatelessRng;
+    use crate::testutil::gen;
+
+    #[test]
+    fn reduced_energies_match_in_locked_subspace() {
+        let rng = StatelessRng::new(31);
+        let m = gen::model(&rng, 8, 13); // couplings up to ±13
+        let red = reduce_bitwidth(&m, 3);
+        // Every COUPLING magnitude is ≤ lock (fields are untouched by
+        // the reduction and may exceed it).
+        let max_j = (0..red.model.len())
+            .flat_map(|i| red.model.j_row(i).iter().map(|v| v.abs()))
+            .max()
+            .unwrap();
+        assert!(max_j <= red.lock);
+        for i in 0..red.original_n {
+            for j in 0..red.original_n {
+                if i != j {
+                    assert!(red.model.j(i, j).abs() <= 3, "original pair overweight");
+                }
+            }
+        }
+        for trial in 0..20u64 {
+            let s = gen::spins(&rng.child(trial), 8);
+            let e_orig = m.energy(&s);
+            let e_red = red.model.energy(&red.extend(&s));
+            assert_eq!(e_red - red.offset(), e_orig, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn ground_state_is_preserved() {
+        // Small instance: check argmin matches via enumeration.
+        let mut m = IsingModel::zeros(3);
+        m.set_j(0, 1, 7);
+        m.set_j(1, 2, -5);
+        m.set_h(0, 2);
+        let red = reduce_bitwidth(&m, 2);
+        let (_, e_orig) = crate::problems::landscape::ground_state(&m);
+        let (_, e_red) = crate::problems::landscape::ground_state(&red.model);
+        assert_eq!(e_red - red.offset(), e_orig, "locked optimum must match");
+    }
+
+    #[test]
+    fn inflation_grows_with_precision_gap() {
+        let rng = StatelessRng::new(37);
+        let m = gen::model(&rng, 10, 40);
+        let tight = reduce_bitwidth(&m, 1);
+        let loose = reduce_bitwidth(&m, 16);
+        assert!(tight.inflation() > loose.inflation());
+        assert!(tight.inflation() > 2.0, "1-bit hardware must inflate heavily");
+        // Snowball's bit-plane store needs ZERO extra spins for the same
+        // precision — the §III-C comparison in one assert.
+        assert_eq!(crate::bitplane::BitPlanes::encode(&m, None).len(), 10);
+    }
+
+    #[test]
+    fn no_op_when_precision_suffices() {
+        let rng = StatelessRng::new(41);
+        let m = gen::model(&rng, 6, 3);
+        let red = reduce_bitwidth(&m, 3);
+        assert_eq!(red.model.len(), 6);
+        assert_eq!(red.inflation(), 1.0);
+        assert!(red.ancillas.is_empty());
+    }
+}

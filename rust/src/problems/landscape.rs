@@ -1,0 +1,109 @@
+//! Exhaustive energy-landscape enumeration for small instances
+//! (Figs. 2 and 8) and exact ground-state search.
+
+use crate::ising::{IsingModel, SpinVec};
+
+/// Energies of all 2^n configurations, indexed by the bit pattern
+/// `x_i = bit i` (x=1 ⇔ s=+1). Only feasible for n ≤ ~24.
+pub fn enumerate(model: &IsingModel) -> Vec<i64> {
+    let n = model.len();
+    assert!(n <= 24, "landscape enumeration is exponential; n = {n} too large");
+    let mut out = Vec::with_capacity(1usize << n);
+    let mut s = SpinVec::all_down(n);
+    // Gray-code walk with incremental energy would be faster, but the
+    // direct form is the verification oracle — keep it obvious.
+    for pattern in 0u32..(1u32 << n) {
+        for i in 0..n {
+            s.set(i, if (pattern >> i) & 1 == 1 { 1 } else { -1 });
+        }
+        out.push(model.energy(&s));
+    }
+    out
+}
+
+/// Exact ground state by exhaustive search: `(config bits, energy)`.
+pub fn ground_state(model: &IsingModel) -> (u32, i64) {
+    let e = enumerate(model);
+    let (idx, &min) = e.iter().enumerate().min_by_key(|(_, &v)| v).unwrap();
+    (idx as u32, min)
+}
+
+/// Decode an enumeration index into a spin configuration.
+pub fn config_of_index(n: usize, pattern: u32) -> SpinVec {
+    let mut s = SpinVec::all_down(n);
+    for i in 0..n {
+        if (pattern >> i) & 1 == 1 {
+            s.set(i, 1);
+        }
+    }
+    s
+}
+
+/// The fully connected five-spin example of Fig. 2. Couplings/fields are
+/// chosen so the ground state is s = (+1,+1,−1,+1,−1) with
+/// H = −14 − 10 = −24, as stated in the paper.
+pub fn fig2_k5() -> IsingModel {
+    let mut m = IsingModel::zeros(5);
+    // Pair term must contribute −14 and field term −10 at the target
+    // configuration s* = (+,+,−,+,−).
+    // Pairs (i<j) and s_i s_j at s*: (0,1)=+1 (0,2)=−1 (0,3)=+1 (0,4)=−1
+    // (1,2)=−1 (1,3)=+1 (1,4)=−1 (2,3)=−1 (2,4)=+1 (3,4)=−1
+    m.set_j(0, 1, 3); //  +3
+    m.set_j(0, 2, -2); //  +2
+    m.set_j(0, 3, 1); //  +1
+    m.set_j(0, 4, -1); //  +1
+    m.set_j(1, 2, -2); //  +2
+    m.set_j(1, 3, 2); //  +2
+    m.set_j(1, 4, -1); //  +1
+    m.set_j(2, 3, -1); //  +1
+    m.set_j(2, 4, 1); //  +1
+    m.set_j(3, 4, 0); //   0   (Σ J_ij s_i s_j = 14)
+    // Fields: Σ h_i s_i = 10 at s*.
+    m.set_h(0, 2); //  +2
+    m.set_h(1, 3); //  +3
+    m.set_h(2, -2); //  +2
+    m.set_h(3, 2); //  +2
+    m.set_h(4, -1); //  +1
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_ground_state_matches_paper() {
+        let m = fig2_k5();
+        let s_star = SpinVec::from_spins(&[1, 1, -1, 1, -1]);
+        assert_eq!(m.energy(&s_star), -24, "paper states H(s*) = -24");
+        let (idx, e) = ground_state(&m);
+        assert_eq!(e, -24);
+        assert_eq!(config_of_index(5, idx).to_spins(), s_star.to_spins());
+    }
+
+    #[test]
+    fn enumeration_size_and_symmetry() {
+        let m = fig2_k5();
+        let e = enumerate(&m);
+        assert_eq!(e.len(), 32);
+        // With h ≠ 0 the landscape is NOT spin-flip symmetric; zero the
+        // fields and it must be.
+        let mut m0 = m.clone();
+        for i in 0..5 {
+            m0.set_h(i, 0);
+        }
+        let e0 = enumerate(&m0);
+        for p in 0u32..32 {
+            assert_eq!(e0[p as usize], e0[(!p & 31) as usize], "Z2 symmetry at {p}");
+        }
+    }
+
+    #[test]
+    fn quantized_landscape_differs() {
+        // Fig 8: 2-bit arithmetic shift of the K5 instance changes the
+        // landscape (and here, the ground state energy).
+        let m = fig2_k5();
+        let q = crate::problems::quantize::arithmetic_shift(&m, 2);
+        assert_ne!(enumerate(&m), enumerate(&q));
+    }
+}

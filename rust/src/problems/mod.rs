@@ -1,0 +1,12 @@
+//! Problem encodings onto the Ising substrate (paper §II-A) and the
+//! precision/landscape analyses of §III-C.
+
+pub mod ancilla;
+pub mod landscape;
+pub mod maxcut;
+pub mod partition;
+pub mod quantize;
+pub mod tsp;
+
+pub use maxcut::MaxCut;
+pub use partition::GraphPartition;

@@ -1,0 +1,108 @@
+//! Coupling-coefficient quantization (paper §III-C, Fig. 8).
+//!
+//! Hardware with limited coupling precision must coarsely quantize `J`
+//! and `h`. The paper illustrates this with a k-bit *arithmetic right
+//! shift*, which distorts the energy landscape and can change the ground
+//! state — the motivation for Snowball's scalable bit-plane precision.
+
+use crate::ising::IsingModel;
+
+/// Quantize a model by an arithmetic right shift of `bits` on every
+/// coupling and field (Fig. 8's transformation).
+pub fn arithmetic_shift(model: &IsingModel, bits: u32) -> IsingModel {
+    let n = model.len();
+    let mut q = IsingModel::zeros(n);
+    for i in 0..n {
+        for k in (i + 1)..n {
+            let v = model.j(i, k) >> bits;
+            if v != 0 {
+                q.set_j(i, k, v);
+            }
+        }
+        q.set_h(i, model.h(i) >> bits);
+    }
+    q
+}
+
+/// Clamp-quantize to `bits`-bit signed range [−2^(bits−1), 2^(bits−1)−1]
+/// — models hardware that saturates rather than shifts.
+pub fn saturate(model: &IsingModel, bits: u32) -> IsingModel {
+    assert!(bits >= 1 && bits <= 31);
+    let lo = -(1i32 << (bits - 1));
+    let hi = (1i32 << (bits - 1)) - 1;
+    let n = model.len();
+    let mut q = IsingModel::zeros(n);
+    for i in 0..n {
+        for k in (i + 1)..n {
+            let v = model.j(i, k).clamp(lo, hi);
+            if v != 0 {
+                q.set_j(i, k, v);
+            }
+        }
+        q.set_h(i, model.h(i).clamp(lo, hi));
+    }
+    q
+}
+
+/// Number of bits needed to represent every coefficient exactly in signed
+/// magnitude (the `B` the bit-plane store needs; paper Eq. 13).
+pub fn required_bits(model: &IsingModel) -> u32 {
+    let m = model.max_abs_coeff();
+    if m == 0 {
+        1
+    } else {
+        32 - (m as u32).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::SpinVec;
+
+    fn model_with_range() -> IsingModel {
+        let mut m = IsingModel::zeros(4);
+        m.set_j(0, 1, 7);
+        m.set_j(1, 2, -5);
+        m.set_j(2, 3, 12);
+        m.set_h(0, -9);
+        m
+    }
+
+    #[test]
+    fn shift_matches_integer_semantics() {
+        let q = arithmetic_shift(&model_with_range(), 2);
+        assert_eq!(q.j(0, 1), 1); // 7 >> 2
+        assert_eq!(q.j(1, 2), -2); // -5 >> 2 (arithmetic)
+        assert_eq!(q.j(2, 3), 3);
+        assert_eq!(q.h(0), -3); // -9 >> 2
+    }
+
+    #[test]
+    fn quantization_distorts_landscape() {
+        // Fig 8's point: the quantized model ranks configurations
+        // differently; check energies are not a constant offset apart.
+        let m = model_with_range();
+        let q = arithmetic_shift(&m, 2);
+        let s1 = SpinVec::from_spins(&[1, 1, 1, 1]);
+        let s2 = SpinVec::from_spins(&[1, -1, 1, -1]);
+        let d_orig = m.energy(&s1) - m.energy(&s2);
+        let d_quant = q.energy(&s1) - q.energy(&s2);
+        assert_ne!(d_orig, d_quant);
+    }
+
+    #[test]
+    fn saturate_clamps() {
+        let q = saturate(&model_with_range(), 4); // range [-8, 7]
+        assert_eq!(q.j(2, 3), 7);
+        assert_eq!(q.h(0), -8);
+        assert_eq!(q.j(1, 2), -5);
+    }
+
+    #[test]
+    fn required_bits_covers_max() {
+        assert_eq!(required_bits(&model_with_range()), 4); // max |c| = 12
+        let z = IsingModel::zeros(3);
+        assert_eq!(required_bits(&z), 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one line
+//! per artifact: whitespace-separated `key=value` pairs. Keys:
+//! `name`, `file`, `kind` (`anneal_chunk` | `flip_probs` | `field_init`),
+//! `n` (spins), plus kind-specific fields (`chunk` steps, `planes`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub n: usize,
+    /// Steps per call for `anneal_chunk`.
+    pub chunk: Option<u64>,
+    /// Bit-planes for `field_init`.
+    pub planes: Option<u32>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Locate the artifacts directory: `$SNOWBALL_ARTIFACTS` or
+    /// `./artifacts` relative to the current directory / manifest dir.
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("SNOWBALL_ARTIFACTS") {
+            return Self::load(Path::new(&dir));
+        }
+        let candidates = [
+            PathBuf::from("artifacts"),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for c in &candidates {
+            if c.join("manifest.txt").exists() {
+                return Self::load(c);
+            }
+        }
+        anyhow::bail!(
+            "no artifacts/manifest.txt found (run `make artifacts`, or set SNOWBALL_ARTIFACTS)"
+        )
+    }
+
+    /// Parse manifest text.
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok}", lineno + 1))?;
+                kv.insert(k.to_string(), v.to_string());
+            }
+            let get = |k: &str| -> Result<String> {
+                kv.get(k).cloned().with_context(|| format!("manifest line {}: missing {k}", lineno + 1))
+            };
+            specs.push(ArtifactSpec {
+                name: get("name")?,
+                file: dir.join(get("file")?),
+                kind: get("kind")?,
+                n: get("n")?.parse()?,
+                chunk: kv.get("chunk").map(|v| v.parse()).transpose()?,
+                planes: kv.get("planes").map(|v| v.parse()).transpose()?,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), specs })
+    }
+
+    /// Find an artifact by kind and exact size.
+    pub fn find(&self, kind: &str, n: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.kind == kind && s.n == n)
+    }
+
+    /// Find the smallest artifact of `kind` with capacity ≥ `n`
+    /// (the coordinator's size-batching rule: pad up).
+    pub fn find_padded(&self, kind: &str, n: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().filter(|s| s.kind == kind && s.n >= n).min_by_key(|s| s.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+name=anneal_chunk_n256_c128 file=anneal_chunk_n256_c128.hlo.txt kind=anneal_chunk n=256 chunk=128
+name=flip_probs_n256 file=flip_probs_n256.hlo.txt kind=flip_probs n=256
+name=field_init_n256_b4 file=field_init_n256_b4.hlo.txt kind=field_init n=256 planes=4
+name=anneal_chunk_n2048_c256 file=anneal_chunk_n2048_c256.hlo.txt kind=anneal_chunk n=2048 chunk=256
+";
+
+    #[test]
+    fn parse_and_find() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.specs.len(), 4);
+        let a = m.find("anneal_chunk", 256).unwrap();
+        assert_eq!(a.chunk, Some(128));
+        assert_eq!(a.file, Path::new("/tmp/a/anneal_chunk_n256_c128.hlo.txt"));
+        let f = m.find("field_init", 256).unwrap();
+        assert_eq!(f.planes, Some(4));
+        assert!(m.find("anneal_chunk", 512).is_none());
+    }
+
+    #[test]
+    fn find_padded_picks_smallest_fit() {
+        let m = ArtifactManifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert_eq!(m.find_padded("anneal_chunk", 300).unwrap().n, 2048);
+        assert_eq!(m.find_padded("anneal_chunk", 100).unwrap().n, 256);
+        assert!(m.find_padded("anneal_chunk", 4096).is_none());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ArtifactManifest::parse(Path::new("/x"), "name=a bogus").is_err());
+        assert!(ArtifactManifest::parse(Path::new("/x"), "file=f kind=k n=1").is_err());
+    }
+}

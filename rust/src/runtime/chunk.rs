@@ -1,0 +1,136 @@
+//! Chunked execution of the AOT anneal graph (L2/L1) from the L3 hot
+//! path.
+//!
+//! One `anneal_chunk` artifact advances a roulette-mode chain by `C`
+//! steps per call, entirely inside XLA: per-step flip probabilities come
+//! from the L1 Pallas PWL kernel, selection/update/energy tracking from
+//! the L2 scan (see `python/compile/model.py`). The Rust side keeps the
+//! coupling matrix **resident on the device** and round-trips only the
+//! O(N) chain state per call.
+//!
+//! The chunk is bit-parity-matched to the native engine: same stateless
+//! RNG streams, same Q16 PWL table, same integer ΔE — `rust/tests/
+//! xla_parity.rs` asserts identical trajectories.
+//!
+//! Artifact calling convention (see `python/compile/model.py`):
+//!   inputs  = (J f32[N,N], s f32[N], u f64[N], energy f64[],
+//!              temps f64[C], seed u64[], step0 u64[])
+//!   outputs = (s f32[N], u f64[N], energy f64[], trace f64[C])
+
+use super::{lit, ArtifactSpec, Executable, Runtime};
+use crate::ising::{IsingModel, SpinVec};
+use anyhow::{Context, Result};
+
+/// Chain state ferried between Rust and the device.
+#[derive(Clone, Debug)]
+pub struct ChunkState {
+    pub spins: SpinVec,
+    pub u: Vec<f64>,
+    pub energy: f64,
+    /// Global step counter (drives the stateless RNG stage index).
+    pub step: u64,
+}
+
+impl ChunkState {
+    /// Initialize from a model + configuration (fields from scratch).
+    pub fn init(model: &IsingModel, spins: SpinVec) -> Self {
+        let u: Vec<f64> = model.local_fields(&spins).iter().map(|&v| v as f64).collect();
+        let energy = model.energy(&spins) as f64;
+        Self { spins, u, energy, step: 0 }
+    }
+}
+
+/// Runs `anneal_chunk` artifacts with a resident coupling buffer.
+pub struct ChunkRunner {
+    exe: Executable,
+    /// Device-resident J (uploaded once).
+    j_buffer: xla::PjRtBuffer,
+    n: usize,
+    chunk: u64,
+    seed: u64,
+    rt_n: usize,
+}
+
+impl ChunkRunner {
+    /// Compile the artifact and upload the (zero-padded) coupling matrix.
+    ///
+    /// The artifact size `spec.n` may exceed the model's N — the
+    /// coordinator's batcher pads instances up to the nearest artifact
+    /// (padding spins have zero couplings and frozen fields, so they
+    /// never win the roulette; see `python/compile/model.py`).
+    pub fn new(rt: &Runtime, spec: &ArtifactSpec, model: &IsingModel, seed: u64) -> Result<Self> {
+        anyhow::ensure!(spec.kind == "anneal_chunk", "artifact {} is not an anneal_chunk", spec.name);
+        anyhow::ensure!(spec.n >= model.len(), "artifact N {} < model N {}", spec.n, model.len());
+        let chunk = spec.chunk.context("anneal_chunk artifact missing chunk length")?;
+        let exe = rt.load_hlo_text(&spec.file)?;
+        let rt_n = spec.n;
+        let n = model.len();
+        // Row-major J as f32, zero-padded to rt_n × rt_n.
+        let mut jf = vec![0f32; rt_n * rt_n];
+        for i in 0..n {
+            let row = model.j_row(i);
+            for (k, &v) in row.iter().enumerate() {
+                jf[i * rt_n + k] = v as f32;
+            }
+        }
+        let j_lit = lit::f32_matrix(rt_n, rt_n, &jf)?;
+        let j_buffer = rt.upload(&j_lit)?;
+        Ok(Self { exe, j_buffer, n, chunk, seed, rt_n })
+    }
+
+    /// Steps advanced per call.
+    pub fn chunk_len(&self) -> u64 {
+        self.chunk
+    }
+
+    /// Artifact (padded) size.
+    pub fn padded_n(&self) -> usize {
+        self.rt_n
+    }
+
+    /// Advance the chain by one chunk; `temps` must have exactly
+    /// `chunk_len()` entries. Returns the per-step energy trace.
+    pub fn run_chunk(&self, rt: &Runtime, state: &mut ChunkState, temps: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(temps.len() as u64 == self.chunk, "need {} temps, got {}", self.chunk, temps.len());
+        // Pack state, padding tail spins to +1 with "infinitely" positive
+        // fields: ΔE = 2·s·u = huge > 0 ⇒ p_flip = 0 ⇒ never selected.
+        let mut s = vec![1f32; self.rt_n];
+        for i in 0..self.n {
+            s[i] = state.spins.get(i) as f32;
+        }
+        let mut u = vec![1e12f64; self.rt_n];
+        u[..self.n].copy_from_slice(&state.u);
+        let args = [
+            // J is resident; the rest are uploaded per call (O(N)).
+            None,
+            Some(lit::f32_vec(&s)),
+            Some(xla::Literal::vec1(&u)),
+            Some(xla::Literal::scalar(state.energy)),
+            Some(xla::Literal::vec1(temps)),
+            Some(xla::Literal::scalar(self.seed)),
+            Some(xla::Literal::scalar(state.step)),
+        ];
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len() - 1);
+        for a in args.iter().flatten() {
+            bufs.push(rt.upload(a)?);
+        }
+        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        all.push(&self.j_buffer);
+        for b in &bufs {
+            all.push(b);
+        }
+        let out = self.exe.run_b(&all)?;
+        anyhow::ensure!(out.len() == 4, "anneal_chunk returned {} outputs, want 4", out.len());
+        let s_new: Vec<f32> = out[0].to_vec().map_err(super::to_anyhow)?;
+        let u_new: Vec<f64> = out[1].to_vec().map_err(super::to_anyhow)?;
+        let e_new: f64 = out[2].get_first_element().map_err(super::to_anyhow)?;
+        let trace: Vec<f64> = out[3].to_vec().map_err(super::to_anyhow)?;
+        for i in 0..self.n {
+            state.spins.set(i, if s_new[i] >= 0.0 { 1 } else { -1 });
+        }
+        state.u.copy_from_slice(&u_new[..self.n]);
+        state.energy = e_new;
+        state.step += self.chunk;
+        Ok(trace)
+    }
+}

@@ -1,0 +1,163 @@
+//! Time-to-solution statistics (paper §V-B2, Eq. 32).
+//!
+//! Each run is a Bernoulli trial that reaches the target with probability
+//! `P_a(t_a)` within computing time `t_a`; the number of runs needed for
+//! success probability `p` is `R ≥ ln(1−p)/ln(1−P_a)`, giving
+//! `TTS(p) = t_a · ln(1−p)/ln(1−P_a)`.
+
+/// Estimate of success probability from repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct SuccessEstimate {
+    pub runs: usize,
+    pub successes: usize,
+}
+
+impl SuccessEstimate {
+    /// Point estimate `P_a = successes/runs`.
+    pub fn p_a(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.successes as f64 / self.runs as f64
+        }
+    }
+
+    /// Wilson score interval (95%) for `P_a` — used to report error bars
+    /// on the TTS rows.
+    pub fn wilson_95(&self) -> (f64, f64) {
+        if self.runs == 0 {
+            return (0.0, 1.0);
+        }
+        let n = self.runs as f64;
+        let p = self.p_a();
+        let z = 1.96f64;
+        let z2 = z * z;
+        let denom = 1.0 + z2 / n;
+        let center = (p + z2 / (2.0 * n)) / denom;
+        let half = (z / denom) * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt();
+        ((center - half).max(0.0), (center + half).min(1.0))
+    }
+}
+
+/// TTS(p) for a single-run time `t_a` (seconds) and success estimate.
+///
+/// Degenerate cases follow the conventions of the TTS literature
+/// ([Rønnow et al. 2014]): `P_a == 0` → ∞; `P_a ≥ p` → a single run
+/// suffices but never less than one run's time (`R` is clamped to ≥ 1).
+pub fn tts(p: f64, t_a_seconds: f64, est: SuccessEstimate) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "target probability must be in (0,1)");
+    let pa = est.p_a();
+    if pa <= 0.0 {
+        return f64::INFINITY;
+    }
+    if pa >= 1.0 {
+        return t_a_seconds;
+    }
+    let r = (1.0 - p).ln() / (1.0 - pa).ln();
+    t_a_seconds * r.max(1.0)
+}
+
+/// TTS(0.99), the figure of merit used throughout §V.
+pub fn tts99(t_a_seconds: f64, est: SuccessEstimate) -> f64 {
+    tts(0.99, t_a_seconds, est)
+}
+
+/// One row of the Table III comparison.
+#[derive(Clone, Debug)]
+pub struct TtsRow {
+    pub machine: String,
+    pub hardware: String,
+    pub t_a_ms: f64,
+    pub p_a: f64,
+    pub tts99_ms: f64,
+}
+
+impl TtsRow {
+    /// Build a row from measurements.
+    pub fn measured(machine: &str, hardware: &str, t_a_seconds: f64, est: SuccessEstimate) -> Self {
+        Self {
+            machine: machine.to_string(),
+            hardware: hardware.to_string(),
+            t_a_ms: t_a_seconds * 1e3,
+            p_a: est.p_a(),
+            tts99_ms: tts99(t_a_seconds, est) * 1e3,
+        }
+    }
+
+    /// A literature row quoted from the paper (CIM optics etc. that we
+    /// cannot run); marked as such by the harness printer.
+    pub fn quoted(machine: &str, hardware: &str, t_a_ms: f64, p_a: f64, tts99_ms: f64) -> Self {
+        Self {
+            machine: machine.to_string(),
+            hardware: hardware.to_string(),
+            t_a_ms,
+            p_a,
+            tts99_ms,
+        }
+    }
+
+    /// Speedup of this row over a baseline TTS (Fig. 13's metric).
+    pub fn speedup_over(&self, baseline_tts99_ms: f64) -> f64 {
+        baseline_tts99_ms / self.tts99_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq32_worked_example() {
+        // Paper Table III, Neal column: t_a = 4610 ms, P_a = 0.38
+        // → TTS(0.99) = 4610 · ln(0.01)/ln(0.62) ≈ 44413 ms.
+        let est = SuccessEstimate { runs: 100, successes: 38 };
+        let v = tts99(4.610, est) * 1e3;
+        assert!((v - 44413.0).abs() / 44413.0 < 0.01, "got {v}");
+    }
+
+    #[test]
+    fn snowball_pa_099_single_run() {
+        // Paper: Snowball reaches P_a = 0.99 within t_a, so TTS == t_a.
+        let est = SuccessEstimate { runs: 100, successes: 99 };
+        let v = tts99(0.128e-3, est);
+        assert!((v - 0.128e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_successes_is_infinite() {
+        let est = SuccessEstimate { runs: 50, successes: 0 };
+        assert!(tts99(1.0, est).is_infinite());
+    }
+
+    #[test]
+    fn all_successes_is_one_run() {
+        let est = SuccessEstimate { runs: 50, successes: 50 };
+        assert_eq!(tts99(2.0, est), 2.0);
+    }
+
+    #[test]
+    fn tts_monotone_in_pa() {
+        let t = 1.0;
+        let lo = tts99(t, SuccessEstimate { runs: 100, successes: 10 });
+        let hi = tts99(t, SuccessEstimate { runs: 100, successes: 90 });
+        assert!(hi < lo);
+    }
+
+    #[test]
+    fn wilson_interval_contains_point() {
+        let est = SuccessEstimate { runs: 200, successes: 120 };
+        let (lo, hi) = est.wilson_95();
+        let p = est.p_a();
+        assert!(lo < p && p < hi);
+        assert!(lo > 0.5 && hi < 0.7);
+    }
+
+    #[test]
+    fn speedup_matches_fig13_shape() {
+        // Fig 13: Snowball sequential mode 0.085 ms vs Neal 17693 ms
+        // → 208,153×.
+        let row = TtsRow::quoted("Snowball", "FPGA", 0.085, 0.99, 0.085);
+        let s = row.speedup_over(17693.0);
+        assert!((s - 208_153.0).abs() / 208_153.0 < 0.01);
+    }
+}

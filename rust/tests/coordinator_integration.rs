@@ -1,0 +1,145 @@
+//! Coordinator + service integration: end-to-end job lifecycle over TCP,
+//! concurrent clients, replica statistics and TTS plumbing.
+
+use snowball::coordinator::{service, Backend, Coordinator, JobSpec, Service};
+use snowball::engine::{Mode, Schedule};
+use snowball::problems::landscape;
+use snowball::rng::StatelessRng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn start_service() -> std::net::SocketAddr {
+    let coord = Coordinator::start(2);
+    Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background()
+}
+
+fn send(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(stream, "{req}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+#[test]
+fn full_job_lifecycle_over_tcp_with_tts() {
+    let addr = start_service();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    // Exact target from enumeration of a deterministic small instance.
+    let (_, model) = service::build_instance("er:18:60", 5).unwrap();
+    let (_, optimum) = landscape::ground_state(&model);
+
+    let reply = send(
+        &mut s,
+        &mut r,
+        &format!("SOLVE instance=er:18:60 mode=rwa steps=8000 replicas=6 seed=5 target={optimum}"),
+    );
+    assert!(reply.starts_with("JOB id="), "{reply}");
+    let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+    loop {
+        let st = send(&mut s, &mut r, &format!("STATUS id={id}"));
+        if st.contains("state=done") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let res = send(&mut s, &mut r, &format!("RESULT id={id} target={optimum}"));
+    assert!(res.contains(&format!("best={optimum}")), "should hit the optimum: {res}");
+    assert!(res.contains("pa=1.000"), "all replicas should succeed: {res}");
+    assert!(!res.contains("tts99_ms=inf"), "TTS must be finite: {res}");
+}
+
+#[test]
+fn concurrent_clients_get_isolated_jobs() {
+    let addr = start_service();
+    let mut handles = Vec::new();
+    for client in 0..4u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let reply = send(
+                &mut s,
+                &mut r,
+                &format!("SOLVE instance=er:24:80 mode=rsa steps=3000 replicas=2 seed={client}"),
+            );
+            let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+            loop {
+                let st = send(&mut s, &mut r, &format!("STATUS id={id}"));
+                if st.contains("state=done") {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let res = send(&mut s, &mut r, &format!("RESULT id={id}"));
+            assert!(res.contains(&format!("RESULT id={id}")), "{res}");
+            id
+        }));
+    }
+    let ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let mut dedup = ids.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), ids.len(), "job ids collided: {ids:?}");
+}
+
+#[test]
+fn coordinator_direct_api_with_target_statistics() {
+    let coord = Coordinator::start(2);
+    let rng = StatelessRng::new(21);
+    let g = snowball::graph::generators::erdos_renyi(40, 160, &[-1, 1], &rng);
+    let p = snowball::problems::MaxCut::new(g);
+    let id = coord.submit(JobSpec {
+        model: Arc::new(p.model().clone()),
+        label: "stats".into(),
+        mode: Mode::RouletteWheel,
+        schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
+        steps: 4_000,
+        replicas: 8,
+        seed: 3,
+        target_energy: None,
+        backend: Backend::Native,
+    });
+    let res = coord.wait(id).unwrap();
+    assert_eq!(res.replicas.len(), 8);
+    // Use the observed best as target: at least one replica (the best
+    // one) must "succeed" and TTS must be finite.
+    let best = res.best_energy();
+    let est = res.successes(best);
+    assert!(est.successes >= 1);
+    let tts = snowball::tts::tts99(res.mean_replica_seconds(), est);
+    assert!(tts.is_finite() && tts > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_surface_through_service() {
+    let addr = start_service();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    send(&mut s, &mut r, "PING");
+    writeln!(s, "METRICS").unwrap();
+    let mut saw_counter = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        if line.contains("counter service_requests") {
+            saw_counter = true;
+        }
+        if line.trim_end().ends_with("END") {
+            break;
+        }
+    }
+    assert!(saw_counter, "metrics should include the request counter");
+}
+
+#[test]
+fn build_instance_covers_all_forms() {
+    assert!(service::build_instance("G6", 1).is_ok());
+    assert!(service::build_instance("k2000", 1).is_ok());
+    assert!(service::build_instance("er:10:20", 1).is_ok());
+    assert!(service::build_instance("er:10", 1).is_err());
+    assert!(service::build_instance("nope", 1).is_err());
+}

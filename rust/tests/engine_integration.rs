@@ -1,0 +1,150 @@
+//! Engine-level integration tests: convergence quality, mode comparisons
+//! and figure-harness behaviours on realistic instances.
+
+use snowball::baselines::{Budget, Solver};
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::graph::gset::{self, GsetId};
+use snowball::harness;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+
+/// On a planted-optimum instance both modes recover the ground state.
+#[test]
+fn both_modes_recover_planted_grid() {
+    let (frac, trace, _) = harness::fig4(150_000, 3);
+    assert!(frac > 0.99, "recovered only {:.1}% of the planted pattern", frac * 100.0);
+    // Energy decreases overall along the linear schedule (Fig 4a).
+    let first = trace.first().unwrap().1;
+    let last = trace.last().unwrap().1;
+    assert!(last < first, "no net energy decrease: {first} -> {last}");
+}
+
+/// RWA needs fewer steps than RSA to reach a fixed quality bar on a
+/// dense instance — the paper's §III-A convergence claim.
+#[test]
+fn rwa_converges_in_fewer_steps_than_rsa() {
+    let rng = StatelessRng::new(1);
+    let g = snowball::graph::generators::complete(96, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let bar = {
+        // Quality bar: what RSA reaches with a generous budget.
+        let cfg = EngineConfig::new(Mode::RandomScan, 40_000, 3);
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        e.run().best_energy
+    };
+    // Count steps for each mode to first reach the bar (median of 5 seeds).
+    let steps_to_bar = |mode: Mode| -> u64 {
+        let mut counts = Vec::new();
+        for seed in 0..5u64 {
+            let cfg = EngineConfig {
+                mode,
+                datapath: Datapath::Dense,
+                schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+                steps: 40_000,
+                seed,
+                planes: None,
+                trace_stride: 0,
+            };
+            let mut e = SnowballEngine::new(p.model(), cfg);
+            let r = e.run();
+            counts.push(if r.best_energy <= bar { r.best_step } else { u64::MAX });
+        }
+        counts.sort_unstable();
+        counts[2]
+    };
+    let rwa = steps_to_bar(Mode::RouletteWheel);
+    let rsa = steps_to_bar(Mode::RandomScan);
+    assert!(
+        rwa <= rsa,
+        "RWA took {rwa} steps vs RSA {rsa} to reach energy {bar} — parallel-evaluation \
+         selection should not be slower in steps"
+    );
+}
+
+/// Gset-scale smoke: G11 (800 spins, torus) reaches a sane cut with both
+/// Snowball modes and beats a random configuration by a wide margin.
+#[test]
+fn g11_scale_run() {
+    let g = gset::instance(GsetId::G11, 42);
+    let p = MaxCut::new(g);
+    for mode in [Mode::RandomScan, Mode::RouletteWheel] {
+        let solver = match mode {
+            Mode::RandomScan => snowball::baselines::SnowballSolver::rsa(),
+            _ => snowball::baselines::SnowballSolver::rwa(),
+        };
+        let r = solver.solve(p.model(), Budget::sweeps(60), 7);
+        let cut = p.cut_of_energy(r.best_energy);
+        // |E| = 1600, random cut ≈ (|E+|-|E-|)/2 ≈ 17. A real anneal gets
+        // several hundred.
+        assert!(cut > 300, "{}: cut {cut} too low", solver.name());
+    }
+}
+
+/// The uniformized variant's null-transition rate tracks 1 − W/W*.
+#[test]
+fn uniformized_null_rate_tracks_weight() {
+    let rng = StatelessRng::new(5);
+    let g = snowball::graph::generators::erdos_renyi(64, 400, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    // Hot chain: W is large, nulls rare. Cold chain: W tiny, nulls dominate.
+    let run = |t: f64| {
+        let cfg = EngineConfig {
+            mode: Mode::RouletteUniformized,
+            datapath: Datapath::Dense,
+            schedule: Schedule::Constant(t),
+            steps: 2_000,
+            seed: 9,
+            planes: None,
+            trace_stride: 0,
+        };
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run();
+        r.nulls as f64 / r.steps as f64
+    };
+    let hot = run(50.0);
+    let cold = run(0.2);
+    assert!(hot < 0.7, "hot chain nulled {hot}");
+    assert!(cold > hot, "cold chain must null more ({cold} vs {hot})");
+}
+
+/// Figure harnesses at reduced budgets produce sane shapes (full budgets
+/// run in the bench binaries).
+#[test]
+fn figure_harnesses_smoke() {
+    // Fig 14 cycle model: naive monotonically worse, e2e ≥ kernel.
+    for p in harness::fig14_model(&[10, 1_000]) {
+        assert!(p.naive_ms > p.end_to_end_ms && p.end_to_end_ms >= p.kernel_ms);
+    }
+    // Fig 3: LUT within 1e-3 of exact everywhere sampled.
+    for (_, pts) in harness::fig3(&[0.5, 2.0], 6) {
+        for (_, exact, approx) in pts {
+            assert!((exact - approx).abs() < 1e-3);
+        }
+    }
+    // Fig 13 speedups: Neal row is 1x by construction.
+    let rows = vec![
+        snowball::tts::TtsRow::quoted("Neal", "CPU", 100.0, 0.5, 100.0),
+        snowball::tts::TtsRow::quoted("X", "FPGA", 1.0, 0.9, 1.0),
+    ];
+    let sp = harness::fig13(&rows);
+    assert_eq!(sp[0].1, 1.0);
+    assert_eq!(sp[1].1, 100.0);
+}
+
+/// Solver trait consistency across the whole Table II line-up on a tiny
+/// instance: reported best energy matches re-evaluating the spins.
+#[test]
+fn lineup_reports_are_consistent() {
+    let rng = StatelessRng::new(8);
+    let g = snowball::graph::generators::erdos_renyi(32, 120, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    for solver in snowball::baselines::table2_lineup() {
+        let r = solver.solve(p.model(), Budget::sweeps(40), 11);
+        assert_eq!(
+            r.best_energy,
+            p.model().energy(&r.best_spins),
+            "{} misreported its best energy",
+            solver.name()
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! Property-based tests over the core invariants (via the in-repo
+//! `testutil::Cases` helper — the offline stand-in for proptest).
+
+use snowball::bitplane::BitPlanes;
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::ising::{IsingModel, SpinVec};
+use snowball::problems::quantize;
+use snowball::rng::salt;
+use snowball::testutil::{gen, Cases};
+
+/// ΔE from the local field equals the brute-force energy difference, for
+/// arbitrary models, configurations and flip targets.
+#[test]
+fn prop_delta_e_equals_energy_difference() {
+    Cases::new(0xA1, 60).run(|rng, size| {
+        let n = size.max(2);
+        let m = gen::model(rng, n, 9);
+        let mut s = gen::spins(rng, n);
+        let i = rng.below(1, 0, salt::SITE, n as u32) as usize;
+        let e0 = m.energy(&s);
+        let de = IsingModel::delta_e(s.get(i), m.local_field(&s, i));
+        s.flip(i);
+        let e1 = m.energy(&s);
+        if e1 - e0 != de {
+            return Err(format!("ΔE {de} but energies moved {}", e1 - e0));
+        }
+        Ok(())
+    });
+}
+
+/// Incremental bit-plane field updates track full recomputation across
+/// arbitrary flip sequences (Eqs. 17–20 vs Eq. 16).
+#[test]
+fn prop_bitplane_incremental_tracks_reinit() {
+    Cases::new(0xA2, 30).run(|rng, size| {
+        let n = size.max(2);
+        let m = gen::model(rng, n, 31);
+        let bp = BitPlanes::encode(&m, None);
+        let mut s = gen::spins(rng, n);
+        let mut u = bp.init_fields(&s);
+        for t in 0..(3 * n as u64) {
+            let j = rng.below(2, t, salt::SITE, n as u32) as usize;
+            let s_old = s.flip(j);
+            bp.incr_update(&mut u, j, s_old);
+        }
+        if u != bp.init_fields(&s) {
+            return Err("incremental fields drifted from reinit".into());
+        }
+        Ok(())
+    });
+}
+
+/// Bit-plane encode/decode round-trips any integer matrix that fits the
+/// plane budget (Eq. 13).
+#[test]
+fn prop_bitplane_roundtrip() {
+    Cases::new(0xA3, 40).run(|rng, size| {
+        let n = size.max(2);
+        let max_abs = 1 + rng.below(3, 0, salt::PROBLEM, 2000) as i32;
+        let m = gen::model(rng, n, max_abs);
+        let bp = BitPlanes::encode(&m, None);
+        let d = bp.decode();
+        if d.j_matrix() != m.j_matrix() {
+            return Err(format!("roundtrip failed at n={n}, max_abs={max_abs}"));
+        }
+        Ok(())
+    });
+}
+
+/// The engine's incrementally tracked energy and fields always match the
+/// dense oracle after arbitrary runs, in every mode × datapath.
+#[test]
+fn prop_engine_state_consistency() {
+    Cases::new(0xA4, 18).run(|rng, size| {
+        let n = (size + 2).min(48);
+        let m = gen::model(rng, n, 5);
+        let mode = match rng.below(4, 0, salt::PROBLEM, 3) {
+            0 => Mode::RandomScan,
+            1 => Mode::RouletteWheel,
+            _ => Mode::RouletteUniformized,
+        };
+        let dp = if rng.below(5, 0, salt::PROBLEM, 2) == 0 {
+            Datapath::Dense
+        } else {
+            Datapath::BitPlane
+        };
+        let cfg = EngineConfig {
+            mode,
+            datapath: dp,
+            schedule: Schedule::Geometric { t0: 4.0, t1: 0.1 },
+            steps: 200,
+            seed: rng.u64(6, 0, salt::PROBLEM),
+            planes: None,
+            trace_stride: 0,
+        };
+        let mut e = SnowballEngine::new(&m, cfg);
+        e.run();
+        if e.energy() != m.energy(e.spins()) {
+            return Err(format!("energy drift in {mode:?}/{dp:?}"));
+        }
+        if e.fields() != &m.local_fields(e.spins())[..] {
+            return Err(format!("field drift in {mode:?}/{dp:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Quantization never *increases* coefficient magnitude and the shifted
+/// model's coefficients equal the arithmetic shift exactly.
+#[test]
+fn prop_quantization_shrinks() {
+    Cases::new(0xA5, 40).run(|rng, size| {
+        let n = size.max(2);
+        let m = gen::model(rng, n, 100);
+        let bits = rng.below(7, 0, salt::PROBLEM, 4) + 1;
+        let q = quantize::arithmetic_shift(&m, bits);
+        for i in 0..n {
+            for k in 0..n {
+                if i != k && q.j(i, k) != m.j(i, k) >> bits {
+                    return Err(format!("bad shift at ({i},{k})"));
+                }
+                if q.j(i, k).abs() > m.j(i, k).abs() {
+                    return Err("magnitude grew".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Engine trajectories are a pure function of the seed (stateless RNG):
+/// same seed → identical runs, different seed → different runs (whp).
+#[test]
+fn prop_seed_determinism() {
+    Cases::new(0xA6, 15).run(|rng, size| {
+        let n = (size + 4).min(40);
+        let m = gen::model(rng, n, 3);
+        let run = |seed: u64| {
+            let cfg = EngineConfig::new(Mode::RouletteWheel, 150, seed);
+            let mut e = SnowballEngine::new(&m, cfg);
+            let r = e.run();
+            (r.final_energy, r.flips)
+        };
+        let s = rng.u64(8, 0, salt::PROBLEM);
+        if run(s) != run(s) {
+            return Err("same seed diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Max-Cut cut/energy bijection holds on arbitrary graphs and configs.
+#[test]
+fn prop_maxcut_cut_energy_identity() {
+    Cases::new(0xA7, 40).run(|rng, size| {
+        let n = size.max(2);
+        let m_edges = (n * (n - 1) / 2).min(4 * n);
+        let g = snowball::graph::generators::erdos_renyi(n, m_edges, &[-2, -1, 1, 3], rng);
+        let p = snowball::problems::MaxCut::new(g);
+        let s = gen::spins(rng, n);
+        let via_energy = p.cut_of_energy(p.model().energy(&s));
+        if via_energy != p.cut_value(&s) {
+            return Err("cut/energy identity failed".into());
+        }
+        Ok(())
+    });
+}
+
+/// SpinVec word packing: get/set/flip/count agree with a Vec<i8> mirror.
+#[test]
+fn prop_spinvec_matches_mirror() {
+    Cases::new(0xA8, 40).run(|rng, size| {
+        let n = size * 3 + 1; // exercise word boundaries
+        let mut v = SpinVec::all_down(n);
+        let mut mirror = vec![-1i8; n];
+        for t in 0..(2 * n as u64) {
+            let i = rng.below(9, t, salt::SITE, n as u32) as usize;
+            match rng.below(10, t, salt::PROBLEM, 3) {
+                0 => {
+                    v.set(i, 1);
+                    mirror[i] = 1;
+                }
+                1 => {
+                    v.set(i, -1);
+                    mirror[i] = -1;
+                }
+                _ => {
+                    v.flip(i);
+                    mirror[i] = -mirror[i];
+                }
+            }
+        }
+        if v.to_spins() != mirror {
+            return Err("mirror mismatch".into());
+        }
+        if v.count_up() != mirror.iter().filter(|&&s| s == 1).count() {
+            return Err("count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// The batcher never drops or duplicates jobs, and never assigns a class
+/// smaller than the job.
+#[test]
+fn prop_batcher_conservation() {
+    Cases::new(0xA9, 50).run(|rng, _| {
+        let n_jobs = 1 + rng.below(11, 0, salt::PROBLEM, 40) as usize;
+        let sizes: Vec<usize> =
+            (0..n_jobs).map(|i| 1 + rng.below(12, i as u64, salt::PROBLEM, 5000) as usize).collect();
+        let classes = [256usize, 800, 2048];
+        let plan = snowball::coordinator::batcher::plan(&sizes, &classes);
+        let mut seen = vec![false; n_jobs];
+        for a in &plan.assignments {
+            if seen[a.job] {
+                return Err("duplicate assignment".into());
+            }
+            seen[a.job] = true;
+            if a.class_n < sizes[a.job] {
+                return Err("class too small".into());
+            }
+        }
+        for &j in &plan.overflow {
+            if seen[j] {
+                return Err("overflow double-assigned".into());
+            }
+            seen[j] = true;
+            if sizes[j] <= 2048 {
+                return Err("fit job sent to overflow".into());
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("job dropped".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,171 @@
+//! Integration test: the AOT XLA anneal chunk (L1 Pallas + L2 JAX) is
+//! **bit-identical** to the native Rust engine (L3) — same stateless RNG
+//! streams, same Q16 PWL, same prefix-scan selection, same incremental
+//! field updates. This is the strongest composition proof the three-layer
+//! stack admits.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.txt`;
+//! the tests are skipped (with a notice) when artifacts are missing so
+//! `cargo test` stays green on a fresh checkout.
+
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::graph::generators;
+use snowball::ising::SpinVec;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+use snowball::runtime::{chunk::ChunkState, ArtifactManifest, ChunkRunner, Runtime};
+
+fn manifest_or_skip() -> Option<ArtifactManifest> {
+    match ArtifactManifest::discover() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP xla parity tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn chunked_xla_run_matches_native_engine_bit_for_bit() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(spec) = manifest.find("anneal_chunk", 256) else {
+        eprintln!("SKIP: no anneal_chunk n=256 artifact");
+        return;
+    };
+    let chunk_len = spec.chunk.unwrap();
+    let total_steps = chunk_len * 2;
+    let seed = 0xFEED_u64;
+
+    // Instance with N == artifact N so no padding enters the picture.
+    let rng = StatelessRng::new(7);
+    let g = generators::erdos_renyi(256, 3000, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+
+    // Native run, roulette mode, with the exact schedule the chunk gets.
+    let schedule = Schedule::Geometric { t0: 8.0, t1: 0.05 };
+    let cfg = EngineConfig {
+        mode: Mode::RouletteWheel,
+        datapath: Datapath::Dense,
+        schedule: schedule.clone(),
+        steps: total_steps,
+        seed,
+        planes: None,
+        trace_stride: 0,
+    };
+    let init_spins = SpinVec::random(256, &StatelessRng::new(seed));
+    let mut native = SnowballEngine::with_spins(p.model(), cfg, init_spins.clone());
+    let native_run = native.run();
+
+    // XLA chunked run with identical seed/stages/temperatures.
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let runner = ChunkRunner::new(&rt, spec, p.model(), seed).expect("compile artifact");
+    let mut state = ChunkState::init(p.model(), init_spins);
+    let temps = schedule.materialize(total_steps);
+    for c in 0..(total_steps / chunk_len) {
+        let lo = (c * chunk_len) as usize;
+        let hi = lo + chunk_len as usize;
+        runner.run_chunk(&rt, &mut state, &temps[lo..hi]).expect("run chunk");
+    }
+
+    assert_eq!(state.energy as i64, native_run.final_energy, "energy trajectories diverged");
+    assert_eq!(state.spins, native.spins().clone(), "spin configurations diverged");
+    let native_u: Vec<f64> = native.fields().iter().map(|&v| v as f64).collect();
+    assert_eq!(state.u, native_u, "local fields diverged");
+    // And the state is self-consistent against the dense oracle.
+    assert_eq!(p.model().energy(&state.spins) as f64, state.energy);
+}
+
+#[test]
+fn flip_probs_artifact_matches_native_lut() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(spec) = manifest.find("flip_probs", 256) else {
+        eprintln!("SKIP: no flip_probs n=256 artifact");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.load_hlo_text(&spec.file).expect("load flip_probs");
+
+    let rng = StatelessRng::new(3);
+    let g = generators::erdos_renyi(256, 2000, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let spins = SpinVec::random(256, &rng);
+    let u = p.model().local_fields(&spins);
+    let lut = snowball::engine::PwlLogistic::default();
+
+    for temp in [0.05f64, 1.0, 8.0] {
+        let s_f: Vec<f32> = (0..256).map(|i| spins.get(i) as f32).collect();
+        let u_f: Vec<f64> = u.iter().map(|&v| v as f64).collect();
+        let out = exe
+            .run(&[
+                xla::Literal::vec1(&s_f),
+                xla::Literal::vec1(&u_f),
+                xla::Literal::vec1(&[temp]),
+            ])
+            .expect("execute");
+        let got: Vec<u32> = out[0].to_vec().expect("u32 output");
+        for i in 0..256 {
+            let de = snowball::ising::IsingModel::delta_e(spins.get(i), u[i]);
+            assert_eq!(got[i], lut.flip_prob_q16(de, temp), "spin {i} at T={temp}");
+        }
+    }
+}
+
+#[test]
+fn field_init_artifact_matches_bitplane_store() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(spec) = manifest.find_padded("field_init", 128) else {
+        eprintln!("SKIP: no field_init artifact");
+        return;
+    };
+    if spec.n != 128 {
+        eprintln!("SKIP: field_init artifact is n={}, test wants 128", spec.n);
+        return;
+    }
+    let planes_b = spec.planes.unwrap();
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.load_hlo_text(&spec.file).expect("load field_init");
+
+    // Random model fitting in the artifact's plane budget.
+    let max_abs = (1i32 << (planes_b - 1)) - 1;
+    let rng = StatelessRng::new(11);
+    let mut m = snowball::ising::IsingModel::zeros(128);
+    let mut idx = 0u64;
+    for i in 0..128 {
+        for k in (i + 1)..128 {
+            let v = rng.below(9, idx, snowball::rng::salt::PROBLEM, (2 * max_abs + 1) as u32)
+                as i32
+                - max_abs;
+            idx += 1;
+            if v != 0 {
+                m.set_j(i, k, v);
+            }
+        }
+    }
+    let spins = SpinVec::random(128, &rng);
+    let bp = snowball::bitplane::BitPlanes::encode(&m, Some(planes_b));
+    let want = bp.init_fields(&spins);
+
+    // Build signed planes input [B, N, N] from the model.
+    let n = 128usize;
+    let mut planes = vec![0f32; planes_b as usize * n * n];
+    for b in 0..planes_b as usize {
+        for i in 0..n {
+            for k in 0..n {
+                let v = m.j(i, k);
+                let mag = v.unsigned_abs();
+                if (mag >> b) & 1 == 1 {
+                    planes[(b * n + i) * n + k] = if v > 0 { 1.0 } else { -1.0 };
+                }
+            }
+        }
+    }
+    let s_f: Vec<f32> = (0..n).map(|i| spins.get(i) as f32).collect();
+    let planes_lit = xla::Literal::vec1(&planes)
+        .reshape(&[planes_b as i64, n as i64, n as i64])
+        .expect("reshape");
+    let out = exe.run(&[planes_lit, xla::Literal::vec1(&s_f)]).expect("execute");
+    let got: Vec<f64> = out[0].to_vec().expect("f64 output");
+    for i in 0..n {
+        assert_eq!(got[i] as i64, want[i], "field {i}");
+    }
+}
