@@ -6,7 +6,7 @@
 //!     cargo bench --bench microbench -- [--quick]
 
 use snowball::cli::Args;
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{Datapath, EngineConfig, Mode, ReplicaPool, Schedule, SnowballEngine};
 use snowball::graph::generators;
 use snowball::harness as hx;
 use snowball::problems::MaxCut;
@@ -63,6 +63,47 @@ fn main() {
             &rows
         )
     );
+
+    // Replica-pool scaling: R independent replicas through the shared
+    // ReplicaPool, serial vs one-worker-per-core. Asserts the pool's
+    // determinism contract (identical best energies) while measuring the
+    // wall-clock speedup — the repo's first recorded multi-core point.
+    {
+        let n = if quick { 512 } else { 1024 };
+        let replicas = 8usize;
+        let pool_steps: u64 = if quick { 2_000 } else { 10_000 };
+        let rng = StatelessRng::new(11);
+        let g = generators::complete(n, &[-1, 1], &rng);
+        let p = MaxCut::new(g);
+        let run_with = |workers: usize| -> (f64, usize, Vec<i64>) {
+            let pool = ReplicaPool::new(workers);
+            let root = StatelessRng::new(21);
+            let start = std::time::Instant::now();
+            let best: Vec<i64> = pool.run_indexed(replicas, |i| {
+                let cfg = EngineConfig {
+                    mode: Mode::RouletteWheel,
+                    datapath: Datapath::Dense,
+                    schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+                    steps: pool_steps,
+                    seed: root.child(i as u64).seed(),
+                    planes: None,
+                    trace_stride: 0,
+                };
+                SnowballEngine::new(p.model(), cfg).run().best_energy
+            });
+            (start.elapsed().as_secs_f64(), pool.workers(), best)
+        };
+        let (t_serial, _, serial) = run_with(1);
+        let (t_wide, cores, wide) = run_with(0);
+        assert_eq!(serial, wide, "replica pool must be deterministic across worker counts");
+        println!(
+            "\nreplica pool: {replicas} replicas x {pool_steps} RWA steps (N={n}) | \
+             1 worker {:.1} ms | {cores} workers {:.1} ms | {:.2}x speedup",
+            t_serial * 1e3,
+            t_wide * 1e3,
+            t_serial / t_wide
+        );
+    }
 
     // XLA chunk throughput, if artifacts are present.
     if let (Ok(manifest), Ok(rt)) =

@@ -23,10 +23,19 @@ fn main() {
         runs: args.get_parse_or("runs", if quick { 4 } else { 8 }).unwrap(),
         sweeps: args.get_parse_or("sweeps", if quick { 150 } else { 400 }).unwrap(),
         seed: args.get_parse_or("seed", 1u64).unwrap(),
+        // Serial trials by default: P_a/best-cut are worker-count
+        // independent (stateless child seeds), but per-trial wall times
+        // — and so the reported t_a/TTS columns — inflate under
+        // concurrent contention. Pass --workers 0 (auto) to trade
+        // timing fidelity for turnaround.
+        workers: args.get_parse_or("workers", 1usize).unwrap(),
     };
     eprintln!(
-        "table3: threshold {} | {} runs x {} sweeps",
-        cfg.cut_threshold, cfg.runs, cfg.sweeps
+        "table3: threshold {} | {} runs x {} sweeps | {} workers",
+        cfg.cut_threshold,
+        cfg.runs,
+        cfg.sweeps,
+        if cfg.workers == 0 { "auto".to_string() } else { cfg.workers.to_string() }
     );
     let (rows, best) = hx::table3(&cfg);
     let table: Vec<Vec<String>> = rows

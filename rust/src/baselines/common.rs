@@ -32,7 +32,11 @@ pub struct SolveResult {
 }
 
 /// A Table II/III comparator.
-pub trait Solver {
+///
+/// `Send + Sync` so harnesses can share one solver across the replica
+/// pool's workers (every implementor is plain configuration data; all
+/// run state lives in `solve`'s locals).
+pub trait Solver: Send + Sync {
     /// Short name as used in the paper's tables (e.g. "Neal", "SFG").
     fn name(&self) -> &'static str;
 

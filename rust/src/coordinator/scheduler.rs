@@ -1,7 +1,6 @@
-//! Replica scheduler: fans a job's independent replicas out over a
-//! thread pool (std threads — the offline environment has no tokio; the
-//! service layer uses one thread per connection and this pool for
-//! compute).
+//! Replica scheduler: fans a job's independent replicas out over the
+//! shared [`ReplicaPool`] (rayon workers; the service layer uses one
+//! thread per connection and this pool for compute).
 //!
 //! Replicas are embarrassingly parallel: each gets a decorrelated child
 //! seed from the job seed (stateless RNG `child`, paper §IV-B3d) so the
@@ -9,70 +8,55 @@
 //! asserted by `deterministic_across_worker_counts`.
 
 use super::job::{JobSpec, ReplicaResult};
+use crate::engine::pool::ReplicaPool;
 use crate::engine::{Datapath, EngineConfig, SnowballEngine};
 use crate::rng::StatelessRng;
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Mutex;
 
-/// Thread-pool replica scheduler.
+/// Replica scheduler over the shared worker pool.
 pub struct ReplicaScheduler {
-    workers: usize,
+    pool: ReplicaPool,
 }
 
 impl ReplicaScheduler {
     /// `workers = 0` → one per available CPU.
     pub fn new(workers: usize) -> Self {
-        let workers = if workers == 0 {
-            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
-        } else {
-            workers
-        };
-        Self { workers }
+        Self { pool: ReplicaPool::new(workers) }
     }
 
     /// Worker count.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.workers()
+    }
+
+    /// The underlying pool (for callers that batch other fan-out work —
+    /// e.g. tempering bursts — onto the same threads).
+    pub fn pool(&self) -> &ReplicaPool {
+        &self.pool
     }
 
     /// Run all replicas of `spec` on the native engine, returning results
     /// ordered by replica index.
     pub fn run_native(&self, spec: &JobSpec) -> Vec<ReplicaResult> {
-        let next = AtomicU32::new(0);
-        let results: Mutex<Vec<ReplicaResult>> = Mutex::new(Vec::with_capacity(spec.replicas as usize));
         let root = StatelessRng::new(spec.seed);
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(spec.replicas as usize).max(1) {
-                scope.spawn(|| loop {
-                    let r = next.fetch_add(1, Ordering::Relaxed);
-                    if r >= spec.replicas {
-                        break;
-                    }
-                    let seed = root.child(r as u64).seed();
-                    let cfg = EngineConfig {
-                        mode: spec.mode,
-                        datapath: Datapath::Dense,
-                        schedule: spec.schedule.clone(),
-                        steps: spec.steps,
-                        seed,
-                        planes: None,
-                        trace_stride: 0,
-                    };
-                    let mut engine = SnowballEngine::new(&spec.model, cfg);
-                    let run = engine.run();
-                    let result = ReplicaResult {
-                        replica: r,
-                        best_energy: run.best_energy,
-                        flips: run.flips,
-                        wall: run.wall,
-                    };
-                    results.lock().unwrap().push(result);
-                });
+        self.pool.run_indexed(spec.replicas as usize, |r| {
+            let cfg = EngineConfig {
+                mode: spec.mode,
+                datapath: Datapath::Dense,
+                schedule: spec.schedule.clone(),
+                steps: spec.steps,
+                seed: root.child(r as u64).seed(),
+                planes: None,
+                trace_stride: 0,
+            };
+            let mut engine = SnowballEngine::new(&spec.model, cfg);
+            let run = engine.run();
+            ReplicaResult {
+                replica: r as u32,
+                best_energy: run.best_energy,
+                flips: run.flips,
+                wall: run.wall,
             }
-        });
-        let mut v = results.into_inner().unwrap();
-        v.sort_by_key(|r| r.replica);
-        v
+        })
     }
 }
 

@@ -1,0 +1,124 @@
+//! Shared replica pool: fans *independent* chain computations across a
+//! dedicated rayon thread pool.
+//!
+//! The paper's 8× TTS win comes from massively parallel lane evaluation
+//! on the FPGA; the software analogue is replica-level parallelism, and
+//! Snowball's stateless RNG (paper §IV-B3d) makes it trivial to do
+//! **deterministically**: every replica's stream is a pure function of
+//! `StatelessRng::child(index)`, so results are bit-identical for any
+//! worker count or interleaving. Every multi-replica path in the repo —
+//! [`crate::engine::tempering::ParallelTempering`], the coordinator's
+//! [`crate::coordinator::ReplicaScheduler`], and the TTS harness
+//! (`crate::harness::table3`) — fans out through this one abstraction.
+//!
+//! Determinism contract: the closures handed to [`ReplicaPool::run_indexed`]
+//! / [`ReplicaPool::for_each_mut`] must be pure functions of their index
+//! (plus the per-index state they own). The pool then guarantees results
+//! in index order, independent of scheduling — asserted by the
+//! `identical_for_any_worker_count` test below and the integration suite
+//! (`rust/tests/pool_determinism.rs`).
+
+use rayon::prelude::*;
+
+/// A fixed-size worker pool for replica fan-out.
+///
+/// Owns a dedicated rayon [`rayon::ThreadPool`] rather than using the
+/// global one, so worker counts are explicit (`1` forces serial
+/// execution — the reference point for determinism tests) and nested
+/// pools (coordinator jobs × replica bursts) never deadlock-share a
+/// global injector.
+pub struct ReplicaPool {
+    pool: rayon::ThreadPool,
+    workers: usize,
+}
+
+impl ReplicaPool {
+    /// Build a pool with `workers` threads; `0` = one per available CPU.
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 { Self::auto_workers() } else { workers };
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(workers)
+            .thread_name(|i| format!("snowball-replica-{i}"))
+            .build()
+            .expect("building the replica thread pool cannot fail");
+        Self { pool, workers }
+    }
+
+    /// The worker count `0` resolves to: one per available CPU.
+    pub fn auto_workers() -> usize {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+    }
+
+    /// Worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Evaluate `f(0), f(1), …, f(count-1)` across the pool and return the
+    /// results **in index order**. Bit-identical to a serial loop for any
+    /// worker count, provided `f` is a pure function of its index.
+    pub fn run_indexed<T, F>(&self, count: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.pool.install(|| (0..count).into_par_iter().map(|i| f(i)).collect())
+    }
+
+    /// Apply `f(index, &mut item)` to every element of `items` in
+    /// parallel. Used for in-place replica bursts (parallel tempering)
+    /// where each worker owns exactly one element — no element is ever
+    /// visible to two workers, so the result is scheduling-independent.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        self.pool.install(|| {
+            items.par_iter_mut().enumerate().for_each(|(i, item)| f(i, item));
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StatelessRng;
+
+    #[test]
+    fn results_arrive_in_index_order() {
+        let pool = ReplicaPool::new(4);
+        let out = pool.run_indexed(64, |i| i * i);
+        let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn identical_for_any_worker_count() {
+        // A stand-in for a replica computation: a chained stateless-RNG
+        // walk keyed on the index.
+        let work = |i: usize| -> u64 {
+            let rng = StatelessRng::new(0xBEEF).child(i as u64);
+            (0..500u64).fold(0u64, |acc, t| acc ^ rng.u64(1, t, 0))
+        };
+        let serial = ReplicaPool::new(1).run_indexed(16, work);
+        let wide = ReplicaPool::new(7).run_indexed(16, work);
+        assert_eq!(serial, wide, "pool results must not depend on worker count");
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let pool = ReplicaPool::new(3);
+        let mut items = vec![0u64; 40];
+        pool.for_each_mut(&mut items, |i, v| *v += i as u64 + 1);
+        let expect: Vec<u64> = (0..40).map(|i| i + 1).collect();
+        assert_eq!(items, expect);
+    }
+
+    #[test]
+    fn zero_workers_means_auto() {
+        let pool = ReplicaPool::new(0);
+        assert_eq!(pool.workers(), ReplicaPool::auto_workers());
+        assert!(pool.workers() >= 1);
+    }
+}

@@ -8,7 +8,16 @@
 //! replicas propose a configuration swap accepted with the standard
 //! probability `min(1, exp((1/T_a − 1/T_b)(E_a − E_b)))`, which leaves
 //! the product Gibbs measure invariant.
+//!
+//! Between exchange barriers the replica chains are completely
+//! independent (each engine draws from its own stateless child stream),
+//! so each step burst fans out over the shared [`ReplicaPool`]. The
+//! exchange step and the best-configuration reduction run serially in
+//! replica-index order, which makes the whole run **bit-identical for
+//! any worker count** — asserted by `worker_count_invariance` below and
+//! `rust/tests/pool_determinism.rs`.
 
+use super::pool::ReplicaPool;
 use super::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
 use crate::ising::IsingModel;
 use crate::rng::{salt, StatelessRng};
@@ -18,6 +27,9 @@ pub struct ParallelTempering {
     pub temps: Vec<f64>,
     pub exchange_every: u64,
     pub mode: Mode,
+    /// Worker threads for the replica bursts (0 = one per CPU). Results
+    /// do not depend on this — it only changes wall-clock.
+    pub workers: usize,
 }
 
 /// Outcome of a tempering run.
@@ -37,11 +49,31 @@ impl ParallelTempering {
         let temps = (0..r)
             .map(|i| t_hot * (t_cold / t_hot).powf(i as f64 / (r - 1) as f64))
             .collect();
-        Self { temps, exchange_every: 64, mode }
+        Self { temps, exchange_every: 64, mode, workers: 0 }
     }
 
-    /// Run `steps` single-spin updates per replica.
+    /// Set the worker count (builder style; 0 = one per CPU).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Run `steps` single-spin updates per replica on a fresh pool.
     pub fn run(&self, model: &IsingModel, steps: u64, seed: u64) -> TemperingResult {
+        let pool = ReplicaPool::new(self.workers);
+        self.run_on(&pool, model, steps, seed)
+    }
+
+    /// Run `steps` single-spin updates per replica, fanning the bursts
+    /// over an existing pool (so callers batching many tempering runs —
+    /// coordinator jobs, harness sweeps — reuse one set of threads).
+    pub fn run_on(
+        &self,
+        pool: &ReplicaPool,
+        model: &IsingModel,
+        steps: u64,
+        seed: u64,
+    ) -> TemperingResult {
         let r = self.temps.len();
         let root = StatelessRng::new(seed);
         let mut engines: Vec<SnowballEngine> = (0..r)
@@ -64,15 +96,29 @@ impl ParallelTempering {
         let mut best_spins = engines[0].spins().clone();
         let mut proposals = vec![0u64; r - 1];
         let mut accepts = vec![0u64; r - 1];
+        // temp_of[e] = temperature engine e runs at during the next burst.
+        let mut temp_of = vec![0.0f64; r];
         let mut t = 0u64;
         while t < steps {
             let burst = self.exchange_every.min(steps - t);
             for (k, &e) in ladder.iter().enumerate() {
-                let temp = self.temps[k];
-                let engine = &mut engines[e];
-                for dt in 0..burst {
-                    engine.step(t + dt, temp);
-                }
+                temp_of[e] = self.temps[k];
+            }
+            // Parallel burst: replica streams are independent between
+            // exchanges (distinct child seeds, own state), so each engine
+            // advances on its own worker.
+            {
+                let temp_of = &temp_of;
+                pool.for_each_mut(&mut engines, |e, engine| {
+                    let temp = temp_of[e];
+                    for dt in 0..burst {
+                        engine.step(t + dt, temp);
+                    }
+                });
+            }
+            // Best reduction in engine-index order: deterministic
+            // regardless of which worker finished first.
+            for engine in &engines {
                 if engine.energy() < best_energy {
                     best_energy = engine.energy();
                     best_spins = engine.spins().clone();
@@ -154,6 +200,27 @@ mod tests {
         let ratios: Vec<f64> = pt.temps.windows(2).map(|w| w[1] / w[0]).collect();
         for w in ratios.windows(2) {
             assert!((w[0] - w[1]).abs() < 1e-12);
+        }
+    }
+
+    /// The tentpole guarantee: one worker and many workers produce the
+    /// same trajectory bit for bit (the integration suite repeats this
+    /// on a larger instance with swap-rate comparison).
+    #[test]
+    fn worker_count_invariance() {
+        let rng = StatelessRng::new(13);
+        let g = generators::erdos_renyi(40, 180, &[-1, 1], &rng);
+        let p = MaxCut::new(g);
+        for mode in [Mode::RandomScan, Mode::RouletteWheel] {
+            let serial = ParallelTempering::geometric(4, 5.0, 0.3, mode)
+                .with_workers(1)
+                .run(p.model(), 4_000, 7);
+            let wide = ParallelTempering::geometric(4, 5.0, 0.3, mode)
+                .with_workers(4)
+                .run(p.model(), 4_000, 7);
+            assert_eq!(serial.best_energy, wide.best_energy, "{mode:?}");
+            assert_eq!(serial.best_spins, wide.best_spins, "{mode:?}");
+            assert_eq!(serial.swap_rates, wide.swap_rates, "{mode:?}");
         }
     }
 }

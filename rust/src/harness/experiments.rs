@@ -6,7 +6,9 @@
 
 use crate::baselines::{table2_lineup, Budget, Solver};
 use crate::bitplane::BitPlanes;
-use crate::engine::{glauber_exact, Datapath, EngineConfig, Mode, PwlLogistic, Schedule, SnowballEngine};
+use crate::engine::{
+    glauber_exact, Datapath, EngineConfig, Mode, PwlLogistic, ReplicaPool, Schedule, SnowballEngine,
+};
 use crate::graph::gset::{self, GsetId};
 use crate::hwsim::{Geometry, HwModel};
 use crate::ising::{IsingModel, SpinVec};
@@ -92,11 +94,20 @@ pub struct TtsConfig {
     /// Per-run sweep budget.
     pub sweeps: u64,
     pub seed: u64,
+    /// Worker threads for the per-machine trial fan-out. The success
+    /// statistics (P_a, best cut) are worker-count independent
+    /// (stateless child seeds), but each trial's measured wall time —
+    /// and therefore the reported `t_a`/TTS columns — picks up
+    /// cross-trial cache/bandwidth contention when trials run
+    /// concurrently. Default 1 (serial) for measurement fidelity;
+    /// raise it (0 = one per CPU) when turnaround matters more than
+    /// comparable timing rows.
+    pub workers: usize,
 }
 
 impl Default for TtsConfig {
     fn default() -> Self {
-        Self { cut_threshold: 33_000, runs: 20, sweeps: 2_000, seed: 1 }
+        Self { cut_threshold: 33_000, runs: 20, sweeps: 2_000, seed: 1, workers: 1 }
     }
 }
 
@@ -145,16 +156,22 @@ pub fn table3(cfg: &TtsConfig) -> (Vec<TtsRow>, i64) {
     ];
     let hw = HwModel::default();
     let geom = Geometry { n: model.len(), planes: 1 };
+    // Every machine's independent trials fan out over the shared replica
+    // pool: seeds are stateless children of the trial index, so the
+    // P_a / best-cut statistics are identical for any worker count.
+    // NOTE: t_a sums per-trial wall times, which inflate under
+    // concurrent execution (cache/bandwidth contention) — hence the
+    // serial default in `TtsConfig::workers`; see its doc comment.
+    let pool = ReplicaPool::new(cfg.workers);
     for (solver, mult) in solvers {
+        let solver: &dyn Solver = solver.as_ref();
+        let root = StatelessRng::new(cfg.seed ^ 0xD00D);
+        let trials = pool.run_indexed(cfg.runs as usize, |run| {
+            solver.solve(model, Budget::sweeps(cfg.sweeps * mult), root.child(run as u64).seed())
+        });
         let mut successes = 0usize;
         let mut total_secs = 0f64;
-        let root = StatelessRng::new(cfg.seed ^ 0xD00D);
-        for run in 0..cfg.runs {
-            let r = solver.solve(
-                model,
-                Budget::sweeps(cfg.sweeps * mult),
-                root.child(run as u64).seed(),
-            );
+        for r in &trials {
             best_cut = best_cut.max(problem.cut_of_energy(r.best_energy));
             if r.best_energy <= target_energy {
                 successes += 1;

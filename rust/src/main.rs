@@ -201,6 +201,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 runs: args.get_parse_or("runs", if quick { 5 } else { 20 })?,
                 sweeps: args.get_parse_or("sweeps", if quick { 200 } else { 2000 })?,
                 seed,
+                // Serial trials by default: concurrent trials contend and
+                // inflate the measured t_a (see TtsConfig::workers).
+                workers: args.get_parse_or("workers", 1usize)?,
             };
             let (rows, best) = hx::table3(&cfg);
             print_table3(&rows, best, cfg.cut_threshold);

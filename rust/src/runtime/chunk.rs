@@ -16,10 +16,12 @@
 //!   inputs  = (J f32[N,N], s f32[N], u f64[N], energy f64[],
 //!              temps f64[C], seed u64[], step0 u64[])
 //!   outputs = (s f32[N], u f64[N], energy f64[], trace f64[C])
+//!
+//! [`ChunkRunner`] needs the PJRT bindings and is gated on the `xla`
+//! cargo feature (a stub that errors on construction is compiled
+//! otherwise); [`ChunkState`] is plain data and always available.
 
-use super::{lit, ArtifactSpec, Executable, Runtime};
 use crate::ising::{IsingModel, SpinVec};
-use anyhow::{Context, Result};
 
 /// Chain state ferried between Rust and the device.
 #[derive(Clone, Debug)]
@@ -40,97 +42,187 @@ impl ChunkState {
     }
 }
 
-/// Runs `anneal_chunk` artifacts with a resident coupling buffer.
-pub struct ChunkRunner {
-    exe: Executable,
-    /// Device-resident J (uploaded once).
-    j_buffer: xla::PjRtBuffer,
-    n: usize,
-    chunk: u64,
-    seed: u64,
-    rt_n: usize,
-}
+#[cfg(feature = "xla")]
+mod runner {
+    use super::super::{lit, ArtifactSpec, Executable, Runtime};
+    use super::ChunkState;
+    use crate::ising::IsingModel;
+    use anyhow::{Context, Result};
 
-impl ChunkRunner {
-    /// Compile the artifact and upload the (zero-padded) coupling matrix.
-    ///
-    /// The artifact size `spec.n` may exceed the model's N — the
-    /// coordinator's batcher pads instances up to the nearest artifact
-    /// (padding spins have zero couplings and frozen fields, so they
-    /// never win the roulette; see `python/compile/model.py`).
-    pub fn new(rt: &Runtime, spec: &ArtifactSpec, model: &IsingModel, seed: u64) -> Result<Self> {
-        anyhow::ensure!(spec.kind == "anneal_chunk", "artifact {} is not an anneal_chunk", spec.name);
-        anyhow::ensure!(spec.n >= model.len(), "artifact N {} < model N {}", spec.n, model.len());
-        let chunk = spec.chunk.context("anneal_chunk artifact missing chunk length")?;
-        let exe = rt.load_hlo_text(&spec.file)?;
-        let rt_n = spec.n;
-        let n = model.len();
-        // Row-major J as f32, zero-padded to rt_n × rt_n.
-        let mut jf = vec![0f32; rt_n * rt_n];
-        for i in 0..n {
-            let row = model.j_row(i);
-            for (k, &v) in row.iter().enumerate() {
-                jf[i * rt_n + k] = v as f32;
+    /// Runs `anneal_chunk` artifacts with a resident coupling buffer.
+    pub struct ChunkRunner {
+        exe: Executable,
+        /// Device-resident J (uploaded once).
+        j_buffer: xla::PjRtBuffer,
+        n: usize,
+        chunk: u64,
+        seed: u64,
+        rt_n: usize,
+    }
+
+    impl ChunkRunner {
+        /// Compile the artifact and upload the (zero-padded) coupling matrix.
+        ///
+        /// The artifact size `spec.n` may exceed the model's N — the
+        /// coordinator's batcher pads instances up to the nearest artifact
+        /// (padding spins have zero couplings and frozen fields, so they
+        /// never win the roulette; see `python/compile/model.py`).
+        pub fn new(
+            rt: &Runtime,
+            spec: &ArtifactSpec,
+            model: &IsingModel,
+            seed: u64,
+        ) -> Result<Self> {
+            anyhow::ensure!(
+                spec.kind == "anneal_chunk",
+                "artifact {} is not an anneal_chunk",
+                spec.name
+            );
+            anyhow::ensure!(
+                spec.n >= model.len(),
+                "artifact N {} < model N {}",
+                spec.n,
+                model.len()
+            );
+            let chunk = spec.chunk.context("anneal_chunk artifact missing chunk length")?;
+            let exe = rt.load_hlo_text(&spec.file)?;
+            let rt_n = spec.n;
+            let n = model.len();
+            // Row-major J as f32, zero-padded to rt_n × rt_n.
+            let mut jf = vec![0f32; rt_n * rt_n];
+            for i in 0..n {
+                let row = model.j_row(i);
+                for (k, &v) in row.iter().enumerate() {
+                    jf[i * rt_n + k] = v as f32;
+                }
             }
+            let j_lit = lit::f32_matrix(rt_n, rt_n, &jf)?;
+            let j_buffer = rt.upload(&j_lit)?;
+            Ok(Self { exe, j_buffer, n, chunk, seed, rt_n })
         }
-        let j_lit = lit::f32_matrix(rt_n, rt_n, &jf)?;
-        let j_buffer = rt.upload(&j_lit)?;
-        Ok(Self { exe, j_buffer, n, chunk, seed, rt_n })
-    }
 
-    /// Steps advanced per call.
-    pub fn chunk_len(&self) -> u64 {
-        self.chunk
-    }
+        /// Steps advanced per call.
+        pub fn chunk_len(&self) -> u64 {
+            self.chunk
+        }
 
-    /// Artifact (padded) size.
-    pub fn padded_n(&self) -> usize {
-        self.rt_n
-    }
+        /// Artifact (padded) size.
+        pub fn padded_n(&self) -> usize {
+            self.rt_n
+        }
 
-    /// Advance the chain by one chunk; `temps` must have exactly
-    /// `chunk_len()` entries. Returns the per-step energy trace.
-    pub fn run_chunk(&self, rt: &Runtime, state: &mut ChunkState, temps: &[f64]) -> Result<Vec<f64>> {
-        anyhow::ensure!(temps.len() as u64 == self.chunk, "need {} temps, got {}", self.chunk, temps.len());
-        // Pack state, padding tail spins to +1 with "infinitely" positive
-        // fields: ΔE = 2·s·u = huge > 0 ⇒ p_flip = 0 ⇒ never selected.
-        let mut s = vec![1f32; self.rt_n];
-        for i in 0..self.n {
-            s[i] = state.spins.get(i) as f32;
+        /// Advance the chain by one chunk; `temps` must have exactly
+        /// `chunk_len()` entries. Returns the per-step energy trace.
+        pub fn run_chunk(
+            &self,
+            rt: &Runtime,
+            state: &mut ChunkState,
+            temps: &[f64],
+        ) -> Result<Vec<f64>> {
+            anyhow::ensure!(
+                temps.len() as u64 == self.chunk,
+                "need {} temps, got {}",
+                self.chunk,
+                temps.len()
+            );
+            // Pack state, padding tail spins to +1 with "infinitely" positive
+            // fields: ΔE = 2·s·u = huge > 0 ⇒ p_flip = 0 ⇒ never selected.
+            let mut s = vec![1f32; self.rt_n];
+            for i in 0..self.n {
+                s[i] = state.spins.get(i) as f32;
+            }
+            let mut u = vec![1e12f64; self.rt_n];
+            u[..self.n].copy_from_slice(&state.u);
+            let args = [
+                // J is resident; the rest are uploaded per call (O(N)).
+                None,
+                Some(lit::f32_vec(&s)),
+                Some(xla::Literal::vec1(&u)),
+                Some(xla::Literal::scalar(state.energy)),
+                Some(xla::Literal::vec1(temps)),
+                Some(xla::Literal::scalar(self.seed)),
+                Some(xla::Literal::scalar(state.step)),
+            ];
+            let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len() - 1);
+            for a in args.iter().flatten() {
+                bufs.push(rt.upload(a)?);
+            }
+            let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+            all.push(&self.j_buffer);
+            for b in &bufs {
+                all.push(b);
+            }
+            let out = self.exe.run_b(&all)?;
+            anyhow::ensure!(out.len() == 4, "anneal_chunk returned {} outputs, want 4", out.len());
+            let s_new: Vec<f32> = out[0].to_vec().map_err(super::super::to_anyhow)?;
+            let u_new: Vec<f64> = out[1].to_vec().map_err(super::super::to_anyhow)?;
+            let e_new: f64 = out[2].get_first_element().map_err(super::super::to_anyhow)?;
+            let trace: Vec<f64> = out[3].to_vec().map_err(super::super::to_anyhow)?;
+            for i in 0..self.n {
+                state.spins.set(i, if s_new[i] >= 0.0 { 1 } else { -1 });
+            }
+            state.u.copy_from_slice(&u_new[..self.n]);
+            state.energy = e_new;
+            state.step += self.chunk;
+            Ok(trace)
         }
-        let mut u = vec![1e12f64; self.rt_n];
-        u[..self.n].copy_from_slice(&state.u);
-        let args = [
-            // J is resident; the rest are uploaded per call (O(N)).
-            None,
-            Some(lit::f32_vec(&s)),
-            Some(xla::Literal::vec1(&u)),
-            Some(xla::Literal::scalar(state.energy)),
-            Some(xla::Literal::vec1(temps)),
-            Some(xla::Literal::scalar(self.seed)),
-            Some(xla::Literal::scalar(state.step)),
-        ];
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len() - 1);
-        for a in args.iter().flatten() {
-            bufs.push(rt.upload(a)?);
-        }
-        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        all.push(&self.j_buffer);
-        for b in &bufs {
-            all.push(b);
-        }
-        let out = self.exe.run_b(&all)?;
-        anyhow::ensure!(out.len() == 4, "anneal_chunk returned {} outputs, want 4", out.len());
-        let s_new: Vec<f32> = out[0].to_vec().map_err(super::to_anyhow)?;
-        let u_new: Vec<f64> = out[1].to_vec().map_err(super::to_anyhow)?;
-        let e_new: f64 = out[2].get_first_element().map_err(super::to_anyhow)?;
-        let trace: Vec<f64> = out[3].to_vec().map_err(super::to_anyhow)?;
-        for i in 0..self.n {
-            state.spins.set(i, if s_new[i] >= 0.0 { 1 } else { -1 });
-        }
-        state.u.copy_from_slice(&u_new[..self.n]);
-        state.energy = e_new;
-        state.step += self.chunk;
-        Ok(trace)
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod runner {
+    use super::super::{ArtifactSpec, Runtime};
+    use super::ChunkState;
+    use crate::ising::IsingModel;
+    use anyhow::Result;
+
+    /// Stub chunk runner (the `xla` cargo feature is off). [`new`] always
+    /// errors, so no instance can exist; the remaining methods keep the
+    /// call sites type-checking.
+    ///
+    /// [`new`]: ChunkRunner::new
+    pub struct ChunkRunner {
+        _unconstructable: (),
+    }
+
+    impl ChunkRunner {
+        /// Always fails: the PJRT backend was not compiled in.
+        pub fn new(
+            _rt: &Runtime,
+            spec: &ArtifactSpec,
+            _model: &IsingModel,
+            _seed: u64,
+        ) -> Result<Self> {
+            anyhow::bail!(
+                "cannot execute artifact {}: XLA backend not built (rebuild with \
+                 the `xla` feature + dependency; see rust/Cargo.toml [features])",
+                spec.name
+            )
+        }
+
+        /// Steps advanced per call (unreachable: no stub runner exists).
+        pub fn chunk_len(&self) -> u64 {
+            0
+        }
+
+        /// Artifact (padded) size (unreachable: no stub runner exists).
+        pub fn padded_n(&self) -> usize {
+            0
+        }
+
+        /// Always fails: the PJRT backend was not compiled in.
+        pub fn run_chunk(
+            &self,
+            _rt: &Runtime,
+            _state: &mut ChunkState,
+            _temps: &[f64],
+        ) -> Result<Vec<f64>> {
+            anyhow::bail!(
+                "XLA backend not built (rebuild with the `xla` feature + dependency; \
+                 see rust/Cargo.toml [features])"
+            )
+        }
+    }
+}
+
+pub use runner::ChunkRunner;

@@ -8,6 +8,15 @@
 //! This module loads that text with `HloModuleProto::from_text_file`,
 //! compiles it on the PJRT CPU client once, and executes it with either
 //! host literals or resident device buffers.
+//!
+//! The PJRT bindings (`xla` crate) are **not** vendored in the offline
+//! build environment, so the whole backend sits behind the `xla` cargo
+//! feature. With the feature off (the default), [`Runtime`] and
+//! [`chunk::ChunkRunner`] are compiled as stubs whose constructors
+//! return descriptive errors; artifact-manifest parsing and the
+//! [`chunk::ChunkState`] plumbing stay available so every caller
+//! (CLI `info`, the `k2000_tts` example, `microbench`) compiles and
+//! degrades gracefully.
 
 pub mod artifacts;
 pub mod chunk;
@@ -15,110 +24,150 @@ pub mod chunk;
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
 pub use chunk::ChunkRunner;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod backend {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A PJRT client plus the executables loaded on it.
-pub struct Runtime {
-    client: xla::PjRtClient,
+    /// A PJRT client plus the executables loaded on it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client (the only backend in this environment;
+        /// on a TPU host the same artifacts compile via `PjRtClient::tpu`).
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+            Ok(Self { client })
+        }
+
+        /// Platform string, e.g. `"cpu"`.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// The underlying client.
+        pub fn client(&self) -> &xla::PjRtClient {
+            &self.client
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path is not UTF-8")?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+            Ok(Executable { exe, name: path.display().to_string() })
+        }
+
+        /// Upload a literal as a resident device buffer (used to keep the
+        /// coupling matrix on device across chunk calls).
+        pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+            self.client.buffer_from_host_literal(None, lit).map_err(to_anyhow)
+        }
+    }
+
+    /// A compiled artifact.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
+    }
+
+    impl Executable {
+        /// Execute with host literals; returns the flattened tuple elements
+        /// (artifacts are lowered with `return_tuple=True`).
+        pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let out = self.exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
+            self.unpack(out)
+        }
+
+        /// Execute with resident device buffers.
+        pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+            let out = self.exe.execute_b(args).map_err(to_anyhow)?;
+            self.unpack(out)
+        }
+
+        fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+            let first = out
+                .first()
+                .and_then(|r| r.first())
+                .with_context(|| format!("{}: empty execution result", self.name))?;
+            let lit = first.to_literal_sync().map_err(to_anyhow)?;
+            lit.to_tuple().map_err(to_anyhow)
+        }
+
+        /// Artifact name (for diagnostics).
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+    }
+
+    /// Convert `xla::Error` (non-std error type) into `anyhow::Error`.
+    pub(crate) fn to_anyhow(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("{e:?}")
+    }
+
+    /// Helpers for building literals from engine-side state.
+    pub mod lit {
+        use anyhow::Result;
+
+        /// f32 matrix literal from row-major data.
+        pub fn f32_matrix(rows: usize, cols: usize, data: &[f32]) -> Result<xla::Literal> {
+            assert_eq!(data.len(), rows * cols);
+            xla::Literal::vec1(data)
+                .reshape(&[rows as i64, cols as i64])
+                .map_err(super::to_anyhow)
+        }
+
+        /// f32 vector literal.
+        pub fn f32_vec(data: &[f32]) -> xla::Literal {
+            xla::Literal::vec1(data)
+        }
+
+        /// u32 vector literal.
+        pub fn u32_vec(data: &[u32]) -> xla::Literal {
+            xla::Literal::vec1(data)
+        }
+    }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client (the only backend in this environment;
-    /// on a TPU host the same artifacts compile via `PjRtClient::tpu`).
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        Ok(Self { client })
-    }
+#[cfg(feature = "xla")]
+pub use backend::{lit, Executable, Runtime};
+#[cfg(feature = "xla")]
+pub(crate) use backend::to_anyhow;
 
-    /// Platform string, e.g. `"cpu"`.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// The underlying client.
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path is not UTF-8")?,
-        )
-        .map_err(to_anyhow)
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-        Ok(Executable { exe, name: path.display().to_string() })
-    }
-
-    /// Upload a literal as a resident device buffer (used to keep the
-    /// coupling matrix on device across chunk calls).
-    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client.buffer_from_host_literal(None, lit).map_err(to_anyhow)
-    }
-}
-
-/// A compiled artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-impl Executable {
-    /// Execute with host literals; returns the flattened tuple elements
-    /// (artifacts are lowered with `return_tuple=True`).
-    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let out = self.exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
-        self.unpack(out)
-    }
-
-    /// Execute with resident device buffers.
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let out = self.exe.execute_b(args).map_err(to_anyhow)?;
-        self.unpack(out)
-    }
-
-    fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
-        let first = out
-            .first()
-            .and_then(|r| r.first())
-            .with_context(|| format!("{}: empty execution result", self.name))?;
-        let lit = first.to_literal_sync().map_err(to_anyhow)?;
-        lit.to_tuple().map_err(to_anyhow)
-    }
-
-    /// Artifact name (for diagnostics).
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-}
-
-/// Convert `xla::Error` (non-std error type) into `anyhow::Error`.
-pub(crate) fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("{e:?}")
-}
-
-/// Helpers for building literals from engine-side state.
-pub mod lit {
+#[cfg(not(feature = "xla"))]
+mod backend {
     use anyhow::Result;
 
-    /// f32 matrix literal from row-major data.
-    pub fn f32_matrix(rows: usize, cols: usize, data: &[f32]) -> Result<xla::Literal> {
-        assert_eq!(data.len(), rows * cols);
-        xla::Literal::vec1(data)
-            .reshape(&[rows as i64, cols as i64])
-            .map_err(super::to_anyhow)
+    /// Stub PJRT runtime (the `xla` cargo feature is off). [`Runtime::cpu`]
+    /// always errors, so no instance can exist; the remaining methods keep
+    /// the call sites type-checking.
+    pub struct Runtime {
+        _unconstructable: (),
     }
 
-    /// f32 vector literal.
-    pub fn f32_vec(data: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(data)
-    }
+    impl Runtime {
+        /// Always fails: the PJRT backend was not compiled in.
+        pub fn cpu() -> Result<Self> {
+            anyhow::bail!(
+                "XLA backend not built: rebuild with the `xla` cargo feature AND \
+                 the external PJRT `xla` crate added as a dependency (it is not \
+                 declared in Cargo.toml so offline builds never try to resolve it \
+                 — see the [features] note in rust/Cargo.toml)"
+            )
+        }
 
-    /// u32 vector literal.
-    pub fn u32_vec(data: &[u32]) -> xla::Literal {
-        xla::Literal::vec1(data)
+        /// Platform string (unreachable: no stub `Runtime` can be built).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use backend::Runtime;

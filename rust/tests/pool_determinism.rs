@@ -1,0 +1,125 @@
+//! Determinism and correctness of the parallel replica layer.
+//!
+//! The stateless RNG makes every replica stream a pure function of
+//! `child(index)`, so fanning replicas over the [`ReplicaPool`] must be
+//! **bit-identical** to serial execution — these tests pin that contract
+//! at the three places that use the pool: `ParallelTempering`, the
+//! coordinator's `ReplicaScheduler`, and concurrent `Coordinator` job
+//! submission.
+//!
+//! [`ReplicaPool`]: snowball::engine::ReplicaPool
+
+use snowball::coordinator::{Backend, Coordinator, JobSpec, ReplicaScheduler};
+use snowball::engine::{Mode, ParallelTempering, ReplicaPool, Schedule};
+use snowball::graph::generators;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+use std::sync::Arc;
+
+/// The tentpole determinism guarantee: `ParallelTempering::run` with one
+/// worker and with many workers produces identical `best_energy`,
+/// `best_spins` and `swap_rates` for the same seed.
+#[test]
+fn tempering_is_bit_identical_across_worker_counts() {
+    let rng = StatelessRng::new(17);
+    let g = generators::erdos_renyi(96, 600, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+        let run = |workers: usize| {
+            ParallelTempering::geometric(6, 6.0, 0.3, mode)
+                .with_workers(workers)
+                .run(p.model(), 20_000, 11)
+        };
+        let serial = run(1);
+        let wide = run(8);
+        assert_eq!(serial.best_energy, wide.best_energy, "{mode:?}: best energy diverged");
+        assert_eq!(serial.best_spins, wide.best_spins, "{mode:?}: best spins diverged");
+        assert_eq!(serial.swap_rates, wide.swap_rates, "{mode:?}: swap rates diverged");
+        assert_eq!(serial.steps, wide.steps);
+        // And the result is self-consistent against the dense oracle.
+        assert_eq!(serial.best_energy, p.model().energy(&serial.best_spins));
+    }
+}
+
+/// Reusing one pool across runs (the coordinator's pattern, via
+/// `run_on`) changes nothing either.
+#[test]
+fn tempering_run_on_shared_pool_matches_fresh_pool() {
+    let rng = StatelessRng::new(23);
+    let g = generators::erdos_renyi(48, 220, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let pt = ParallelTempering::geometric(4, 5.0, 0.4, Mode::RouletteWheel);
+    let fresh = pt.run(p.model(), 8_000, 5);
+    let pool = ReplicaPool::new(3);
+    let shared_a = pt.run_on(&pool, p.model(), 8_000, 5);
+    let shared_b = pt.run_on(&pool, p.model(), 8_000, 5);
+    assert_eq!(fresh.best_energy, shared_a.best_energy);
+    assert_eq!(shared_a.best_energy, shared_b.best_energy);
+    assert_eq!(shared_a.best_spins, shared_b.best_spins);
+    assert_eq!(fresh.swap_rates, shared_a.swap_rates);
+}
+
+fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
+    let rng = StatelessRng::new(seed);
+    let p = MaxCut::new(generators::erdos_renyi(40, 160, &[-1, 1], &rng));
+    JobSpec {
+        model: Arc::new(p.model().clone()),
+        label: label.into(),
+        mode: Mode::RouletteWheel,
+        schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
+        steps: 1_500,
+        replicas,
+        seed,
+        target_energy: None,
+        backend: Backend::Native,
+    }
+}
+
+/// Concurrent submission from many client threads: every job's result
+/// must equal a serial single-worker reference run of the same spec —
+/// i.e. the pool + queue layer routes nothing to the wrong job and
+/// perturbs no replica stream.
+#[test]
+fn concurrent_jobs_match_serial_reference_results() {
+    let coord = Coordinator::start(4);
+    let mut handles = Vec::new();
+    for k in 0..6u64 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let label = format!("job-{k}");
+            let spec = job(&label, 100 + k, 4);
+            let id = coord.submit(spec);
+            let result = coord.wait(id).expect("job must finish");
+            (k, id, result)
+        }));
+    }
+    let serial = ReplicaScheduler::new(1);
+    for h in handles {
+        let (k, id, result) = h.join().unwrap();
+        assert_eq!(result.job_id, id);
+        assert_eq!(result.label, format!("job-{k}"));
+        assert_eq!(result.replicas.len(), 4);
+        // Reference: the same spec executed serially.
+        let expect = serial.run_native(&job(&format!("job-{k}"), 100 + k, 4));
+        let got: Vec<(u32, i64, u64)> =
+            result.replicas.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect();
+        let want: Vec<(u32, i64, u64)> =
+            expect.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect();
+        assert_eq!(got, want, "job {k}: parallel results diverged from serial reference");
+    }
+    coord.shutdown();
+}
+
+/// The scheduler's result ordering and seeds are index-keyed, so worker
+/// count is invisible even at awkward replica/worker ratios.
+#[test]
+fn scheduler_worker_sweep_is_invariant() {
+    let spec = job("sweep", 77, 9);
+    let reference: Vec<i64> =
+        ReplicaScheduler::new(1).run_native(&spec).iter().map(|r| r.best_energy).collect();
+    for workers in [2usize, 3, 8, 16] {
+        let got: Vec<i64> =
+            ReplicaScheduler::new(workers).run_native(&spec).iter().map(|r| r.best_energy).collect();
+        assert_eq!(got, reference, "{workers} workers diverged");
+    }
+}

@@ -6,7 +6,10 @@
 //!
 //! Requires `make artifacts` to have produced `artifacts/manifest.txt`;
 //! the tests are skipped (with a notice) when artifacts are missing so
-//! `cargo test` stays green on a fresh checkout.
+//! `cargo test` stays green on a fresh checkout. The whole file is
+//! compiled only with the `xla` cargo feature (PJRT bindings).
+
+#![cfg(feature = "xla")]
 
 use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
 use snowball::graph::generators;
