@@ -7,6 +7,7 @@
 
 use snowball::baselines::{table2_lineup, Budget};
 use snowball::cli::Args;
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::graph::gset::{self, GsetId};
 use snowball::harness as hx;
 use snowball::problems::MaxCut;
@@ -40,6 +41,51 @@ fn main() {
             "Fig 12: runtime per solver",
             &["instance", "solver", "total ms", "ns/attempt", "cut"],
             &rows
+        )
+    );
+
+    // Addendum (PR 2): RWA selection-path runtime on the same Gset
+    // instances — legacy Θ(N) scan vs Fenwick Θ(deg + log N), identical
+    // results asserted, so the table isolates pure selection cost.
+    let sel_steps: u64 = if quick { 20_000 } else { 100_000 };
+    let mut sel_rows = Vec::new();
+    for id in &instances {
+        let g = gset::load_or_synthesize(*id, None, seed);
+        let p = MaxCut::new(g);
+        let mut cuts = Vec::new();
+        let mut times = Vec::new();
+        for selector in [SelectorKind::LinearScan, SelectorKind::Fenwick] {
+            let cfg = EngineConfig {
+                mode: Mode::RouletteWheel,
+                datapath: Datapath::Dense,
+                selector,
+                schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 }.quantized(64),
+                steps: sel_steps,
+                seed,
+                planes: None,
+                trace_stride: 0,
+            };
+            let mut e = SnowballEngine::new(p.model(), cfg);
+            let start = std::time::Instant::now();
+            let r = e.run();
+            times.push(start.elapsed().as_secs_f64());
+            cuts.push(p.cut_of_energy(r.best_energy));
+        }
+        assert_eq!(cuts[0], cuts[1], "{}: selector paths diverged", id.name());
+        sel_rows.push(vec![
+            id.name().to_string(),
+            hx::fmt_ms(times[0]),
+            hx::fmt_ms(times[1]),
+            format!("{:.1}x", times[0] / times[1]),
+            cuts[0].to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        hx::render_table(
+            "Fig 12 addendum: RWA selection path (staged geometric, 64 plateaus)",
+            &["instance", "scan", "fenwick", "speedup", "cut"],
+            &sel_rows
         )
     );
 }

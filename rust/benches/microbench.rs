@@ -1,24 +1,50 @@
 //! §Perf microbenchmarks: per-step cost of the engine hot paths across
-//! instance sizes and datapaths, plus the XLA chunk throughput when
-//! artifacts are available. These are the numbers EXPERIMENTS.md §Perf
-//! tracks before/after optimization.
+//! instance sizes, datapaths and Mode II selectors, plus the XLA chunk
+//! throughput when artifacts are available. These are the numbers
+//! EXPERIMENTS.md §Perf tracks before/after optimization.
 //!
-//!     cargo bench --bench microbench -- [--quick]
+//! Besides the printed tables, the run writes `BENCH_engine.json`
+//! (steps/sec per configuration plus the Fenwick-vs-scan comparison) so
+//! the perf trajectory is machine-readable across PRs.
+//!
+//!     cargo bench --bench microbench -- [--quick|--smoke]
 
 use snowball::cli::Args;
-use snowball::engine::{Datapath, EngineConfig, Mode, ReplicaPool, Schedule, SnowballEngine};
+use snowball::engine::{
+    Datapath, EngineConfig, Mode, ReplicaPool, Schedule, SelectorKind, SnowballEngine,
+};
 use snowball::graph::generators;
 use snowball::harness as hx;
 use snowball::problems::MaxCut;
 use snowball::rng::StatelessRng;
 
-fn bench_engine(n: usize, mode: Mode, dp: Datapath, steps: u64) -> (f64, f64) {
-    let rng = StatelessRng::new(1);
-    let g = generators::complete(n, &[-1, 1], &rng);
-    let p = MaxCut::new(g);
+/// One measured engine configuration, serialized into the JSON report.
+struct BenchRow {
+    n: usize,
+    mode: &'static str,
+    datapath: &'static str,
+    selector: &'static str,
+    ns_per_step: f64,
+    steps_per_sec: f64,
+    flip_rate: f64,
+}
+
+impl BenchRow {
+    fn json(&self) -> String {
+        format!(
+            "{{\"n\":{},\"mode\":\"{}\",\"datapath\":\"{}\",\"selector\":\"{}\",\
+             \"ns_per_step\":{:.1},\"steps_per_sec\":{:.1},\"flip_rate\":{:.4}}}",
+            self.n, self.mode, self.datapath, self.selector, self.ns_per_step,
+            self.steps_per_sec, self.flip_rate
+        )
+    }
+}
+
+fn run_engine(p: &MaxCut, mode: Mode, dp: Datapath, sel: SelectorKind, steps: u64) -> (f64, f64) {
     let cfg = EngineConfig {
         mode,
         datapath: dp,
+        selector: sel,
         schedule: Schedule::Constant(1.0),
         steps,
         seed: 3,
@@ -32,20 +58,75 @@ fn bench_engine(n: usize, mode: Mode, dp: Datapath, steps: u64) -> (f64, f64) {
     (total * 1e9 / steps as f64, r.flips as f64 / steps as f64)
 }
 
+fn bench_engine(n: usize, mode: Mode, dp: Datapath, sel: SelectorKind, steps: u64) -> (f64, f64) {
+    let rng = StatelessRng::new(1);
+    let g = generators::complete(n, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    run_engine(&p, mode, dp, sel, steps)
+}
+
+/// The headline comparison the PR-2 acceptance tracks: Mode II on a
+/// sparse N-spin instance, legacy Θ(N) scan vs Fenwick Θ(deg + log N),
+/// measured in the same process on the same instance — with a parity
+/// assert so the speedup can never come from diverging work.
+fn bench_fenwick_vs_scan(n: usize, edges: usize, steps: u64) -> (f64, f64) {
+    let rng = StatelessRng::new(7);
+    let g = generators::erdos_renyi(n, edges, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let mut results = Vec::new();
+    let mut rates = Vec::new();
+    for sel in [SelectorKind::LinearScan, SelectorKind::Fenwick] {
+        let cfg = EngineConfig {
+            mode: Mode::RouletteWheel,
+            datapath: Datapath::Dense,
+            selector: sel,
+            schedule: Schedule::Constant(1.0),
+            steps,
+            seed: 11,
+            planes: None,
+            trace_stride: 0,
+        };
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let start = std::time::Instant::now();
+        let r = e.run();
+        let secs = start.elapsed().as_secs_f64();
+        results.push((r.best_energy, r.final_energy, r.flips, r.fallbacks, r.nulls));
+        rates.push(steps as f64 / secs);
+    }
+    assert_eq!(results[0], results[1], "selector paths diverged — benchmark void");
+    (rates[0], rates[1])
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
-    let quick = args.flag("quick");
-    let sizes: Vec<usize> = if quick { vec![256, 1024] } else { vec![256, 512, 1024, 2000] };
-    let steps: u64 = if quick { 5_000 } else { 20_000 };
+    let smoke = args.flag("smoke");
+    let quick = args.flag("quick") || smoke;
+    let sizes: Vec<usize> = if smoke {
+        vec![256]
+    } else if quick {
+        vec![256, 1024]
+    } else {
+        vec![256, 512, 1024, 2000]
+    };
+    let steps: u64 = if smoke { 2_000 } else if quick { 5_000 } else { 20_000 };
+    let profile = if smoke {
+        "smoke"
+    } else if quick {
+        "quick"
+    } else {
+        "full"
+    };
 
+    let mut json_rows: Vec<BenchRow> = Vec::new();
     let mut rows = Vec::new();
     for &n in &sizes {
-        for (mode, dp, label) in [
-            (Mode::RandomScan, Datapath::Dense, "RSA/dense"),
-            (Mode::RouletteWheel, Datapath::Dense, "RWA/dense"),
-            (Mode::RouletteWheel, Datapath::BitPlane, "RWA/bitplane"),
+        for (mode, dp, sel, label) in [
+            (Mode::RandomScan, Datapath::Dense, SelectorKind::Fenwick, "RSA/dense"),
+            (Mode::RouletteWheel, Datapath::Dense, SelectorKind::LinearScan, "RWA/dense/scan"),
+            (Mode::RouletteWheel, Datapath::Dense, SelectorKind::Fenwick, "RWA/dense/fenwick"),
+            (Mode::RouletteWheel, Datapath::BitPlane, SelectorKind::Fenwick, "RWA/bitplane"),
         ] {
-            let (ns, flip_rate) = bench_engine(n, mode, dp, steps);
+            let (ns, flip_rate) = bench_engine(n, mode, dp, sel, steps);
             rows.push(vec![
                 n.to_string(),
                 label.to_string(),
@@ -53,25 +134,45 @@ fn main() {
                 format!("{:.0}", ns / n as f64 * 1000.0),
                 format!("{flip_rate:.2}"),
             ]);
+            json_rows.push(BenchRow {
+                n,
+                mode: mode.name(),
+                datapath: if dp == Datapath::Dense { "dense" } else { "bitplane" },
+                selector: sel.name(),
+                ns_per_step: ns,
+                steps_per_sec: 1e9 / ns,
+                flip_rate,
+            });
         }
     }
     print!(
         "{}",
         hx::render_table(
             "engine hot path (complete ±1 graphs)",
-            &["N", "mode/datapath", "ns/step", "ps/spin-step", "flip rate"],
+            &["N", "mode/datapath/selector", "ns/step", "ps/spin-step", "flip rate"],
             &rows
         )
+    );
+
+    // Fenwick vs scan on the sparse RWA workload the tentpole targets:
+    // N = 4096 with average degree 8, constant-temperature plateau.
+    let (fn_n, fn_edges) = (4096usize, 16_384usize);
+    let fn_steps: u64 = if quick { 5_000 } else { 20_000 };
+    let (scan_sps, fenwick_sps) = bench_fenwick_vs_scan(fn_n, fn_edges, fn_steps);
+    let speedup = fenwick_sps / scan_sps;
+    println!(
+        "\nfenwick vs scan: N={fn_n} sparse (|E|={fn_edges}) RWA x {fn_steps} steps | \
+         scan {scan_sps:.0} steps/s | fenwick {fenwick_sps:.0} steps/s | {speedup:.1}x"
     );
 
     // Replica-pool scaling: R independent replicas through the shared
     // ReplicaPool, serial vs one-worker-per-core. Asserts the pool's
     // determinism contract (identical best energies) while measuring the
-    // wall-clock speedup — the repo's first recorded multi-core point.
-    {
+    // wall-clock speedup.
+    let pool_line = {
         let n = if quick { 512 } else { 1024 };
         let replicas = 8usize;
-        let pool_steps: u64 = if quick { 2_000 } else { 10_000 };
+        let pool_steps: u64 = if smoke { 1_000 } else if quick { 2_000 } else { 10_000 };
         let rng = StatelessRng::new(11);
         let g = generators::complete(n, &[-1, 1], &rng);
         let p = MaxCut::new(g);
@@ -83,6 +184,7 @@ fn main() {
                 let cfg = EngineConfig {
                     mode: Mode::RouletteWheel,
                     datapath: Datapath::Dense,
+                    selector: SelectorKind::Fenwick,
                     schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
                     steps: pool_steps,
                     seed: root.child(i as u64).seed(),
@@ -96,13 +198,35 @@ fn main() {
         let (t_serial, _, serial) = run_with(1);
         let (t_wide, cores, wide) = run_with(0);
         assert_eq!(serial, wide, "replica pool must be deterministic across worker counts");
-        println!(
-            "\nreplica pool: {replicas} replicas x {pool_steps} RWA steps (N={n}) | \
+        let line = format!(
+            "replica pool: {replicas} replicas x {pool_steps} RWA steps (N={n}) | \
              1 worker {:.1} ms | {cores} workers {:.1} ms | {:.2}x speedup",
             t_serial * 1e3,
             t_wide * 1e3,
             t_serial / t_wide
         );
+        println!("\n{line}");
+        format!(
+            "{{\"replicas\":{replicas},\"steps\":{pool_steps},\"n\":{n},\
+             \"serial_ms\":{:.3},\"parallel_ms\":{:.3},\"workers\":{cores}}}",
+            t_serial * 1e3,
+            t_wide * 1e3
+        )
+    };
+
+    // Machine-readable report for cross-PR tracking.
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.engine/v1\",\n  \"profile\": \"{profile}\",\n  \
+         \"rows\": [\n    {}\n  ],\n  \"fenwick_vs_scan\": {{\"n\": {fn_n}, \"edges\": {fn_edges}, \
+         \"steps\": {fn_steps}, \"scan_steps_per_sec\": {scan_sps:.1}, \
+         \"fenwick_steps_per_sec\": {fenwick_sps:.1}, \"speedup\": {speedup:.2}}},\n  \
+         \"replica_pool\": {pool_line}\n}}\n",
+        json_rows.iter().map(|r| r.json()).collect::<Vec<_>>().join(",\n    ")
+    );
+    let path = "BENCH_engine.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 
     // XLA chunk throughput, if artifacts are present.

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example isca_grid
 
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::harness::{isca_pattern, render_grid};
 use snowball::problems::MaxCut;
 
@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = EngineConfig {
         mode: Mode::RouletteWheel,
         datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
         schedule: schedule.clone(),
         steps: 0, // stepped manually below
         seed: 2,

@@ -17,7 +17,7 @@
 
 use snowball::cli::Args;
 use snowball::coordinator::{Backend, Coordinator, JobSpec};
-use snowball::engine::{Mode, Schedule};
+use snowball::engine::{Mode, Schedule, SelectorKind};
 use snowball::graph::gset::{self, GsetId};
 use snowball::harness;
 use snowball::hwsim::{Geometry, HwModel};
@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
             model: Arc::new(model.clone()),
             label: format!("K2000-{}", mode.name()),
             mode,
+            selector: SelectorKind::Fenwick,
             schedule: schedule.clone(),
             steps,
             replicas,

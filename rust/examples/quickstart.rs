@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example quickstart
 
-use snowball::engine::{EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::graph::generators;
 use snowball::problems::{landscape, MaxCut};
 use snowball::rng::StatelessRng;
@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = EngineConfig {
             mode,
             datapath: snowball::engine::Datapath::Dense,
+            selector: SelectorKind::Fenwick,
             schedule: Schedule::Geometric { t0: 5.0, t1: 0.02 },
             steps: 20_000,
             seed: 1,

@@ -19,7 +19,7 @@ pub use sb::SimulatedBifurcation;
 pub use statica::Statica;
 pub use tabu::Tabu;
 
-use crate::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use crate::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use crate::ising::IsingModel;
 
 /// Snowball itself, wrapped in the common [`Solver`] interface so the
@@ -71,6 +71,7 @@ impl Solver for SnowballSolver {
         let cfg = EngineConfig {
             mode: self.mode,
             datapath: Datapath::Dense,
+            selector: SelectorKind::Fenwick,
             schedule: self.schedule.clone(),
             steps,
             seed,

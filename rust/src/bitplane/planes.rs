@@ -160,6 +160,22 @@ impl BitPlanes {
     /// `u_i ← u_i ∓ 2·2^b·s_j_old` at every set bit. Θ(B·W) words
     /// scanned, Θ(deg j) adds.
     pub fn incr_update(&self, u: &mut [i64], j: usize, s_j_old: i8) {
+        self.incr_update_touched(u, j, s_j_old, |_| {});
+    }
+
+    /// [`Self::incr_update`] that additionally reports every field index
+    /// it adjusted through `touched` — the delta feed of the engine's
+    /// incremental Mode II lane maintenance. A field spanning multiple
+    /// magnitude planes is reported once per plane; callers deduplicate
+    /// (the engine's dirty-lane stamp does). The closure is monomorphized
+    /// away, so the plain `incr_update` pays nothing for it.
+    pub fn incr_update_touched(
+        &self,
+        u: &mut [i64],
+        j: usize,
+        s_j_old: i8,
+        mut touched: impl FnMut(usize),
+    ) {
         debug_assert_eq!(u.len(), self.n);
         let s_old = s_j_old as i64;
         for plane in 0..self.b as usize {
@@ -170,14 +186,18 @@ impl BitPlanes {
                 let mut bits = self.col_pos[base + w];
                 while bits != 0 {
                     let t = bits.trailing_zeros() as usize;
-                    u[(w << 6) + t] -= delta;
+                    let i = (w << 6) + t;
+                    u[i] -= delta;
+                    touched(i);
                     bits &= bits - 1;
                 }
                 // Negative planes: u_i += 2·2^b·s_old (Eq. 20)
                 let mut bits = self.col_neg[base + w];
                 while bits != 0 {
                     let t = bits.trailing_zeros() as usize;
-                    u[(w << 6) + t] += delta;
+                    let i = (w << 6) + t;
+                    u[i] += delta;
+                    touched(i);
                     bits &= bits - 1;
                 }
             }
@@ -264,6 +284,29 @@ mod tests {
                 assert_eq!(u, bp.init_fields(&s), "drift after {} flips", t + 1);
             }
         }
+    }
+
+    /// The touched-field report must be exactly the neighbourhood of the
+    /// flipped spin: every `i` with `J_ij != 0`, nothing else.
+    #[test]
+    fn incr_update_reports_touched_neighbourhood() {
+        let m = random_model(90, 15, 12);
+        let bp = BitPlanes::encode(&m, None);
+        let rng = StatelessRng::new(13);
+        let mut s = SpinVec::random(90, &rng);
+        let mut u = bp.init_fields(&s);
+        for t in 0..50u64 {
+            let j = rng.below(14, t, salt::SITE, 90) as usize;
+            let s_old = s.flip(j);
+            let mut touched = std::collections::BTreeSet::new();
+            bp.incr_update_touched(&mut u, j, s_old, |i| {
+                touched.insert(i);
+            });
+            let expect: std::collections::BTreeSet<usize> =
+                (0..90).filter(|&i| m.j(i, j) != 0).collect();
+            assert_eq!(touched, expect, "flip {t} at spin {j}");
+        }
+        assert_eq!(u, bp.init_fields(&s), "fields must still track exactly");
     }
 
     #[test]

@@ -134,11 +134,16 @@ impl Config {
     }
 
     /// Build a JobSpec skeleton from a `[job]` section (instance name,
-    /// mode, schedule, steps, replicas, seed, target).
+    /// mode, selector, schedule, steps, replicas, seed, target).
     pub fn job(&self, seed_default: u64) -> Result<JobConfig> {
         Ok(JobConfig {
             instance: self.str_or("job", "instance", "G11"),
             mode: crate::engine::Mode::parse(&self.str_or("job", "mode", "rwa"))?,
+            selector: crate::engine::SelectorKind::parse(&self.str_or(
+                "job",
+                "selector",
+                "fenwick",
+            ))?,
             schedule: crate::engine::Schedule::parse(&self.str_or(
                 "job",
                 "schedule",
@@ -157,6 +162,7 @@ impl Config {
 pub struct JobConfig {
     pub instance: String,
     pub mode: crate::engine::Mode,
+    pub selector: crate::engine::SelectorKind,
     pub schedule: crate::engine::Schedule,
     pub steps: u64,
     pub replicas: u32,
@@ -215,6 +221,11 @@ tolerance = 0.25
         assert_eq!(j.replicas, 16);
         assert_eq!(j.target, Some(-65000));
         assert!(matches!(j.mode, crate::engine::Mode::RouletteWheel));
+        // Defaults to the Fenwick selection path; `selector = "scan"`
+        // switches to the legacy prefix scan.
+        assert!(matches!(j.selector, crate::engine::SelectorKind::Fenwick));
+        let c2 = Config::parse("[job]\nselector = \"scan\"\n").unwrap();
+        assert!(matches!(c2.job(1).unwrap().selector, crate::engine::SelectorKind::LinearScan));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Job specifications and results for the coordinator.
 
-use crate::engine::{Mode, Schedule};
+use crate::engine::{Mode, Schedule, SelectorKind};
 use crate::ising::IsingModel;
 use std::sync::Arc;
 
@@ -12,6 +12,8 @@ pub struct JobSpec {
     /// Human-readable instance label (e.g. "K2000").
     pub label: String,
     pub mode: Mode,
+    /// Mode II selection implementation (bit-identical either way).
+    pub selector: SelectorKind,
     pub schedule: Schedule,
     /// Engine steps per replica.
     pub steps: u64,

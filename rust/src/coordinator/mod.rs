@@ -26,6 +26,10 @@ struct Inner {
     queue: Mutex<VecDeque<(u64, JobSpec)>>,
     queue_cv: Condvar,
     states: Mutex<HashMap<u64, JobState>>,
+    /// Signalled (under the `states` lock) whenever a job reaches a
+    /// terminal state, so `wait` latency is bounded by scheduling, not a
+    /// poll interval.
+    state_cv: Condvar,
     results: Mutex<HashMap<u64, JobResult>>,
     next_id: Mutex<u64>,
     shutdown: Mutex<bool>,
@@ -47,6 +51,7 @@ impl Coordinator {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             states: Mutex::new(HashMap::new()),
+            state_cv: Condvar::new(),
             results: Mutex::new(HashMap::new()),
             next_id: Mutex::new(1),
             shutdown: Mutex::new(false),
@@ -87,13 +92,20 @@ impl Coordinator {
     }
 
     /// Block until the job finishes (or fails); returns its result.
+    /// Condvar-notified by the dispatcher on every terminal transition —
+    /// no poll loop, so wait latency is not quantized to a sleep
+    /// interval.
     pub fn wait(&self, id: u64) -> Option<JobResult> {
+        let mut states = self.inner.states.lock().unwrap();
         loop {
-            match self.state(id) {
+            match states.get(&id) {
                 None => return None,
-                Some(JobState::Done) => return self.result(id),
+                Some(JobState::Done) => {
+                    drop(states);
+                    return self.result(id);
+                }
                 Some(JobState::Failed(_)) => return None,
-                _ => std::thread::sleep(std::time::Duration::from_millis(2)),
+                Some(_) => states = self.inner.state_cv.wait(states).unwrap(),
             }
         }
     }
@@ -137,6 +149,7 @@ impl Coordinator {
             self.metrics.inc("jobs_done");
             self.inner.results.lock().unwrap().insert(id, result);
             self.inner.states.lock().unwrap().insert(id, JobState::Done);
+            self.inner.state_cv.notify_all();
         }
     }
 }
@@ -144,7 +157,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{Mode, Schedule};
+    use crate::engine::{Mode, Schedule, SelectorKind};
     use crate::graph::generators;
     use crate::problems::MaxCut;
     use crate::rng::StatelessRng;
@@ -156,6 +169,7 @@ mod tests {
             model: Arc::new(p.model().clone()),
             label: label.into(),
             mode: Mode::RouletteWheel,
+            selector: SelectorKind::Fenwick,
             schedule: Schedule::Geometric { t0: 5.0, t1: 0.05 },
             steps: 400,
             replicas: 4,
@@ -190,6 +204,24 @@ mod tests {
             r1.replicas.iter().map(|r| r.best_energy).collect::<Vec<_>>(),
             r2.replicas.iter().map(|r| r.best_energy).collect::<Vec<_>>(),
         );
+        c.shutdown();
+    }
+
+    /// Several threads blocked in `wait` on the same job must all be
+    /// woken by the terminal-state notification (no poll loop involved).
+    #[test]
+    fn concurrent_waiters_all_notified() {
+        let c = Coordinator::start(2);
+        let id = c.submit(spec("shared", 7));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || c.wait(id).map(|r| r.job_id))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), Some(id));
+        }
         c.shutdown();
     }
 

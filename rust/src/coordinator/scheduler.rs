@@ -42,6 +42,7 @@ impl ReplicaScheduler {
             let cfg = EngineConfig {
                 mode: spec.mode,
                 datapath: Datapath::Dense,
+                selector: spec.selector,
                 schedule: spec.schedule.clone(),
                 steps: spec.steps,
                 seed: root.child(r as u64).seed(),
@@ -64,7 +65,7 @@ impl ReplicaScheduler {
 mod tests {
     use super::*;
     use crate::coordinator::job::Backend;
-    use crate::engine::{Mode, Schedule};
+    use crate::engine::{Mode, Schedule, SelectorKind};
     use crate::graph::generators;
     use crate::problems::MaxCut;
     use std::sync::Arc;
@@ -76,6 +77,7 @@ mod tests {
             model: Arc::new(p.model().clone()),
             label: "test".into(),
             mode: Mode::RouletteWheel,
+            selector: SelectorKind::Fenwick,
             schedule: Schedule::Geometric { t0: 5.0, t1: 0.05 },
             steps: 800,
             replicas,

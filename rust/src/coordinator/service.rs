@@ -7,10 +7,14 @@
 //! PING
 //!   -> PONG
 //! SOLVE instance=<G6|...|K2000|er:<n>:<m>> mode=<rsa|rwa> steps=<u64>
-//!       replicas=<u32> seed=<u64> [target=<i64>] [schedule=<kind:t0:t1>]
+//!       replicas=<u32> seed=<u64> [target=<i64>] [schedule=<kind:t0:t1[:stages]>]
+//!       [selector=<scan|fenwick>]
 //!   -> JOB id=<u64>
 //! STATUS id=<u64>
 //!   -> STATE id=<u64> state=<queued|running|done|failed>
+//! WAIT id=<u64>
+//!   -> STATE id=<u64> state=<done|failed>   (blocks until terminal;
+//!      condvar-notified, so no client-side STATUS poll loop is needed)
 //! RESULT id=<u64>
 //!   -> RESULT id=<u64> label=.. best=<i64> replicas=<n> pa=<f> ta_ms=<f> tts99_ms=<f|inf>
 //! METRICS
@@ -23,7 +27,7 @@
 //! on the coordinator pool, so slow jobs never block the listener.
 
 use super::{Backend, Coordinator, JobSpec, JobState};
-use crate::engine::{Mode, Schedule};
+use crate::engine::{Mode, Schedule, SelectorKind};
 use crate::graph::{generators, gset};
 use crate::rng::StatelessRng;
 use anyhow::{Context, Result};
@@ -112,6 +116,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
         "SOLVE" => {
             let instance = kv.get("instance").context("missing instance=")?;
             let mode = Mode::parse(kv.get("mode").copied().unwrap_or("rwa"))?;
+            let selector = SelectorKind::parse(kv.get("selector").copied().unwrap_or("fenwick"))?;
             let steps: u64 = kv.get("steps").copied().unwrap_or("100000").parse()?;
             let replicas: u32 = kv.get("replicas").copied().unwrap_or("8").parse()?;
             let seed: u64 = kv.get("seed").copied().unwrap_or("1").parse()?;
@@ -125,6 +130,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 model: Arc::new(model),
                 label,
                 mode,
+                selector,
                 schedule,
                 steps,
                 replicas,
@@ -144,6 +150,18 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 Some(JobState::Failed(_)) => "failed",
             };
             Ok(Reply::Line(format!("STATE id={id} state={state}")))
+        }
+        "WAIT" => {
+            // Blocking is fine: the service runs one thread per
+            // connection and compute happens on the coordinator pool.
+            let id: u64 = kv.get("id").context("missing id=")?.parse()?;
+            match coord.wait(id) {
+                Some(_) => Ok(Reply::Line(format!("STATE id={id} state=done"))),
+                None => match coord.state(id) {
+                    None => anyhow::bail!("unknown job {id}"),
+                    _ => Ok(Reply::Line(format!("STATE id={id} state=failed"))),
+                },
+            }
         }
         "RESULT" => {
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
@@ -224,16 +242,12 @@ mod tests {
         r.read_line(&mut line).unwrap();
         assert!(line.starts_with("JOB id="), "{line}");
         let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
-        // Poll until done, then fetch the result on the same connection.
-        loop {
-            writeln!(s, "STATUS id={id}").unwrap();
-            line.clear();
-            r.read_line(&mut line).unwrap();
-            if line.contains("state=done") {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
-        }
+        // Block on the condvar-backed WAIT (no STATUS poll loop), then
+        // fetch the result on the same connection.
+        writeln!(s, "WAIT id={id}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
         writeln!(s, "RESULT id={id}").unwrap();
         line.clear();
         r.read_line(&mut line).unwrap();
@@ -246,7 +260,9 @@ mod tests {
         let addr = start();
         assert!(roundtrip(addr, "BOGUS").starts_with("ERR"));
         assert!(roundtrip(addr, "STATUS id=42").starts_with("ERR"));
+        assert!(roundtrip(addr, "WAIT id=42").starts_with("ERR"));
         assert!(roundtrip(addr, "SOLVE instance=nope").starts_with("ERR"));
+        assert!(roundtrip(addr, "SOLVE instance=er:8:10 selector=bogus").starts_with("ERR"));
     }
 
     #[test]

@@ -20,6 +20,27 @@ pub fn glauber_exact(z: f64) -> f64 {
     1.0 / (1.0 + z.exp())
 }
 
+/// Per-temperature context for bulk/incremental lane evaluation: the
+/// hoisted reciprocal temperature plus the integer-domain saturation
+/// window and endpoint values. Build once per plateau via
+/// [`PwlLogistic::lane_ctx`]; consumed by [`PwlLogistic::eval_lanes`]
+/// (full refresh) and [`PwlLogistic::lane_p`] (single-lane refresh).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneCtx {
+    /// The temperature the context was built for.
+    pub temp: f64,
+    /// `1/temp` (0 when `temp <= 0`; that path never multiplies).
+    pub inv_t: f64,
+    /// ΔE at or above which the output is exactly `p_tail`.
+    pub de_hi: i64,
+    /// ΔE at or below which the output is exactly `p_head`.
+    pub de_lo: i64,
+    /// Saturated head value (`eval(−∞)` ≈ 1 in Q16).
+    pub p_head: u32,
+    /// Saturated tail value (`eval(+∞)` ≈ 0 in Q16).
+    pub p_tail: u32,
+}
+
 /// Piecewise-linear logistic table.
 ///
 /// `segments` uniform pieces over `z ∈ [−z_max, z_max]`; outside the
@@ -175,6 +196,189 @@ impl PwlLogistic {
         self.eval_q16(z) as f64 / ONE_Q16 as f64
     }
 
+    /// Build the per-temperature lane-evaluation context: hoisted
+    /// reciprocal plus the integer saturation window. `de_hi`/`de_lo` are
+    /// the |ΔE| bounds beyond which the lerp equals the endpoint exactly
+    /// (+1 slack absorbs reciprocal rounding; an over-estimate only sends
+    /// a lane down the slow path, never to a wrong value), so the
+    /// classification below is bit-identical to full evaluation.
+    pub fn lane_ctx(&self, temp: f64) -> LaneCtx {
+        let (p_head, p_tail) = self.sat_values();
+        if temp > 0.0 {
+            LaneCtx {
+                temp,
+                inv_t: 1.0 / temp,
+                de_hi: (self.sat_hi_z * temp).ceil() as i64 + 1,
+                de_lo: (self.sat_lo_z * temp).floor() as i64 - 1,
+                p_head,
+                p_tail,
+            }
+        } else {
+            // T <= 0 degenerates to the sign rule (Fig. 3 limits); the
+            // thresholds are never consulted on that path.
+            LaneCtx { temp, inv_t: 0.0, de_hi: i64::MAX, de_lo: i64::MIN, p_head, p_tail }
+        }
+    }
+
+    /// One lane of the Mode II evaluation: flip probability (Q16) of a
+    /// spin with packed bit `bit` (0 ⇒ −1, 1 ⇒ +1) and local field `u_i`.
+    /// Bit-identical to the corresponding [`Self::eval_lanes`] output —
+    /// this is the single-lane refresh the incremental Fenwick path uses.
+    #[inline(always)]
+    pub fn lane_p(&self, ctx: &LaneCtx, bit: u64, u_i: i64) -> u32 {
+        let s = (2 * bit as i64) - 1;
+        let de = 2 * s * u_i;
+        if ctx.temp > 0.0 {
+            if de >= ctx.de_hi {
+                ctx.p_tail
+            } else if de <= ctx.de_lo {
+                ctx.p_head
+            } else {
+                self.flip_prob_q16_inv(de, ctx.inv_t)
+            }
+        } else {
+            self.flip_prob_q16(de, ctx.temp)
+        }
+    }
+
+    /// Bulk lane evaluation — the software analogue of the FPGA's
+    /// `eval_lanes` datapath. Fills `out[i]` with the Q16 flip
+    /// probability of every spin and returns the aggregate weight `W`.
+    ///
+    /// Lanes are processed in 64-wide blocks over the packed spin words:
+    /// ΔE for a whole block is computed branch-free (the loop
+    /// auto-vectorizes), then the saturation classification picks the
+    /// endpoint value or falls through to the PWL interpolation. With the
+    /// `simd` cargo feature on x86-64 the block pass runs through an AVX2
+    /// kernel (runtime-detected); the scalar fallback is bit-identical.
+    pub fn eval_lanes(&self, ctx: &LaneCtx, u: &[i64], spin_words: &[u64], out: &mut [u32]) -> u64 {
+        let n = u.len();
+        assert_eq!(out.len(), n);
+        assert!(spin_words.len() >= n.div_ceil(64));
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if ctx.temp > 0.0 && is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 presence verified at runtime.
+                return unsafe { self.eval_lanes_avx2(ctx, u, spin_words, out) };
+            }
+        }
+        self.eval_lanes_scalar(ctx, u, spin_words, out)
+    }
+
+    fn eval_lanes_scalar(
+        &self,
+        ctx: &LaneCtx,
+        u: &[i64],
+        spin_words: &[u64],
+        out: &mut [u32],
+    ) -> u64 {
+        let n = u.len();
+        let mut w_total = 0u64;
+        let mut de_buf = [0i64; 64];
+        for (w, &word) in spin_words.iter().enumerate() {
+            let base = w << 6;
+            if base >= n {
+                break;
+            }
+            let len = (n - base).min(64);
+            let ub = &u[base..base + len];
+            // ΔE_i = 2 s_i u_i for the whole block, branch-free.
+            for (k, de) in de_buf[..len].iter_mut().enumerate() {
+                let s = (((word >> k) & 1) as i64) * 2 - 1;
+                *de = 2 * s * ub[k];
+            }
+            let ob = &mut out[base..base + len];
+            if ctx.temp > 0.0 {
+                for (k, o) in ob.iter_mut().enumerate() {
+                    let de = de_buf[k];
+                    let p = if de >= ctx.de_hi {
+                        ctx.p_tail
+                    } else if de <= ctx.de_lo {
+                        ctx.p_head
+                    } else {
+                        self.flip_prob_q16_inv(de, ctx.inv_t)
+                    };
+                    *o = p;
+                    w_total += p as u64;
+                }
+            } else {
+                for (k, o) in ob.iter_mut().enumerate() {
+                    let p = self.flip_prob_q16(de_buf[k], ctx.temp);
+                    *o = p;
+                    w_total += p as u64;
+                }
+            }
+        }
+        w_total
+    }
+
+    /// AVX2 block kernel: ΔE and the saturation classification for four
+    /// i64 lanes per iteration; only unclassified (interior) lanes fall
+    /// through to the scalar PWL interpolation. Bit-identical to
+    /// [`Self::eval_lanes_scalar`] (same comparisons, same endpoint
+    /// values, same interior evaluation).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_lanes_avx2(
+        &self,
+        ctx: &LaneCtx,
+        u: &[i64],
+        spin_words: &[u64],
+        out: &mut [u32],
+    ) -> u64 {
+        use std::arch::x86_64::*;
+        debug_assert!(ctx.temp > 0.0);
+        let n = u.len();
+        let mut w_total = 0u64;
+        let zero = _mm256_setzero_si256();
+        // `cmpgt` is strict: de >= hi ⇔ de > hi−1, de <= lo ⇔ lo+1 > de.
+        let hi_m1 = _mm256_set1_epi64x(ctx.de_hi - 1);
+        let lo_p1 = _mm256_set1_epi64x(ctx.de_lo + 1);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // i is a multiple of 4, so the four lanes share one spin word.
+            let word = spin_words[i >> 6];
+            let k = i & 63;
+            let bitsel = _mm256_set_epi64x(
+                (1u64 << (k + 3)) as i64,
+                (1u64 << (k + 2)) as i64,
+                (1u64 << (k + 1)) as i64,
+                (1u64 << k) as i64,
+            );
+            let wv = _mm256_set1_epi64x(word as i64);
+            let up = _mm256_cmpeq_epi64(_mm256_and_si256(wv, bitsel), bitsel);
+            let uv = _mm256_loadu_si256(u.as_ptr().add(i) as *const __m256i);
+            // s·u: u where the spin bit is set, −u otherwise.
+            let su = _mm256_blendv_epi8(_mm256_sub_epi64(zero, uv), uv, up);
+            let de = _mm256_add_epi64(su, su); // 2·s·u
+            let hi = _mm256_cmpgt_epi64(de, hi_m1);
+            let lo = _mm256_cmpgt_epi64(lo_p1, de);
+            let hi_bits = _mm256_movemask_pd(_mm256_castsi256_pd(hi)) as u32;
+            let lo_bits = _mm256_movemask_pd(_mm256_castsi256_pd(lo)) as u32;
+            let mut de_arr = [0i64; 4];
+            _mm256_storeu_si256(de_arr.as_mut_ptr() as *mut __m256i, de);
+            for lane in 0..4 {
+                let p = if hi_bits & (1 << lane) != 0 {
+                    ctx.p_tail
+                } else if lo_bits & (1 << lane) != 0 {
+                    ctx.p_head
+                } else {
+                    self.flip_prob_q16_inv(de_arr[lane], ctx.inv_t)
+                };
+                out[i + lane] = p;
+                w_total += p as u64;
+            }
+            i += 4;
+        }
+        while i < n {
+            let bit = (spin_words[i >> 6] >> (i & 63)) & 1;
+            let p = self.lane_p(ctx, bit, u[i]);
+            out[i] = p;
+            w_total += p as u64;
+        }
+        w_total
+    }
+
     /// Maximum absolute error against the exact logistic, sampled at
     /// `samples` points (used by tests and the perf notes in DESIGN.md).
     pub fn max_error(&self, samples: usize) -> f64 {
@@ -257,6 +461,67 @@ mod tests {
             (5, 0.0, 0),
         ] {
             assert_eq!(l.flip_prob_q16(de, t), expect, "ΔE={de}, T={t}");
+        }
+    }
+
+    /// The chunked lane kernel must be bit-identical to the naive
+    /// per-lane reference (`flip_prob_q16` over ΔE = 2 s u), across warm,
+    /// cold and zero temperatures and non-multiple-of-64 lane counts.
+    #[test]
+    fn eval_lanes_matches_per_lane_reference() {
+        use crate::ising::SpinVec;
+        use crate::rng::{salt, StatelessRng};
+        let l = PwlLogistic::default();
+        let rng = StatelessRng::new(77);
+        for n in [1usize, 3, 63, 64, 65, 130, 300] {
+            let spins = SpinVec::random(n, &rng.child(n as u64));
+            let u: Vec<i64> = (0..n)
+                .map(|i| rng.below(1, i as u64, salt::PROBLEM, 41) as i64 - 20)
+                .collect();
+            for temp in [0.0, 0.05, 0.7, 1.0, 5.0, 1e6] {
+                let ctx = l.lane_ctx(temp);
+                let mut out = vec![0u32; n];
+                let w = l.eval_lanes(&ctx, &u, spins.words(), &mut out);
+                let mut w_ref = 0u64;
+                for i in 0..n {
+                    let de = 2 * spins.get(i) as i64 * u[i];
+                    let p = l.flip_prob_q16(de, temp);
+                    assert_eq!(out[i], p, "lane {i}, n={n}, T={temp}");
+                    // The single-lane refresh path must agree too.
+                    assert_eq!(l.lane_p(&ctx, spins.bit(i), u[i]), p);
+                    w_ref += p as u64;
+                }
+                assert_eq!(w, w_ref, "aggregate weight, n={n}, T={temp}");
+            }
+        }
+    }
+
+    /// With the `simd` feature on, the AVX2 kernel (when the CPU has it)
+    /// must agree with the scalar kernel bit for bit.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn simd_lane_kernel_matches_scalar() {
+        use crate::ising::SpinVec;
+        use crate::rng::{salt, StatelessRng};
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let l = PwlLogistic::default();
+        let rng = StatelessRng::new(78);
+        for n in [4usize, 67, 256, 1000] {
+            let spins = SpinVec::random(n, &rng.child(n as u64));
+            let u: Vec<i64> = (0..n)
+                .map(|i| rng.below(2, i as u64, salt::PROBLEM, 2001) as i64 - 1000)
+                .collect();
+            for temp in [0.05, 1.0, 50.0] {
+                let ctx = l.lane_ctx(temp);
+                let mut scalar = vec![0u32; n];
+                let ws = l.eval_lanes_scalar(&ctx, &u, spins.words(), &mut scalar);
+                let mut simd = vec![0u32; n];
+                let wv = unsafe { l.eval_lanes_avx2(&ctx, &u, spins.words(), &mut simd) };
+                assert_eq!(scalar, simd, "n={n}, T={temp}");
+                assert_eq!(ws, wv);
+            }
         }
     }
 

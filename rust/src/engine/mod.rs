@@ -6,11 +6,13 @@ pub mod diagnostics;
 pub mod lut;
 pub mod pool;
 pub mod schedule;
+pub mod select;
 pub mod snowball;
 pub mod tempering;
 
-pub use lut::{glauber_exact, PwlLogistic, ONE_Q16};
+pub use lut::{glauber_exact, LaneCtx, PwlLogistic, ONE_Q16};
 pub use pool::ReplicaPool;
-pub use schedule::Schedule;
+pub use schedule::{Plateau, Plateaus, Schedule};
+pub use select::{Fenwick, SelectorKind};
 pub use snowball::{Datapath, EngineConfig, Mode, RunResult, SnowballEngine, StepOutcome};
 pub use tempering::{ParallelTempering, TemperingResult};

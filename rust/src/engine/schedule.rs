@@ -53,7 +53,38 @@ impl Schedule {
         (0..k_total).map(|t| self.temperature(t, k_total)).collect()
     }
 
-    /// Parse `"kind:t0:t1"` / `"constant:t"` (CLI syntax).
+    /// Quantize into `stages` piecewise-constant plateaus — the FPGA's
+    /// coarse programmable `{T_k}` stage memory. A plateaued schedule is
+    /// what lets the Fenwick selection path reuse lane weights across the
+    /// steps inside a stage (only touched lanes are re-evaluated);
+    /// continuous ramps force a full lane refresh every step.
+    pub fn quantized(&self, stages: usize) -> Schedule {
+        assert!(stages >= 1, "a schedule needs at least one stage");
+        Schedule::Table(self.materialize(stages as u64))
+    }
+
+    /// Iterate the maximal constant-temperature runs of a `k_total`-step
+    /// run. Θ(1) per plateau for `Constant`, `Table` and degenerate
+    /// (`t0 == t1`) ramps; continuous ramps yield length-1 plateaus.
+    pub fn plateaus(&self, k_total: u64) -> Plateaus<'_> {
+        Plateaus { sched: self, k_total, next: 0 }
+    }
+
+    /// For `Table` schedules: the first step strictly after `start` at
+    /// which the table index changes (table entry `idx` spans the steps
+    /// `t` with `⌊t·len/K⌋ == idx`).
+    fn table_seg_end(len: u64, k_total: u64, start: u64) -> u64 {
+        let idx = (start as u128 * len as u128) / k_total as u128;
+        if idx + 1 >= len as u128 {
+            k_total
+        } else {
+            (((idx + 1) * k_total as u128).div_ceil(len as u128)) as u64
+        }
+    }
+
+    /// Parse `"kind:t0:t1"` / `"constant:t"` (CLI syntax). Ramps accept
+    /// an optional fourth field `":stages"` that quantizes them into that
+    /// many plateaus (e.g. `"geometric:8:0.05:32"`).
     pub fn parse(s: &str) -> anyhow::Result<Schedule> {
         let parts: Vec<&str> = s.split(':').collect();
         let get = |i: usize| -> anyhow::Result<f64> {
@@ -63,13 +94,93 @@ impl Schedule {
                 .parse::<f64>()
                 .map_err(|e| anyhow::anyhow!("schedule '{s}': {e}"))
         };
+        let stages = |sched: Schedule| -> anyhow::Result<Schedule> {
+            match parts.get(3) {
+                None => Ok(sched),
+                Some(v) => {
+                    let k: usize =
+                        v.parse().map_err(|e| anyhow::anyhow!("schedule '{s}': stages: {e}"))?;
+                    anyhow::ensure!(k >= 1, "schedule '{s}': stages must be >= 1");
+                    Ok(sched.quantized(k))
+                }
+            }
+        };
         match parts[0] {
             "constant" => Ok(Schedule::Constant(get(1)?)),
-            "linear" => Ok(Schedule::Linear { t0: get(1)?, t1: get(2)? }),
-            "geometric" => Ok(Schedule::Geometric { t0: get(1)?, t1: get(2)? }),
-            "cosine" => Ok(Schedule::Cosine { t0: get(1)?, t1: get(2)? }),
+            "linear" => stages(Schedule::Linear { t0: get(1)?, t1: get(2)? }),
+            "geometric" => stages(Schedule::Geometric { t0: get(1)?, t1: get(2)? }),
+            "cosine" => stages(Schedule::Cosine { t0: get(1)?, t1: get(2)? }),
             other => anyhow::bail!("unknown schedule kind '{other}'"),
         }
+    }
+}
+
+/// A maximal half-open run of steps `[start, end)` sharing one
+/// temperature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plateau {
+    pub start: u64,
+    pub end: u64,
+    pub temp: f64,
+}
+
+impl Plateau {
+    /// Steps in the plateau.
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// True for an empty run (never yielded by the iterator).
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Iterator over a schedule's plateaus (see [`Schedule::plateaus`]).
+pub struct Plateaus<'a> {
+    sched: &'a Schedule,
+    k_total: u64,
+    next: u64,
+}
+
+impl Iterator for Plateaus<'_> {
+    type Item = Plateau;
+
+    fn next(&mut self) -> Option<Plateau> {
+        if self.next >= self.k_total {
+            return None;
+        }
+        let start = self.next;
+        let temp = self.sched.temperature(start, self.k_total);
+        let mut end = match self.sched {
+            Schedule::Constant(_) => self.k_total,
+            Schedule::Linear { t0, t1 }
+            | Schedule::Geometric { t0, t1 }
+            | Schedule::Cosine { t0, t1 } => {
+                if t0 == t1 || self.k_total == 1 {
+                    self.k_total
+                } else {
+                    start + 1
+                }
+            }
+            Schedule::Table(v) => {
+                if v.is_empty() {
+                    self.k_total
+                } else {
+                    Schedule::table_seg_end(v.len() as u64, self.k_total, start)
+                }
+            }
+        };
+        // Merge adjacent table entries that quantized to the same value.
+        if let Schedule::Table(v) = self.sched {
+            if !v.is_empty() {
+                while end < self.k_total && self.sched.temperature(end, self.k_total) == temp {
+                    end = Schedule::table_seg_end(v.len() as u64, self.k_total, end);
+                }
+            }
+        }
+        self.next = end;
+        Some(Plateau { start, end, temp })
     }
 }
 
@@ -119,5 +230,77 @@ mod tests {
         assert!(matches!(Schedule::parse("linear:5:0").unwrap(), Schedule::Linear { .. }));
         assert!(Schedule::parse("bogus:1").is_err());
         assert!(Schedule::parse("linear:5").is_err());
+    }
+
+    #[test]
+    fn parse_staged_ramp() {
+        let s = Schedule::parse("geometric:8:0.05:16").unwrap();
+        match &s {
+            Schedule::Table(v) => {
+                assert_eq!(v.len(), 16);
+                assert!((v[0] - 8.0).abs() < 1e-12);
+                assert!((v[15] - 0.05).abs() < 1e-9);
+            }
+            other => panic!("expected Table, got {other:?}"),
+        }
+        assert!(Schedule::parse("geometric:8:0.05:0").is_err());
+        assert!(Schedule::parse("geometric:8:0.05:x").is_err());
+    }
+
+    /// Plateau runs must tile [0, K) exactly and agree with per-step
+    /// temperature lookups, for every schedule kind.
+    #[test]
+    fn plateaus_tile_and_match_temperatures() {
+        let k = 257u64;
+        for s in [
+            Schedule::Constant(2.0),
+            Schedule::Linear { t0: 5.0, t1: 1.0 },
+            Schedule::Linear { t0: 3.0, t1: 3.0 },
+            Schedule::Geometric { t0: 8.0, t1: 0.1 },
+            Schedule::Cosine { t0: 4.0, t1: 0.5 },
+            Schedule::Table(vec![3.0, 2.0, 2.0, 1.0]),
+            Schedule::Geometric { t0: 8.0, t1: 0.1 }.quantized(10),
+        ] {
+            let mut next = 0u64;
+            for p in s.plateaus(k) {
+                assert_eq!(p.start, next, "{s:?}: plateaus must tile");
+                assert!(p.end > p.start && p.end <= k);
+                for t in p.start..p.end {
+                    assert_eq!(s.temperature(t, k), p.temp, "{s:?} step {t}");
+                }
+                // Maximality: the next step (if any) has a new temperature.
+                if p.end < k {
+                    assert_ne!(s.temperature(p.end, k), p.temp, "{s:?}: not maximal at {}", p.end);
+                }
+                next = p.end;
+            }
+            assert_eq!(next, k, "{s:?}: plateaus must cover the whole run");
+        }
+    }
+
+    #[test]
+    fn plateau_counts() {
+        assert_eq!(Schedule::Constant(1.0).plateaus(100).count(), 1);
+        assert_eq!(Schedule::Linear { t0: 2.0, t1: 2.0 }.plateaus(100).count(), 1);
+        let staged = Schedule::Geometric { t0: 8.0, t1: 0.05 }.quantized(10);
+        assert_eq!(staged.plateaus(1000).count(), 10);
+        // Continuous ramps degenerate to one plateau per step.
+        assert_eq!(Schedule::Linear { t0: 2.0, t1: 1.0 }.plateaus(50).count(), 50);
+        // Equal adjacent table entries merge into one plateau.
+        assert_eq!(Schedule::Table(vec![2.0, 2.0, 1.0]).plateaus(99).count(), 2);
+    }
+
+    #[test]
+    fn quantized_matches_table_semantics() {
+        let base = Schedule::Geometric { t0: 8.0, t1: 0.05 };
+        let q = base.quantized(8);
+        // Stage temperatures are the base schedule sampled over 8 steps.
+        let expect = base.materialize(8);
+        for (t, e) in q.materialize(8).iter().zip(&expect) {
+            assert_eq!(t, e);
+        }
+        // Across a longer run each stage holds for a run of steps.
+        assert_eq!(q.temperature(0, 800), expect[0]);
+        assert_eq!(q.temperature(799, 800), expect[7]);
     }
 }

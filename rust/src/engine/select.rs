@@ -1,0 +1,267 @@
+//! Roulette-wheel spin selection structures (Mode II hot path).
+//!
+//! The FPGA selects the flipped spin with a comparator tree over the N
+//! lane weights in Θ(log N) levels (paper §IV-B3c). The software
+//! analogue here is a Fenwick (binary indexed) tree over the Q16 lane
+//! weights: Θ(log N) sampled selection from the same `r` draw, Θ(log N)
+//! single-lane weight updates, Θ(N) bulk rebuild. Selection is
+//! **bit-identical** to a linear prefix scan over the same weights —
+//! both return the unique `j` with `cum(j−1) <= r < cum(j)` — which is
+//! what lets the engine switch between the legacy scan and the Fenwick
+//! path without changing a single output bit (asserted by
+//! `tests/select_parity.rs`).
+
+/// Which Mode II selection implementation the engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectorKind {
+    /// Legacy Θ(N) linear prefix scan with full lane re-evaluation every
+    /// step (the pre-PR-2 behaviour; kept so benches can prove the win).
+    LinearScan,
+    /// Fenwick-tree selection with incremental dirty-lane refresh
+    /// (Θ(deg + log N) per plateau-interior step).
+    Fenwick,
+}
+
+impl SelectorKind {
+    /// CLI names (`rwa-fenwick` vs the legacy scan).
+    pub fn parse(s: &str) -> anyhow::Result<SelectorKind> {
+        match s {
+            "scan" | "linear" | "linear-scan" => Ok(SelectorKind::LinearScan),
+            "fenwick" | "rwa-fenwick" | "tree" => Ok(SelectorKind::Fenwick),
+            other => anyhow::bail!("unknown selector '{other}' (scan|fenwick)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorKind::LinearScan => "scan",
+            SelectorKind::Fenwick => "fenwick",
+        }
+    }
+}
+
+/// Fenwick (binary indexed) tree over `n` non-negative integer weights.
+///
+/// Stored 1-based: `tree[i]` holds the sum of weights `(i − lsb(i), i]`.
+/// Node sums fit `u64` for any realistic instance (`N · 2^16 < 2^64`);
+/// negative point deltas are applied with two's-complement wrapping adds,
+/// which is exact because every true node sum stays non-negative.
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    n: usize,
+    tree: Vec<u64>,
+    total: u64,
+}
+
+impl Fenwick {
+    /// An all-zero tree over `n` lanes.
+    pub fn new(n: usize) -> Self {
+        Self { n, tree: vec![0; n + 1], total: 0 }
+    }
+
+    /// Number of lanes.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the tree has no lanes.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Aggregate weight `W = Σ w_i` (maintained, Θ(1)).
+    #[inline(always)]
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Θ(N) bulk rebuild from raw lane weights (plateau boundaries and
+    /// the dense-row fast path).
+    pub fn rebuild(&mut self, weights: &[u32]) {
+        assert_eq!(weights.len(), self.n);
+        self.tree.fill(0);
+        let mut total = 0u64;
+        for i in 1..=self.n {
+            let w = weights[i - 1] as u64;
+            total += w;
+            self.tree[i] += w;
+            let parent = i + (i & i.wrapping_neg());
+            if parent <= self.n {
+                let v = self.tree[i];
+                self.tree[parent] += v;
+            }
+        }
+        self.total = total;
+    }
+
+    /// Θ(log N) point update: `w_i += delta` (the caller guarantees the
+    /// lane weight stays non-negative).
+    #[inline]
+    pub fn add(&mut self, i: usize, delta: i64) {
+        debug_assert!(i < self.n);
+        self.total = self.total.wrapping_add(delta as u64);
+        let mut idx = i + 1;
+        while idx <= self.n {
+            self.tree[idx] = self.tree[idx].wrapping_add(delta as u64);
+            idx += idx & idx.wrapping_neg();
+        }
+    }
+
+    /// Sum of the first `i` lane weights, Θ(log N).
+    pub fn prefix(&self, i: usize) -> u64 {
+        let mut s = 0u64;
+        let mut idx = i.min(self.n);
+        while idx > 0 {
+            s += self.tree[idx];
+            idx &= idx - 1;
+        }
+        s
+    }
+
+    /// The unique 0-based lane `j` with `prefix(j) <= r < prefix(j+1)` —
+    /// the same lane a linear scan (`first j with r < cumsum(0..=j)`)
+    /// returns, in Θ(log N). Requires `r < total()` (and so a non-empty,
+    /// non-degenerate tree); zero-weight lanes are never selected.
+    #[inline]
+    pub fn select(&self, r: u64) -> usize {
+        debug_assert!(r < self.total, "select draw {r} out of range (W = {})", self.total);
+        let mut pos = 0usize;
+        let mut rem = r;
+        let mut k = self.n.next_power_of_two();
+        while k > 0 {
+            let next = pos + k;
+            if next <= self.n {
+                let w = self.tree[next];
+                if w <= rem {
+                    rem -= w;
+                    pos = next;
+                }
+            }
+            k >>= 1;
+        }
+        debug_assert!(pos < self.n);
+        pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{salt, StatelessRng};
+
+    /// Reference: the engine's legacy linear prefix scan.
+    fn linear_select(weights: &[u32], r: u64) -> usize {
+        let mut acc = 0u64;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w as u64;
+            if r < acc {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    fn random_weights(n: usize, seed: u64, max: u32) -> Vec<u32> {
+        let rng = StatelessRng::new(seed);
+        (0..n).map(|i| rng.below(0, i as u64, salt::PROBLEM, max + 1)).collect()
+    }
+
+    #[test]
+    fn select_matches_linear_scan_exhaustively() {
+        // Small enough to sweep EVERY draw value, with zero lanes mixed
+        // in (head, tail, interior runs) to hit all boundary cases.
+        for weights in [
+            vec![5u32, 0, 3, 1, 0, 0, 2],
+            vec![0, 0, 7],
+            vec![4, 4, 4, 4],
+            vec![1],
+            vec![0, 1, 0, 1, 0],
+        ] {
+            let mut f = Fenwick::new(weights.len());
+            f.rebuild(&weights);
+            let total: u64 = weights.iter().map(|&w| w as u64).sum();
+            assert_eq!(f.total(), total);
+            for r in 0..total {
+                assert_eq!(
+                    f.select(r),
+                    linear_select(&weights, r),
+                    "weights {weights:?}, r = {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn select_matches_linear_scan_randomized() {
+        for seed in 0..5u64 {
+            for n in [1usize, 2, 63, 64, 65, 200, 1000] {
+                let weights = random_weights(n, seed * 1000 + n as u64, 1 << 16);
+                let mut f = Fenwick::new(n);
+                f.rebuild(&weights);
+                let total = f.total();
+                if total == 0 {
+                    continue;
+                }
+                let rng = StatelessRng::new(seed);
+                for trial in 0..200u64 {
+                    let r = rng.u64(1, trial, salt::ROULETTE) % total;
+                    assert_eq!(f.select(r), linear_select(&weights, r), "n={n} seed={seed}");
+                }
+                // Boundary draws.
+                assert_eq!(f.select(0), linear_select(&weights, 0));
+                assert_eq!(f.select(total - 1), linear_select(&weights, total - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn add_tracks_point_updates() {
+        let mut weights = random_weights(300, 9, 1 << 16);
+        let mut f = Fenwick::new(weights.len());
+        f.rebuild(&weights);
+        let rng = StatelessRng::new(10);
+        for step in 0..500u64 {
+            let i = rng.below(2, step, salt::SITE, 300) as usize;
+            let new = rng.below(3, step, salt::PROBLEM, 1 << 16);
+            let delta = new as i64 - weights[i] as i64;
+            f.add(i, delta);
+            weights[i] = new;
+            if step % 100 == 99 {
+                // Full agreement with a from-scratch rebuild.
+                let mut fresh = Fenwick::new(weights.len());
+                fresh.rebuild(&weights);
+                assert_eq!(f.total(), fresh.total());
+                for i in 0..=weights.len() {
+                    assert_eq!(f.prefix(i), fresh.prefix(i), "prefix({i}) after {step} updates");
+                }
+            }
+        }
+        let total = f.total();
+        let rng = StatelessRng::new(11);
+        for trial in 0..200u64 {
+            let r = rng.u64(4, trial, salt::ROULETTE) % total;
+            assert_eq!(f.select(r), linear_select(&weights, r));
+        }
+    }
+
+    #[test]
+    fn prefix_sums() {
+        let weights = [2u32, 0, 5, 1];
+        let mut f = Fenwick::new(4);
+        f.rebuild(&weights);
+        assert_eq!(f.prefix(0), 0);
+        assert_eq!(f.prefix(1), 2);
+        assert_eq!(f.prefix(2), 2);
+        assert_eq!(f.prefix(3), 7);
+        assert_eq!(f.prefix(4), 8);
+        assert_eq!(f.total(), 8);
+    }
+
+    #[test]
+    fn selector_kind_parses() {
+        assert_eq!(SelectorKind::parse("scan").unwrap(), SelectorKind::LinearScan);
+        assert_eq!(SelectorKind::parse("fenwick").unwrap(), SelectorKind::Fenwick);
+        assert_eq!(SelectorKind::parse("rwa-fenwick").unwrap(), SelectorKind::Fenwick);
+        assert!(SelectorKind::parse("bogus").is_err());
+    }
+}

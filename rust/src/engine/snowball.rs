@@ -22,11 +22,18 @@
 //! `Datapath::BitPlane` streams the column-major bit-planes word by word
 //! (bit-faithful to the FPGA; same results, verified by tests).
 
-use super::lut::{PwlLogistic, ONE_Q16};
+use super::lut::{LaneCtx, PwlLogistic, ONE_Q16};
 use super::schedule::Schedule;
+use super::select::{Fenwick, SelectorKind};
 use crate::bitplane::BitPlanes;
-use crate::ising::{IsingModel, SpinVec};
+use crate::ising::{Adjacency, IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
+
+/// Above this directed density the engine keeps the dense row walk and
+/// refreshes every lane per flip instead of building a CSR adjacency
+/// (the dense-row fast path — CSR walks lose to the contiguous row once
+/// most entries are nonzero anyway).
+const MAX_CSR_DENSITY: f64 = 0.25;
 
 /// Spin-selection mode (the paper's dual-mode switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +80,9 @@ pub enum Datapath {
 pub struct EngineConfig {
     pub mode: Mode,
     pub datapath: Datapath,
+    /// Mode II selection implementation (Fenwick tree vs legacy scan);
+    /// both produce bit-identical runs, differing only in per-step cost.
+    pub selector: SelectorKind,
     pub schedule: Schedule,
     /// Total Monte Carlo steps (one selected spin per step).
     pub steps: u64,
@@ -84,11 +94,13 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
-    /// A sensible default: RWA, dense datapath, geometric cooling.
+    /// A sensible default: RWA, dense datapath, Fenwick selection,
+    /// geometric cooling.
     pub fn new(mode: Mode, steps: u64, seed: u64) -> Self {
         Self {
             mode,
             datapath: Datapath::Dense,
+            selector: SelectorKind::Fenwick,
             schedule: Schedule::Geometric { t0: 10.0, t1: 0.05 },
             steps,
             seed,
@@ -118,6 +130,56 @@ pub struct RunResult {
     pub wall: std::time::Duration,
 }
 
+/// Incremental Mode II selection state (the Fenwick path): the tree over
+/// the Q16 lane weights plus dirty-lane bookkeeping, so a
+/// plateau-interior step costs Θ(deg + log N) instead of Θ(N).
+struct RwaState {
+    fenwick: Fenwick,
+    /// Lane-evaluation context for `cached_temp`.
+    ctx: LaneCtx,
+    /// Temperature the lanes/tree currently reflect (None = stale).
+    cached_temp: Option<f64>,
+    /// Lanes whose `(s_i, u_i)` changed since the last sync.
+    dirty: Vec<u32>,
+    /// Epoch stamps deduplicating `dirty` pushes.
+    stamp: Vec<u64>,
+    epoch: u64,
+    /// Set by the dense-row fast path (no CSR): the flip touched ~every
+    /// lane, so the next sync does one bulk refresh instead of N marks.
+    all_dirty: bool,
+    /// True while the tree does not reflect `p_q16`. Bulk refreshes only
+    /// mark the tree stale instead of paying a Θ(N) rebuild — selection
+    /// falls back to the prefix scan for that step, and the rebuild
+    /// happens lazily on the first *incremental* step that follows. A
+    /// run that bulk-refreshes every step (continuous ramp, dense row)
+    /// therefore never builds the tree at all and costs exactly what the
+    /// legacy scan does.
+    tree_stale: bool,
+}
+
+impl RwaState {
+    fn new(n: usize, lut: &PwlLogistic) -> Self {
+        Self {
+            fenwick: Fenwick::new(n),
+            ctx: lut.lane_ctx(1.0), // placeholder; cached_temp None forces a refresh
+            cached_temp: None,
+            dirty: Vec::new(),
+            stamp: vec![0; n],
+            epoch: 1,
+            all_dirty: false,
+            tree_stale: true,
+        }
+    }
+
+    #[inline(always)]
+    fn mark(&mut self, i: usize) {
+        if self.stamp[i] != self.epoch {
+            self.stamp[i] = self.epoch;
+            self.dirty.push(i as u32);
+        }
+    }
+}
+
 /// The Snowball engine over one Ising instance.
 pub struct SnowballEngine<'m> {
     model: &'m IsingModel,
@@ -125,6 +187,9 @@ pub struct SnowballEngine<'m> {
     lut: PwlLogistic,
     rng: StatelessRng,
     bitplanes: Option<BitPlanes>,
+    /// CSR adjacency for sparse dense-datapath instances: Θ(deg) field
+    /// updates with an exact touched-lane report.
+    adj: Option<Adjacency>,
     // Mutable chain state.
     spins: SpinVec,
     /// Full local fields `u_i = u_i^(J) + h_i` (the engine folds h in at
@@ -133,6 +198,8 @@ pub struct SnowballEngine<'m> {
     energy: i64,
     /// Scratch: per-spin flip probabilities (Q16) for Mode II.
     p_q16: Vec<u32>,
+    /// Fenwick-selection state (roulette modes with `SelectorKind::Fenwick`).
+    rwa: Option<RwaState>,
 }
 
 impl<'m> SnowballEngine<'m> {
@@ -151,10 +218,18 @@ impl<'m> SnowballEngine<'m> {
             Datapath::BitPlane => Some(BitPlanes::encode(model, cfg.planes)),
             Datapath::Dense => None,
         };
+        let adj = match cfg.datapath {
+            Datapath::Dense => Adjacency::build_if_sparse(model, MAX_CSR_DENSITY),
+            Datapath::BitPlane => None,
+        };
         let u = model.local_fields(&spins);
         let energy = model.energy(&spins);
         let n = model.len();
-        Self { model, cfg, lut: PwlLogistic::default(), rng, bitplanes, spins, u, energy, p_q16: vec![0; n] }
+        let lut = PwlLogistic::default();
+        let uses_roulette = matches!(cfg.mode, Mode::RouletteWheel | Mode::RouletteUniformized);
+        let rwa = (uses_roulette && cfg.selector == SelectorKind::Fenwick)
+            .then(|| RwaState::new(n, &lut));
+        Self { model, cfg, lut, rng, bitplanes, adj, spins, u, energy, p_q16: vec![0; n], rwa }
     }
 
     /// Current spins.
@@ -207,7 +282,9 @@ impl<'m> SnowballEngine<'m> {
             if self.energy < best_energy {
                 best_energy = self.energy;
                 best_step = t + 1;
-                best_spins = self.spins.clone();
+                // Overwrite the preallocated buffer — no allocation on
+                // the (frequent, early-anneal) improvement path.
+                best_spins.assign_from(&self.spins);
             }
             if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
                 trace.push((t + 1, self.energy));
@@ -261,47 +338,26 @@ impl<'m> SnowballEngine<'m> {
 
     /// Mode II (paper §IV-B3c): evaluate all spins, roulette-select one,
     /// flip deterministically.
+    ///
+    /// Two bit-identical implementations share this entry point. The
+    /// legacy scan re-evaluates all N lanes and prefix-scans them every
+    /// step (Θ(N) twice). The Fenwick path keeps the lane weights and
+    /// their tree current incrementally — inside a temperature plateau
+    /// only the lanes whose local field actually changed since the last
+    /// flip are re-evaluated (Θ(deg) with CSR/bit-plane delta reports, a
+    /// bulk kernel refresh on the dense row walk), and selection descends
+    /// the tree in Θ(log N).
     fn step_roulette(&mut self, t: u64, temp: f64, uniformized: bool) -> StepOutcome {
         let n = self.model.len();
-        // Per-site flip probabilities (the FPGA evaluates these lanes in
-        // parallel; `p_q16` is the lane buffer). Hot loop: reciprocal
-        // temperature hoisted, word-wise spin-sign extraction.
-        let mut w_total: u64 = 0;
-        if temp > 0.0 {
-            let inv_t = 1.0 / temp;
-            // Integer-domain saturation thresholds: |ΔE| beyond these is
-            // guaranteed inside the LUT's flat head/tail runs, where the
-            // lerp equals the endpoint exactly — so the f64 path can be
-            // skipped without changing any output bit (the +1 slack
-            // absorbs reciprocal rounding; an over-estimate only sends a
-            // lane down the slow path, never to a wrong value).
-            let de_hi = (self.lut.sat_hi_z() * temp).ceil() as i64 + 1;
-            let de_lo = (self.lut.sat_lo_z() * temp).floor() as i64 - 1;
-            let (p_head, p_tail) = self.lut.sat_values();
-            let words = self.spins.words();
-            for i in 0..n {
-                // s_i = ±1 from the packed bit, branch-free.
-                let bit = (words[i >> 6] >> (i & 63)) & 1;
-                let s = (2 * bit as i64) - 1;
-                let de = 2 * s * self.u[i];
-                let p = if de >= de_hi {
-                    p_tail
-                } else if de <= de_lo {
-                    p_head
-                } else {
-                    self.lut.flip_prob_q16_inv(de, inv_t)
-                };
-                self.p_q16[i] = p;
-                w_total += p as u64;
+        let w_total = match self.cfg.selector {
+            SelectorKind::LinearScan => {
+                // Full lane evaluation through the chunked kernel (the
+                // FPGA's `eval_lanes`; `p_q16` is the lane buffer).
+                let ctx = self.lut.lane_ctx(temp);
+                self.lut.eval_lanes(&ctx, &self.u, self.spins.words(), &mut self.p_q16)
             }
-        } else {
-            for i in 0..n {
-                let de = IsingModel::delta_e(self.spins.get(i), self.u[i]);
-                let p = self.lut.flip_prob_q16(de, temp);
-                self.p_q16[i] = p;
-                w_total += p as u64;
-            }
-        }
+            SelectorKind::Fenwick => self.sync_lanes(temp),
+        };
         if w_total == 0 {
             // Degenerate aggregate weight → sequential fallback (paper:
             // "falls back to a conventional one-site update").
@@ -315,19 +371,72 @@ impl<'m> SnowballEngine<'m> {
         if uniformized && r >= w_total {
             return StepOutcome::Null;
         }
-        // Prefix scan for the unique j with cum(j-1) <= r < cum(j).
-        let mut acc = 0u64;
-        let mut chosen = n - 1;
-        for i in 0..n {
-            acc += self.p_q16[i] as u64;
-            if r < acc {
-                chosen = i;
-                break;
+        // The unique j with cum(j-1) <= r < cum(j): Θ(log N) tree descent
+        // when the Fenwick tree is current, Θ(N) prefix scan otherwise
+        // (legacy path, and bulk-refresh steps where rebuilding the tree
+        // for a single selection would cost more than the scan) —
+        // identical j either way.
+        let chosen = match &self.rwa {
+            Some(st) if !st.tree_stale => st.fenwick.select(r),
+            _ => {
+                let mut acc = 0u64;
+                let mut chosen = n - 1;
+                for i in 0..n {
+                    acc += self.p_q16[i] as u64;
+                    if r < acc {
+                        chosen = i;
+                        break;
+                    }
+                }
+                chosen
             }
-        }
+        };
         let de = IsingModel::delta_e(self.spins.get(chosen), self.u[chosen]);
         self.apply_flip(chosen, de);
         StepOutcome::Flipped(chosen)
+    }
+
+    /// Bring the lane weights and Fenwick tree in sync with the current
+    /// `(spins, u, temp)`; returns the aggregate weight W. A temperature
+    /// change (plateau boundary) or a dense-row flip forces a bulk
+    /// refresh through the chunked lane kernel; otherwise only the lanes
+    /// dirtied by the last flip are re-evaluated.
+    fn sync_lanes(&mut self, temp: f64) -> u64 {
+        let st = self.rwa.as_mut().expect("sync_lanes requires Fenwick state");
+        if st.cached_temp != Some(temp) || st.all_dirty {
+            // Bulk refresh: re-evaluate every lane, but only mark the
+            // tree stale — this step selects by prefix scan, and the
+            // Θ(N) rebuild is paid once, lazily, iff an incremental step
+            // follows (so back-to-back bulk steps cost what the legacy
+            // scan costs).
+            st.ctx = self.lut.lane_ctx(temp);
+            let w = self.lut.eval_lanes(&st.ctx, &self.u, self.spins.words(), &mut self.p_q16);
+            st.tree_stale = true;
+            st.cached_temp = Some(temp);
+            st.all_dirty = false;
+            st.dirty.clear();
+            st.epoch += 1;
+            w
+        } else {
+            if st.tree_stale {
+                st.fenwick.rebuild(&self.p_q16);
+                st.tree_stale = false;
+            }
+            let words = self.spins.words();
+            for &i in &st.dirty {
+                let i = i as usize;
+                let bit = (words[i >> 6] >> (i & 63)) & 1;
+                let p = self.lut.lane_p(&st.ctx, bit, self.u[i]);
+                let old = self.p_q16[i];
+                if p != old {
+                    st.fenwick.add(i, p as i64 - old as i64);
+                    self.p_q16[i] = p;
+                }
+            }
+            st.dirty.clear();
+            st.epoch += 1;
+            st.fenwick.total()
+        }
     }
 
     /// Uniform draw in [0, bound) from the stateless stream (64-bit
@@ -339,22 +448,60 @@ impl<'m> SnowballEngine<'m> {
     }
 
     /// Flip spin `j` and propagate to all local fields (asynchronous
-    /// update, Eqs. 12/17/27/31) and the tracked energy.
+    /// update, Eqs. 12/17/27/31) and the tracked energy. Every update
+    /// path reports the touched fields into the Fenwick dirty set (when
+    /// one is active), so the incremental lane maintenance never misses
+    /// a changed `u_i`.
     fn apply_flip(&mut self, j: usize, de: i64) {
         let s_old = self.spins.flip(j);
         self.energy += de;
         match self.cfg.datapath {
-            Datapath::Dense => {
-                // u_i ← u_i − 2 J_ij s_j_old over the dense row (J sym.).
-                let row = self.model.j_row(j);
-                let factor = 2 * s_old as i64;
-                for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
-                    *ui -= factor * jv as i64;
+            Datapath::Dense => match &self.adj {
+                Some(adj) => {
+                    // Sparse: Θ(deg) CSR walk; the touched set is the row.
+                    let factor = 2 * s_old as i64;
+                    let (neigh, vals) = adj.row(j);
+                    match self.rwa.as_mut() {
+                        Some(st) => {
+                            for (&i, &jv) in neigh.iter().zip(vals.iter()) {
+                                self.u[i as usize] -= factor * jv as i64;
+                                st.mark(i as usize);
+                            }
+                        }
+                        None => {
+                            for (&i, &jv) in neigh.iter().zip(vals.iter()) {
+                                self.u[i as usize] -= factor * jv as i64;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    // Dense-row fast path: contiguous Θ(N) walk
+                    // (u_i ← u_i − 2 J_ij s_j_old, J symmetric); nearly
+                    // every lane changes, so the Fenwick state takes one
+                    // bulk refresh instead of N individual marks.
+                    let row = self.model.j_row(j);
+                    let factor = 2 * s_old as i64;
+                    for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
+                        *ui -= factor * jv as i64;
+                    }
+                    if let Some(st) = self.rwa.as_mut() {
+                        st.all_dirty = true;
+                    }
+                }
+            },
+            Datapath::BitPlane => {
+                let bp = self.bitplanes.as_ref().unwrap();
+                match self.rwa.as_mut() {
+                    Some(st) => bp.incr_update_touched(&mut self.u, j, s_old, |i| st.mark(i)),
+                    None => bp.incr_update(&mut self.u, j, s_old),
                 }
             }
-            Datapath::BitPlane => {
-                self.bitplanes.as_ref().unwrap().incr_update(&mut self.u, j, s_old);
-            }
+        }
+        if let Some(st) = self.rwa.as_mut() {
+            // The flipped spin's own lane changes sign (ΔE_j → −ΔE_j)
+            // even though u_j does not (J_jj == 0).
+            st.mark(j);
         }
     }
 }
@@ -543,7 +690,8 @@ mod tests {
     }
 
     /// Roulette selection frequencies must be proportional to p_flip
-    /// (Eq. 29): freeze the fields by zeroing J and using only h.
+    /// (Eq. 29), through BOTH selection implementations: freeze the
+    /// fields by zeroing J and using only h.
     #[test]
     fn roulette_selection_proportional_to_weights() {
         let mut m = IsingModel::zeros(4);
@@ -559,25 +707,53 @@ mod tests {
         let w: Vec<f64> =
             (0..4).map(|i| lut.flip_prob_q16(2 * m.h(i) as i64, t) as f64).collect();
         let w_sum: f64 = w.iter().sum();
-        let mut counts = [0u64; 4];
-        let trials = 200_000u64;
-        for trial in 0..trials {
-            // Fresh engine with a distinct seed each trial; we only
-            // observe the FIRST selection from the fixed start state.
-            let mut cfg = EngineConfig::new(Mode::RouletteWheel, 0, trial);
-            cfg.schedule = Schedule::Constant(t);
-            let mut e2 = SnowballEngine::with_spins(&m, cfg, spins.clone());
-            if let StepOutcome::Flipped(j) = e2.step(0, t) {
-                counts[j] += 1;
+        for selector in [SelectorKind::LinearScan, SelectorKind::Fenwick] {
+            let mut counts = [0u64; 4];
+            let trials = 200_000u64;
+            for trial in 0..trials {
+                // Fresh engine with a distinct seed each trial; we only
+                // observe the FIRST selection from the fixed start state.
+                let mut cfg = EngineConfig::new(Mode::RouletteWheel, 0, trial);
+                cfg.schedule = Schedule::Constant(t);
+                cfg.selector = selector;
+                let mut e2 = SnowballEngine::with_spins(&m, cfg, spins.clone());
+                if let StepOutcome::Flipped(j) = e2.step(0, t) {
+                    counts[j] += 1;
+                }
+            }
+            for i in 0..4 {
+                let expect = w[i] / w_sum;
+                let got = counts[i] as f64 / trials as f64;
+                assert!(
+                    (got - expect).abs() < 0.01,
+                    "{selector:?} spin {i}: selected {got:.4}, expected {expect:.4}"
+                );
             }
         }
-        for i in 0..4 {
-            let expect = w[i] / w_sum;
-            let got = counts[i] as f64 / trials as f64;
-            assert!(
-                (got - expect).abs() < 0.01,
-                "spin {i}: selected {got:.4}, expected {expect:.4}"
-            );
+    }
+
+    /// Both selectors, both datapaths: identical observable run tuples on
+    /// a mid-size sparse instance (the in-module smoke version of
+    /// `tests/select_parity.rs`).
+    #[test]
+    fn fenwick_and_scan_selectors_agree_exactly() {
+        let p = small_instance(109);
+        for mode in [Mode::RouletteWheel, Mode::RouletteUniformized] {
+            for dp in [Datapath::Dense, Datapath::BitPlane] {
+                let mk = |selector| {
+                    let mut cfg = EngineConfig::new(mode, 800, 17);
+                    cfg.datapath = dp;
+                    cfg.selector = selector;
+                    let mut e = SnowballEngine::new(p.model(), cfg);
+                    let r = e.run();
+                    (r.best_energy, r.final_energy, r.flips, r.fallbacks, r.nulls)
+                };
+                assert_eq!(
+                    mk(SelectorKind::LinearScan),
+                    mk(SelectorKind::Fenwick),
+                    "selector divergence ({mode:?}, {dp:?})"
+                );
+            }
         }
     }
 }

@@ -18,7 +18,7 @@
 //! `rust/tests/pool_determinism.rs`.
 
 use super::pool::ReplicaPool;
-use super::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use super::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use crate::ising::IsingModel;
 use crate::rng::{salt, StatelessRng};
 
@@ -81,6 +81,7 @@ impl ParallelTempering {
                 let cfg = EngineConfig {
                     mode: self.mode,
                     datapath: Datapath::Dense,
+                    selector: SelectorKind::Fenwick,
                     schedule: Schedule::Constant(self.temps[i]),
                     steps: 0,
                     seed: root.child(i as u64).seed(),

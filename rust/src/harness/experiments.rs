@@ -7,7 +7,8 @@
 use crate::baselines::{table2_lineup, Budget, Solver};
 use crate::bitplane::BitPlanes;
 use crate::engine::{
-    glauber_exact, Datapath, EngineConfig, Mode, PwlLogistic, ReplicaPool, Schedule, SnowballEngine,
+    glauber_exact, Datapath, EngineConfig, Mode, PwlLogistic, ReplicaPool, Schedule, SelectorKind,
+    SnowballEngine,
 };
 use crate::graph::gset::{self, GsetId};
 use crate::hwsim::{Geometry, HwModel};
@@ -337,6 +338,7 @@ pub fn fig15(seed: u64) -> Fig15Result {
     let cfg = EngineConfig {
         mode: Mode::RouletteWheel,
         datapath: Datapath::BitPlane,
+        selector: SelectorKind::Fenwick,
         schedule: Schedule::Cosine { t0: 60_000.0, t1: 1.0 },
         steps: 20_000,
         seed,
@@ -436,6 +438,7 @@ pub fn fig4(steps: u64, seed: u64) -> (f64, Vec<(u64, i64)>, (usize, usize)) {
     let cfg = EngineConfig {
         mode: Mode::RouletteWheel,
         datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
         schedule: Schedule::Linear { t0: 3.0, t1: 0.0 },
         steps,
         seed,

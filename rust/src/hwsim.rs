@@ -103,6 +103,48 @@ impl HwModel {
         eval + select + self.update_cycles(g)
     }
 
+    /// Cycles for one plateau-interior Mode II step under the PR-2
+    /// incremental datapath: only `touched` lanes (≈ deg + 1) re-evaluate
+    /// through the LUT, and selection descends a comparator/Fenwick tree
+    /// (two reads per level instead of the flat tree's one), before the
+    /// usual column-major incremental field update.
+    pub fn roulette_step_cycles_incremental(&self, g: Geometry, touched: usize) -> u64 {
+        let lanes = (touched.min(g.n) as u64).div_ceil(self.params.eval_lanes as u64).max(1);
+        let select = 2 * ((g.n as u64).next_power_of_two().trailing_zeros() as u64) + 2;
+        lanes + select + self.update_cycles(g)
+    }
+
+    /// Full report for `steps` plateau-interior Mode II steps with an
+    /// average touched-lane count per flip (boundary costs excluded; see
+    /// [`Self::roulette_run_staged`] for whole-schedule accounting).
+    pub fn roulette_run_incremental(&self, g: Geometry, steps: u64, touched: usize) -> HwReport {
+        let init = self.init_cycles(g);
+        let step = self.roulette_step_cycles_incremental(g, touched) * steps;
+        self.report(g, init, step)
+    }
+
+    /// Whole-run Mode II accounting under the incremental datapath for an
+    /// arbitrary schedule: each plateau (from [`Schedule::plateaus`])
+    /// pays one full-evaluation step at its boundary and incremental
+    /// steps inside. A continuous ramp degenerates to all-bulk steps —
+    /// the model's way of showing why the staged `{T_k}` schedules
+    /// matter. `touched` ≈ max degree + 1 (`Adjacency::max_degree`).
+    pub fn roulette_run_staged(
+        &self,
+        g: Geometry,
+        schedule: &crate::engine::Schedule,
+        steps: u64,
+        touched: usize,
+    ) -> HwReport {
+        let init = self.init_cycles(g);
+        let mut step_cycles = 0u64;
+        for p in schedule.plateaus(steps) {
+            step_cycles += self.roulette_step_cycles(g); // boundary bulk refresh
+            step_cycles += self.roulette_step_cycles_incremental(g, touched) * (p.len() - 1);
+        }
+        self.report(g, init, step_cycles)
+    }
+
     /// Cycles for one Mode I (random-scan) step: single-site evaluate
     /// (constant) + incremental update on accept.
     pub fn random_scan_step_cycles(&self, g: Geometry, accepted: bool) -> u64 {
@@ -204,6 +246,49 @@ mod tests {
         let c4 = hw.init_cycles(Geometry { n: 1024, planes: 4 });
         // Linear up to the constant adder-tree drain.
         assert!((c4 as f64 / c1 as f64) > 3.5 && (c4 as f64 / c1 as f64) < 4.5);
+    }
+
+    #[test]
+    fn incremental_selection_beats_full_evaluation() {
+        let hw = HwModel::default();
+        let g = k2000();
+        // Sparse touch sets (deg ≈ 8) make the step much cheaper than the
+        // full N-lane evaluate + flat select.
+        let sparse = hw.roulette_step_cycles_incremental(g, 9);
+        assert!(
+            sparse < hw.roulette_step_cycles(g),
+            "incremental step ({sparse}) must beat full evaluation ({})",
+            hw.roulette_step_cycles(g)
+        );
+        // Monotone in the touched count, and within ~2x of the full
+        // evaluate when everything is touched (deeper select tree).
+        let dense = hw.roulette_step_cycles_incremental(g, g.n);
+        assert!(sparse < dense);
+        assert!(dense <= 2 * hw.roulette_step_cycles(g));
+        // Run-level accounting matches step-level accounting.
+        let r = hw.roulette_run_incremental(g, 1000, 9);
+        assert_eq!(r.step_cycles, 1000 * sparse);
+    }
+
+    #[test]
+    fn staged_schedule_amortizes_bulk_refreshes() {
+        use crate::engine::Schedule;
+        let hw = HwModel::default();
+        let g = k2000();
+        let steps = 100_000u64;
+        let cont = Schedule::Geometric { t0: 8.0, t1: 0.05 };
+        // Continuous ramp: every plateau has length 1 → all-bulk steps,
+        // identical to the non-incremental run.
+        let all_bulk = hw.roulette_run_staged(g, &cont, steps, 9);
+        assert_eq!(all_bulk.step_cycles, steps * hw.roulette_step_cycles(g));
+        // 32 coarse stages: bulk refreshes amortize away.
+        let staged = hw.roulette_run_staged(g, &cont.quantized(32), steps, 9);
+        assert!(
+            staged.step_cycles * 10 < all_bulk.step_cycles * 7,
+            "staged {} vs continuous {}",
+            staged.step_cycles,
+            all_bulk.step_cycles
+        );
     }
 
     #[test]

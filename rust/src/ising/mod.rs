@@ -4,5 +4,5 @@
 pub mod model;
 pub mod spins;
 
-pub use model::IsingModel;
+pub use model::{Adjacency, IsingModel};
 pub use spins::SpinVec;

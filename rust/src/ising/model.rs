@@ -121,6 +121,26 @@ impl IsingModel {
         c
     }
 
+    /// Fraction of nonzero entries in the coupling matrix (directed
+    /// count over n²) — a diagnostic; the engine's CSR gate counts
+    /// inline with an early-exit cap (`Adjacency::build_if_sparse`).
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let nnz = self.j.iter().filter(|&&v| v != 0).count();
+        nnz as f64 / (self.n * self.n) as f64
+    }
+
+    /// Compressed-sparse-row view of the nonzero coupling rows — Θ(deg)
+    /// row walks plus an explicit touched-field delta report, where the
+    /// dense `j_row` walk is Θ(N). This is what makes the engine's
+    /// incremental field/weight maintenance sublinear on sparse
+    /// instances.
+    pub fn adjacency(&self) -> Adjacency {
+        Adjacency::build_with_cap(self, usize::MAX).expect("uncapped build cannot fail")
+    }
+
     /// Full Hamiltonian `H(s)` (Eq. 1). Θ(N²) — use only for
     /// initialization and verification; the engines track energy
     /// incrementally.
@@ -169,6 +189,92 @@ impl IsingModel {
     #[inline(always)]
     pub fn energy_after_flip(energy: i64, s_i: i8, u_i: i64) -> i64 {
         energy + Self::delta_e(s_i, u_i)
+    }
+}
+
+/// Compressed-sparse-row adjacency of an [`IsingModel`]'s nonzero
+/// couplings. Row `i` lists `(j, J_ij)` for every nonzero `J_ij`, in
+/// ascending `j` — the same visit order as the dense row walk, so field
+/// updates through either path produce identical `i64` sums.
+#[derive(Clone, Debug)]
+pub struct Adjacency {
+    /// Row start offsets, length `n + 1`.
+    offsets: Vec<usize>,
+    /// Column indices of nonzero entries.
+    neighbors: Vec<u32>,
+    /// The matching coupling values.
+    weights: Vec<i32>,
+}
+
+impl Adjacency {
+    /// Build only when the model is sparse enough that CSR walks win
+    /// (directed density at or below `max_density`); dense instances
+    /// return `None` and keep the cache-friendly dense row walk. Single
+    /// pass over the matrix, aborting as soon as the nonzero count
+    /// exceeds the cap — the dense case never pays a full scan twice.
+    pub fn build_if_sparse(model: &IsingModel, max_density: f64) -> Option<Adjacency> {
+        if model.is_empty() {
+            return None;
+        }
+        let n = model.len();
+        let max_nnz = (max_density * (n * n) as f64) as usize;
+        Self::build_with_cap(model, max_nnz)
+    }
+
+    /// CSR construction with an nnz budget; `None` once the budget would
+    /// be exceeded.
+    fn build_with_cap(model: &IsingModel, max_nnz: usize) -> Option<Adjacency> {
+        let n = model.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut neighbors = Vec::new();
+        let mut weights = Vec::new();
+        for i in 0..n {
+            for (k, &v) in model.j_row(i).iter().enumerate() {
+                if v != 0 {
+                    if neighbors.len() == max_nnz {
+                        return None;
+                    }
+                    neighbors.push(k as u32);
+                    weights.push(v);
+                }
+            }
+            offsets.push(neighbors.len());
+        }
+        Some(Adjacency { offsets, neighbors, weights })
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// True when there are no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total nonzero (directed) entries.
+    pub fn nnz(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Row `i` as parallel `(neighbors, weights)` slices.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[u32], &[i32]) {
+        let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+        (&self.neighbors[a..b], &self.weights[a..b])
+    }
+
+    /// Degree of row `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Largest row degree (what the incremental-step cycle model takes
+    /// as the touched-lane count).
+    pub fn max_degree(&self) -> usize {
+        (0..self.len()).map(|i| self.degree(i)).max().unwrap_or(0)
     }
 }
 
@@ -244,5 +350,36 @@ mod tests {
         let m = small_model();
         assert_eq!(m.coupling_count(), 4);
         assert_eq!(m.max_abs_coeff(), 3);
+    }
+
+    #[test]
+    fn adjacency_matches_dense_rows() {
+        let m = small_model();
+        let adj = m.adjacency();
+        assert_eq!(adj.len(), m.len());
+        assert_eq!(adj.nnz(), 2 * m.coupling_count());
+        for i in 0..m.len() {
+            let (neigh, vals) = adj.row(i);
+            let dense: Vec<(u32, i32)> = m
+                .j_row(i)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0)
+                .map(|(k, &v)| (k as u32, v))
+                .collect();
+            let csr: Vec<(u32, i32)> = neigh.iter().copied().zip(vals.iter().copied()).collect();
+            assert_eq!(csr, dense, "row {i}");
+            assert_eq!(adj.degree(i), dense.len());
+        }
+        assert_eq!(adj.max_degree(), 2); // spins 1, 2 and 3 have degree 2
+    }
+
+    #[test]
+    fn density_and_sparse_gate() {
+        let m = small_model(); // 8 directed nonzeros over 16 cells
+        assert!((m.density() - 0.5).abs() < 1e-12);
+        assert!(Adjacency::build_if_sparse(&m, 0.25).is_none());
+        assert!(Adjacency::build_if_sparse(&m, 0.5).is_some());
+        assert_eq!(IsingModel::zeros(0).density(), 0.0);
     }
 }

@@ -115,6 +115,15 @@ impl SpinVec {
         old
     }
 
+    /// Overwrite `self` with `src` (same length) without reallocating —
+    /// the engines' best-configuration tracking hot path, which would
+    /// otherwise clone a fresh `Vec` on every energy improvement.
+    #[inline]
+    pub fn assign_from(&mut self, src: &SpinVec) {
+        assert_eq!(self.n, src.n, "assign_from requires equal lengths");
+        self.words.copy_from_slice(&src.words);
+    }
+
     /// Number of +1 spins.
     pub fn count_up(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
@@ -193,6 +202,24 @@ mod tests {
         assert_eq!(v.magnetization(), 1);
         assert_eq!(SpinVec::all_up(5).magnetization(), 5);
         assert_eq!(SpinVec::all_down(5).magnetization(), -5);
+    }
+
+    #[test]
+    fn assign_from_copies_without_realloc() {
+        let rng = StatelessRng::new(5);
+        let src = SpinVec::random(130, &rng);
+        let mut dst = SpinVec::all_down(130);
+        let words_ptr = dst.words.as_ptr();
+        dst.assign_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.words.as_ptr(), words_ptr, "must reuse the existing buffer");
+    }
+
+    #[test]
+    #[should_panic(expected = "equal lengths")]
+    fn assign_from_length_mismatch_panics() {
+        let mut a = SpinVec::all_down(10);
+        a.assign_from(&SpinVec::all_down(11));
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   solve  --instance <id|er:n:m> [--mode rsa|rwa] [--steps N] [--replicas R]
-//!          [--seed S] [--schedule kind:t0:t1] [--target E] [--workers W]
+//!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
+//!          [--workers W] [--selector scan|fenwick]
 //!   serve  [--addr host:port] [--workers W]
 //!   bench  <table1|table2|table3|fig3|fig8|fig13|fig14|fig15> [options]
 //!   gen    --instance <id> --out <path>       (write Gset-format file)
@@ -11,7 +12,7 @@
 use anyhow::Result;
 use snowball::cli::Args;
 use snowball::coordinator::{service, Backend, Coordinator, JobSpec, Service};
-use snowball::engine::{Mode, Schedule};
+use snowball::engine::{Mode, Schedule, SelectorKind};
 use snowball::graph::gset::{self, GsetId};
 use snowball::harness as hx;
 use snowball::tts;
@@ -46,7 +47,8 @@ snowball — all-to-all Ising machine with dual-mode MCMC (paper reproduction)
 USAGE:
   snowball solve --instance <G6|G11|...|K2000|er:n:m> [--mode rsa|rwa]
                  [--steps N] [--replicas R] [--seed S]
-                 [--schedule kind:t0:t1] [--target E] [--workers W]
+                 [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
+                 [--selector scan|fenwick]
   snowball serve [--addr 127.0.0.1:7878] [--workers W]
   snowball bench <table1|table2|table3|fig3|fig5|fig8|fig13|fig14|fig15> [--quick]
   snowball gen   --instance <id> --out <path>
@@ -72,6 +74,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
         Some(m) => Mode::parse(m)?,
         None => fj.map(|j| j.mode).unwrap_or(Mode::RouletteWheel),
     };
+    let selector = match args.get("selector") {
+        Some(s) => SelectorKind::parse(s)?,
+        None => fj.map(|j| j.selector).unwrap_or(SelectorKind::Fenwick),
+    };
     let steps: u64 =
         args.get_parse_or("steps", fj.map(|j| j.steps).unwrap_or((model.len() as u64) * 200))?;
     let replicas: u32 = args.get_parse_or("replicas", fj.map(|j| j.replicas).unwrap_or(8))?;
@@ -93,6 +99,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         model: Arc::new(model),
         label: label.clone(),
         mode,
+        selector,
         schedule,
         steps,
         replicas,

@@ -201,6 +201,7 @@ mod tests {
         let cfg = EngineConfig {
             mode: Mode::RouletteWheel,
             datapath: crate::engine::Datapath::Dense,
+            selector: crate::engine::SelectorKind::Fenwick,
             schedule: Schedule::Geometric { t0: 60.0, t1: 0.2 },
             steps: 60_000,
             seed: 5,

@@ -2,7 +2,7 @@
 //! concurrent clients, replica statistics and TTS plumbing.
 
 use snowball::coordinator::{service, Backend, Coordinator, JobSpec, Service};
-use snowball::engine::{Mode, Schedule};
+use snowball::engine::{Mode, Schedule, SelectorKind};
 use snowball::problems::landscape;
 use snowball::rng::StatelessRng;
 use std::io::{BufRead, BufReader, Write};
@@ -94,6 +94,7 @@ fn coordinator_direct_api_with_target_statistics() {
         model: Arc::new(p.model().clone()),
         label: "stats".into(),
         mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
         schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
         steps: 4_000,
         replicas: 8,

@@ -2,7 +2,7 @@
 //! and figure-harness behaviours on realistic instances.
 
 use snowball::baselines::{Budget, Solver};
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::graph::gset::{self, GsetId};
 use snowball::harness;
 use snowball::problems::MaxCut;
@@ -39,6 +39,7 @@ fn rwa_converges_in_fewer_steps_than_rsa() {
             let cfg = EngineConfig {
                 mode,
                 datapath: Datapath::Dense,
+                selector: SelectorKind::Fenwick,
                 schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
                 steps: 40_000,
                 seed,
@@ -91,6 +92,7 @@ fn uniformized_null_rate_tracks_weight() {
         let cfg = EngineConfig {
             mode: Mode::RouletteUniformized,
             datapath: Datapath::Dense,
+            selector: SelectorKind::Fenwick,
             schedule: Schedule::Constant(t),
             steps: 2_000,
             seed: 9,

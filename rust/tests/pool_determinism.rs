@@ -10,7 +10,7 @@
 //! [`ReplicaPool`]: snowball::engine::ReplicaPool
 
 use snowball::coordinator::{Backend, Coordinator, JobSpec, ReplicaScheduler};
-use snowball::engine::{Mode, ParallelTempering, ReplicaPool, Schedule};
+use snowball::engine::{Mode, ParallelTempering, ReplicaPool, Schedule, SelectorKind};
 use snowball::graph::generators;
 use snowball::problems::MaxCut;
 use snowball::rng::StatelessRng;
@@ -66,6 +66,7 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
         model: Arc::new(p.model().clone()),
         label: label.into(),
         mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
         schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
         steps: 1_500,
         replicas,

@@ -2,7 +2,7 @@
 //! `testutil::Cases` helper — the offline stand-in for proptest).
 
 use snowball::bitplane::BitPlanes;
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::ising::{IsingModel, SpinVec};
 use snowball::problems::quantize;
 use snowball::rng::salt;
@@ -84,9 +84,15 @@ fn prop_engine_state_consistency() {
         } else {
             Datapath::BitPlane
         };
+        let selector = if rng.below(7, 0, salt::PROBLEM, 2) == 0 {
+            SelectorKind::LinearScan
+        } else {
+            SelectorKind::Fenwick
+        };
         let cfg = EngineConfig {
             mode,
             datapath: dp,
+            selector,
             schedule: Schedule::Geometric { t0: 4.0, t1: 0.1 },
             steps: 200,
             seed: rng.u64(6, 0, salt::PROBLEM),

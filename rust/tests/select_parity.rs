@@ -1,0 +1,225 @@
+//! Bit-identity of the Fenwick-tree Mode II selection path against the
+//! legacy linear prefix scan (PR 2 tentpole): same modes, datapaths,
+//! schedules and seeds must give exactly the same runs — same flip
+//! sequence, same counters, same spins — because the Fenwick path only
+//! reorganizes *how* the identical lane weights are summed and searched.
+
+use snowball::engine::{
+    Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine, StepOutcome,
+};
+use snowball::graph::generators;
+use snowball::ising::{IsingModel, SpinVec};
+use snowball::problems::MaxCut;
+use snowball::rng::{salt, StatelessRng};
+
+/// The observable run signature the acceptance criterion names, plus the
+/// exact spin configurations.
+type Signature = (i64, i64, u64, u64, u64, Vec<i8>, Vec<i8>);
+
+fn run_signature(
+    model: &IsingModel,
+    mode: Mode,
+    dp: Datapath,
+    selector: SelectorKind,
+    schedule: Schedule,
+    steps: u64,
+    seed: u64,
+) -> Signature {
+    let cfg = EngineConfig {
+        mode,
+        datapath: dp,
+        selector,
+        schedule,
+        steps,
+        seed,
+        planes: None,
+        trace_stride: 0,
+    };
+    let mut e = SnowballEngine::new(model, cfg);
+    let r = e.run();
+    (
+        r.best_energy,
+        r.final_energy,
+        r.flips,
+        r.fallbacks,
+        r.nulls,
+        r.best_spins.to_spins(),
+        r.final_spins.to_spins(),
+    )
+}
+
+/// A sparse instance with nonzero external fields (so the `u = J·s + h`
+/// folding is exercised, not just the Max-Cut `h == 0` special case).
+fn sparse_instance(seed: u64) -> IsingModel {
+    let rng = StatelessRng::new(seed);
+    let g = generators::erdos_renyi(96, 400, &[-1, 1], &rng);
+    let mut m = MaxCut::new(g).model().clone();
+    for i in 0..m.len() {
+        let h = rng.below(8, i as u64, salt::PROBLEM, 5) as i32 - 2;
+        m.set_h(i, h);
+    }
+    m
+}
+
+/// A dense all-to-all instance: exercises the dense-row fast path
+/// (no CSR; Fenwick refreshes through the bulk lane kernel).
+fn dense_instance(seed: u64) -> IsingModel {
+    let rng = StatelessRng::new(seed);
+    MaxCut::new(generators::complete(48, &[-1, 1], &rng)).model().clone()
+}
+
+#[test]
+fn fenwick_matches_scan_across_modes_datapaths_schedules_seeds() {
+    let schedules: Vec<(&str, Schedule)> = vec![
+        // Warm plateau: rejection-free regime, incremental path dominant.
+        ("constant-warm", Schedule::Constant(2.0)),
+        // Cold plateau: Q16 underflow → W == 0 fallbacks and (for RWA-U)
+        // null transitions.
+        ("constant-cold", Schedule::Constant(0.15)),
+        // Continuous ramp: a full lane refresh every step.
+        ("geometric", Schedule::Geometric { t0: 6.0, t1: 0.05 }),
+        // Staged ramp: plateau boundaries mix bulk refreshes with
+        // incremental interior steps.
+        ("staged", Schedule::Geometric { t0: 6.0, t1: 0.05 }.quantized(8)),
+    ];
+    for (instance_name, model) in
+        [("sparse", sparse_instance(21)), ("dense", dense_instance(22))]
+    {
+        for mode in [Mode::RouletteWheel, Mode::RouletteUniformized] {
+            for dp in [Datapath::Dense, Datapath::BitPlane] {
+                for (sched_name, schedule) in &schedules {
+                    for seed in [1u64, 99] {
+                        let scan = run_signature(
+                            &model,
+                            mode,
+                            dp,
+                            SelectorKind::LinearScan,
+                            schedule.clone(),
+                            600,
+                            seed,
+                        );
+                        let fenwick = run_signature(
+                            &model,
+                            mode,
+                            dp,
+                            SelectorKind::Fenwick,
+                            schedule.clone(),
+                            600,
+                            seed,
+                        );
+                        assert_eq!(
+                            scan, fenwick,
+                            "divergence: {instance_name}/{mode:?}/{dp:?}/{sched_name}/seed {seed}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The degenerate-weight fallback (W == 0 at T = 0 in a locally optimal
+/// state) must behave identically through the Fenwick path: fall back to
+/// Mode I, reject the uphill move, leave the ground state untouched.
+#[test]
+fn frozen_fallback_is_identical_through_fenwick() {
+    let mut m = IsingModel::zeros(2);
+    m.set_j(0, 1, 1);
+    for selector in [SelectorKind::LinearScan, SelectorKind::Fenwick] {
+        let mut cfg = EngineConfig::new(Mode::RouletteWheel, 0, 13);
+        cfg.selector = selector;
+        let mut e = SnowballEngine::with_spins(&m, cfg, SpinVec::from_spins(&[1, 1]));
+        for t in 0..20 {
+            match e.step(t, 0.0) {
+                StepOutcome::FallbackRejected => {}
+                other => panic!("{selector:?}: expected FallbackRejected, got {other:?}"),
+            }
+        }
+        assert_eq!(e.energy(), -1, "{selector:?}: ground state disturbed");
+    }
+}
+
+/// Uniformized null transitions draw from W* = N and compare against W;
+/// both selectors must take the exact same null/flip decisions.
+#[test]
+fn uniformized_nulls_are_identical_through_fenwick() {
+    let model = sparse_instance(31);
+    for seed in 0..4u64 {
+        let scan = run_signature(
+            &model,
+            Mode::RouletteUniformized,
+            Datapath::Dense,
+            SelectorKind::LinearScan,
+            Schedule::Constant(0.3),
+            800,
+            seed,
+        );
+        let fenwick = run_signature(
+            &model,
+            Mode::RouletteUniformized,
+            Datapath::Dense,
+            SelectorKind::Fenwick,
+            Schedule::Constant(0.3),
+            800,
+            seed,
+        );
+        assert_eq!(scan, fenwick, "seed {seed}");
+        assert!(scan.4 > 0, "seed {seed}: expected null transitions at T = 0.3");
+    }
+}
+
+/// Step-by-step agreement (not just end-of-run): every outcome —
+/// including WHICH spin flipped — matches between the selectors, with
+/// temperatures driven externally through the public `step` API the way
+/// parallel tempering drives engines (temp changes between bursts).
+#[test]
+fn per_step_outcomes_match_under_external_temperature_control() {
+    let model = sparse_instance(41);
+    let mk = |selector| {
+        let mut cfg = EngineConfig::new(Mode::RouletteWheel, 0, 5);
+        cfg.selector = selector;
+        SnowballEngine::new(&model, cfg)
+    };
+    let mut a = mk(SelectorKind::LinearScan);
+    let mut b = mk(SelectorKind::Fenwick);
+    let temps = [2.0, 2.0, 2.0, 0.7, 0.7, 1.3, 1.3, 1.3, 1.3, 0.2];
+    for t in 0..400u64 {
+        let temp = temps[(t as usize / 40) % temps.len()];
+        let oa = a.step(t, temp);
+        let ob = b.step(t, temp);
+        assert_eq!(oa, ob, "step {t} at T = {temp}");
+        assert_eq!(a.energy(), b.energy(), "energy divergence at step {t}");
+    }
+    assert_eq!(a.spins(), b.spins(), "final configurations differ");
+    assert_eq!(a.fields(), b.fields(), "final fields differ");
+}
+
+/// Long plateau stress: thousands of incremental (dirty-lane) updates
+/// between bulk refreshes must not drift from the from-scratch lane
+/// evaluation the scan path performs every step.
+#[test]
+fn long_plateau_incremental_maintenance_does_not_drift() {
+    let model = sparse_instance(51);
+    let schedule = Schedule::Geometric { t0: 5.0, t1: 0.1 }.quantized(4);
+    for dp in [Datapath::Dense, Datapath::BitPlane] {
+        let scan = run_signature(
+            &model,
+            Mode::RouletteWheel,
+            dp,
+            SelectorKind::LinearScan,
+            schedule.clone(),
+            6_000,
+            7,
+        );
+        let fenwick = run_signature(
+            &model,
+            Mode::RouletteWheel,
+            dp,
+            SelectorKind::Fenwick,
+            schedule.clone(),
+            6_000,
+            7,
+        );
+        assert_eq!(scan, fenwick, "{dp:?}");
+    }
+}

@@ -11,7 +11,7 @@
 
 #![cfg(feature = "xla")]
 
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SnowballEngine};
+use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::graph::generators;
 use snowball::ising::SpinVec;
 use snowball::problems::MaxCut;
@@ -49,6 +49,7 @@ fn chunked_xla_run_matches_native_engine_bit_for_bit() {
     let cfg = EngineConfig {
         mode: Mode::RouletteWheel,
         datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
         schedule: schedule.clone(),
         steps: total_steps,
         seed,
