@@ -8,8 +8,17 @@
 //! the perf trajectory is machine-readable across PRs.
 //!
 //!     cargo bench --bench microbench -- [--quick|--smoke]
+//!
+//! `--load` switches to the **service load benchmark** instead: a
+//! trace of mixed-size SOLVE jobs from 100+ concurrent TCP clients is
+//! replayed against the serial and the overlapping dispatcher, and the
+//! per-stage latency quantiles (`queue_wait`, `job_wall`) land in
+//! `BENCH_service.json`:
+//!
+//!     cargo bench --bench microbench -- --load [--quick]
 
 use snowball::cli::Args;
+use snowball::coordinator::{Coordinator, Service};
 use snowball::engine::{
     Datapath, EngineConfig, Mode, ReplicaPool, Schedule, SelectorKind, SnowballEngine,
 };
@@ -97,10 +106,122 @@ fn bench_fenwick_vs_scan(n: usize, edges: usize, steps: u64) -> (f64, f64) {
     (rates[0], rates[1])
 }
 
+/// One dispatcher's numbers under the client trace.
+struct LoadRow {
+    mode: &'static str,
+    wall_ms: f64,
+    jobs_per_sec: f64,
+    queue_wait_p50_us: u64,
+    queue_wait_p99_us: u64,
+    job_wall_p99_us: u64,
+}
+
+impl LoadRow {
+    fn json(&self) -> String {
+        format!(
+            "\"{}\": {{\"wall_ms\":{:.1},\"jobs_per_sec\":{:.1},\"queue_wait_p50_us\":{},\
+             \"queue_wait_p99_us\":{},\"job_wall_p99_us\":{}}}",
+            self.mode,
+            self.wall_ms,
+            self.jobs_per_sec,
+            self.queue_wait_p50_us,
+            self.queue_wait_p99_us,
+            self.job_wall_p99_us
+        )
+    }
+}
+
+/// Replay `clients` concurrent TCP clients (mixed SOLVE sizes, one job
+/// each: SOLVE → WAIT → RESULT) against `coord` and read the stage
+/// timers back out of its metrics.
+fn run_service_trace(mode: &'static str, coord: Coordinator, clients: usize) -> LoadRow {
+    use std::io::{BufRead, BufReader, Write};
+    let metrics = coord.metrics.clone();
+    let addr = Service::bind(coord.clone(), "127.0.0.1:0").unwrap().serve_in_background();
+    let start = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let (inst, steps) = match c % 4 {
+                    0 => ("er:16:40", 1000),
+                    1 => ("er:24:80", 1200),
+                    2 => ("er:48:180", 1500),
+                    _ => ("er:96:380", 2000),
+                };
+                let mut s = std::net::TcpStream::connect(addr).unwrap();
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                writeln!(s, "SOLVE instance={inst} mode=rwa steps={steps} replicas=2 seed={c}")
+                    .unwrap();
+                r.read_line(&mut line).unwrap();
+                let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+                for req in [format!("WAIT id={id}"), format!("RESULT id={id}")] {
+                    writeln!(s, "{req}").unwrap();
+                    line.clear();
+                    r.read_line(&mut line).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let row = LoadRow {
+        mode,
+        wall_ms: wall * 1e3,
+        jobs_per_sec: clients as f64 / wall,
+        queue_wait_p50_us: metrics.quantile_us("queue_wait", 0.5).unwrap_or(0),
+        queue_wait_p99_us: metrics.quantile_us("queue_wait", 0.99).unwrap_or(0),
+        job_wall_p99_us: metrics.quantile_us("job_wall", 0.99).unwrap_or(0),
+    };
+    coord.shutdown();
+    row
+}
+
+/// `--load`: the service saturation benchmark behind `BENCH_service.json`.
+fn bench_service_load(quick: bool) {
+    let clients = if quick { 48 } else { 120 };
+    let serial = run_service_trace("serial", Coordinator::start_serial(0), clients);
+    let overlapping = run_service_trace("overlapping", Coordinator::start(0), clients);
+    for row in [&serial, &overlapping] {
+        println!(
+            "{:>12}: {} clients in {:.1} ms ({:.1} jobs/s) | queue_wait p50 {} µs p99 {} µs | \
+             job_wall p99 {} µs",
+            row.mode,
+            clients,
+            row.wall_ms,
+            row.jobs_per_sec,
+            row.queue_wait_p50_us,
+            row.queue_wait_p99_us,
+            row.job_wall_p99_us
+        );
+    }
+    let ratio = serial.queue_wait_p99_us as f64 / overlapping.queue_wait_p99_us.max(1) as f64;
+    println!("queue_wait p99: serial/overlapping = {ratio:.1}x");
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.service/v1\",\n  \"profile\": \"{}\",\n  \
+         \"clients\": {clients},\n  \"replicas_per_job\": 2,\n  {},\n  {},\n  \
+         \"queue_wait_p99_ratio\": {ratio:.2}\n}}\n",
+        if quick { "quick" } else { "full" },
+        serial.json(),
+        overlapping.json()
+    );
+    let path = "BENCH_service.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
     let smoke = args.flag("smoke");
     let quick = args.flag("quick") || smoke;
+    if args.flag("load") {
+        bench_service_load(quick);
+        return;
+    }
     let sizes: Vec<usize> = if smoke {
         vec![256]
     } else if quick {

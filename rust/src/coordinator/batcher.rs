@@ -1,11 +1,24 @@
-//! Size-class batching for the XLA backend.
+//! Size-class batching for the admission queue and the XLA backend.
 //!
-//! AOT artifacts are compiled for fixed shapes; incoming instances are
-//! padded up to the nearest artifact size (padding spins carry zero
-//! couplings and frozen fields — see `runtime::chunk`). The batcher
-//! groups queued jobs by their assigned size class so one compiled
-//! executable serves each group, and tracks padding waste so operators
-//! can see when a new artifact size would pay off.
+//! Two consumers share this planner:
+//!
+//! * The **overlapping dispatcher** (`coordinator::Coordinator`) drains
+//!   its admission queue and calls [`plan`] to group the drained jobs
+//!   by instance size class, so each class's jobs enter the replica
+//!   pool together (small jobs ride one fan-out instead of queuing
+//!   behind a large job) — see `docs/ARCHITECTURE.md`.
+//! * The **XLA backend**: AOT artifacts are compiled for fixed shapes;
+//!   incoming instances are padded up to the nearest artifact size
+//!   (padding spins carry zero couplings and frozen fields — see
+//!   `runtime::chunk`), so one compiled executable serves each group.
+//!   [`BatchPlan::padding_waste`] tells operators when a new artifact
+//!   size would pay off.
+
+/// The spin-count classes the coordinator's admission queue groups by
+/// (also sensible artifact sizes for the XLA backend). Jobs above the
+/// largest class land in [`BatchPlan::overflow`] and dispatch
+/// individually.
+pub const DEFAULT_CLASSES: [usize; 6] = [64, 256, 1024, 4096, 16_384, 65_536];
 
 /// Assignment of a job to a size class.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,7 +63,17 @@ impl BatchPlan {
     }
 }
 
-/// Assign each job size to the smallest class that fits.
+/// Assign each job size to the smallest class that fits. Every job
+/// lands in exactly one place: an [`Assignment`] to a class, or
+/// [`BatchPlan::overflow`] if no class is large enough.
+///
+/// ```
+/// use snowball::coordinator::batcher;
+///
+/// let plan = batcher::plan(&[100, 256, 300, 5000], &[256, 2048]);
+/// assert_eq!(plan.groups(), vec![(256, vec![0, 1]), (2048, vec![2])]);
+/// assert_eq!(plan.overflow, vec![3]); // larger than every class
+/// ```
 pub fn plan(job_sizes: &[usize], classes: &[usize]) -> BatchPlan {
     let mut sorted: Vec<usize> = classes.to_vec();
     sorted.sort_unstable();

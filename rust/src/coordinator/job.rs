@@ -1,4 +1,14 @@
 //! Job specifications and results for the coordinator.
+//!
+//! A [`JobSpec`] is the unit clients submit ([`Coordinator::submit`]);
+//! the dispatcher expands it into `replicas` independent work items,
+//! each seeded `StatelessRng::new(seed).child(replica)`, and folds the
+//! per-replica outcomes back into one [`JobResult`]. Because the seed
+//! derivation is a pure function of `(seed, replica)`, the result is
+//! bit-identical however the work items are scheduled — see
+//! `docs/ARCHITECTURE.md` for the determinism contract.
+//!
+//! [`Coordinator::submit`]: super::Coordinator::submit
 
 use crate::engine::{Mode, Schedule, SelectorKind};
 use crate::ising::IsingModel;

@@ -1,27 +1,56 @@
-//! Lightweight metrics: counters and latency histograms for the
+//! Lightweight metrics: counters, gauges and latency histograms for the
 //! coordinator and service (std-only; exported in a Prometheus-like text
-//! format by `render`).
+//! format by [`Metrics::render`], which is what the TCP `METRICS`
+//! command returns — see `docs/PROTOCOL.md`).
+//!
+//! The coordinator publishes per-stage job timers through this type:
+//! `queue_wait` (submit → picked up by the dispatcher), `dispatch`
+//! (picked up → handed to the pool) and `run` (handoff → job complete,
+//! including any wait in the pool's own backlog), plus gauge-style
+//! occupancy counters (`jobs_queued`,
+//! `jobs_running`, `replicas_inflight`) so pool saturation is observable
+//! while a load test runs. `docs/ARCHITECTURE.md` shows where each timer
+//! starts and stops.
+//!
+//! Concurrency: every histogram sits behind its own lock, and reads
+//! ([`Metrics::quantile_us`], [`Metrics::mean_us`]) copy a consistent
+//! snapshot (all buckets + the sample count) under that one lock before
+//! computing. Readers therefore never see a half-applied `observe` from
+//! another thread, and concurrent `observe` calls on *different*
+//! histograms never contend — the shared name→histogram map is only
+//! locked long enough to clone an `Arc`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Fixed log-scale latency histogram (microseconds, powers of two up to
 /// ~17 minutes).
 const BUCKETS: usize = 30;
 
-/// A named set of counters and histograms.
+/// A named set of counters, gauges and histograms.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    histograms: Mutex<BTreeMap<String, Histogram>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Mutex<Histogram>>>>,
 }
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct Histogram {
     counts: [u64; BUCKETS],
     total_us: u64,
     samples: u64,
+}
+
+impl Histogram {
+    /// Bucket index for a microsecond value: `us` with `i` significant
+    /// bits — i.e. `us` in `[2^(i-1), 2^i)` — lands in bucket `i`, whose
+    /// reported bound `2^i` is an exclusive upper bound; 0 lands in
+    /// bucket 0.
+    fn bucket(us: u64) -> usize {
+        (64 - us.leading_zeros() as usize).min(BUCKETS - 1)
+    }
 }
 
 impl Metrics {
@@ -36,8 +65,11 @@ impl Metrics {
 
     /// Add to a counter.
     pub fn add(&self, name: &str, v: u64) {
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string()).or_default().fetch_add(v, Ordering::Relaxed);
+        let cell = {
+            let mut map = self.counters.lock().unwrap();
+            map.entry(name.to_string()).or_default().clone()
+        };
+        cell.fetch_add(v, Ordering::Relaxed);
     }
 
     /// Read a counter.
@@ -50,58 +82,142 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Move a gauge by `delta` (gauges go up *and* down — occupancy,
+    /// queue depth, in-flight replicas).
+    pub fn gauge_add(&self, name: &str, delta: i64) {
+        let cell = {
+            let mut map = self.gauges.lock().unwrap();
+            map.entry(name.to_string()).or_default().clone()
+        };
+        cell.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Read a gauge (0 if never touched).
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
     /// Record a latency observation.
     pub fn observe(&self, name: &str, d: std::time::Duration) {
         let us = d.as_micros().min(u64::MAX as u128) as u64;
-        let bucket = (64 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        let mut map = self.histograms.lock().unwrap();
-        let h = map.entry(name.to_string()).or_default();
-        h.counts[bucket] += 1;
+        let hist = self.histogram(name);
+        let mut h = hist.lock().unwrap();
+        h.counts[Histogram::bucket(us)] += 1;
         h.total_us += us;
         h.samples += 1;
     }
 
+    /// The shared handle for one named histogram (creating it empty on
+    /// first use). The map lock is held only for this lookup, so
+    /// concurrent observers of different series never serialize.
+    fn histogram(&self, name: &str) -> Arc<Mutex<Histogram>> {
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// A consistent copy of one histogram: taken under the histogram's
+    /// own lock so buckets and `samples` always agree, even mid-`observe`
+    /// on another thread.
+    fn snapshot(&self, name: &str) -> Option<Histogram> {
+        let hist = self.histograms.lock().unwrap().get(name)?.clone();
+        let snap = hist.lock().unwrap().clone();
+        Some(snap)
+    }
+
+    /// Number of samples observed for a histogram.
+    pub fn samples(&self, name: &str) -> u64 {
+        self.snapshot(name).map(|h| h.samples).unwrap_or(0)
+    }
+
     /// Mean latency in microseconds (None if unobserved).
     pub fn mean_us(&self, name: &str) -> Option<f64> {
-        let map = self.histograms.lock().unwrap();
-        let h = map.get(name)?;
+        let h = self.snapshot(name)?;
         if h.samples == 0 {
             return None;
         }
         Some(h.total_us as f64 / h.samples as f64)
     }
 
-    /// Approximate quantile from the log buckets (upper bound of the
-    /// bucket containing the q-th sample).
+    /// Approximate quantile from the log buckets: the upper bound of the
+    /// bucket containing the q-th sample. `q` is clamped to `[0, 1]`,
+    /// and any quantile of a non-empty series targets at least the first
+    /// sample — so `quantile_us(name, 0.0)` is the (bucketed) minimum,
+    /// never a phantom 1 µs from an empty prefix of buckets. Returns
+    /// `None` for an unknown or empty series.
+    ///
+    /// The bucket walk runs on a snapshot taken under the histogram's
+    /// lock, so a concurrent `observe` can never tear the read (buckets
+    /// from one state, `samples` from another).
+    ///
+    /// ```
+    /// use snowball::coordinator::Metrics;
+    /// use std::time::Duration;
+    ///
+    /// let m = Metrics::new();
+    /// assert_eq!(m.quantile_us("lat", 0.5), None); // unobserved series
+    ///
+    /// m.observe("lat", Duration::from_micros(100));
+    /// // One sample: every quantile is that sample's bucket bound.
+    /// let p0 = m.quantile_us("lat", 0.0).unwrap();
+    /// assert_eq!(p0, 128); // 100 µs falls in the [64, 128) bucket
+    /// assert_eq!(m.quantile_us("lat", 0.5), Some(p0));
+    /// assert_eq!(m.quantile_us("lat", 1.0), Some(p0));
+    /// ```
     pub fn quantile_us(&self, name: &str, q: f64) -> Option<u64> {
-        let map = self.histograms.lock().unwrap();
-        let h = map.get(name)?;
+        let h = self.snapshot(name)?;
         if h.samples == 0 {
             return None;
         }
-        let target = (q * h.samples as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, &c) in h.counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return Some(1u64 << i);
-            }
-        }
-        Some(1u64 << (BUCKETS - 1))
+        Some(quantile_of(&h, q))
     }
 
-    /// Text rendering (for the service's METRICS command).
+    /// Text rendering (for the service's METRICS command): one line per
+    /// series — `counter <name> <v>`, `gauge <name> <v>`, and
+    /// `histogram <name> samples=<n> mean_us=<f> p50_us=<v> p99_us=<v>`.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {k} {}\n", v.load(Ordering::Relaxed)));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        let hists: Vec<(String, Arc<Mutex<Histogram>>)> = {
+            let map = self.histograms.lock().unwrap();
+            map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        for (k, hist) in hists {
+            let h = hist.lock().unwrap().clone();
             let mean = if h.samples == 0 { 0.0 } else { h.total_us as f64 / h.samples as f64 };
-            out.push_str(&format!("histogram {k} samples={} mean_us={mean:.1}\n", h.samples));
+            let (p50, p99) = (quantile_of(&h, 0.5), quantile_of(&h, 0.99));
+            out.push_str(&format!(
+                "histogram {k} samples={} mean_us={mean:.1} p50_us={p50} p99_us={p99}\n",
+                h.samples
+            ));
         }
         out
     }
+}
+
+/// Quantile on an already-snapshotted histogram (0 if empty).
+fn quantile_of(h: &Histogram, q: f64) -> u64 {
+    if h.samples == 0 {
+        return 0;
+    }
+    let target = ((q.clamp(0.0, 1.0) * h.samples as f64).ceil() as u64).max(1);
+    let mut acc = 0;
+    for (i, &c) in h.counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return 1u64 << i;
+        }
+    }
+    1u64 << (BUCKETS - 1)
 }
 
 #[cfg(test)]
@@ -119,6 +235,15 @@ mod tests {
     }
 
     #[test]
+    fn gauges_move_both_ways() {
+        let m = Metrics::new();
+        m.gauge_add("inflight", 3);
+        m.gauge_add("inflight", -2);
+        assert_eq!(m.gauge("inflight"), 1);
+        assert_eq!(m.gauge("missing"), 0);
+    }
+
+    #[test]
     fn histogram_mean_and_quantile() {
         let m = Metrics::new();
         for us in [100u64, 200, 400, 800] {
@@ -132,12 +257,69 @@ mod tests {
     }
 
     #[test]
+    fn empty_and_one_sample_quantiles() {
+        let m = Metrics::new();
+        // Unknown series: None at every q.
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(m.quantile_us("lat", q), None);
+        }
+        assert_eq!(m.mean_us("lat"), None);
+        assert_eq!(m.samples("lat"), 0);
+        // One sample far above the first bucket: q=0 must report that
+        // sample's bucket, not the phantom 1 µs bucket-0 bound the old
+        // `target = ceil(0·n) = 0` walk produced.
+        m.observe("lat", Duration::from_micros(800));
+        for q in [-1.0, 0.0, 0.5, 1.0, 2.0] {
+            assert_eq!(m.quantile_us("lat", q), Some(1024), "q={q}");
+        }
+        assert_eq!(m.samples("lat"), 1);
+    }
+
+    /// Readers racing writers must always see a consistent snapshot:
+    /// whatever interleaving happens, a quantile of a non-empty series
+    /// is one of the bucket bounds actually observed.
+    #[test]
+    fn concurrent_observe_and_quantile_snapshot() {
+        let m = Arc::new(Metrics::new());
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        m.observe("lat", Duration::from_micros(100 + (w * 500 + i) % 700));
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Some(p) = m.quantile_us("lat", 0.99) {
+                        // All samples live in [100, 800) µs → buckets 7..=10.
+                        assert!(p >= 128 && p <= 1024, "torn quantile {p}");
+                    }
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(m.samples("lat"), 2000);
+        assert_eq!(m.quantile_us("lat", 1.0), Some(1024));
+    }
+
+    #[test]
     fn render_lists_everything() {
         let m = Metrics::new();
         m.inc("a");
+        m.gauge_add("g", 2);
         m.observe("b", Duration::from_micros(10));
         let r = m.render();
         assert!(r.contains("counter a 1"));
+        assert!(r.contains("gauge g 2"));
         assert!(r.contains("histogram b samples=1"));
+        assert!(r.contains("p99_us=16"), "render should include quantiles: {r}");
     }
 }

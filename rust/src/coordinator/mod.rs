@@ -1,11 +1,37 @@
-//! L3 coordinator: job queue, replica scheduling, size batching, metrics
-//! and the TCP service (DESIGN.md §2, L3 row).
+//! L3 coordinator: size-classed admission queue, overlapping job
+//! dispatch over the shared replica pool, metrics and the TCP service
+//! (`docs/ARCHITECTURE.md` has the full layer diagram and data flow;
+//! `docs/PROTOCOL.md` specifies the wire protocol).
 //!
 //! The coordinator owns the machine: callers submit [`job::JobSpec`]s;
-//! a background dispatcher drains the queue, fans replicas over the
-//! [`scheduler::ReplicaScheduler`] thread pool, and publishes
-//! [`job::JobResult`]s. Requests never touch Python — the XLA backend
-//! executes pre-compiled artifacts via `crate::runtime`.
+//! a background dispatcher drains the queue and fans work over the
+//! [`scheduler::ReplicaScheduler`] thread pool, then publishes
+//! [`job::JobResult`]s. Two dispatch modes exist
+//! ([`DispatchMode`]):
+//!
+//! * **Overlapping** (default): the dispatcher drains *all* queued jobs
+//!   at once, groups them by instance size class ([`batcher::plan`], so
+//!   small jobs ride one fan-out together) and enqueues every replica
+//!   of every job as its own pool work item. Replicas of different jobs
+//!   interleave on the workers, so the pool never idles between jobs —
+//!   the software analogue of keeping the FPGA's replica lanes
+//!   saturated under multi-tenant load.
+//! * **Serial**: one job at a time, strict FIFO — the reference
+//!   semantics and the baseline the load harness
+//!   (`rust/tests/service_load.rs`, `BENCH_service.json`) compares
+//!   against.
+//!
+//! Determinism is unchanged by the mode: every replica stream is a pure
+//! function of `StatelessRng::new(spec.seed).child(replica)`, so a
+//! job's result vector is bit-identical under serial, overlapping, or
+//! any worker count (pinned by `rust/tests/pool_determinism.rs` and
+//! `rust/tests/service_load.rs`).
+//!
+//! Per-stage timers land in [`metrics::Metrics`] under `queue_wait`
+//! (submit → picked up), `dispatch` (picked up → handed to the pool),
+//! `run` (handoff → job complete) and `job_wall` (submit → complete),
+//! with occupancy gauges `jobs_queued` / `jobs_running` /
+//! `replicas_inflight` — all visible through the TCP `METRICS` command.
 
 pub mod batcher;
 pub mod job;
@@ -20,10 +46,54 @@ pub use service::Service;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// How the dispatcher feeds the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// One job at a time, strict FIFO; the next job starts only after
+    /// every replica of the previous one finished. Reference semantics
+    /// and the load-test baseline.
+    Serial,
+    /// Drain the whole admission queue, group jobs by size class and
+    /// enqueue every replica as an independent pool work item, so many
+    /// jobs execute concurrently over the shared pool.
+    Overlapping,
+}
+
+/// Coordinator configuration (see [`Coordinator::start_with`]).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Compute threads in the replica pool (0 = one per CPU).
+    pub workers: usize,
+    /// Dispatch strategy; [`DispatchMode::Overlapping`] unless you need
+    /// the serial baseline.
+    pub mode: DispatchMode,
+    /// Instance-size classes for admission batching
+    /// ([`batcher::DEFAULT_CLASSES`] by default).
+    pub classes: Vec<usize>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            mode: DispatchMode::Overlapping,
+            classes: batcher::DEFAULT_CLASSES.to_vec(),
+        }
+    }
+}
+
+/// A job waiting in the admission queue.
+struct Queued {
+    id: u64,
+    spec: JobSpec,
+    submitted: Instant,
+}
 
 /// Shared coordinator state.
 struct Inner {
-    queue: Mutex<VecDeque<(u64, JobSpec)>>,
+    queue: Mutex<VecDeque<Queued>>,
     queue_cv: Condvar,
     states: Mutex<HashMap<u64, JobState>>,
     /// Signalled (under the `states` lock) whenever a job reaches a
@@ -33,6 +103,10 @@ struct Inner {
     results: Mutex<HashMap<u64, JobResult>>,
     next_id: Mutex<u64>,
     shutdown: Mutex<bool>,
+    /// Jobs handed to the pool but not yet complete (overlapping mode);
+    /// `shutdown` drains this to zero before the dispatcher exits.
+    inflight: Mutex<usize>,
+    inflight_cv: Condvar,
 }
 
 /// The job coordinator. Cloneable handle; `Drop` of the last handle does
@@ -44,9 +118,24 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start a coordinator with `workers` compute threads (0 = auto) and
-    /// a background dispatcher thread.
+    /// Start a coordinator with `workers` compute threads (0 = auto),
+    /// overlapping dispatch, and a background dispatcher thread.
     pub fn start(workers: usize) -> Self {
+        Self::start_with(CoordinatorConfig { workers, ..Default::default() })
+    }
+
+    /// Start a coordinator with the serial (one-job-at-a-time) dispatcher
+    /// — the reference baseline the load harness compares against.
+    pub fn start_serial(workers: usize) -> Self {
+        Self::start_with(CoordinatorConfig {
+            workers,
+            mode: DispatchMode::Serial,
+            ..Default::default()
+        })
+    }
+
+    /// Start a coordinator with an explicit [`CoordinatorConfig`].
+    pub fn start_with(cfg: CoordinatorConfig) -> Self {
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -55,18 +144,50 @@ impl Coordinator {
             results: Mutex::new(HashMap::new()),
             next_id: Mutex::new(1),
             shutdown: Mutex::new(false),
+            inflight: Mutex::new(0),
+            inflight_cv: Condvar::new(),
         });
         let metrics = Arc::new(Metrics::new());
         let c = Self { inner: inner.clone(), metrics: metrics.clone() };
         let dispatcher = c.clone();
         std::thread::Builder::new()
             .name("snowball-dispatch".into())
-            .spawn(move || dispatcher.dispatch_loop(workers))
+            .spawn(move || dispatcher.dispatch_loop(cfg))
             .expect("spawn dispatcher");
         c
     }
 
-    /// Submit a job; returns its id immediately.
+    /// Submit a job; returns its id immediately. The job queues until
+    /// the dispatcher picks it up (time spent there is the `queue_wait`
+    /// histogram).
+    ///
+    /// ```
+    /// use snowball::coordinator::{Backend, Coordinator, JobSpec};
+    /// use snowball::engine::{Mode, Schedule, SelectorKind};
+    /// use snowball::graph::generators;
+    /// use snowball::problems::MaxCut;
+    /// use snowball::rng::StatelessRng;
+    /// use std::sync::Arc;
+    ///
+    /// let coord = Coordinator::start(2);
+    /// let rng = StatelessRng::new(1);
+    /// let problem = MaxCut::new(generators::erdos_renyi(16, 40, &[-1, 1], &rng));
+    /// let id = coord.submit(JobSpec {
+    ///     model: Arc::new(problem.model().clone()),
+    ///     label: "doc".into(),
+    ///     mode: Mode::RouletteWheel,
+    ///     selector: SelectorKind::Fenwick,
+    ///     schedule: Schedule::Geometric { t0: 4.0, t1: 0.1 },
+    ///     steps: 200,
+    ///     replicas: 2,
+    ///     seed: 7,
+    ///     target_energy: None,
+    ///     backend: Backend::Native,
+    /// });
+    /// let result = coord.wait(id).expect("job completes");
+    /// assert_eq!(result.replicas.len(), 2);
+    /// coord.shutdown();
+    /// ```
     pub fn submit(&self, spec: JobSpec) -> u64 {
         let id = {
             let mut next = self.inner.next_id.lock().unwrap();
@@ -75,9 +196,14 @@ impl Coordinator {
             id
         };
         self.inner.states.lock().unwrap().insert(id, JobState::Queued);
-        self.inner.queue.lock().unwrap().push_back((id, spec));
+        self.inner
+            .queue
+            .lock()
+            .unwrap()
+            .push_back(Queued { id, spec, submitted: Instant::now() });
         self.inner.queue_cv.notify_one();
         self.metrics.inc("jobs_submitted");
+        self.metrics.gauge_add("jobs_queued", 1);
         id
     }
 
@@ -91,10 +217,18 @@ impl Coordinator {
         self.inner.results.lock().unwrap().get(&id).cloned()
     }
 
-    /// Block until the job finishes (or fails); returns its result.
-    /// Condvar-notified by the dispatcher on every terminal transition —
-    /// no poll loop, so wait latency is not quantized to a sleep
-    /// interval.
+    /// Block until the job finishes (or fails); returns its result, or
+    /// `None` for an unknown id or a failed job. Condvar-notified on
+    /// every terminal transition — no poll loop, so wait latency is not
+    /// quantized to a sleep interval.
+    ///
+    /// ```
+    /// use snowball::coordinator::Coordinator;
+    ///
+    /// let coord = Coordinator::start(1);
+    /// assert!(coord.wait(999).is_none()); // unknown id: immediate None
+    /// coord.shutdown();
+    /// ```
     pub fn wait(&self, id: u64) -> Option<JobResult> {
         let mut states = self.inner.states.lock().unwrap();
         loop {
@@ -110,46 +244,126 @@ impl Coordinator {
         }
     }
 
-    /// Stop the dispatcher after the current job.
+    /// Stop the dispatcher: queued jobs still drain, in-flight jobs
+    /// complete, then the dispatcher thread exits.
     pub fn shutdown(&self) {
         *self.inner.shutdown.lock().unwrap() = true;
         self.inner.queue_cv.notify_all();
     }
 
-    fn dispatch_loop(&self, workers: usize) {
-        let pool = ReplicaScheduler::new(workers);
+    /// Publish a finished job: result map, terminal state, stage timers.
+    /// Runs on the dispatcher thread (serial mode) or on the pool thread
+    /// that completed the job's last replica (overlapping mode).
+    fn complete(
+        &self,
+        id: u64,
+        label: String,
+        replicas: Vec<ReplicaResult>,
+        submitted: Instant,
+        run_start: Instant,
+    ) {
+        let result = JobResult { job_id: id, label, replicas, wall: run_start.elapsed() };
+        self.metrics.observe("run", result.wall);
+        self.metrics.observe("job_wall", submitted.elapsed());
+        self.metrics.inc("jobs_done");
+        self.metrics.gauge_add("jobs_running", -1);
+        self.inner.results.lock().unwrap().insert(id, result);
+        self.inner.states.lock().unwrap().insert(id, JobState::Done);
+        self.inner.state_cv.notify_all();
+    }
+
+    fn dispatch_loop(&self, cfg: CoordinatorConfig) {
+        let scheduler = Arc::new(ReplicaScheduler::new(cfg.workers));
         loop {
-            let item = {
+            // Drain every queued job in one go: the batch is what the
+            // size-class planner groups.
+            let mut batch: Vec<Option<Queued>> = {
                 let mut q = self.inner.queue.lock().unwrap();
                 loop {
+                    if !q.is_empty() {
+                        break q.drain(..).map(Some).collect();
+                    }
                     if *self.inner.shutdown.lock().unwrap() {
+                        drop(q);
+                        // Let in-flight overlapping jobs finish before the
+                        // scheduler (and its pool) is torn down.
+                        let mut inflight = self.inner.inflight.lock().unwrap();
+                        while *inflight > 0 {
+                            inflight = self.inner.inflight_cv.wait(inflight).unwrap();
+                        }
                         return;
                     }
-                    if let Some(item) = q.pop_front() {
-                        break Some(item);
-                    }
-                    let (guard, _) =
-                        self.inner.queue_cv.wait_timeout(q, std::time::Duration::from_millis(50)).unwrap();
+                    let (guard, _) = self
+                        .inner
+                        .queue_cv
+                        .wait_timeout(q, std::time::Duration::from_millis(50))
+                        .unwrap();
                     q = guard;
                 }
             };
-            let Some((id, spec)) = item else { return };
-            self.inner.states.lock().unwrap().insert(id, JobState::Running);
-            let start = std::time::Instant::now();
-            let replicas = match spec.backend {
-                Backend::Native => pool.run_native(&spec),
+            // Dispatch order: serial keeps strict FIFO (it is the
+            // reference baseline); overlapping walks the batcher's size
+            // groups in ascending class order so each class's jobs enter
+            // the pool together, then takes the overflow.
+            let order: Vec<usize> = match cfg.mode {
+                DispatchMode::Serial => (0..batch.len()).collect(),
+                DispatchMode::Overlapping => {
+                    let sizes: Vec<usize> =
+                        batch.iter().map(|b| b.as_ref().unwrap().spec.model.len()).collect();
+                    let plan = batcher::plan(&sizes, &cfg.classes);
+                    let groups = plan.groups();
+                    self.metrics.add("batch_groups", groups.len() as u64);
+                    self.metrics.add("batch_overflow_jobs", plan.overflow.len() as u64);
+                    groups
+                        .into_iter()
+                        .flat_map(|(_, jobs)| jobs)
+                        .chain(plan.overflow.iter().copied())
+                        .collect()
+                }
+            };
+            for idx in order {
+                let Queued { id, spec, submitted } = batch[idx].take().expect("each job once");
+                let picked_up = Instant::now();
+                self.metrics.observe("queue_wait", submitted.elapsed());
+                self.metrics.gauge_add("jobs_queued", -1);
+                self.inner.states.lock().unwrap().insert(id, JobState::Running);
+                self.metrics.gauge_add("jobs_running", 1);
                 // The XLA backend is driven synchronously by callers that
                 // own a runtime (examples/k2000_tts.rs); queued jobs fall
                 // back to native execution so the service never needs a
                 // PJRT client it might not have.
-                Backend::Xla => pool.run_native(&spec),
-            };
-            let result = JobResult { job_id: id, label: spec.label.clone(), replicas, wall: start.elapsed() };
-            self.metrics.observe("job_wall", result.wall);
-            self.metrics.inc("jobs_done");
-            self.inner.results.lock().unwrap().insert(id, result);
-            self.inner.states.lock().unwrap().insert(id, JobState::Done);
-            self.inner.state_cv.notify_all();
+                match cfg.mode {
+                    DispatchMode::Serial => {
+                        self.metrics.observe("dispatch", picked_up.elapsed());
+                        let run_start = Instant::now();
+                        let replicas = scheduler.run_native(&spec);
+                        self.complete(id, spec.label.clone(), replicas, submitted, run_start);
+                    }
+                    DispatchMode::Overlapping => {
+                        *self.inner.inflight.lock().unwrap() += 1;
+                        self.metrics.gauge_add("replicas_inflight", spec.replicas as i64);
+                        let label = spec.label.clone();
+                        let this = self.clone();
+                        let occupancy = self.metrics.clone();
+                        // Observe before handing off: a tiny job may
+                        // complete (and wake waiters) the moment it is
+                        // spawned, and by then its dispatch sample must
+                        // already be visible.
+                        self.metrics.observe("dispatch", picked_up.elapsed());
+                        let run_start = Instant::now();
+                        scheduler.spawn_native(
+                            Arc::new(spec),
+                            move || occupancy.gauge_add("replicas_inflight", -1),
+                            move |replicas| {
+                                this.complete(id, label, replicas, submitted, run_start);
+                                let mut inflight = this.inner.inflight.lock().unwrap();
+                                *inflight -= 1;
+                                this.inner.inflight_cv.notify_all();
+                            },
+                        );
+                    }
+                }
+            }
         }
     }
 }
@@ -232,5 +446,56 @@ mod tests {
         assert!(c.result(999).is_none());
         assert!(c.wait(999).is_none());
         c.shutdown();
+    }
+
+    /// Serial and overlapping dispatch must produce identical per-job
+    /// results (same replicas, energies, flips) for the same specs.
+    #[test]
+    fn overlapping_matches_serial_dispatch_results() {
+        let key = |r: &JobResult| -> Vec<(u32, i64, u64)> {
+            r.replicas.iter().map(|p| (p.replica, p.best_energy, p.flips)).collect()
+        };
+        let run = |c: Coordinator| -> Vec<Vec<(u32, i64, u64)>> {
+            let ids: Vec<u64> = (0..5).map(|k| c.submit(spec(&format!("j{k}"), 50 + k))).collect();
+            let out = ids.iter().map(|&id| key(&c.wait(id).unwrap())).collect();
+            c.shutdown();
+            out
+        };
+        let serial = run(Coordinator::start_serial(3));
+        let overlapping = run(Coordinator::start(3));
+        assert_eq!(serial, overlapping, "dispatch mode must not change results");
+    }
+
+    /// The per-stage timers and occupancy gauges must be live after a
+    /// batch of jobs drains, and occupancy must return to zero.
+    #[test]
+    fn stage_timers_and_gauges_are_published() {
+        let c = Coordinator::start(2);
+        let ids: Vec<u64> = (0..4).map(|k| c.submit(spec(&format!("m{k}"), 80 + k))).collect();
+        for id in ids {
+            c.wait(id).unwrap();
+        }
+        for series in ["queue_wait", "dispatch", "run", "job_wall"] {
+            assert_eq!(c.metrics.samples(series), 4, "{series} should have one sample per job");
+            assert!(c.metrics.quantile_us(series, 0.99).is_some());
+        }
+        assert_eq!(c.metrics.get("jobs_done"), 4);
+        assert_eq!(c.metrics.gauge("jobs_queued"), 0);
+        assert_eq!(c.metrics.gauge("jobs_running"), 0);
+        assert_eq!(c.metrics.gauge("replicas_inflight"), 0);
+        c.shutdown();
+    }
+
+    /// `shutdown` must drain queued + in-flight jobs before the
+    /// dispatcher (and its pool) goes away: anything submitted before
+    /// the call still completes.
+    #[test]
+    fn shutdown_drains_inflight_jobs() {
+        let c = Coordinator::start(2);
+        let ids: Vec<u64> = (0..6).map(|k| c.submit(spec(&format!("d{k}"), 200 + k))).collect();
+        c.shutdown();
+        for id in ids {
+            assert!(c.wait(id).is_some(), "job {id} must survive shutdown draining");
+        }
     }
 }

@@ -1,16 +1,66 @@
-//! Replica scheduler: fans a job's independent replicas out over the
-//! shared [`ReplicaPool`] (rayon workers; the service layer uses one
-//! thread per connection and this pool for compute).
+//! Replica scheduler: turns a job into independently schedulable
+//! replica work items on the shared [`ReplicaPool`] (rayon workers; the
+//! service layer uses one thread per connection and this pool for
+//! compute).
 //!
 //! Replicas are embarrassingly parallel: each gets a decorrelated child
 //! seed from the job seed (stateless RNG `child`, paper §IV-B3d) so the
 //! result set is identical regardless of worker count or interleaving —
-//! asserted by `deterministic_across_worker_counts`.
+//! asserted by `deterministic_across_worker_counts` and by the
+//! cross-job tests in `rust/tests/pool_determinism.rs`.
+//!
+//! Two execution shapes share one per-replica body ([`run_replica`]):
+//!
+//! * [`ReplicaScheduler::run_native`] — blocking fan-out of one job
+//!   (`ReplicaPool::run_indexed`); the serial dispatcher and direct
+//!   callers (benches, TTS harness) use this.
+//! * [`ReplicaScheduler::spawn_native`] — every replica becomes one
+//!   fire-and-forget pool item and the call returns immediately; a
+//!   shared collector assembles results **by replica index** and the
+//!   last replica to finish invokes the completion callback. This is
+//!   what lets the coordinator overlap many jobs on one pool: replicas
+//!   of job B start the moment a worker frees up, even while job A is
+//!   still running (see `docs/ARCHITECTURE.md`).
 
 use super::job::{JobSpec, ReplicaResult};
 use crate::engine::pool::ReplicaPool;
 use crate::engine::{Datapath, EngineConfig, SnowballEngine};
 use crate::rng::StatelessRng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Run one replica of `spec`: the per-replica body shared by the
+/// blocking and the overlapping path, so the two are bit-identical by
+/// construction (same `EngineConfig`, same `child(r)` seed derivation).
+pub fn run_replica(spec: &JobSpec, r: usize) -> ReplicaResult {
+    let root = StatelessRng::new(spec.seed);
+    let cfg = EngineConfig {
+        mode: spec.mode,
+        datapath: Datapath::Dense,
+        selector: spec.selector,
+        schedule: spec.schedule.clone(),
+        steps: spec.steps,
+        seed: root.child(r as u64).seed(),
+        planes: None,
+        trace_stride: 0,
+    };
+    let mut engine = SnowballEngine::new(&spec.model, cfg);
+    let run = engine.run();
+    ReplicaResult {
+        replica: r as u32,
+        best_energy: run.best_energy,
+        flips: run.flips,
+        wall: run.wall,
+    }
+}
+
+/// Collects replica results by index; the closing replica hands the
+/// completed, index-ordered vector to the job's completion callback.
+struct Collector {
+    slots: Mutex<Vec<Option<ReplicaResult>>>,
+    remaining: AtomicUsize,
+    on_done: Mutex<Option<Box<dyn FnOnce(Vec<ReplicaResult>) + Send>>>,
+}
 
 /// Replica scheduler over the shared worker pool.
 pub struct ReplicaScheduler {
@@ -35,29 +85,50 @@ impl ReplicaScheduler {
     }
 
     /// Run all replicas of `spec` on the native engine, returning results
-    /// ordered by replica index.
+    /// ordered by replica index. Blocks until the whole job is done.
     pub fn run_native(&self, spec: &JobSpec) -> Vec<ReplicaResult> {
-        let root = StatelessRng::new(spec.seed);
-        self.pool.run_indexed(spec.replicas as usize, |r| {
-            let cfg = EngineConfig {
-                mode: spec.mode,
-                datapath: Datapath::Dense,
-                selector: spec.selector,
-                schedule: spec.schedule.clone(),
-                steps: spec.steps,
-                seed: root.child(r as u64).seed(),
-                planes: None,
-                trace_stride: 0,
-            };
-            let mut engine = SnowballEngine::new(&spec.model, cfg);
-            let run = engine.run();
-            ReplicaResult {
-                replica: r as u32,
-                best_energy: run.best_energy,
-                flips: run.flips,
-                wall: run.wall,
-            }
-        })
+        self.pool.run_indexed(spec.replicas as usize, |r| run_replica(spec, r))
+    }
+
+    /// Enqueue every replica of `spec` as its own pool work item and
+    /// return immediately; `on_done` runs (on the pool thread that
+    /// finishes last) with the results in replica-index order —
+    /// bit-identical to [`run_native`](Self::run_native) because both
+    /// share [`run_replica`]. `on_replica_done` fires after each replica
+    /// completes (occupancy accounting).
+    pub fn spawn_native<F, G>(&self, spec: Arc<JobSpec>, on_replica_done: G, on_done: F)
+    where
+        F: FnOnce(Vec<ReplicaResult>) + Send + 'static,
+        G: Fn() + Send + Sync + 'static,
+    {
+        let n = spec.replicas as usize;
+        if n == 0 {
+            on_done(Vec::new());
+            return;
+        }
+        let collector = Arc::new(Collector {
+            slots: Mutex::new(vec![None; n]),
+            remaining: AtomicUsize::new(n),
+            on_done: Mutex::new(Some(Box::new(on_done))),
+        });
+        let on_replica_done = Arc::new(on_replica_done);
+        for r in 0..n {
+            let spec = spec.clone();
+            let collector = collector.clone();
+            let on_replica_done = on_replica_done.clone();
+            self.pool.spawn(move || {
+                let result = run_replica(&spec, r);
+                collector.slots.lock().unwrap()[r] = Some(result);
+                on_replica_done();
+                // AcqRel: the closing thread must see every slot write.
+                if collector.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let slots = std::mem::take(&mut *collector.slots.lock().unwrap());
+                    let done =
+                        collector.on_done.lock().unwrap().take().expect("on_done fires once");
+                    done(slots.into_iter().map(|s| s.expect("all slots filled")).collect());
+                }
+            });
+        }
     }
 }
 
@@ -111,5 +182,60 @@ mod tests {
         // differently on a frustrated instance with this few steps).
         let first = out[0].best_energy;
         assert!(out.iter().any(|r| r.best_energy != first || r.flips != out[0].flips));
+    }
+
+    /// The overlapping path must produce the exact result vector of the
+    /// blocking path — same order, same energies, same flip counts.
+    #[test]
+    fn spawn_native_matches_run_native() {
+        let s = ReplicaScheduler::new(4);
+        let spec = Arc::new(spec(9));
+        let blocking = s.run_native(&spec);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ticks = Arc::new(AtomicUsize::new(0));
+        let t = ticks.clone();
+        s.spawn_native(
+            spec.clone(),
+            move || {
+                t.fetch_add(1, Ordering::Relaxed);
+            },
+            move |results| {
+                let _ = tx.send(results);
+            },
+        );
+        let spawned = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(ticks.load(Ordering::Relaxed), 9, "one tick per replica");
+        let key = |v: &[ReplicaResult]| -> Vec<(u32, i64, u64)> {
+            v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
+        };
+        assert_eq!(key(&blocking), key(&spawned));
+    }
+
+    /// Several jobs spawned back-to-back interleave on the pool but
+    /// still each assemble their own, correctly ordered result set.
+    #[test]
+    fn overlapping_jobs_stay_isolated() {
+        let s = ReplicaScheduler::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for k in 0..5u64 {
+            let mut sp = spec(4);
+            sp.seed = 100 + k;
+            sp.label = format!("job-{k}");
+            let tx = tx.clone();
+            s.spawn_native(Arc::new(sp), || {}, move |results| {
+                let _ = tx.send((k, results));
+            });
+        }
+        drop(tx);
+        let serial = ReplicaScheduler::new(1);
+        for (k, results) in rx.iter() {
+            let mut want = spec(4);
+            want.seed = 100 + k;
+            let want = serial.run_native(&want);
+            let key = |v: &[ReplicaResult]| -> Vec<(u32, i64, u64)> {
+                v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
+            };
+            assert_eq!(key(&results), key(&want), "job {k} diverged under overlap");
+        }
     }
 }

@@ -1,30 +1,20 @@
 //! Line-oriented TCP service over the coordinator (the "host software"
 //! face of the Ising machine).
 //!
-//! Protocol (one request per line, one reply per line):
+//! **The full wire protocol is specified in `docs/PROTOCOL.md`** —
+//! every command (`PING`/`SOLVE`/`STATUS`/`WAIT`/`RESULT`/`METRICS`/
+//! `QUIT`), every `ERR` form, and the `selector=`/`schedule=` syntax.
+//! In one breath: one request per line, one reply per line (`METRICS`
+//! is multi-line, terminated by `END`); `SOLVE` returns `JOB id=<u64>`
+//! immediately and the job runs asynchronously on the coordinator;
+//! `WAIT id=` blocks (condvar-notified, no client poll loop) until the
+//! job is terminal; errors reply `ERR <message>`.
 //!
-//! ```text
-//! PING
-//!   -> PONG
-//! SOLVE instance=<G6|...|K2000|er:<n>:<m>> mode=<rsa|rwa> steps=<u64>
-//!       replicas=<u32> seed=<u64> [target=<i64>] [schedule=<kind:t0:t1[:stages]>]
-//!       [selector=<scan|fenwick>]
-//!   -> JOB id=<u64>
-//! STATUS id=<u64>
-//!   -> STATE id=<u64> state=<queued|running|done|failed>
-//! WAIT id=<u64>
-//!   -> STATE id=<u64> state=<done|failed>   (blocks until terminal;
-//!      condvar-notified, so no client-side STATUS poll loop is needed)
-//! RESULT id=<u64>
-//!   -> RESULT id=<u64> label=.. best=<i64> replicas=<n> pa=<f> ta_ms=<f> tts99_ms=<f|inf>
-//! METRICS
-//!   -> (multi-line) counter/histogram dump, terminated by "END"
-//! QUIT
-//!   -> BYE (closes the connection)
-//! ```
-//!
-//! Errors reply `ERR <message>`. One thread per connection; compute runs
-//! on the coordinator pool, so slow jobs never block the listener.
+//! One thread per connection; compute runs on the coordinator pool
+//! (overlapping dispatch by default, so many clients' jobs execute
+//! concurrently), which means slow jobs never block the listener — the
+//! load harness in `rust/tests/service_load.rs` drives 100+ concurrent
+//! clients through this path.
 
 use super::{Backend, Coordinator, JobSpec, JobState};
 use crate::engine::{Mode, Schedule, SelectorKind};

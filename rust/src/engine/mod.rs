@@ -1,6 +1,13 @@
 //! The Snowball engine (paper §IV): dual-mode MCMC spin selection,
 //! asynchronous single-spin updates, PWL Glauber LUT and annealing
 //! schedules.
+//!
+//! Single-replica execution lives in [`SnowballEngine`];
+//! multi-replica fan-out (blocking `run_indexed` or fire-and-forget
+//! `spawn`, both deterministic by the stateless-RNG contract) goes
+//! through [`pool::ReplicaPool`] — the layer the coordinator's
+//! overlapping dispatcher saturates. `docs/ARCHITECTURE.md` maps the
+//! whole stack.
 
 pub mod diagnostics;
 pub mod lut;

@@ -65,6 +65,23 @@ impl ReplicaPool {
         self.pool.install(|| (0..count).into_par_iter().map(|i| f(i)).collect())
     }
 
+    /// Enqueue one fire-and-forget work item on the pool and return
+    /// immediately. This is the primitive behind the coordinator's
+    /// *overlapping* dispatch: each replica of each job becomes one
+    /// spawned item, so replicas of different jobs interleave on the
+    /// same workers and the pool never idles between jobs.
+    ///
+    /// Determinism is unaffected: a spawned closure must still be a pure
+    /// function of the state it captures (its job seed + replica index),
+    /// and whoever assembles the results is responsible for ordering
+    /// them by index, never by completion time.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        self.pool.spawn(f);
+    }
+
     /// Apply `f(index, &mut item)` to every element of `items` in
     /// parallel. Used for in-place replica bursts (parallel tempering)
     /// where each worker owns exactly one element — no element is ever
@@ -113,6 +130,22 @@ mod tests {
         pool.for_each_mut(&mut items, |i, v| *v += i as u64 + 1);
         let expect: Vec<u64> = (0..40).map(|i| i + 1).collect();
         assert_eq!(items, expect);
+    }
+
+    #[test]
+    fn spawned_items_all_execute() {
+        let pool = ReplicaPool::new(3);
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        for i in 0..32 {
+            let tx = tx.clone();
+            pool.spawn(move || {
+                let _ = tx.send(i);
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..32).collect::<Vec<_>>());
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //! * [`baselines`] — every comparator of Tables II/III.
 //! * [`tts`] — time-to-solution statistics (Eq. 32).
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts.
-//! * [`coordinator`] — job scheduling, replica batching, TCP service.
+//! * [`coordinator`] — size-classed admission queue, overlapping job
+//!   dispatch over the shared replica pool, metrics, TCP service
+//!   (`docs/ARCHITECTURE.md`, `docs/PROTOCOL.md`).
 //! * [`harness`] — regeneration of every paper table and figure.
 
 pub mod baselines;

@@ -76,10 +76,11 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
     }
 }
 
-/// Concurrent submission from many client threads: every job's result
-/// must equal a serial single-worker reference run of the same spec —
-/// i.e. the pool + queue layer routes nothing to the wrong job and
-/// perturbs no replica stream.
+/// Concurrent submission from many client threads to the (default)
+/// overlapping dispatcher: every job's result must equal a serial
+/// single-worker reference run of the same spec — i.e. the queue, the
+/// size-class batcher and the per-replica work items route nothing to
+/// the wrong job and perturb no replica stream.
 #[test]
 fn concurrent_jobs_match_serial_reference_results() {
     let coord = Coordinator::start(4);
@@ -109,6 +110,40 @@ fn concurrent_jobs_match_serial_reference_results() {
         assert_eq!(got, want, "job {k}: parallel results diverged from serial reference");
     }
     coord.shutdown();
+}
+
+/// The dispatch mode is invisible in results: a burst of mixed-size
+/// jobs through the serial dispatcher and through the overlapping
+/// dispatcher produces identical replica tuples job-for-job.
+#[test]
+fn overlapping_dispatcher_is_bit_identical_to_serial_dispatcher() {
+    let specs: Vec<JobSpec> = (0..8u64)
+        .map(|k| {
+            let mut s = job(&format!("mix-{k}"), 300 + k, 3);
+            // Mixed sizes so the batcher forms several class groups.
+            if k % 2 == 1 {
+                let rng = StatelessRng::new(300 + k);
+                let p = MaxCut::new(generators::erdos_renyi(80, 400, &[-1, 1], &rng));
+                s.model = Arc::new(p.model().clone());
+            }
+            s
+        })
+        .collect();
+    let run = |coord: Coordinator| -> Vec<Vec<(u32, i64, u64)>> {
+        let ids: Vec<u64> = specs.iter().map(|s| coord.submit(s.clone())).collect();
+        let out = ids
+            .iter()
+            .map(|&id| {
+                let r = coord.wait(id).expect("job finishes");
+                r.replicas.iter().map(|p| (p.replica, p.best_energy, p.flips)).collect()
+            })
+            .collect();
+        coord.shutdown();
+        out
+    };
+    let serial = run(Coordinator::start_serial(3));
+    let overlapping = run(Coordinator::start(3));
+    assert_eq!(serial, overlapping, "dispatch mode leaked into results");
 }
 
 /// The scheduler's result ordering and seeds are index-keyed, so worker

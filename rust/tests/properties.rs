@@ -2,11 +2,87 @@
 //! `testutil::Cases` helper — the offline stand-in for proptest).
 
 use snowball::bitplane::BitPlanes;
+use snowball::coordinator::batcher;
 use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use snowball::ising::{IsingModel, SpinVec};
 use snowball::problems::quantize;
 use snowball::rng::salt;
 use snowball::testutil::{gen, Cases};
+
+/// The batch planner partitions: every job appears in exactly one group
+/// (or overflow), every assignment respects its class capacity and is
+/// the *smallest* fitting class, and overflow jobs fit no class.
+#[test]
+fn prop_batch_plan_partitions_jobs() {
+    Cases::new(0xB1, 80).run(|rng, size| {
+        let jobs = size * 2;
+        let sizes: Vec<usize> =
+            (0..jobs).map(|j| 1 + rng.below(50, j as u64, salt::PROBLEM, 3000) as usize).collect();
+        let mut classes: Vec<usize> = (0..(1 + size / 8))
+            .map(|k| 1 + rng.below(51, k as u64, salt::PROBLEM, 2500) as usize)
+            .collect();
+        classes.push(64); // at least one plausible class
+        let plan = batcher::plan(&sizes, &classes);
+
+        // Exactly-once partition.
+        let mut seen = vec![0u32; jobs];
+        for a in &plan.assignments {
+            seen[a.job] += 1;
+        }
+        for &j in &plan.overflow {
+            seen[j] += 1;
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!("jobs not partitioned exactly once: {seen:?}"));
+        }
+        // Groups list the same assignments, each under its class.
+        let grouped: usize = plan.groups().iter().map(|(_, g)| g.len()).sum();
+        if grouped != plan.assignments.len() {
+            return Err("groups() dropped or duplicated an assignment".into());
+        }
+        // Capacity + smallest-fit, and overflow really fits nowhere.
+        let max_class = classes.iter().copied().max().unwrap();
+        for a in &plan.assignments {
+            if sizes[a.job] > a.class_n {
+                let (j, s) = (a.job, sizes[a.job]);
+                return Err(format!("job {j} (size {s}) over class {}", a.class_n));
+            }
+            if classes.iter().any(|&c| c >= sizes[a.job] && c < a.class_n) {
+                return Err(format!("job {} not in smallest fitting class", a.job));
+            }
+        }
+        for &j in &plan.overflow {
+            if sizes[j] <= max_class {
+                return Err(format!("job {j} overflowed but fits class {max_class}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exact-fit sizes waste nothing: when every job size is itself a class,
+/// `padding_waste` is exactly 0.
+#[test]
+fn prop_batch_padding_waste_zero_for_exact_fits() {
+    Cases::new(0xB2, 60).run(|rng, size| {
+        let classes: Vec<usize> = (0..size.max(1))
+            .map(|k| 1 + rng.below(52, k as u64, salt::PROBLEM, 4000) as usize)
+            .collect();
+        // Jobs drawn *from* the class list → every assignment is exact.
+        let sizes: Vec<usize> = (0..size * 2)
+            .map(|j| classes[rng.below(53, j as u64, salt::PROBLEM, classes.len() as u32) as usize])
+            .collect();
+        let plan = batcher::plan(&sizes, &classes);
+        if !plan.overflow.is_empty() {
+            return Err("exact-fit jobs cannot overflow".into());
+        }
+        let waste = plan.padding_waste(&sizes);
+        if waste != 0.0 {
+            return Err(format!("exact fits must waste nothing, got {waste}"));
+        }
+        Ok(())
+    });
+}
 
 /// ΔE from the local field equals the brute-force energy difference, for
 /// arbitrary models, configurations and flip targets.
