@@ -64,6 +64,7 @@ fn main() {
                 seed,
                 planes: None,
                 trace_stride: 0,
+                shards: 1,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let start = std::time::Instant::now();

@@ -16,11 +16,19 @@
 //! `BENCH_service.json`:
 //!
 //!     cargo bench --bench microbench -- --load [--quick]
+//!
+//! `--shards` switches to the **sharded-engine benchmark**: the
+//! single-lane engine vs the asynchronous sharded engine on a large
+//! all-to-all instance (N = 4096), after a virtual-time parity guard,
+//! writing `BENCH_shard.json`:
+//!
+//!     cargo bench --bench microbench -- --shards [--quick]
 
 use snowball::cli::Args;
 use snowball::coordinator::{Coordinator, Service};
 use snowball::engine::{
-    Datapath, EngineConfig, Mode, ReplicaPool, Schedule, SelectorKind, SnowballEngine,
+    Datapath, EngineConfig, MergeMode, Mode, ReplicaPool, Schedule, SelectorKind, ShardedEngine,
+    SnowballEngine,
 };
 use snowball::graph::generators;
 use snowball::harness as hx;
@@ -59,6 +67,7 @@ fn run_engine(p: &MaxCut, mode: Mode, dp: Datapath, sel: SelectorKind, steps: u6
         seed: 3,
         planes: None,
         trace_stride: 0,
+        shards: 1,
     };
     let mut e = SnowballEngine::new(p.model(), cfg);
     let start = std::time::Instant::now();
@@ -94,6 +103,7 @@ fn bench_fenwick_vs_scan(n: usize, edges: usize, steps: u64) -> (f64, f64) {
             seed: 11,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let start = std::time::Instant::now();
@@ -214,12 +224,125 @@ fn bench_service_load(quick: bool) {
     }
 }
 
+/// `--shards`: single-lane vs asynchronous sharded engine on a large
+/// all-to-all instance, behind a virtual-time parity guard — the
+/// numbers behind `BENCH_shard.json`.
+fn bench_shards(quick: bool) {
+    // Parity guard first: the deterministic merge mode must reproduce
+    // the single-shard engine bit for bit, or the speedup numbers
+    // compare diverging work and the benchmark is void.
+    {
+        let rng = StatelessRng::new(17);
+        let p = MaxCut::new(generators::erdos_renyi(96, 400, &[-1, 1], &rng));
+        let cfg = |shards: usize| EngineConfig {
+            mode: Mode::RouletteWheel,
+            datapath: Datapath::Dense,
+            selector: SelectorKind::Fenwick,
+            schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
+            steps: 2_000,
+            seed: 23,
+            planes: None,
+            trace_stride: 0,
+            shards,
+        };
+        let want = SnowballEngine::new(p.model(), cfg(1)).run();
+        let got = ShardedEngine::new(p.model(), cfg(5), MergeMode::VirtualTime).run();
+        assert_eq!(
+            (got.best_energy, got.final_energy, got.flips, got.fallbacks, got.nulls),
+            (want.best_energy, want.final_energy, want.flips, want.fallbacks, want.nulls),
+            "virtual-time merge diverged from the single-shard engine — benchmark void"
+        );
+        println!("virtual-time parity: OK (5 shards bit-identical to 1)");
+    }
+
+    // Throughput: N = 4096 all-to-all ±1 (the paper's workload shape —
+    // every flip touches every lane, so the single-lane engine is
+    // Θ(N)/step and sharding splits exactly that).
+    let n = 4096usize;
+    let steps: u64 = if quick { 16_000 } else { 48_000 };
+    let rng = StatelessRng::new(5);
+    let g = generators::complete(n, &[-1, 1], &rng);
+    let p = MaxCut::new(g);
+    let mk_cfg = |shards: usize| EngineConfig {
+        mode: Mode::RouletteWheel,
+        datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        steps,
+        seed: 7,
+        planes: None,
+        trace_stride: 0,
+        shards,
+    };
+    let single = {
+        let mut e = SnowballEngine::new(p.model(), mk_cfg(1));
+        let start = std::time::Instant::now();
+        let r = e.run();
+        let sps = steps as f64 / start.elapsed().as_secs_f64();
+        println!(
+            "single lane : N={n} {steps} steps | {sps:>12.0} steps/s | best {}",
+            r.best_energy
+        );
+        (sps, r.best_energy)
+    };
+    let cores = ReplicaPool::auto_workers();
+    let mut shard_rows = Vec::new();
+    for s in [2usize, 4, 8] {
+        if s > cores {
+            println!("{s:>2} lanes    : skipped ({cores} cores)");
+            continue;
+        }
+        let mut e = ShardedEngine::new(p.model(), mk_cfg(s), MergeMode::Async);
+        let start = std::time::Instant::now();
+        let r = e.run();
+        let sps = r.steps as f64 / start.elapsed().as_secs_f64();
+        let speedup = sps / single.0;
+        println!(
+            "{s:>2} lanes    : N={n} {} steps | {sps:>12.0} steps/s | best {} | {speedup:.2}x",
+            r.steps, r.best_energy
+        );
+        shard_rows.push(format!(
+            "{{\"shards\":{s},\"steps_per_sec\":{sps:.1},\"speedup\":{speedup:.3},\
+             \"best_energy\":{}}}",
+            r.best_energy
+        ));
+    }
+    // Cycle-model companion (hwsim): what the FPGA's asynchronous
+    // update units would gain at the same geometry.
+    let hw = snowball::hwsim::HwModel::default();
+    let geom = snowball::hwsim::Geometry { n, planes: 1 };
+    let model_speedup_8 = hw.sharded_roulette_round_cycles(geom, 1) as f64
+        / (hw.sharded_roulette_round_cycles(geom, 8) as f64 / 8.0);
+    println!("cycle model : 8 async update units = {model_speedup_8:.1}x steps/cycle");
+
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.shard/v1\",\n  \"profile\": \"{}\",\n  \
+         \"n\": {n},\n  \"steps\": {steps},\n  \"virtual_parity\": true,\n  \
+         \"single_steps_per_sec\": {:.1},\n  \"single_best_energy\": {},\n  \
+         \"cores\": {cores},\n  \"sharded\": [\n    {}\n  ],\n  \
+         \"hwsim_speedup_8_lanes\": {model_speedup_8:.2}\n}}\n",
+        if quick { "quick" } else { "full" },
+        single.0,
+        single.1,
+        shard_rows.join(",\n    ")
+    );
+    let path = "BENCH_shard.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
     let smoke = args.flag("smoke");
     let quick = args.flag("quick") || smoke;
     if args.flag("load") {
         bench_service_load(quick);
+        return;
+    }
+    if args.flag("shards") {
+        bench_shards(quick);
         return;
     }
     let sizes: Vec<usize> = if smoke {
@@ -311,6 +434,7 @@ fn main() {
                     seed: root.child(i as u64).seed(),
                     planes: None,
                     trace_stride: 0,
+                    shards: 1,
                 };
                 SnowballEngine::new(p.model(), cfg).run().best_energy
             });

@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         seed: 2,
         planes: None,
         trace_stride: 0,
+        shards: 1,
     };
     let mut engine = SnowballEngine::new(problem.model(), cfg);
     let checkpoints = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];

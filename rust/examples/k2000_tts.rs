@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             replicas,
             seed,
             target_energy: Some(target_energy),
+            shards: 1,
             backend: Backend::Native,
         });
         let result = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;

@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut engine = SnowballEngine::new(problem.model(), cfg);
         let run = engine.run();

@@ -77,6 +77,7 @@ impl Solver for SnowballSolver {
             seed,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut engine = SnowballEngine::new(model, cfg);
         let r = engine.run();

@@ -153,6 +153,7 @@ impl Config {
             replicas: self.i64_or("job", "replicas", 8) as u32,
             seed: self.i64_or("job", "seed", seed_default as i64) as u64,
             target: self.get("job", "target").and_then(|v| v.as_i64()),
+            shards: self.i64_or("job", "shards", 1) as u32,
         })
     }
 }
@@ -168,6 +169,9 @@ pub struct JobConfig {
     pub replicas: u32,
     pub seed: u64,
     pub target: Option<i64>,
+    /// Shard lanes per replica (`1` = classic engine, `0` = auto,
+    /// `>1` = async sharded lanes — see `crate::engine::shard`).
+    pub shards: u32,
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -220,6 +224,9 @@ tolerance = 0.25
         assert_eq!(j.instance, "K2000");
         assert_eq!(j.replicas, 16);
         assert_eq!(j.target, Some(-65000));
+        assert_eq!(j.shards, 1, "sharding defaults off");
+        let cs = Config::parse("[job]\nshards = 8\n").unwrap();
+        assert_eq!(cs.job(1).unwrap().shards, 8);
         assert!(matches!(j.mode, crate::engine::Mode::RouletteWheel));
         // Defaults to the Fenwick selection path; `selector = "scan"`
         // switches to the legacy prefix scan.

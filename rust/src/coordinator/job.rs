@@ -32,6 +32,13 @@ pub struct JobSpec {
     pub seed: u64,
     /// Success threshold: a replica succeeds if `best_energy <= target`.
     pub target_energy: Option<i64>,
+    /// Within-instance shard lanes per replica: `1` = the classic
+    /// single-lane engine (bit-reproducible, the default), `>1` = run
+    /// each replica as that many asynchronous shard lanes
+    /// ([`crate::engine::ShardedEngine`]; faster on large instances,
+    /// NOT bit-reproducible across runs), `0` = let the scheduler pick
+    /// by instance size ([`crate::engine::shard::plan_parallelism`]).
+    pub shards: u32,
     /// Execution backend for this job.
     pub backend: Backend,
 }

@@ -27,6 +27,23 @@
 //! any worker count (pinned by `rust/tests/pool_determinism.rs` and
 //! `rust/tests/service_load.rs`).
 //!
+//! **Admission control**: [`CoordinatorConfig::max_inflight_replicas`]
+//! caps the in-flight replica *units* — each job weighs
+//! `replicas × effective shard lanes`, so a sharded job is charged for
+//! every thread it will occupy. The dispatcher *parks* (defers
+//! dispatching, visible in the `dispatch` timer) while the cap is
+//! reached, so a burst of huge jobs drains the pool before the next
+//! one enters instead of starving small jobs for unbounded time; with
+//! [`CoordinatorConfig::reject_when_saturated`] the service-facing
+//! [`Coordinator::try_submit`] additionally refuses new work outright
+//! (`ERR saturated …` on the wire) while the committed replica count
+//! exceeds the cap.
+//!
+//! **Failure path**: replica panics are caught at the scheduler's work
+//! item boundary; the job flips to [`JobState::Failed`] (message
+//! preserved), its waiters are woken, and the dispatcher, the pool and
+//! every other job carry on.
+//!
 //! Per-stage timers land in [`metrics::Metrics`] under `queue_wait`
 //! (submit → picked up), `dispatch` (picked up → handed to the pool),
 //! `run` (handoff → job complete) and `job_wall` (submit → complete),
@@ -72,6 +89,16 @@ pub struct CoordinatorConfig {
     /// Instance-size classes for admission batching
     /// ([`batcher::DEFAULT_CLASSES`] by default).
     pub classes: Vec<usize>,
+    /// Cap on in-flight replica *units* (0 = unbounded), where a job
+    /// weighs `replicas × shard lanes` — so sharded jobs are charged
+    /// for every thread they will occupy. The overlapping dispatcher
+    /// parks at the cap; a single job heavier than the cap still runs,
+    /// but only alone.
+    pub max_inflight_replicas: usize,
+    /// With a nonzero cap: make [`Coordinator::try_submit`] refuse new
+    /// jobs while the committed (queued + running) replica count
+    /// exceeds the cap, instead of parking them in the queue.
+    pub reject_when_saturated: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -80,9 +107,38 @@ impl Default for CoordinatorConfig {
             workers: 0,
             mode: DispatchMode::Overlapping,
             classes: batcher::DEFAULT_CLASSES.to_vec(),
+            max_inflight_replicas: 0,
+            reject_when_saturated: false,
         }
     }
 }
+
+/// Why [`Coordinator::try_submit`] refused a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// Admitting the job would push the committed replica units
+    /// (`replicas × shard lanes` per job) over the configured cap.
+    Saturated {
+        /// Replica units committed (queued + running) at refusal time.
+        committed: usize,
+        /// The configured `max_inflight_replicas`.
+        cap: usize,
+    },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Saturated { committed, cap } => write!(
+                f,
+                "saturated: {committed} replica units already committed, job would exceed \
+                 cap {cap}; retry later"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
 
 /// A job waiting in the admission queue.
 struct Queued {
@@ -107,6 +163,22 @@ struct Inner {
     /// `shutdown` drains this to zero before the dispatcher exits.
     inflight: Mutex<usize>,
     inflight_cv: Condvar,
+    /// Replica work items currently in the pool; the dispatcher parks
+    /// on `replica_cv` while `max_inflight_replicas` would be exceeded.
+    inflight_replicas: Mutex<usize>,
+    replica_cv: Condvar,
+    /// Admission weight of every non-terminal job (queued or running)
+    /// — what `try_submit` tests against the cap. A job's weight is
+    /// `replicas × effective shard lanes`, so a sharded replica counts
+    /// for every thread it will actually occupy, not just one.
+    committed_replicas: Mutex<usize>,
+    /// Copied from the config so the submit path can see the policy.
+    admission_cap: usize,
+    reject_when_saturated: bool,
+    /// Resolved pool width (`cfg.workers`, with 0 resolved to the
+    /// machine) — the budget auto-sharding plans against, needed at
+    /// submit time to weight jobs consistently with execution.
+    worker_budget: usize,
 }
 
 /// The job coordinator. Cloneable handle; `Drop` of the last handle does
@@ -146,6 +218,16 @@ impl Coordinator {
             shutdown: Mutex::new(false),
             inflight: Mutex::new(0),
             inflight_cv: Condvar::new(),
+            inflight_replicas: Mutex::new(0),
+            replica_cv: Condvar::new(),
+            committed_replicas: Mutex::new(0),
+            admission_cap: cfg.max_inflight_replicas,
+            reject_when_saturated: cfg.reject_when_saturated,
+            worker_budget: if cfg.workers == 0 {
+                crate::engine::ReplicaPool::auto_workers()
+            } else {
+                cfg.workers
+            },
         });
         let metrics = Arc::new(Metrics::new());
         let c = Self { inner: inner.clone(), metrics: metrics.clone() };
@@ -182,6 +264,7 @@ impl Coordinator {
     ///     replicas: 2,
     ///     seed: 7,
     ///     target_energy: None,
+    ///     shards: 1,
     ///     backend: Backend::Native,
     /// });
     /// let result = coord.wait(id).expect("job completes");
@@ -189,6 +272,46 @@ impl Coordinator {
     /// coord.shutdown();
     /// ```
     pub fn submit(&self, spec: JobSpec) -> u64 {
+        self.try_submit_inner(spec, false).expect("unenforced submit cannot be rejected")
+    }
+
+    /// [`Self::submit`] with admission control: refuses the job when
+    /// the coordinator was configured with a `max_inflight_replicas`
+    /// cap plus `reject_when_saturated` and the committed (queued +
+    /// running) replica count already meets the cap. This is the
+    /// service's `SOLVE` path — rejected jobs become `ERR saturated …`
+    /// on the wire and never enter the queue.
+    pub fn try_submit(&self, spec: JobSpec) -> Result<u64, AdmissionError> {
+        self.try_submit_inner(spec, true)
+    }
+
+    /// A job's admission weight: `replicas × effective shard lanes` —
+    /// the thread count the job will actually occupy, so sharded jobs
+    /// cannot slip a multiplied load past a replica-counted cap.
+    fn admission_weight(&self, spec: &JobSpec) -> usize {
+        spec.replicas as usize * scheduler::effective_shards(spec, self.inner.worker_budget).max(1)
+    }
+
+    fn try_submit_inner(&self, spec: JobSpec, enforce: bool) -> Result<u64, AdmissionError> {
+        let weight = self.admission_weight(&spec);
+        {
+            let mut committed = self.inner.committed_replicas.lock().unwrap();
+            if enforce
+                && self.inner.reject_when_saturated
+                && self.inner.admission_cap > 0
+                && *committed > 0
+                && *committed + weight > self.inner.admission_cap
+            {
+                self.metrics.inc("jobs_rejected");
+                return Err(AdmissionError::Saturated {
+                    committed: *committed,
+                    cap: self.inner.admission_cap,
+                });
+            }
+            // Commit under the same lock so concurrent submits cannot
+            // both squeeze past the cap.
+            *committed += weight;
+        }
         let id = {
             let mut next = self.inner.next_id.lock().unwrap();
             let id = *next;
@@ -204,7 +327,7 @@ impl Coordinator {
         self.inner.queue_cv.notify_one();
         self.metrics.inc("jobs_submitted");
         self.metrics.gauge_add("jobs_queued", 1);
-        id
+        Ok(id)
     }
 
     /// Current state of a job (None = unknown id).
@@ -258,6 +381,7 @@ impl Coordinator {
         &self,
         id: u64,
         label: String,
+        weight: usize,
         replicas: Vec<ReplicaResult>,
         submitted: Instant,
         run_start: Instant,
@@ -268,8 +392,31 @@ impl Coordinator {
         self.metrics.inc("jobs_done");
         self.metrics.gauge_add("jobs_running", -1);
         self.inner.results.lock().unwrap().insert(id, result);
+        // Release the admission budget BEFORE waking waiters: a client
+        // unblocked by `wait` must be able to submit its next job
+        // without racing the bookkeeping.
+        self.release_committed(weight);
         self.inner.states.lock().unwrap().insert(id, JobState::Done);
         self.inner.state_cv.notify_all();
+    }
+
+    /// Publish a failed job: terminal `Failed` state (message
+    /// preserved for `STATUS`/`RESULT`), waiters woken, committed
+    /// replicas released — the job's waiters see `None`, nothing
+    /// wedges. Runs wherever [`Self::complete`] would have.
+    fn fail(&self, id: u64, weight: usize, message: String) {
+        self.metrics.inc("jobs_failed");
+        self.metrics.gauge_add("jobs_running", -1);
+        // Budget back before the wake-up, as in `complete`.
+        self.release_committed(weight);
+        self.inner.states.lock().unwrap().insert(id, JobState::Failed(message));
+        self.inner.state_cv.notify_all();
+    }
+
+    /// A terminal job gives its weight back to the admission budget.
+    fn release_committed(&self, weight: usize) {
+        let mut committed = self.inner.committed_replicas.lock().unwrap();
+        *committed = committed.saturating_sub(weight);
     }
 
     fn dispatch_loop(&self, cfg: CoordinatorConfig) {
@@ -328,6 +475,10 @@ impl Coordinator {
                 self.metrics.gauge_add("jobs_queued", -1);
                 self.inner.states.lock().unwrap().insert(id, JobState::Running);
                 self.metrics.gauge_add("jobs_running", 1);
+                let replica_count = spec.replicas;
+                // Admission weight = replicas × shard lanes: the thread
+                // count the job will actually occupy.
+                let weight = self.admission_weight(&spec);
                 // The XLA backend is driven synchronously by callers that
                 // own a runtime (examples/k2000_tts.rs); queued jobs fall
                 // back to native execution so the service never needs a
@@ -336,15 +487,47 @@ impl Coordinator {
                     DispatchMode::Serial => {
                         self.metrics.observe("dispatch", picked_up.elapsed());
                         let run_start = Instant::now();
-                        let replicas = scheduler.run_native(&spec);
-                        self.complete(id, spec.label.clone(), replicas, submitted, run_start);
+                        match scheduler.try_run_native(&spec) {
+                            Ok(replicas) => self.complete(
+                                id,
+                                spec.label.clone(),
+                                weight,
+                                replicas,
+                                submitted,
+                                run_start,
+                            ),
+                            Err(msg) => self.fail(id, weight, msg),
+                        }
                     }
                     DispatchMode::Overlapping => {
+                        // Admission backpressure: park until this job's
+                        // weight fits under the inflight cap (a job
+                        // heavier than the whole cap still runs —
+                        // alone). Parked time is charged to the
+                        // `dispatch` timer, so saturation is visible in
+                        // METRICS.
+                        if cfg.max_inflight_replicas > 0 {
+                            let mut inflight = self.inner.inflight_replicas.lock().unwrap();
+                            while *inflight > 0
+                                && *inflight + weight > cfg.max_inflight_replicas
+                            {
+                                inflight = self.inner.replica_cv.wait(inflight).unwrap();
+                            }
+                            *inflight += weight;
+                        } else {
+                            *self.inner.inflight_replicas.lock().unwrap() += weight;
+                        }
                         *self.inner.inflight.lock().unwrap() += 1;
-                        self.metrics.gauge_add("replicas_inflight", spec.replicas as i64);
+                        self.metrics.gauge_add("replicas_inflight", replica_count as i64);
+                        // Each finished replica releases its share of
+                        // the job's weight (lanes per replica).
+                        let lane_weight = match replica_count {
+                            0 => 0,
+                            r => weight / r as usize,
+                        };
                         let label = spec.label.clone();
                         let this = self.clone();
-                        let occupancy = self.metrics.clone();
+                        let per_replica = self.clone();
                         // Observe before handing off: a tiny job may
                         // complete (and wake waiters) the moment it is
                         // spawned, and by then its dispatch sample must
@@ -353,9 +536,25 @@ impl Coordinator {
                         let run_start = Instant::now();
                         scheduler.spawn_native(
                             Arc::new(spec),
-                            move || occupancy.gauge_add("replicas_inflight", -1),
-                            move |replicas| {
-                                this.complete(id, label, replicas, submitted, run_start);
+                            move || {
+                                per_replica.metrics.gauge_add("replicas_inflight", -1);
+                                let mut inflight =
+                                    per_replica.inner.inflight_replicas.lock().unwrap();
+                                *inflight -= lane_weight;
+                                per_replica.inner.replica_cv.notify_all();
+                            },
+                            move |outcome| {
+                                match outcome {
+                                    Ok(replicas) => this.complete(
+                                        id,
+                                        label,
+                                        weight,
+                                        replicas,
+                                        submitted,
+                                        run_start,
+                                    ),
+                                    Err(msg) => this.fail(id, weight, msg),
+                                }
                                 let mut inflight = this.inner.inflight.lock().unwrap();
                                 *inflight -= 1;
                                 this.inner.inflight_cv.notify_all();
@@ -389,6 +588,7 @@ mod tests {
             replicas: 4,
             seed,
             target_energy: None,
+            shards: 1,
             backend: Backend::Native,
         }
     }
@@ -497,5 +697,118 @@ mod tests {
         for id in ids {
             assert!(c.wait(id).is_some(), "job {id} must survive shutdown draining");
         }
+    }
+
+    /// A job whose replicas panic (poisoned zero-spin instance) must
+    /// reach `JobState::Failed`, wake its waiters with `None`, and
+    /// leave the dispatcher healthy for the next job — under both
+    /// dispatch modes.
+    #[test]
+    fn failed_job_wakes_waiters_and_dispatcher_survives() {
+        for c in [Coordinator::start(2), Coordinator::start_serial(2)] {
+            let mut bad = spec("poisoned", 5);
+            bad.model = Arc::new(crate::ising::IsingModel::zeros(0));
+            let bad_id = c.submit(bad);
+            assert!(c.wait(bad_id).is_none(), "failed job must yield None");
+            match c.state(bad_id) {
+                Some(JobState::Failed(msg)) => {
+                    assert!(msg.contains("panicked"), "unexpected failure message: {msg}")
+                }
+                other => panic!("expected Failed, got {other:?}"),
+            }
+            assert_eq!(c.metrics.get("jobs_failed"), 1);
+            // The machine is still alive: a healthy job completes.
+            let ok_id = c.submit(spec("after", 6));
+            assert!(c.wait(ok_id).is_some(), "dispatcher must survive a failed job");
+            assert_eq!(c.metrics.gauge("jobs_running"), 0);
+            c.shutdown();
+        }
+    }
+
+    /// With `max_inflight_replicas` set, the overlapping dispatcher
+    /// parks instead of flooding the pool: the `replicas_inflight`
+    /// gauge never exceeds the cap, yet every job completes.
+    #[test]
+    fn inflight_replica_cap_parks_but_everything_completes() {
+        let cap = 4usize;
+        let c = Coordinator::start_with(CoordinatorConfig {
+            workers: 2,
+            max_inflight_replicas: cap,
+            ..Default::default()
+        });
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let poller = {
+            let (c, done) = (c.clone(), done.clone());
+            std::thread::spawn(move || {
+                let mut peak = 0i64;
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    peak = peak.max(c.metrics.gauge("replicas_inflight"));
+                    std::thread::yield_now();
+                }
+                peak
+            })
+        };
+        let ids: Vec<u64> = (0..6).map(|k| c.submit(spec(&format!("cap{k}"), 400 + k))).collect();
+        for id in ids {
+            assert!(c.wait(id).is_some(), "job {id} must complete under the cap");
+        }
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        let peak = poller.join().unwrap();
+        assert!(peak <= cap as i64, "inflight replicas peaked at {peak}, cap {cap}");
+        assert_eq!(c.metrics.gauge("replicas_inflight"), 0);
+        c.shutdown();
+    }
+
+    /// With rejection enabled, `try_submit` refuses jobs while the
+    /// committed replica budget is exhausted and admits again once the
+    /// saturating job drains.
+    #[test]
+    fn try_submit_rejects_when_saturated_and_recovers() {
+        let c = Coordinator::start_with(CoordinatorConfig {
+            workers: 1,
+            max_inflight_replicas: 4,
+            reject_when_saturated: true,
+            ..Default::default()
+        });
+        let mut long = spec("long", 9);
+        long.steps = 100_000; // keeps the budget committed for a while
+        let id = c.try_submit(long).expect("first job fits an idle coordinator");
+        match c.try_submit(spec("burst", 10)) {
+            Err(AdmissionError::Saturated { committed, cap }) => {
+                assert_eq!((committed, cap), (4, 4));
+            }
+            other => panic!("expected saturation, got {other:?}"),
+        }
+        assert_eq!(c.metrics.get("jobs_rejected"), 1);
+        assert!(c.wait(id).is_some());
+        // Budget released: admission works again.
+        let id2 = c.try_submit(spec("retry", 11)).expect("drained coordinator admits");
+        assert!(c.wait(id2).is_some());
+        c.shutdown();
+    }
+
+    /// Sharded jobs weigh `replicas × lanes` against the cap: a
+    /// 2-replica × 3-lane job is 6 units and must be refused where a
+    /// plain 2-replica job would fit.
+    #[test]
+    fn sharded_jobs_are_weighted_against_the_cap() {
+        let c = Coordinator::start_with(CoordinatorConfig {
+            workers: 1,
+            max_inflight_replicas: 4,
+            reject_when_saturated: true,
+            ..Default::default()
+        });
+        let mut long = spec("w-long", 21);
+        long.steps = 100_000;
+        long.replicas = 1; // weight 1 — leaves 3 units of headroom
+        let id = c.try_submit(long).expect("1 unit fits");
+        let mut heavy = spec("w-heavy", 22);
+        heavy.replicas = 2;
+        heavy.shards = 3;
+        assert!(c.try_submit(heavy).is_err(), "2 replicas x 3 lanes = 6 units must be refused");
+        let plain = spec("w-plain", 23); // 4 replicas x 1 lane — still too heavy (1+4 > 4)
+        assert!(c.try_submit(plain).is_err());
+        assert!(c.wait(id).is_some());
+        c.shutdown();
     }
 }

@@ -11,9 +11,10 @@
 //!
 //! Two execution shapes share one per-replica body ([`run_replica`]):
 //!
-//! * [`ReplicaScheduler::run_native`] — blocking fan-out of one job
+//! * [`ReplicaScheduler::try_run_native`] — blocking fan-out of one job
 //!   (`ReplicaPool::run_indexed`); the serial dispatcher and direct
-//!   callers (benches, TTS harness) use this.
+//!   callers (benches, TTS harness) use this (or the panicking
+//!   [`ReplicaScheduler::run_native`] convenience wrapper).
 //! * [`ReplicaScheduler::spawn_native`] — every replica becomes one
 //!   fire-and-forget pool item and the call returns immediately; a
 //!   shared collector assembles results **by replica index** and the
@@ -21,19 +22,52 @@
 //!   what lets the coordinator overlap many jobs on one pool: replicas
 //!   of job B start the moment a worker frees up, even while job A is
 //!   still running (see `docs/ARCHITECTURE.md`).
+//!
+//! Replica panics (poisoned instances, absurd sizes) are caught at the
+//! work-item boundary — a panicking replica fails its **job** (the
+//! coordinator flips it to `JobState::Failed` and wakes waiters), never
+//! the dispatcher, the pool, or the process.
+//!
+//! Each replica's *engine* is chosen per job: `spec.shards <= 1` runs
+//! the classic single-lane [`SnowballEngine`] (bit-reproducible);
+//! `spec.shards > 1` runs the asynchronous sharded engine
+//! ([`crate::engine::ShardedEngine`]) with that many lanes;
+//! `spec.shards == 0` lets [`shard::plan_parallelism`] choose shard- vs
+//! replica-level parallelism from the instance size and machine width.
 
 use super::job::{JobSpec, ReplicaResult};
 use crate::engine::pool::ReplicaPool;
-use crate::engine::{Datapath, EngineConfig, SnowballEngine};
+use crate::engine::{shard, Datapath, EngineConfig, MergeMode, ShardedEngine, SnowballEngine};
 use crate::rng::StatelessRng;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Run one replica of `spec`: the per-replica body shared by the
-/// blocking and the overlapping path, so the two are bit-identical by
-/// construction (same `EngineConfig`, same `child(r)` seed derivation).
-pub fn run_replica(spec: &JobSpec, r: usize) -> ReplicaResult {
+/// Lanes `spec` resolves to under a `worker_budget`-thread compute
+/// budget: the explicit count, or the [`shard::plan_parallelism`]
+/// choice for `shards == 0` (auto). The budget is the scheduler's
+/// configured pool width — NOT the raw machine width — so an operator's
+/// `--workers` cap bounds the auto-sharding thread footprint too.
+pub fn effective_shards(spec: &JobSpec, worker_budget: usize) -> usize {
+    match spec.shards {
+        0 => {
+            shard::plan_parallelism(
+                spec.model.len(),
+                spec.replicas.max(1) as usize,
+                worker_budget,
+            )
+            .shards
+        }
+        s => s as usize,
+    }
+}
+
+/// Run one replica of `spec` under a `worker_budget`-thread compute
+/// budget: the per-replica body shared by the blocking and the
+/// overlapping path, so the two are bit-identical by construction
+/// (same `EngineConfig`, same `child(r)` seed derivation).
+pub fn run_replica(spec: &JobSpec, r: usize, worker_budget: usize) -> ReplicaResult {
     let root = StatelessRng::new(spec.seed);
+    let shards = effective_shards(spec, worker_budget);
     let cfg = EngineConfig {
         mode: spec.mode,
         datapath: Datapath::Dense,
@@ -43,9 +77,13 @@ pub fn run_replica(spec: &JobSpec, r: usize) -> ReplicaResult {
         seed: root.child(r as u64).seed(),
         planes: None,
         trace_stride: 0,
+        shards,
     };
-    let mut engine = SnowballEngine::new(&spec.model, cfg);
-    let run = engine.run();
+    let run = if shards > 1 {
+        ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run()
+    } else {
+        SnowballEngine::new(&spec.model, cfg).run()
+    };
     ReplicaResult {
         replica: r as u32,
         best_energy: run.best_energy,
@@ -54,12 +92,34 @@ pub fn run_replica(spec: &JobSpec, r: usize) -> ReplicaResult {
     }
 }
 
+/// [`run_replica`] with the panic boundary: a panicking replica becomes
+/// an `Err` describing the panic instead of unwinding into the pool
+/// (rayon would escalate an uncaught panic in a spawned item to a
+/// process abort).
+fn run_replica_caught(
+    spec: &JobSpec,
+    r: usize,
+    worker_budget: usize,
+) -> Result<ReplicaResult, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_replica(spec, r, worker_budget)))
+        .map_err(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            format!("replica {r} panicked: {msg}")
+        })
+}
+
 /// Collects replica results by index; the closing replica hands the
-/// completed, index-ordered vector to the job's completion callback.
+/// completed, index-ordered vector (or the first failure) to the job's
+/// completion callback.
 struct Collector {
-    slots: Mutex<Vec<Option<ReplicaResult>>>,
+    slots: Mutex<Vec<Option<Result<ReplicaResult, String>>>>,
     remaining: AtomicUsize,
-    on_done: Mutex<Option<Box<dyn FnOnce(Vec<ReplicaResult>) + Send>>>,
+    #[allow(clippy::type_complexity)]
+    on_done: Mutex<Option<Box<dyn FnOnce(Result<Vec<ReplicaResult>, String>) + Send>>>,
 }
 
 /// Replica scheduler over the shared worker pool.
@@ -84,26 +144,38 @@ impl ReplicaScheduler {
         &self.pool
     }
 
-    /// Run all replicas of `spec` on the native engine, returning results
-    /// ordered by replica index. Blocks until the whole job is done.
+    /// Run all replicas of `spec` on the native engine, returning
+    /// results ordered by replica index, or the first replica failure.
+    /// Blocks until the whole job is done.
+    pub fn try_run_native(&self, spec: &JobSpec) -> Result<Vec<ReplicaResult>, String> {
+        let budget = self.workers();
+        self.pool
+            .run_indexed(spec.replicas as usize, |r| run_replica_caught(spec, r, budget))
+            .into_iter()
+            .collect()
+    }
+
+    /// [`Self::try_run_native`] for callers that treat a replica panic
+    /// as fatal (tests, benches, the TTS harness).
     pub fn run_native(&self, spec: &JobSpec) -> Vec<ReplicaResult> {
-        self.pool.run_indexed(spec.replicas as usize, |r| run_replica(spec, r))
+        self.try_run_native(spec).expect("replica failed")
     }
 
     /// Enqueue every replica of `spec` as its own pool work item and
     /// return immediately; `on_done` runs (on the pool thread that
-    /// finishes last) with the results in replica-index order —
-    /// bit-identical to [`run_native`](Self::run_native) because both
-    /// share [`run_replica`]. `on_replica_done` fires after each replica
+    /// finishes last) with the results in replica-index order — or the
+    /// first replica failure — bit-identical to
+    /// [`try_run_native`](Self::try_run_native) because both share
+    /// [`run_replica`]. `on_replica_done` fires after each replica
     /// completes (occupancy accounting).
     pub fn spawn_native<F, G>(&self, spec: Arc<JobSpec>, on_replica_done: G, on_done: F)
     where
-        F: FnOnce(Vec<ReplicaResult>) + Send + 'static,
+        F: FnOnce(Result<Vec<ReplicaResult>, String>) + Send + 'static,
         G: Fn() + Send + Sync + 'static,
     {
         let n = spec.replicas as usize;
         if n == 0 {
-            on_done(Vec::new());
+            on_done(Ok(Vec::new()));
             return;
         }
         let collector = Arc::new(Collector {
@@ -112,12 +184,13 @@ impl ReplicaScheduler {
             on_done: Mutex::new(Some(Box::new(on_done))),
         });
         let on_replica_done = Arc::new(on_replica_done);
+        let budget = self.workers();
         for r in 0..n {
             let spec = spec.clone();
             let collector = collector.clone();
             let on_replica_done = on_replica_done.clone();
             self.pool.spawn(move || {
-                let result = run_replica(&spec, r);
+                let result = run_replica_caught(&spec, r, budget);
                 collector.slots.lock().unwrap()[r] = Some(result);
                 on_replica_done();
                 // AcqRel: the closing thread must see every slot write.
@@ -125,7 +198,10 @@ impl ReplicaScheduler {
                     let slots = std::mem::take(&mut *collector.slots.lock().unwrap());
                     let done =
                         collector.on_done.lock().unwrap().take().expect("on_done fires once");
-                    done(slots.into_iter().map(|s| s.expect("all slots filled")).collect());
+                    done(slots
+                        .into_iter()
+                        .map(|s| s.expect("all slots filled"))
+                        .collect::<Result<Vec<_>, String>>());
                 }
             });
         }
@@ -138,6 +214,7 @@ mod tests {
     use crate::coordinator::job::Backend;
     use crate::engine::{Mode, Schedule, SelectorKind};
     use crate::graph::generators;
+    use crate::ising::IsingModel;
     use crate::problems::MaxCut;
     use std::sync::Arc;
 
@@ -154,6 +231,7 @@ mod tests {
             replicas,
             seed: 42,
             target_energy: None,
+            shards: 1,
             backend: Backend::Native,
         }
     }
@@ -184,6 +262,57 @@ mod tests {
         assert!(out.iter().any(|r| r.best_energy != first || r.flips != out[0].flips));
     }
 
+    /// A job over a poisoned instance (no spins, nonzero steps) must
+    /// come back as an `Err` naming the replica — not panic the caller,
+    /// not abort the process.
+    #[test]
+    fn replica_panic_is_caught_as_job_failure() {
+        let mut bad = spec(3);
+        bad.model = Arc::new(IsingModel::zeros(0));
+        let s = ReplicaScheduler::new(2);
+        let err = s.try_run_native(&bad).expect_err("empty model must fail");
+        assert!(err.contains("panicked"), "unexpected error text: {err}");
+        // The scheduler must stay usable afterwards.
+        assert_eq!(s.try_run_native(&spec(2)).unwrap().len(), 2);
+    }
+
+    /// Sharded replicas (shards > 1) go through the async sharded
+    /// engine and still produce one well-formed result per replica.
+    #[test]
+    fn sharded_replicas_produce_results() {
+        let mut sp = spec(3);
+        sp.shards = 4;
+        sp.steps = 2_000;
+        let out = ReplicaScheduler::new(2).run_native(&sp);
+        assert_eq!(out.len(), 3);
+        for (r, result) in out.iter().enumerate() {
+            assert_eq!(result.replica, r as u32);
+            assert!(result.flips > 0, "replica {r} made no progress");
+        }
+    }
+
+    /// `shards == 0` resolves through the size policy: tiny instances
+    /// stay single-lane.
+    #[test]
+    fn auto_shards_stays_single_lane_on_small_instances() {
+        let mut sp = spec(2);
+        sp.shards = 0;
+        assert_eq!(effective_shards(&sp, 64), 1, "40-spin instance must not shard");
+        // And the worker budget bounds the lane count on big instances.
+        let mut big = spec(1);
+        big.model = Arc::new(crate::ising::IsingModel::zeros(8192));
+        big.shards = 0;
+        assert_eq!(effective_shards(&big, 2), 2, "budget of 2 must cap the lanes");
+        assert_eq!(effective_shards(&big, 1), 1, "budget of 1 means no sharding");
+        let out = ReplicaScheduler::new(2).run_native(&sp);
+        // Bit-identical to the explicit single-lane run.
+        let want = ReplicaScheduler::new(2).run_native(&spec(2));
+        let key = |v: &[ReplicaResult]| -> Vec<(u32, i64, u64)> {
+            v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
+        };
+        assert_eq!(key(&out), key(&want));
+    }
+
     /// The overlapping path must produce the exact result vector of the
     /// blocking path — same order, same energies, same flip counts.
     #[test]
@@ -203,12 +332,27 @@ mod tests {
                 let _ = tx.send(results);
             },
         );
-        let spawned = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let spawned =
+            rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap().expect("job succeeds");
         assert_eq!(ticks.load(Ordering::Relaxed), 9, "one tick per replica");
         let key = |v: &[ReplicaResult]| -> Vec<(u32, i64, u64)> {
             v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
         };
         assert_eq!(key(&blocking), key(&spawned));
+    }
+
+    /// The overlapping path reports failures through the callback too.
+    #[test]
+    fn spawn_native_reports_panics() {
+        let mut bad = spec(2);
+        bad.model = Arc::new(IsingModel::zeros(0));
+        let s = ReplicaScheduler::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        s.spawn_native(Arc::new(bad), || {}, move |results| {
+            let _ = tx.send(results);
+        });
+        let got = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(got.is_err(), "empty model must fail the job");
     }
 
     /// Several jobs spawned back-to-back interleave on the pool but
@@ -229,6 +373,7 @@ mod tests {
         drop(tx);
         let serial = ReplicaScheduler::new(1);
         for (k, results) in rx.iter() {
+            let results = results.expect("jobs succeed");
             let mut want = spec(4);
             want.seed = 100 + k;
             let want = serial.run_native(&want);

@@ -111,12 +111,24 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
             let replicas: u32 = kv.get("replicas").copied().unwrap_or("8").parse()?;
             let seed: u64 = kv.get("seed").copied().unwrap_or("1").parse()?;
             let target = kv.get("target").map(|v| v.parse::<i64>()).transpose()?;
+            // Within-instance shard lanes: 1 (default) = classic
+            // bit-reproducible engine, >1 = async sharded lanes,
+            // 0 = auto by instance size (docs/PROTOCOL.md).
+            let shards: u32 = kv.get("shards").copied().unwrap_or("1").parse()?;
+            anyhow::ensure!(
+                shards as usize <= crate::engine::shard::MAX_SHARDS,
+                "shards must be <= {} (got {shards})",
+                crate::engine::shard::MAX_SHARDS
+            );
             let schedule = match kv.get("schedule") {
                 Some(s) => Schedule::parse(s)?,
                 None => Schedule::Geometric { t0: 8.0, t1: 0.05 },
             };
             let (label, model) = build_instance(instance, seed)?;
-            let id = coord.submit(JobSpec {
+            // try_submit: with admission control configured, a
+            // saturated coordinator refuses here (`ERR saturated …`)
+            // instead of parking the client's job forever.
+            let id = coord.try_submit(JobSpec {
                 model: Arc::new(model),
                 label,
                 mode,
@@ -126,8 +138,9 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 replicas,
                 seed,
                 target_energy: target,
+                shards,
                 backend: Backend::Native,
-            });
+            })?;
             Ok(Reply::Line(format!("JOB id={id}")))
         }
         "STATUS" => {
@@ -155,6 +168,9 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
         }
         "RESULT" => {
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
+            if let Some(JobState::Failed(msg)) = coord.state(id) {
+                anyhow::bail!("job {id} failed: {msg}");
+            }
             let r = coord.result(id).with_context(|| format!("job {id} has no result yet"))?;
             let ta = r.mean_replica_seconds();
             let (pa, tts) = match kv.get("target").map(|v| v.parse::<i64>()).transpose()? {
@@ -253,6 +269,96 @@ mod tests {
         assert!(roundtrip(addr, "WAIT id=42").starts_with("ERR"));
         assert!(roundtrip(addr, "SOLVE instance=nope").starts_with("ERR"));
         assert!(roundtrip(addr, "SOLVE instance=er:8:10 selector=bogus").starts_with("ERR"));
+        assert!(roundtrip(addr, "SOLVE instance=er:8:10 shards=bogus").starts_with("ERR"));
+        let over = roundtrip(addr, "SOLVE instance=er:8:10 shards=65");
+        assert!(over.starts_with("ERR shards must be <= 64"), "{over}");
+    }
+
+    /// `shards=` flows end to end: the job runs on the async sharded
+    /// engine and produces a normal RESULT line.
+    #[test]
+    fn solve_with_shards_flows() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "SOLVE instance=er:96:300 mode=rwa steps=4000 replicas=2 seed=3 shards=3")
+            .unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        writeln!(s, "WAIT id={id}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
+        writeln!(s, "RESULT id={id}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("replicas=2"), "{line}");
+    }
+
+    /// The saturation ERR form: a coordinator with a tiny replica cap
+    /// and rejection enabled refuses the second SOLVE.
+    #[test]
+    fn saturated_solve_is_rejected_with_err() {
+        let coord = Coordinator::start_with(crate::coordinator::CoordinatorConfig {
+            workers: 1,
+            max_inflight_replicas: 2,
+            reject_when_saturated: true,
+            ..Default::default()
+        });
+        let addr = Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "SOLVE instance=er:64:256 steps=200000 replicas=2 seed=1").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "SOLVE instance=er:16:40 steps=100 replicas=2 seed=2").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR saturated"), "{line}");
+        // Drain, then admission recovers.
+        writeln!(s, "WAIT id={id}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        line.clear();
+        writeln!(s, "SOLVE instance=er:16:40 steps=100 replicas=2 seed=2").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "after drain: {line}");
+    }
+
+    /// A failed job (poisoned instance) is observable end to end:
+    /// WAIT reports `state=failed` and RESULT carries the message.
+    #[test]
+    fn failed_job_reports_over_the_wire() {
+        let coord = Coordinator::start(1);
+        let mut bad_spec = {
+            let (label, model) = build_instance("er:8:10", 1).unwrap();
+            JobSpec {
+                model: Arc::new(model),
+                label,
+                mode: Mode::RouletteWheel,
+                selector: SelectorKind::Fenwick,
+                schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+                steps: 100,
+                replicas: 1,
+                seed: 1,
+                target_energy: None,
+                shards: 1,
+                backend: Backend::Native,
+            }
+        };
+        bad_spec.model = Arc::new(crate::ising::IsingModel::zeros(0));
+        let id = coord.submit(bad_spec);
+        let addr = Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background();
+        let wait = roundtrip(addr, &format!("WAIT id={id}"));
+        assert_eq!(wait, format!("STATE id={id} state=failed"));
+        let status = roundtrip(addr, &format!("STATUS id={id}"));
+        assert_eq!(status, format!("STATE id={id} state=failed"));
+        let result = roundtrip(addr, &format!("RESULT id={id}"));
+        assert!(result.starts_with(&format!("ERR job {id} failed:")), "{result}");
     }
 
     #[test]

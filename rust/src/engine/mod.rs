@@ -6,14 +6,17 @@
 //! multi-replica fan-out (blocking `run_indexed` or fire-and-forget
 //! `spawn`, both deterministic by the stateless-RNG contract) goes
 //! through [`pool::ReplicaPool`] — the layer the coordinator's
-//! overlapping dispatcher saturates. `docs/ARCHITECTURE.md` maps the
-//! whole stack.
+//! overlapping dispatcher saturates. Within-instance parallelism
+//! (asynchronous sharded lanes with a deterministic virtual-time merge
+//! mode) lives in [`shard::ShardedEngine`]. `docs/ARCHITECTURE.md`
+//! maps the whole stack.
 
 pub mod diagnostics;
 pub mod lut;
 pub mod pool;
 pub mod schedule;
 pub mod select;
+pub mod shard;
 pub mod snowball;
 pub mod tempering;
 
@@ -21,5 +24,6 @@ pub use lut::{glauber_exact, LaneCtx, PwlLogistic, ONE_Q16};
 pub use pool::ReplicaPool;
 pub use schedule::{Plateau, Plateaus, Schedule};
 pub use select::{Fenwick, SelectorKind};
+pub use shard::{MergeMode, ParallelismPlan, ShardStats, ShardedEngine};
 pub use snowball::{Datapath, EngineConfig, Mode, RunResult, SnowballEngine, StepOutcome};
 pub use tempering::{ParallelTempering, TemperingResult};

@@ -1,0 +1,247 @@
+//! Lock-free flip mailboxes for the asynchronous sharded engine.
+//!
+//! When shard `p` flips one of its spins it must eventually reach every
+//! other shard's local fields (the cross-partition coupler terms). The
+//! paper's asynchronous update units exchange exactly this information
+//! over dedicated wires; the software analogue is one single-producer /
+//! single-consumer ring per **ordered** shard pair. A message is a
+//! [`Flip`] — the flipped spin's global index plus its pre-flip sign —
+//! and the *receiver* derives its own field deltas by walking its slice
+//! of the coupling row, so a flip costs one message per peer regardless
+//! of degree.
+//!
+//! The rings are classic Lamport SPSC queues: the producer owns `tail`,
+//! the consumer owns `head`, and a release-store / acquire-load pair on
+//! each index publishes the slot contents. No locks, no CAS loops — a
+//! push and a pop are each one atomic store plus one atomic load in the
+//! common case. Capacity doubles as the staleness backstop: a ring
+//! sized to the engine's staleness window can never hold more flips
+//! than the window allows, so a producer that somehow outruns the epoch
+//! barrier parks in [`MailboxGrid::post`] instead of widening the
+//! window.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One spin flip, as exchanged between shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Flip {
+    /// Global index of the flipped spin.
+    pub j: u32,
+    /// The spin's value BEFORE the flip (±1) — what the incremental
+    /// field update `u_i -= 2 · s_old · J_ij` needs (paper Eq. 17).
+    pub s_old: i8,
+    /// The producer shard's local step counter when it flipped — lets
+    /// the consumer measure the staleness it actually observed.
+    pub step: u64,
+}
+
+/// Single-producer single-consumer ring of [`Flip`]s.
+///
+/// Safety contract (enforced by [`MailboxGrid`]'s indexing, not the
+/// type system): exactly one thread calls [`try_push`](Self::try_push)
+/// and exactly one thread calls [`pop`](Self::pop) over the ring's
+/// lifetime. Distinct slots are only written by the producer while not
+/// visible to the consumer (tail not yet published) and only read by
+/// the consumer while not reusable by the producer (head not yet
+/// published), so the `UnsafeCell` accesses never race.
+pub struct FlipRing {
+    slots: Box<[UnsafeCell<Flip>]>,
+    mask: usize,
+    /// Next slot to read; owned by the consumer.
+    head: AtomicUsize,
+    /// Next slot to write; owned by the producer.
+    tail: AtomicUsize,
+}
+
+// SAFETY: see the struct-level contract — SPSC usage makes every
+// UnsafeCell access exclusive, and the atomics publish between the two
+// threads with release/acquire pairs.
+unsafe impl Send for FlipRing {}
+unsafe impl Sync for FlipRing {}
+
+impl FlipRing {
+    /// Ring with capacity `cap` rounded up to a power of two (min 2).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(2).next_power_of_two();
+        let slots = (0..cap).map(|_| UnsafeCell::new(Flip::default())).collect();
+        Self { slots, mask: cap - 1, head: AtomicUsize::new(0), tail: AtomicUsize::new(0) }
+    }
+
+    /// Slots in the ring.
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Producer side: append `flip`, or return `false` when full.
+    #[inline]
+    pub fn try_push(&self, flip: Flip) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed); // producer-owned
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.capacity() {
+            return false;
+        }
+        // SAFETY: slot `tail` is outside [head, tail) so the consumer
+        // cannot be reading it, and we are the only producer.
+        unsafe { *self.slots[tail & self.mask].get() = flip };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: take the oldest pending flip, if any.
+    #[inline]
+    pub fn pop(&self) -> Option<Flip> {
+        let head = self.head.load(Ordering::Relaxed); // consumer-owned
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        // SAFETY: slot `head` is inside [head, tail): published by the
+        // producer's release-store of `tail`, not yet recycled.
+        let flip = unsafe { *self.slots[head & self.mask].get() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(flip)
+    }
+
+    /// Approximate backlog (exact when called from either endpoint's
+    /// thread between its own operations).
+    pub fn len(&self) -> usize {
+        self.tail.load(Ordering::Acquire).wrapping_sub(self.head.load(Ordering::Acquire))
+    }
+
+    /// True when no flips are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// All `S × (S − 1)` directed mailboxes of an `S`-shard engine.
+///
+/// Ring `(p → c)` is indexed `p * shards + c`; shard `p` only ever
+/// pushes to row `p`, shard `c` only ever pops column `c`, which is
+/// exactly the SPSC contract [`FlipRing`] requires.
+pub struct MailboxGrid {
+    rings: Vec<FlipRing>,
+    shards: usize,
+}
+
+impl MailboxGrid {
+    /// Grid for `shards` shards with per-ring capacity `cap`.
+    pub fn new(shards: usize, cap: usize) -> Self {
+        let rings = (0..shards * shards).map(|_| FlipRing::new(cap)).collect();
+        Self { rings, shards }
+    }
+
+    /// Number of shards the grid serves.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Broadcast `flip` from shard `from` to every other shard. Parks
+    /// (spin-yield) on a full ring — with rings sized to the staleness
+    /// window this only triggers if a peer stops draining entirely, in
+    /// which case stalling *is* the bounded-staleness guarantee.
+    pub fn post(&self, from: usize, flip: Flip) {
+        for c in 0..self.shards {
+            if c == from {
+                continue;
+            }
+            let ring = &self.rings[from * self.shards + c];
+            while !ring.try_push(flip) {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Drain every flip pending for shard `to`, in per-producer FIFO
+    /// order (producers are visited in shard order; cross-producer
+    /// ordering is whatever the race produced — the field updates are
+    /// commutative integer adds, so it does not matter).
+    pub fn drain(&self, to: usize, mut apply: impl FnMut(Flip)) {
+        for p in 0..self.shards {
+            if p == to {
+                continue;
+            }
+            let ring = &self.rings[p * self.shards + to];
+            while let Some(flip) = ring.pop() {
+                apply(flip);
+            }
+        }
+    }
+
+    /// Total flips currently pending for shard `to` (diagnostic).
+    pub fn pending(&self, to: usize) -> usize {
+        (0..self.shards)
+            .filter(|&p| p != to)
+            .map(|p| self.rings[p * self.shards + to].len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_fifo_and_capacity() {
+        let r = FlipRing::new(3); // rounds up to 4
+        assert_eq!(r.capacity(), 4);
+        for k in 0..4u32 {
+            assert!(r.try_push(Flip { j: k, s_old: 1, step: k as u64 }));
+        }
+        assert!(!r.try_push(Flip { j: 99, s_old: -1, step: 0 }), "full ring must refuse");
+        for k in 0..4u32 {
+            assert_eq!(r.pop().unwrap().j, k, "FIFO order");
+        }
+        assert!(r.pop().is_none());
+        // Wrap-around reuse after draining.
+        assert!(r.try_push(Flip { j: 7, s_old: -1, step: 9 }));
+        assert_eq!(r.pop(), Some(Flip { j: 7, s_old: -1, step: 9 }));
+    }
+
+    #[test]
+    fn ring_delivers_across_threads_in_order() {
+        let r = Arc::new(FlipRing::new(8));
+        let total = 10_000u32;
+        let producer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for k in 0..total {
+                    while !r.try_push(Flip { j: k, s_old: 1, step: k as u64 }) {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        let mut next = 0u32;
+        while next < total {
+            if let Some(f) = r.pop() {
+                assert_eq!(f.j, next, "lost or reordered flip");
+                next += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn grid_routes_to_every_peer_but_not_self() {
+        let g = MailboxGrid::new(3, 8);
+        g.post(0, Flip { j: 5, s_old: -1, step: 2 });
+        g.post(1, Flip { j: 9, s_old: 1, step: 4 });
+        assert_eq!(g.pending(0), 1); // from shard 1
+        assert_eq!(g.pending(1), 1); // from shard 0
+        assert_eq!(g.pending(2), 2); // from both
+        let mut got = Vec::new();
+        g.drain(2, |f| got.push(f.j));
+        got.sort_unstable();
+        assert_eq!(got, vec![5, 9]);
+        assert_eq!(g.pending(2), 0);
+        let mut own = Vec::new();
+        g.drain(0, |f| own.push(f.j));
+        assert_eq!(own, vec![9], "shard 0 must not receive its own flip");
+    }
+}

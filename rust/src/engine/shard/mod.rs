@@ -1,0 +1,1008 @@
+//! Asynchronous sharded spin updates: within-instance parallelism
+//! (paper §IV-B — the asynchronous update units — scaled from one MCMC
+//! lane to `S` of them).
+//!
+//! The rest of the engine stack parallelizes at the **replica** level:
+//! every individual chain is still one sequential loop, so a large-N
+//! instance is bound by one core. This module partitions one instance's
+//! spins into `S` contiguous, degree-balanced shards
+//! ([`crate::ising::Partition`]) and runs a dual-mode MCMC lane per
+//! shard, in one of two merge modes:
+//!
+//! * **[`MergeMode::VirtualTime`]** — deterministic reference: the
+//!   shard lanes are interleaved in a fixed order on one thread, and
+//!   every per-step quantity (lane weights, aggregate W, roulette
+//!   draw, selected spin, field updates) is composed shard-by-shard so
+//!   the run is **bit-identical** to the single-shard
+//!   [`SnowballEngine`] with the same seed (pinned by
+//!   `rust/tests/shard_parity.rs`). This is the testing/debugging mode
+//!   and the semantic spec of the async mode.
+//! * **[`MergeMode::Async`]** — the production mode: each shard lane
+//!   runs on its own OS thread, updating its local spins immediately
+//!   and exchanging flips with its peers through lock-free SPSC
+//!   mailboxes ([`mailbox::MailboxGrid`]). Staleness is bounded by an
+//!   epoch barrier every `window` local steps (and by the mailbox
+//!   capacity itself), at which point the lanes also assemble an exact
+//!   global energy sample — so best-energy tracking costs Θ(N) per
+//!   epoch instead of Θ(N²). Results are *not* bit-reproducible across
+//!   runs (thread interleaving is real nondeterminism); quality parity
+//!   is what the tests assert.
+//!
+//! Shard lanes get dedicated OS threads rather than `ReplicaPool`
+//! workers because they block on each other at epoch barriers: parking
+//! a work-stealing rayon worker inside a barrier deadlocks the pool
+//! whenever `S` exceeds the free worker count. Replica-level fan-out
+//! (which never blocks) stays on the pool; the
+//! [`plan_parallelism`] policy decides which level gets the machine.
+//!
+//! [`SnowballEngine`]: super::SnowballEngine
+
+pub mod mailbox;
+
+use self::mailbox::{Flip, MailboxGrid};
+use super::lut::{PwlLogistic, ONE_Q16};
+use super::snowball::{EngineConfig, Mode, RunResult};
+use crate::ising::{Adjacency, IsingModel, Partition, SpinVec};
+use crate::rng::{salt, StatelessRng};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Below this spin count sharding is never chosen automatically —
+/// replica-level parallelism already saturates the machine and the
+/// cross-shard exchange would be pure overhead.
+pub const SHARD_AUTO_MIN_N: usize = 4096;
+/// Auto-sharding keeps at least this many spins per lane.
+pub const MIN_SPINS_PER_SHARD: usize = 512;
+/// Hard cap on the shard count (also enforced at the protocol edge).
+pub const MAX_SHARDS: usize = 64;
+/// Default bounded-staleness window (local steps between epoch syncs).
+pub const DEFAULT_WINDOW: u64 = 64;
+
+/// How the shard lanes' updates are merged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Deterministic fixed-order interleave; bit-identical to the
+    /// single-shard engine. Single-threaded — for testing.
+    VirtualTime,
+    /// One thread per shard, mailbox exchange, bounded staleness.
+    Async,
+}
+
+impl MergeMode {
+    /// CLI names.
+    pub fn parse(s: &str) -> anyhow::Result<MergeMode> {
+        match s {
+            "virtual" | "virtual-time" | "merge" => Ok(MergeMode::VirtualTime),
+            "async" => Ok(MergeMode::Async),
+            other => anyhow::bail!("unknown merge mode '{other}' (async|virtual)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeMode::VirtualTime => "virtual",
+            MergeMode::Async => "async",
+        }
+    }
+}
+
+/// How a worker budget should be split between replica-level and
+/// shard-level parallelism (see [`plan_parallelism`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelismPlan {
+    /// Units (replicas / tempering chains) to run concurrently.
+    pub replica_workers: usize,
+    /// Shards per unit (1 = no sharding).
+    pub shards: usize,
+}
+
+/// Decide between replica-level and shard-level parallelism for `units`
+/// independent chains over an `n`-spin instance on `machine_workers`
+/// cores. The rule the whole stack shares ([`ReplicaScheduler`] for
+/// auto-shard jobs, [`ParallelTempering::with_auto_parallelism`] for
+/// tempering ladders):
+///
+/// * many units or a small instance → replica-level only (each unit is
+///   cheap; sharding would add exchange overhead for nothing);
+/// * few units over a big instance (`n ≥ SHARD_AUTO_MIN_N`) → give each
+///   unit the spare cores as shard lanes, keeping at least
+///   [`MIN_SPINS_PER_SHARD`] spins per lane.
+///
+/// [`ReplicaScheduler`]: crate::coordinator::ReplicaScheduler
+/// [`ParallelTempering::with_auto_parallelism`]: crate::engine::ParallelTempering::with_auto_parallelism
+pub fn plan_parallelism(n: usize, units: usize, machine_workers: usize) -> ParallelismPlan {
+    let units = units.max(1);
+    let machine = machine_workers.max(1);
+    if n >= SHARD_AUTO_MIN_N && machine > units {
+        let shards = (machine / units)
+            .min(n / MIN_SPINS_PER_SHARD.max(1))
+            .min(MAX_SHARDS)
+            .max(1);
+        ParallelismPlan { replica_workers: units, shards }
+    } else {
+        ParallelismPlan { replica_workers: units.min(machine), shards: 1 }
+    }
+}
+
+/// Diagnostics of a sharded run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Lanes the run actually used (after clamping).
+    pub shards: usize,
+    /// Largest staleness any lane observed: |consumer local step −
+    /// producer local step at flip time|. Bounded by the window.
+    pub max_lag: u64,
+    /// Flips per lane (sums to the result's `flips`).
+    pub per_shard_flips: Vec<u64>,
+    /// Epoch synchronization points taken (global energy samples).
+    pub sync_points: u64,
+}
+
+/// The sharded engine over one Ising instance.
+///
+/// Consumes the same [`EngineConfig`] as [`SnowballEngine`]; the
+/// `shards` field picks the lane count and [`MergeMode`] picks the
+/// execution strategy. `datapath` is ignored (shard lanes are a dense /
+/// CSR datapath of their own); `selector` is ignored in the lanes (the
+/// virtual-time mode matches *both* selectors, which are bit-identical
+/// to each other by the PR-2 parity contract).
+///
+/// [`SnowballEngine`]: super::SnowballEngine
+pub struct ShardedEngine<'m> {
+    model: &'m IsingModel,
+    cfg: EngineConfig,
+    merge: MergeMode,
+    window: u64,
+    part: Partition,
+}
+
+impl<'m> ShardedEngine<'m> {
+    /// Build a sharded engine; `cfg.shards` is clamped to
+    /// `[1, min(N, MAX_SHARDS)]` and the partition is degree-balanced.
+    pub fn new(model: &'m IsingModel, cfg: EngineConfig, merge: MergeMode) -> Self {
+        let shards = cfg.shards.clamp(1, MAX_SHARDS).min(model.len().max(1));
+        let part = Partition::by_degree(model, shards);
+        Self { model, cfg, merge, window: DEFAULT_WINDOW, part }
+    }
+
+    /// Set the bounded-staleness window (local steps between epoch
+    /// syncs; also sizes the mailboxes). Must be ≥ 1.
+    pub fn with_window(mut self, window: u64) -> Self {
+        assert!(window >= 1, "staleness window must be >= 1");
+        self.window = window;
+        self
+    }
+
+    /// The degree-balanced partition in use.
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    /// Effective lane count.
+    pub fn shards(&self) -> usize {
+        self.part.shards()
+    }
+
+    /// Run to completion (see [`Self::run_with_stats`]).
+    pub fn run(&mut self) -> RunResult {
+        self.run_with_stats().0
+    }
+
+    /// Run to completion, returning the result plus shard diagnostics.
+    pub fn run_with_stats(&mut self) -> (RunResult, ShardStats) {
+        match self.merge {
+            MergeMode::VirtualTime => self.run_virtual(),
+            MergeMode::Async => self.run_async(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Virtual-time merge: deterministic fixed-order interleave.
+    // ------------------------------------------------------------------
+
+    /// One global MCMC chain, with every per-step quantity composed
+    /// shard-by-shard in ascending shard order. Because the partition
+    /// is contiguous, concatenating the shards' lanes reproduces the
+    /// global lane order; because `u64`/`i64` sums are exact and the
+    /// stateless RNG is addressed by `(t, salt)` rather than call
+    /// order, every draw, weight, selection and field update equals the
+    /// single-shard engine's — byte for byte.
+    fn run_virtual(&mut self) -> (RunResult, ShardStats) {
+        let start = std::time::Instant::now();
+        let model = self.model;
+        let n = model.len();
+        let s_count = self.part.shards();
+        let lut = PwlLogistic::default();
+        let rng = StatelessRng::new(self.cfg.seed);
+        let mut spins = SpinVec::random(n, &rng);
+        let mut u = model.local_fields(&spins);
+        let mut energy = model.energy(&spins);
+        let mut p_q16 = vec![0u32; n];
+
+        let steps = self.cfg.steps;
+        let mut best_energy = energy;
+        let mut best_step = 0u64;
+        let mut best_spins = spins.clone();
+        let mut trace = Vec::new();
+        let (mut flips, mut fallbacks, mut nulls) = (0u64, 0u64, 0u64);
+        if self.cfg.trace_stride > 0 {
+            trace.push((0, energy));
+        }
+
+        let uniformized = matches!(self.cfg.mode, Mode::RouletteUniformized);
+        let mut w_shard = vec![0u64; s_count];
+        for t in 0..steps {
+            let temp = self.cfg.schedule.temperature(t, steps);
+            match self.cfg.mode {
+                Mode::RandomScan => {
+                    if let Some((j, de)) =
+                        virtual_random_scan(model, &lut, &rng, &spins, &u, t, temp)
+                    {
+                        apply_flip_sharded(model, &self.part, &mut u, j, spins.get(j));
+                        // `apply_flip_sharded` updates fields only; the
+                        // flip + energy happen here, like the engine.
+                        spins.flip(j);
+                        energy += de;
+                        flips += 1;
+                    }
+                }
+                Mode::RouletteWheel | Mode::RouletteUniformized => {
+                    // Per-shard lane refresh in shard order; W_s are
+                    // summed exactly as `eval_lanes` sums lane weights.
+                    let ctx = lut.lane_ctx(temp);
+                    let mut w_total = 0u64;
+                    for s in 0..s_count {
+                        let mut w_s = 0u64;
+                        for i in self.part.range(s) {
+                            let p = lut.lane_p(&ctx, spins.bit(i), u[i]);
+                            p_q16[i] = p;
+                            w_s += p as u64;
+                        }
+                        w_shard[s] = w_s;
+                        w_total += w_s;
+                    }
+                    if w_total == 0 {
+                        // Degenerate weight → Mode I fallback, exactly
+                        // like the engine (fallback bookkeeping too).
+                        fallbacks += 1;
+                        if let Some((j, de)) =
+                            virtual_random_scan(model, &lut, &rng, &spins, &u, t, temp)
+                        {
+                            apply_flip_sharded(model, &self.part, &mut u, j, spins.get(j));
+                            spins.flip(j);
+                            energy += de;
+                            flips += 1;
+                        }
+                    } else {
+                        let w_star = (n as u64) * ONE_Q16 as u64;
+                        let domain = if uniformized { w_star } else { w_total };
+                        let raw = rng.u64(t, 0, salt::ROULETTE);
+                        let r = ((raw as u128 * domain as u128) >> 64) as u64;
+                        if uniformized && r >= w_total {
+                            nulls += 1;
+                        } else {
+                            // Locate the owning shard by prefix, then
+                            // the lane inside it — the same unique j
+                            // the global prefix scan finds.
+                            let mut cum = 0u64;
+                            let mut chosen = n - 1;
+                            'outer: for s in 0..s_count {
+                                if r < cum + w_shard[s] {
+                                    let mut acc = cum;
+                                    for i in self.part.range(s) {
+                                        acc += p_q16[i] as u64;
+                                        if r < acc {
+                                            chosen = i;
+                                            break 'outer;
+                                        }
+                                    }
+                                }
+                                cum += w_shard[s];
+                            }
+                            let de = IsingModel::delta_e(spins.get(chosen), u[chosen]);
+                            let s_old = spins.get(chosen);
+                            apply_flip_sharded(model, &self.part, &mut u, chosen, s_old);
+                            spins.flip(chosen);
+                            energy += de;
+                            flips += 1;
+                        }
+                    }
+                }
+            }
+            if energy < best_energy {
+                best_energy = energy;
+                best_step = t + 1;
+                best_spins.assign_from(&spins);
+            }
+            if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
+                trace.push((t + 1, energy));
+            }
+        }
+        let result = RunResult {
+            best_energy,
+            best_step,
+            best_spins,
+            final_energy: energy,
+            final_spins: spins,
+            trace,
+            steps,
+            flips,
+            fallbacks,
+            nulls,
+            wall: start.elapsed(),
+        };
+        let stats = ShardStats {
+            shards: s_count,
+            max_lag: 0,
+            per_shard_flips: vec![0; s_count], // interleaved, not per-lane
+            sync_points: 0,
+        };
+        (result, stats)
+    }
+
+    // ------------------------------------------------------------------
+    // Async merge: one thread per shard, mailboxes, epoch barriers.
+    // ------------------------------------------------------------------
+
+    fn run_async(&mut self) -> (RunResult, ShardStats) {
+        let start = std::time::Instant::now();
+        let model = self.model;
+        let n = model.len();
+        let s_count = self.part.shards();
+        let window = self.window;
+        // `cfg.steps` is the TOTAL step budget across lanes (comparable
+        // work to a single-shard run of the same step count); each lane
+        // runs the same local count so epoch barriers line up.
+        let steps_local = self.cfg.steps.div_ceil(s_count as u64);
+        let total_steps = steps_local * s_count as u64;
+
+        // Initial global configuration: same derivation as the engine.
+        let rng = StatelessRng::new(self.cfg.seed);
+        let init_spins = SpinVec::random(n, &rng);
+        let init_u = model.local_fields(&init_spins);
+        let init_energy = model.energy(&init_spins);
+
+        let mut result = RunResult {
+            best_energy: init_energy,
+            best_step: 0,
+            best_spins: init_spins.clone(),
+            final_energy: init_energy,
+            final_spins: init_spins.clone(),
+            trace: if self.cfg.trace_stride > 0 { vec![(0, init_energy)] } else { Vec::new() },
+            steps: total_steps,
+            flips: 0,
+            fallbacks: 0,
+            nulls: 0,
+            wall: std::time::Duration::ZERO,
+        };
+        let mut stats = ShardStats {
+            shards: s_count,
+            max_lag: 0,
+            per_shard_flips: vec![0; s_count],
+            sync_points: 0,
+        };
+        if steps_local == 0 || n == 0 {
+            result.wall = start.elapsed();
+            return (result, stats);
+        }
+
+        // Shared CSR (sparse instances): lanes slice rows to their own
+        // range for Θ(deg ∩ range) remote applies.
+        let adj = Adjacency::build_if_sparse(model, 0.25);
+        let lut = PwlLogistic::default();
+        let epochs = steps_local.div_ceil(window);
+        // Ring capacity ≥ the flips a producer can emit between the
+        // consumer's epoch drains (one per local step).
+        let grid = MailboxGrid::new(s_count, window as usize + 2);
+        let gate = SyncGate::new(s_count);
+        let partials: Vec<AtomicI64> = (0..s_count).map(|_| AtomicI64::new(0)).collect();
+        let snapshot = Mutex::new(init_spins.clone());
+        let tracker = Mutex::new(EnergyTracker {
+            best_energy: init_energy,
+            best_step: 0,
+            best_spins: init_spins.clone(),
+            last_energy: init_energy,
+            samples: Vec::new(),
+        });
+
+        let mut lanes: Vec<Lane> = (0..s_count)
+            .map(|s| {
+                let range = self.part.range(s);
+                let mut spins = SpinVec::all_down(range.len());
+                for (k, i) in range.clone().enumerate() {
+                    spins.set(k, init_spins.get(i));
+                }
+                Lane {
+                    index: s,
+                    lo: range.start,
+                    hi: range.end,
+                    spins,
+                    u: init_u[range.clone()].to_vec(),
+                    p: vec![0u32; range.len()],
+                    rng: rng.child(s as u64),
+                    flips: 0,
+                    fallbacks: 0,
+                    nulls: 0,
+                    max_lag: 0,
+                }
+            })
+            .collect();
+
+        // A panicking lane must fail the whole run, not wedge its
+        // siblings at the gate: the panic payload is parked here, the
+        // gate is aborted (waking everyone), and the payload re-raised
+        // after the scope joins — so the replica-level `catch_unwind`
+        // boundary in the scheduler sees an ordinary panic.
+        let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let cfg = &self.cfg;
+        let (model_ref, adj_ref, lut_ref) = (model, adj.as_ref(), &lut);
+        let (grid_ref, gate_ref, partials_ref) = (&grid, &gate, &partials);
+        let (snapshot_ref, tracker_ref, panic_ref) = (&snapshot, &tracker, &panic_slot);
+        std::thread::scope(|scope| {
+            for lane in lanes.iter_mut() {
+                scope.spawn(move || {
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            lane.run(
+                                model_ref,
+                                adj_ref,
+                                lut_ref,
+                                cfg,
+                                steps_local,
+                                window,
+                                s_count,
+                                grid_ref,
+                                gate_ref,
+                                partials_ref,
+                                snapshot_ref,
+                                tracker_ref,
+                            );
+                        }));
+                    if let Err(payload) = outcome {
+                        panic_ref.lock().unwrap().get_or_insert(payload);
+                        gate_ref.abort();
+                    }
+                });
+            }
+        });
+        if let Some(payload) = panic_slot.into_inner().unwrap() {
+            std::panic::resume_unwind(payload);
+        }
+
+        let tracker = tracker.into_inner().unwrap();
+        result.best_energy = tracker.best_energy;
+        result.best_step = tracker.best_step;
+        result.best_spins = tracker.best_spins;
+        result.final_energy = tracker.last_energy;
+        result.final_spins = snapshot.into_inner().unwrap();
+        if self.cfg.trace_stride > 0 {
+            result.trace.extend(tracker.samples);
+        }
+        for lane in &lanes {
+            result.flips += lane.flips;
+            result.fallbacks += lane.fallbacks;
+            result.nulls += lane.nulls;
+            stats.per_shard_flips[lane.index] = lane.flips;
+            stats.max_lag = stats.max_lag.max(lane.max_lag);
+        }
+        stats.sync_points = epochs;
+        result.wall = start.elapsed();
+        (result, stats)
+    }
+}
+
+/// An abortable S-party barrier for the epoch syncs.
+///
+/// `std::sync::Barrier` cannot be interrupted: if one lane dies, its
+/// siblings wait forever and the job wedges — exactly the failure mode
+/// the coordinator's panic path exists to prevent. This gate adds
+/// [`abort`](Self::abort): aborting wakes every current waiter and
+/// makes every future [`wait`](Self::wait) return `Err(GateAborted)`
+/// immediately, so surviving lanes unwind cleanly and the panic can be
+/// re-raised at the replica boundary.
+struct SyncGate {
+    parties: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+/// The gate was aborted — a sibling lane panicked.
+#[derive(Clone, Copy, Debug)]
+struct GateAborted;
+
+impl SyncGate {
+    fn new(parties: usize) -> Self {
+        Self {
+            parties: parties.max(1),
+            state: Mutex::new(GateState { arrived: 0, generation: 0, aborted: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all parties arrive; the LAST arriver is the leader
+    /// (`Ok(true)`). Returns `Err(GateAborted)` — immediately, or from
+    /// mid-wait — once [`abort`](Self::abort) has been called.
+    fn wait(&self) -> Result<bool, GateAborted> {
+        let mut st = self.state.lock().unwrap();
+        if st.aborted {
+            return Err(GateAborted);
+        }
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        while st.generation == gen && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            Err(GateAborted)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Wake every waiter and fail all future waits.
+    fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Best/final energy bookkeeping, written only by the barrier leader.
+struct EnergyTracker {
+    best_energy: i64,
+    best_step: u64,
+    best_spins: SpinVec,
+    last_energy: i64,
+    /// `(approx global step, exact energy)` per epoch sync.
+    samples: Vec<(u64, i64)>,
+}
+
+/// One asynchronous shard lane: the spins in `[lo, hi)`, their local
+/// fields (which include every remote flip applied so far), and the
+/// lane's own stateless RNG stream.
+struct Lane {
+    index: usize,
+    lo: usize,
+    hi: usize,
+    /// Local spins, indexed `0..hi-lo`.
+    spins: SpinVec,
+    /// Local fields of the local spins (global `u[lo..hi]`).
+    u: Vec<i64>,
+    /// Mode II lane weights (local).
+    p: Vec<u32>,
+    rng: StatelessRng,
+    flips: u64,
+    fallbacks: u64,
+    nulls: u64,
+    max_lag: u64,
+}
+
+impl Lane {
+    fn n_local(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Apply a peer's flip to this lane's fields: walk the coupling row
+    /// restricted to `[lo, hi)` (CSR slice when the instance is sparse,
+    /// dense row segment otherwise).
+    fn apply_remote(&mut self, model: &IsingModel, adj: Option<&Adjacency>, flip: Flip) {
+        let j = flip.j as usize;
+        let factor = 2 * flip.s_old as i64;
+        match adj {
+            Some(adj) => {
+                let (neigh, vals) = adj.row(j);
+                let from = neigh.partition_point(|&i| (i as usize) < self.lo);
+                for (&i, &jv) in neigh[from..].iter().zip(vals[from..].iter()) {
+                    if i as usize >= self.hi {
+                        break;
+                    }
+                    self.u[i as usize - self.lo] -= factor * jv as i64;
+                }
+            }
+            None => {
+                let row = &model.j_row(j)[self.lo..self.hi];
+                for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
+                    *ui -= factor * jv as i64;
+                }
+            }
+        }
+    }
+
+    /// Flip local spin `j_local`, update the lane's own fields, and
+    /// broadcast the flip. Returns the pre-flip sign.
+    fn apply_local(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        grid: &MailboxGrid,
+        j_local: usize,
+        step: u64,
+    ) {
+        let s_old = self.spins.flip(j_local);
+        let j = self.lo + j_local;
+        self.apply_remote(model, adj, Flip { j: j as u32, s_old, step });
+        grid.post(self.index, Flip { j: j as u32, s_old, step });
+        self.flips += 1;
+    }
+
+    /// One local MCMC step at temperature `temp` (dual-mode, mirroring
+    /// the engine's step but over the lane's own spins and RNG stream).
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        lut: &PwlLogistic,
+        grid: &MailboxGrid,
+        mode: Mode,
+        k: u64,
+        temp: f64,
+    ) {
+        let n_local = self.n_local();
+        // `move` copies the (Copy) shared refs in, so `adj` keeps its
+        // `Option<&Adjacency>` type inside the closure.
+        let random_scan = move |lane: &mut Lane, is_fallback: bool| {
+            let j = lane.rng.below(k, 0, salt::SITE, n_local as u32) as usize;
+            let de = IsingModel::delta_e(lane.spins.get(j), lane.u[j]);
+            let p = lut.flip_prob_q16(de, temp);
+            let r = lane.rng.u32(k, 0, salt::ACCEPT) >> 16;
+            if r < p {
+                lane.apply_local(model, adj, grid, j, k);
+            }
+            if is_fallback {
+                lane.fallbacks += 1;
+            }
+        };
+        match mode {
+            Mode::RandomScan => random_scan(self, false),
+            Mode::RouletteWheel | Mode::RouletteUniformized => {
+                let ctx = lut.lane_ctx(temp);
+                let w_total = lut.eval_lanes(&ctx, &self.u, self.spins.words(), &mut self.p);
+                if w_total == 0 {
+                    random_scan(self, true);
+                    return;
+                }
+                let uniformized = mode == Mode::RouletteUniformized;
+                let w_star = (n_local as u64) * ONE_Q16 as u64;
+                let domain = if uniformized { w_star } else { w_total };
+                let raw = self.rng.u64(k, 0, salt::ROULETTE);
+                let r = ((raw as u128 * domain as u128) >> 64) as u64;
+                if uniformized && r >= w_total {
+                    self.nulls += 1;
+                    return;
+                }
+                let mut acc = 0u64;
+                let mut chosen = n_local - 1;
+                for (i, &p) in self.p.iter().enumerate() {
+                    acc += p as u64;
+                    if r < acc {
+                        chosen = i;
+                        break;
+                    }
+                }
+                self.apply_local(model, adj, grid, chosen, k);
+            }
+        }
+    }
+
+    /// The lane's thread body: epochs of `window` local steps with
+    /// opportunistic mailbox drains, then the three-phase sync —
+    /// (A) quiesce, (B) drain + publish partial energy and the local
+    /// spin slice, (C) leader records the exact global energy. Returns
+    /// early (cleanly) if the gate aborts — a sibling lane panicked.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        lut: &PwlLogistic,
+        cfg: &EngineConfig,
+        steps_local: u64,
+        window: u64,
+        s_count: usize,
+        grid: &MailboxGrid,
+        gate: &SyncGate,
+        partials: &[AtomicI64],
+        snapshot: &Mutex<SpinVec>,
+        tracker: &Mutex<EnergyTracker>,
+    ) {
+        let epochs = steps_local.div_ceil(window);
+        for e in 0..epochs {
+            let end = ((e + 1) * window).min(steps_local);
+            for k in (e * window)..end {
+                // Opportunistic drain keeps cross-shard fields as fresh
+                // as the interleaving allows (staleness well under the
+                // window in practice; the barrier only enforces the
+                // bound).
+                grid.drain(self.index, |f| {
+                    let lag = (k as i64 - f.step as i64).unsigned_abs();
+                    self.max_lag = self.max_lag.max(lag);
+                    self.apply_remote(model, adj, f);
+                });
+                let temp = cfg.schedule.temperature(k, steps_local);
+                self.step(model, adj, lut, grid, cfg.mode, k, temp);
+            }
+            // Phase A: every lane has finished the epoch — no more
+            // producers until phase C releases.
+            if gate.wait().is_err() {
+                return;
+            }
+            // Phase B prep: apply the stragglers, then publish this
+            // lane's energy partial Σ sᵢ(uᵢ + hᵢ) and its spin slice.
+            grid.drain(self.index, |f| {
+                let lag = (end as i64 - f.step as i64).unsigned_abs();
+                self.max_lag = self.max_lag.max(lag);
+                self.apply_remote(model, adj, f);
+            });
+            let mut partial = 0i64;
+            for i in 0..self.n_local() {
+                let s = self.spins.get(i) as i64;
+                partial += s * (self.u[i] + model.h(self.lo + i) as i64);
+            }
+            partials[self.index].store(partial, Ordering::Relaxed);
+            {
+                let mut snap = snapshot.lock().unwrap();
+                for i in 0..self.n_local() {
+                    snap.set(self.lo + i, self.spins.get(i));
+                }
+            }
+            match gate.wait() {
+                Err(GateAborted) => return,
+                Ok(true) => {
+                    // Leader: all partials and slices are published
+                    // (the gate gives happens-before) —
+                    // E = −(Σ sᵢuᵢ + Σ sᵢhᵢ)/2, exact.
+                    let total: i64 = partials.iter().map(|p| p.load(Ordering::Relaxed)).sum();
+                    let energy = -total / 2;
+                    let global_step = end * s_count as u64;
+                    let mut t = tracker.lock().unwrap();
+                    t.last_energy = energy;
+                    if cfg.trace_stride > 0 {
+                        // Only consumed as the run's trace — don't
+                        // accumulate unbounded samples with tracing off.
+                        t.samples.push((global_step, energy));
+                    }
+                    if energy < t.best_energy {
+                        t.best_energy = energy;
+                        t.best_step = global_step;
+                        let snap = snapshot.lock().unwrap();
+                        t.best_spins.assign_from(&snap);
+                    }
+                }
+                Ok(false) => {}
+            }
+            // Phase C: resume only after the leader finished reading.
+            if gate.wait().is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Mode I site draw + Glauber accept on the GLOBAL stream — the shared
+/// helper of the virtual-time mode (both as Mode I proper and as the
+/// Mode II fallback). Returns `Some((j, ΔE))` when the flip is
+/// accepted; the caller applies it. Byte-compatible with
+/// `SnowballEngine::step_random_scan`.
+fn virtual_random_scan(
+    model: &IsingModel,
+    lut: &PwlLogistic,
+    rng: &StatelessRng,
+    spins: &SpinVec,
+    u: &[i64],
+    t: u64,
+    temp: f64,
+) -> Option<(usize, i64)> {
+    let n = model.len() as u32;
+    let j = rng.below(t, 0, salt::SITE, n) as usize;
+    let de = IsingModel::delta_e(spins.get(j), u[j]);
+    let p = lut.flip_prob_q16(de, temp);
+    let r = rng.u32(t, 0, salt::ACCEPT) >> 16;
+    if r < p {
+        Some((j, de))
+    } else {
+        None
+    }
+}
+
+/// Propagate a flip of global spin `j` (current sign `s_j`, about to be
+/// flipped by the caller) into the full field vector, walking the row
+/// one shard segment at a time in shard order — the same i64 adds as
+/// the engine's dense row walk, grouped differently.
+fn apply_flip_sharded(
+    model: &IsingModel,
+    part: &Partition,
+    u: &mut [i64],
+    j: usize,
+    s_old: i8,
+) {
+    let row = model.j_row(j);
+    let factor = 2 * s_old as i64;
+    for s in 0..part.shards() {
+        let r = part.range(s);
+        for (ui, &jv) in u[r.clone()].iter_mut().zip(row[r].iter()) {
+            *ui -= factor * jv as i64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Datapath, Schedule, SelectorKind, SnowballEngine};
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+
+    fn cfg(mode: Mode, steps: u64, seed: u64, shards: usize) -> EngineConfig {
+        EngineConfig {
+            mode,
+            datapath: Datapath::Dense,
+            selector: SelectorKind::Fenwick,
+            schedule: Schedule::Geometric { t0: 5.0, t1: 0.1 },
+            steps,
+            seed,
+            planes: None,
+            trace_stride: 0,
+            shards,
+        }
+    }
+
+    #[test]
+    fn virtual_time_matches_engine_smoke() {
+        // The in-module smoke of the tentpole guarantee; the full
+        // mode × selector × seed × shard matrix lives in
+        // rust/tests/shard_parity.rs.
+        let rng = StatelessRng::new(41);
+        let p = MaxCut::new(generators::erdos_renyi(72, 300, &[-1, 1], &rng));
+        for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+            let mut reference = SnowballEngine::new(p.model(), cfg(mode, 600, 9, 1));
+            let want = reference.run();
+            let mut sharded =
+                ShardedEngine::new(p.model(), cfg(mode, 600, 9, 4), MergeMode::VirtualTime);
+            let got = sharded.run();
+            assert_eq!(got.best_energy, want.best_energy, "{mode:?}");
+            assert_eq!(got.final_energy, want.final_energy, "{mode:?}");
+            assert_eq!(got.final_spins, want.final_spins, "{mode:?}");
+            assert_eq!(got.best_spins, want.best_spins, "{mode:?}");
+            assert_eq!(
+                (got.flips, got.fallbacks, got.nulls, got.best_step),
+                (want.flips, want.fallbacks, want.nulls, want.best_step),
+                "{mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn async_bookkeeping_is_exact_at_sync_points() {
+        let rng = StatelessRng::new(42);
+        let p = MaxCut::new(generators::erdos_renyi(192, 800, &[-1, 1], &rng));
+        let mut e =
+            ShardedEngine::new(p.model(), cfg(Mode::RouletteWheel, 8_000, 3, 4), MergeMode::Async)
+                .with_window(16);
+        let (r, stats) = e.run_with_stats();
+        // The distributed energy bookkeeping must agree with the dense
+        // oracle on the final configuration...
+        assert_eq!(r.final_energy, p.model().energy(&r.final_spins), "final energy drifted");
+        // ...and on the recorded best configuration.
+        assert_eq!(r.best_energy, p.model().energy(&r.best_spins), "best energy drifted");
+        assert!(r.best_energy <= r.final_energy);
+        assert_eq!(stats.shards, 4);
+        assert_eq!(stats.per_shard_flips.iter().sum::<u64>(), r.flips);
+        assert!(stats.max_lag <= 16, "staleness {} exceeded the window", stats.max_lag);
+        assert_eq!(stats.sync_points, 8_000u64.div_ceil(4).div_ceil(16));
+        assert!(r.flips > 0, "async lanes must make progress");
+    }
+
+    #[test]
+    fn async_single_shard_and_zero_steps_degenerate_cleanly() {
+        let rng = StatelessRng::new(43);
+        let p = MaxCut::new(generators::erdos_renyi(48, 160, &[-1, 1], &rng));
+        // S = 1: one lane, no peers, still correct.
+        let mut one =
+            ShardedEngine::new(p.model(), cfg(Mode::RouletteWheel, 500, 7, 1), MergeMode::Async);
+        let r = one.run();
+        assert_eq!(r.final_energy, p.model().energy(&r.final_spins));
+        // steps = 0: initial configuration everywhere.
+        let mut zero =
+            ShardedEngine::new(p.model(), cfg(Mode::RouletteWheel, 0, 7, 3), MergeMode::Async);
+        let r0 = zero.run();
+        assert_eq!(r0.best_energy, p.model().energy(&r0.best_spins));
+        assert_eq!(r0.flips, 0);
+        assert_eq!(r0.steps, 0);
+    }
+
+    #[test]
+    fn shard_count_clamps() {
+        let rng = StatelessRng::new(44);
+        let p = MaxCut::new(generators::erdos_renyi(10, 20, &[-1, 1], &rng));
+        let e = ShardedEngine::new(p.model(), cfg(Mode::RandomScan, 10, 1, 500), MergeMode::Async);
+        assert_eq!(e.shards(), 10, "shards clamp to N");
+        let e = ShardedEngine::new(p.model(), cfg(Mode::RandomScan, 10, 1, 0), MergeMode::Async);
+        assert_eq!(e.shards(), 1, "shards = 0 clamps to 1");
+    }
+
+    #[test]
+    fn parallelism_plan_policy() {
+        // Small instance: replica-level only, whatever the machine.
+        assert_eq!(plan_parallelism(256, 8, 32), ParallelismPlan { replica_workers: 8, shards: 1 });
+        // Big instance, many units: still replica-level (units fill the
+        // machine).
+        assert_eq!(
+            plan_parallelism(8192, 16, 16),
+            ParallelismPlan { replica_workers: 16, shards: 1 }
+        );
+        // Big instance, few units: spare cores become shard lanes.
+        let p = plan_parallelism(8192, 2, 16);
+        assert_eq!(p.replica_workers, 2);
+        assert!(p.shards >= 2 && p.shards <= 8, "{p:?}");
+        // Lane floor: never shard below MIN_SPINS_PER_SHARD spins/lane.
+        let p = plan_parallelism(4096, 1, 64);
+        assert!(p.shards <= 4096 / MIN_SPINS_PER_SHARD, "{p:?}");
+        // Degenerate inputs.
+        assert_eq!(plan_parallelism(0, 0, 0), ParallelismPlan { replica_workers: 1, shards: 1 });
+    }
+
+    /// A sibling-lane panic must not wedge the survivors: aborting the
+    /// gate wakes every current waiter and fails every future wait.
+    #[test]
+    fn sync_gate_abort_releases_all_waiters() {
+        let gate = std::sync::Arc::new(SyncGate::new(4));
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let gate = gate.clone();
+                std::thread::spawn(move || gate.wait().is_err())
+            })
+            .collect();
+        // Give the three waiters time to block (4th party never comes —
+        // it "panicked"), then abort as the panic handler would.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        gate.abort();
+        for w in waiters {
+            assert!(w.join().unwrap(), "waiter must observe the abort");
+        }
+        assert!(gate.wait().is_err(), "post-abort waits must fail immediately");
+    }
+
+    /// Normal rounds elect exactly one leader per round and reuse
+    /// cleanly across rounds.
+    #[test]
+    fn sync_gate_elects_one_leader_per_round() {
+        let gate = std::sync::Arc::new(SyncGate::new(3));
+        let leaders = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let threads: Vec<_> = (0..3)
+            .map(|_| {
+                let (gate, leaders) = (gate.clone(), leaders.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        if gate.wait().unwrap() {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(leaders.load(Ordering::Relaxed), 10, "one leader per round");
+    }
+
+    #[test]
+    fn merge_mode_parses() {
+        assert_eq!(MergeMode::parse("async").unwrap(), MergeMode::Async);
+        assert_eq!(MergeMode::parse("virtual").unwrap(), MergeMode::VirtualTime);
+        assert_eq!(MergeMode::parse("virtual-time").unwrap(), MergeMode::VirtualTime);
+        assert!(MergeMode::parse("bogus").is_err());
+    }
+}

@@ -91,6 +91,11 @@ pub struct EngineConfig {
     pub planes: Option<u32>,
     /// Record `(step, energy)` every `trace_stride` steps (0 = off).
     pub trace_stride: u64,
+    /// Within-instance shard lanes (see [`crate::engine::shard`]).
+    /// `SnowballEngine` itself is the single-lane engine and ignores
+    /// this; [`crate::engine::ShardedEngine`] partitions the instance
+    /// into this many lanes (clamped to `[1, min(N, MAX_SHARDS)]`).
+    pub shards: usize,
 }
 
 impl EngineConfig {
@@ -106,6 +111,7 @@ impl EngineConfig {
             seed,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         }
     }
 }

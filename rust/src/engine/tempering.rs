@@ -58,6 +58,26 @@ impl ParallelTempering {
         self
     }
 
+    /// Size the pool through the stack-wide replica-vs-shard policy
+    /// ([`crate::engine::shard::plan_parallelism`]) for an `n`-spin
+    /// instance: the ladder's chains are the "units", so tempering
+    /// always takes the plan's replica-level share (its chains
+    /// lock-step at exchange barriers, which rules out blocking shard
+    /// lanes inside a burst — shard-level parallelism is the
+    /// [`crate::coordinator::ReplicaScheduler`]'s side of the same
+    /// policy). Concretely: never more pool workers than chains, so a
+    /// big-instance ladder leaves the spare cores to other tenants of
+    /// the machine instead of oversubscribing its own bursts.
+    pub fn with_auto_parallelism(mut self, n: usize) -> Self {
+        let plan = crate::engine::shard::plan_parallelism(
+            n,
+            self.temps.len(),
+            super::pool::ReplicaPool::auto_workers(),
+        );
+        self.workers = plan.replica_workers;
+        self
+    }
+
     /// Run `steps` single-spin updates per replica on a fresh pool.
     pub fn run(&self, model: &IsingModel, steps: u64, seed: u64) -> TemperingResult {
         let pool = ReplicaPool::new(self.workers);
@@ -87,6 +107,7 @@ impl ParallelTempering {
                     seed: root.child(i as u64).seed(),
                     planes: None,
                     trace_stride: 0,
+                    shards: 1,
                 };
                 SnowballEngine::new(model, cfg)
             })
@@ -193,6 +214,27 @@ mod tests {
             dense.swap_rates,
             sparse.swap_rates
         );
+    }
+
+    /// The auto policy never hands a tempering ladder more pool
+    /// workers than it has chains (its bursts cannot use them), and it
+    /// cannot change results — only wall-clock.
+    #[test]
+    fn auto_parallelism_caps_workers_at_chain_count() {
+        let pt = ParallelTempering::geometric(4, 6.0, 0.3, Mode::RandomScan)
+            .with_auto_parallelism(100_000);
+        assert!(pt.workers >= 1 && pt.workers <= 4, "workers {} vs 4 chains", pt.workers);
+        let rng = StatelessRng::new(31);
+        let g = generators::erdos_renyi(40, 180, &[-1, 1], &rng);
+        let p = MaxCut::new(g);
+        let auto = ParallelTempering::geometric(4, 5.0, 0.3, Mode::RandomScan)
+            .with_auto_parallelism(p.model().len())
+            .run(p.model(), 2_000, 7);
+        let serial = ParallelTempering::geometric(4, 5.0, 0.3, Mode::RandomScan)
+            .with_workers(1)
+            .run(p.model(), 2_000, 7);
+        assert_eq!(auto.best_energy, serial.best_energy);
+        assert_eq!(auto.best_spins, serial.best_spins);
     }
 
     #[test]

@@ -145,6 +145,45 @@ impl HwModel {
         self.report(g, init, step_cycles)
     }
 
+    /// Cycles one asynchronous shard lane spends per **round** (every
+    /// one of the `shards` update units completes one local step —
+    /// `shards` global steps of progress, the paper's asynchronous
+    /// update units generalized to S lanes):
+    ///
+    /// * evaluate its `⌈N/S⌉` local lanes through the LUT;
+    /// * comparator-tree select over the local lanes;
+    /// * apply its own flip plus up to `S − 1` remote flips, each
+    ///   streaming only the lane's `2·B·⌈⌈N/S⌉/64⌉` column-segment
+    ///   words;
+    /// * exchange flip notices with `S − 1` peers (2 cycles each —
+    ///   mailbox write + read, degree-independent because receivers
+    ///   derive their own deltas).
+    ///
+    /// `shards == 1` degenerates exactly to
+    /// [`Self::roulette_step_cycles`].
+    pub fn sharded_roulette_round_cycles(&self, g: Geometry, shards: usize) -> u64 {
+        let s = shards.clamp(1, g.n.max(1)) as u64;
+        let local_n = (g.n as u64).div_ceil(s);
+        let local = Geometry { n: local_n as usize, planes: g.planes };
+        let eval = local_n.div_ceil(self.params.eval_lanes as u64);
+        let select = local_n.next_power_of_two().trailing_zeros() as u64 + 2;
+        let updates = s * self.update_cycles(local);
+        let exchange = 2 * (s - 1);
+        eval + select + updates + exchange
+    }
+
+    /// Full report for `steps` TOTAL Mode II steps spread over
+    /// `shards` asynchronous lanes: `⌈steps/S⌉` rounds, each advancing
+    /// S steps — wall-clock scales with the round count while the work
+    /// per flip stays local.
+    pub fn sharded_roulette_run(&self, g: Geometry, shards: usize, steps: u64) -> HwReport {
+        let s = shards.clamp(1, g.n.max(1)) as u64;
+        let init = self.init_cycles(g);
+        let rounds = steps.div_ceil(s);
+        let step = self.sharded_roulette_round_cycles(g, shards) * rounds;
+        self.report(g, init, step)
+    }
+
     /// Cycles for one Mode I (random-scan) step: single-site evaluate
     /// (constant) + incremental update on accept.
     pub fn random_scan_step_cycles(&self, g: Geometry, accepted: bool) -> u64 {
@@ -289,6 +328,54 @@ mod tests {
             staged.step_cycles,
             all_bulk.step_cycles
         );
+    }
+
+    #[test]
+    fn sharded_round_reduces_to_single_lane() {
+        let hw = HwModel::default();
+        let g = k2000();
+        assert_eq!(
+            hw.sharded_roulette_round_cycles(g, 1),
+            hw.roulette_step_cycles(g),
+            "one lane must cost exactly the classic step"
+        );
+        let r1 = hw.sharded_roulette_run(g, 1, 10_000);
+        let r0 = hw.roulette_run(g, 10_000);
+        assert_eq!(r1.step_cycles, r0.step_cycles);
+    }
+
+    #[test]
+    fn sharded_lanes_raise_step_throughput() {
+        let hw = HwModel::default();
+        let g = k2000();
+        // Cycles per GLOBAL step (round / S) must strictly improve as
+        // lanes are added on a big all-to-all instance…
+        let per_step =
+            |s: usize| hw.sharded_roulette_round_cycles(g, s) as f64 / s as f64;
+        assert!(per_step(2) < per_step(1));
+        assert!(per_step(4) < per_step(2));
+        assert!(per_step(8) < per_step(4));
+        // …and the run-level accounting follows the round count.
+        let steps = 64_000u64;
+        let run = hw.sharded_roulette_run(g, 8, steps);
+        assert_eq!(
+            run.step_cycles,
+            steps.div_ceil(8) * hw.sharded_roulette_round_cycles(g, 8)
+        );
+        assert!(run.kernel_seconds < hw.roulette_run(g, steps).kernel_seconds);
+    }
+
+    #[test]
+    fn sharding_tiny_instances_is_overhead_bound() {
+        // On a small instance the exchange term dominates: per-step
+        // cycles stop improving long before the lane count does — the
+        // cycle-model justification for the SHARD_AUTO_MIN_N policy.
+        let hw = HwModel::default();
+        let g = Geometry { n: 128, planes: 1 };
+        let per_step =
+            |s: usize| hw.sharded_roulette_round_cycles(g, s) as f64 / s as f64;
+        let speedup_16 = per_step(1) / per_step(16);
+        assert!(speedup_16 < 16.0 / 2.0, "tiny instance speedup {speedup_16} implausible");
     }
 
     #[test]

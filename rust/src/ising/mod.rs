@@ -2,7 +2,9 @@
 //! configurations (paper §II-B).
 
 pub mod model;
+pub mod partition;
 pub mod spins;
 
 pub use model::{Adjacency, IsingModel};
+pub use partition::Partition;
 pub use spins::SpinVec;

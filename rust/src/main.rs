@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   solve  --instance <id|er:n:m> [--mode rsa|rwa] [--steps N] [--replicas R]
 //!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
-//!          [--workers W] [--selector scan|fenwick]
-//!   serve  [--addr host:port] [--workers W]
+//!          [--workers W] [--selector scan|fenwick] [--shards S]
+//!   serve  [--addr host:port] [--workers W] [--max-inflight-replicas N]
+//!          [--reject-saturated]
 //!   bench  <table1|table2|table3|fig3|fig8|fig13|fig14|fig15> [options]
 //!   gen    --instance <id> --out <path>       (write Gset-format file)
 //!   info                                        (platform / artifact info)
@@ -48,8 +49,11 @@ USAGE:
   snowball solve --instance <G6|G11|...|K2000|er:n:m> [--mode rsa|rwa]
                  [--steps N] [--replicas R] [--seed S]
                  [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
-                 [--selector scan|fenwick]
+                 [--selector scan|fenwick] [--shards S]
+                    (--shards: 1 = classic engine, >1 = async sharded
+                     lanes per replica, 0 = auto by instance size)
   snowball serve [--addr 127.0.0.1:7878] [--workers W]
+                 [--max-inflight-replicas N] [--reject-saturated]
   snowball bench <table1|table2|table3|fig3|fig5|fig8|fig13|fig14|fig15> [--quick]
   snowball gen   --instance <id> --out <path>
   snowball info
@@ -92,6 +96,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
         None => fj.and_then(|j| j.target),
     };
     let workers: usize = args.get_parse_or("workers", 0usize)?;
+    let shards: u32 = args.get_parse_or("shards", fj.map(|j| j.shards).unwrap_or(1))?;
+    anyhow::ensure!(
+        shards as usize <= snowball::engine::shard::MAX_SHARDS,
+        "--shards must be <= {} (got {shards})",
+        snowball::engine::shard::MAX_SHARDS
+    );
 
     let w_total: i64 = -model.j_matrix().iter().map(|&v| v as i64).sum::<i64>() / 2;
     let coord = Coordinator::start(workers);
@@ -105,9 +115,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
         replicas,
         seed,
         target_energy: target,
+        shards,
         backend: Backend::Native,
     });
-    let r = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;
+    let r = coord.wait(id).ok_or_else(|| {
+        // Surface the preserved failure detail (replica panic message)
+        // instead of a generic error.
+        match coord.state(id) {
+            Some(snowball::coordinator::JobState::Failed(msg)) => {
+                anyhow::anyhow!("job failed: {msg}")
+            }
+            _ => anyhow::anyhow!("job failed"),
+        }
+    })?;
     let best = r.best_energy();
     println!("instance={label} mode={} steps={steps} replicas={replicas}", mode.name());
     println!("best_energy={best} (cut={})", (w_total - best) / 2);
@@ -127,9 +147,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let workers: usize = args.get_parse_or("workers", 0usize)?;
-    let coord = Coordinator::start(workers);
+    let max_inflight: usize = args.get_parse_or("max-inflight-replicas", 0usize)?;
+    let coord = Coordinator::start_with(snowball::coordinator::CoordinatorConfig {
+        workers,
+        max_inflight_replicas: max_inflight,
+        reject_when_saturated: args.flag("reject-saturated"),
+        ..Default::default()
+    });
     let svc = Service::bind(coord, &addr)?;
     println!("snowball service listening on {}", svc.addr());
+    if max_inflight > 0 {
+        println!("admission: max {max_inflight} inflight replicas");
+    }
     svc.serve()
 }
 

@@ -207,6 +207,7 @@ mod tests {
             seed: 5,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut e = SnowballEngine::new(tsp.model(), cfg);
         let r = e.run();

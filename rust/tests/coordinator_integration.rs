@@ -100,6 +100,7 @@ fn coordinator_direct_api_with_target_statistics() {
         replicas: 8,
         seed: 3,
         target_energy: None,
+        shards: 1,
         backend: Backend::Native,
     });
     let res = coord.wait(id).unwrap();

@@ -45,6 +45,7 @@ fn rwa_converges_in_fewer_steps_than_rsa() {
                 seed,
                 planes: None,
                 trace_stride: 0,
+                shards: 1,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let r = e.run();
@@ -98,6 +99,7 @@ fn uniformized_null_rate_tracks_weight() {
             seed: 9,
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let r = e.run();

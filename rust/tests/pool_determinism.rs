@@ -72,6 +72,7 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
         replicas,
         seed,
         target_energy: None,
+        shards: 1,
         backend: Backend::Native,
     }
 }

@@ -174,6 +174,7 @@ fn prop_engine_state_consistency() {
             seed: rng.u64(6, 0, salt::PROBLEM),
             planes: None,
             trace_stride: 0,
+            shards: 1,
         };
         let mut e = SnowballEngine::new(&m, cfg);
         e.run();

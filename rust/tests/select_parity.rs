@@ -34,6 +34,7 @@ fn run_signature(
         seed,
         planes: None,
         trace_stride: 0,
+        shards: 1,
     };
     let mut e = SnowballEngine::new(model, cfg);
     let r = e.run();

@@ -50,6 +50,7 @@ fn reference_spec(c: usize) -> JobSpec {
         replicas: 2,
         seed,
         target_energy: None,
+        shards: 1,
         backend: Backend::Native,
     }
 }

@@ -1,0 +1,197 @@
+//! The sharded-engine contract (engine/shard):
+//!
+//! 1. **Virtual-time merge parity** — an S-shard run in the
+//!    deterministic merge mode is bit-identical to the single-shard
+//!    `SnowballEngine` for the same seed, across modes, selectors,
+//!    datapaths, shard counts, seeds, and instance densities.
+//! 2. **Async quality parity** — the asynchronous mode reaches at
+//!    least comparable best energy on a G-set-style instance at
+//!    N ≥ 2048 with the same total step budget.
+//! 3. **Bounded staleness** — the lag any lane observes never exceeds
+//!    the configured window, and the epoch bookkeeping is exact.
+
+use snowball::engine::{
+    Datapath, EngineConfig, MergeMode, Mode, Schedule, SelectorKind, ShardedEngine, SnowballEngine,
+};
+use snowball::graph::generators;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+
+fn cfg(mode: Mode, steps: u64, seed: u64, shards: usize) -> EngineConfig {
+    EngineConfig {
+        mode,
+        datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 5.0, t1: 0.08 },
+        steps,
+        seed,
+        planes: None,
+        trace_stride: 97,
+        shards,
+    }
+}
+
+type Signature = (i64, u64, i64, u64, u64, u64, Vec<(u64, i64)>, Vec<i8>, Vec<i8>);
+
+fn signature(r: snowball::engine::RunResult) -> Signature {
+    (
+        r.best_energy,
+        r.best_step,
+        r.final_energy,
+        r.flips,
+        r.fallbacks,
+        r.nulls,
+        r.trace,
+        r.best_spins.to_spins(),
+        r.final_spins.to_spins(),
+    )
+}
+
+/// The tentpole guarantee: virtual-time S-shard runs are bit-identical
+/// to the single-shard engine — every observable, including the energy
+/// trace and both spin configurations — for every mode, both
+/// selectors, both datapaths, several shard counts and seeds, on a
+/// sparse (CSR path) and a dense (row-walk path) instance.
+#[test]
+fn virtual_time_merge_is_bit_identical_to_single_shard_engine() {
+    let sparse = MaxCut::new(generators::erdos_renyi(128, 260, &[-1, 1], &StatelessRng::new(71)));
+    let dense = MaxCut::new(generators::complete(64, &[-1, 1], &StatelessRng::new(72)));
+    for (label, p) in [("sparse", &sparse), ("dense", &dense)] {
+        for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+            for seed in [3u64, 11] {
+                // Reference runs: both selectors and both datapaths
+                // must already agree with each other (PR-1/PR-2
+                // contracts) — and the sharded merge must match all of
+                // them.
+                let mut refs = Vec::new();
+                for selector in [SelectorKind::Fenwick, SelectorKind::LinearScan] {
+                    for dp in [Datapath::Dense, Datapath::BitPlane] {
+                        let mut c = cfg(mode, 1_200, seed, 1);
+                        c.selector = selector;
+                        c.datapath = dp;
+                        refs.push(signature(SnowballEngine::new(p.model(), c).run()));
+                    }
+                }
+                for w in refs.windows(2) {
+                    assert_eq!(w[0], w[1], "{label}/{mode:?}/seed {seed}: references diverged");
+                }
+                for shards in [2usize, 3, 5, 8] {
+                    let got = signature(
+                        ShardedEngine::new(
+                            p.model(),
+                            cfg(mode, 1_200, seed, shards),
+                            MergeMode::VirtualTime,
+                        )
+                        .run(),
+                    );
+                    assert_eq!(
+                        got, refs[0],
+                        "{label}/{mode:?}/seed {seed}/{shards} shards: virtual-time merge \
+                         diverged from the single-shard engine"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Async mode on a G-set-style instance at N ≥ 2048: with the same
+/// total step budget, the sharded run's best energy must be at least
+/// comparable to the single-lane engine's (within a small annealing
+/// tolerance — asynchronous lanes see bounded-stale cross-shard
+/// fields, which is the paper's trade; what must NOT happen is a
+/// quality collapse).
+#[test]
+fn async_mode_matches_single_lane_quality_at_scale() {
+    let n = 2048usize;
+    let p = MaxCut::new(generators::erdos_renyi(n, 4 * n, &[-1, 1], &StatelessRng::new(2048)));
+    let steps = 160_000u64;
+    let schedule = Schedule::Geometric { t0: 6.0, t1: 0.05 }.quantized(64);
+
+    let mut base = cfg(Mode::RouletteWheel, steps, 9, 1);
+    base.schedule = schedule.clone();
+    base.trace_stride = 0;
+    let serial = SnowballEngine::new(p.model(), base.clone()).run();
+
+    let mut sharded_cfg = base;
+    sharded_cfg.shards = 4;
+    let (sharded, stats) = ShardedEngine::new(p.model(), sharded_cfg, MergeMode::Async)
+        .with_window(32)
+        .run_with_stats();
+
+    // Exactness of the distributed bookkeeping (independent of quality).
+    assert_eq!(
+        sharded.final_energy,
+        p.model().energy(&sharded.final_spins),
+        "distributed energy accounting drifted"
+    );
+    assert_eq!(sharded.best_energy, p.model().energy(&sharded.best_spins));
+    assert_eq!(stats.per_shard_flips.iter().sum::<u64>(), sharded.flips);
+
+    // Quality: within 3% of the single-lane anneal (energies are
+    // negative: closer to -inf is better).
+    assert!(
+        (sharded.best_energy as f64) <= (serial.best_energy as f64) * 0.97,
+        "async sharded best {} vs single-lane best {} — quality collapsed",
+        sharded.best_energy,
+        serial.best_energy
+    );
+    // And not a degenerate run.
+    assert!(sharded.flips > steps / 4, "async lanes barely flipped: {}", sharded.flips);
+}
+
+/// Bounded-staleness property: across windows, the maximum lag any
+/// lane observes stays within the window, the epoch count matches the
+/// window arithmetic, and the run stays exact. `window = 1` is the
+/// near-lock-step extreme.
+#[test]
+fn staleness_never_exceeds_the_window() {
+    let p = MaxCut::new(generators::erdos_renyi(256, 1024, &[-1, 1], &StatelessRng::new(77)));
+    let shards = 4usize;
+    let steps = 12_000u64;
+    for window in [1u64, 4, 16, 64] {
+        let mut c = cfg(Mode::RouletteWheel, steps, 5, shards);
+        c.trace_stride = 0;
+        let (r, stats) = ShardedEngine::new(p.model(), c, MergeMode::Async)
+            .with_window(window)
+            .run_with_stats();
+        assert!(
+            stats.max_lag <= window,
+            "window {window}: observed lag {} exceeds the bound",
+            stats.max_lag
+        );
+        let steps_local = steps.div_ceil(shards as u64);
+        assert_eq!(
+            stats.sync_points,
+            steps_local.div_ceil(window),
+            "window {window}: epoch count off"
+        );
+        assert_eq!(
+            r.final_energy,
+            p.model().energy(&r.final_spins),
+            "window {window}: bookkeeping drifted"
+        );
+        assert_eq!(r.steps, steps_local * shards as u64);
+    }
+}
+
+/// Async mode honours every engine mode (the dual-mode contract): RSA,
+/// RWA and uniformized RWA lanes all make progress and keep exact
+/// bookkeeping.
+#[test]
+fn async_mode_supports_all_selection_modes() {
+    let p = MaxCut::new(generators::erdos_renyi(192, 700, &[-1, 1], &StatelessRng::new(88)));
+    for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+        let mut c = cfg(mode, 8_000, 3, 3);
+        c.schedule = Schedule::Constant(1.5);
+        c.trace_stride = 0;
+        let (r, _) = ShardedEngine::new(p.model(), c, MergeMode::Async)
+            .with_window(16)
+            .run_with_stats();
+        assert_eq!(r.final_energy, p.model().energy(&r.final_spins), "{mode:?}");
+        assert!(r.flips > 0, "{mode:?}: no progress");
+        if mode == Mode::RouletteUniformized {
+            assert!(r.nulls > 0, "uniformized lanes never nulled");
+        }
+    }
+}
