@@ -65,6 +65,7 @@ fn main() {
                 planes: None,
                 trace_stride: 0,
                 shards: 1,
+                pin_lanes: false,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let start = std::time::Instant::now();

@@ -68,6 +68,7 @@ fn run_engine(p: &MaxCut, mode: Mode, dp: Datapath, sel: SelectorKind, steps: u6
         planes: None,
         trace_stride: 0,
         shards: 1,
+        pin_lanes: false,
     };
     let mut e = SnowballEngine::new(p.model(), cfg);
     let start = std::time::Instant::now();
@@ -104,6 +105,7 @@ fn bench_fenwick_vs_scan(n: usize, edges: usize, steps: u64) -> (f64, f64) {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let start = std::time::Instant::now();
@@ -225,8 +227,10 @@ fn bench_service_load(quick: bool) {
 }
 
 /// `--shards`: single-lane vs asynchronous sharded engine on a large
-/// all-to-all instance, behind a virtual-time parity guard — the
-/// numbers behind `BENCH_shard.json`.
+/// all-to-all instance, behind a virtual-time parity guard, plus the
+/// incremental-vs-bulk per-lane selection comparison on a sparse
+/// N = 4096 instance (S ∈ {1, 4, 8}) — the numbers behind
+/// `BENCH_shard.json`.
 fn bench_shards(quick: bool) {
     // Parity guard first: the deterministic merge mode must reproduce
     // the single-shard engine bit for bit, or the speedup numbers
@@ -244,6 +248,7 @@ fn bench_shards(quick: bool) {
             planes: None,
             trace_stride: 0,
             shards,
+            pin_lanes: false,
         };
         let want = SnowballEngine::new(p.model(), cfg(1)).run();
         let got = ShardedEngine::new(p.model(), cfg(5), MergeMode::VirtualTime).run();
@@ -273,6 +278,7 @@ fn bench_shards(quick: bool) {
         planes: None,
         trace_stride: 0,
         shards,
+        pin_lanes: false,
     };
     let single = {
         let mut e = SnowballEngine::new(p.model(), mk_cfg(1));
@@ -307,24 +313,93 @@ fn bench_shards(quick: bool) {
             r.best_energy
         ));
     }
+    // Incremental vs bulk per-lane selection: sparse N = 4096 (average
+    // degree 8), plateau (quantized) schedule, deterministic
+    // virtual-time mode so both selector paths do provably identical
+    // MCMC work (asserted per lane count) and the timing difference is
+    // pure per-step selection cost — Θ(N/S) bulk lane refresh (scan)
+    // vs Θ(log(N/S) + deg) dirty-set refresh (fenwick).
+    let sparse_n = 4096usize;
+    let sparse_edges = 16_384usize;
+    let sparse_steps: u64 = if quick { 8_000 } else { 24_000 };
+    let sparse_rows = {
+        let rng = StatelessRng::new(9);
+        let sp = MaxCut::new(generators::erdos_renyi(sparse_n, sparse_edges, &[-1, 1], &rng));
+        let mk = |selector: SelectorKind, shards: usize| EngineConfig {
+            mode: Mode::RouletteWheel,
+            datapath: Datapath::Dense,
+            selector,
+            schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 }.quantized(64),
+            steps: sparse_steps,
+            seed: 13,
+            planes: None,
+            trace_stride: 0,
+            shards,
+            pin_lanes: false,
+        };
+        let mut rows = Vec::new();
+        for s in [1usize, 4, 8] {
+            let run = |selector: SelectorKind| {
+                let mut e =
+                    ShardedEngine::new(sp.model(), mk(selector, s), MergeMode::VirtualTime);
+                let start = std::time::Instant::now();
+                let r = e.run();
+                let sps = sparse_steps as f64 / start.elapsed().as_secs_f64();
+                (sps, (r.best_energy, r.final_energy, r.flips, r.fallbacks, r.nulls))
+            };
+            let (bulk_sps, bulk_sig) = run(SelectorKind::LinearScan);
+            let (inc_sps, inc_sig) = run(SelectorKind::Fenwick);
+            assert_eq!(
+                bulk_sig, inc_sig,
+                "S = {s}: selector paths diverged — sparse benchmark void"
+            );
+            let speedup = inc_sps / bulk_sps;
+            println!(
+                "sparse S={s} : N={sparse_n} |E|={sparse_edges} {sparse_steps} steps | \
+                 bulk {bulk_sps:>10.0} steps/s | incremental {inc_sps:>10.0} steps/s | \
+                 {speedup:.1}x"
+            );
+            rows.push(format!(
+                "{{\"shards\":{s},\"bulk_steps_per_sec\":{bulk_sps:.1},\
+                 \"incremental_steps_per_sec\":{inc_sps:.1},\"speedup\":{speedup:.3}}}"
+            ));
+        }
+        rows
+    };
+
     // Cycle-model companion (hwsim): what the FPGA's asynchronous
-    // update units would gain at the same geometry.
+    // update units would gain at the same geometry, bulk and
+    // incremental per-lane datapaths.
     let hw = snowball::hwsim::HwModel::default();
     let geom = snowball::hwsim::Geometry { n, planes: 1 };
     let model_speedup_8 = hw.sharded_roulette_round_cycles(geom, 1) as f64
         / (hw.sharded_roulette_round_cycles(geom, 8) as f64 / 8.0);
     println!("cycle model : 8 async update units = {model_speedup_8:.1}x steps/cycle");
+    // The incremental-lane win needs enough local lanes for the saved
+    // evaluates to outweigh the deeper (2-read) selection tree, so the
+    // model point is the at-scale geometry (64k spins, 8k per lane).
+    let geom_big = snowball::hwsim::Geometry { n: 65_536, planes: 1 };
+    let model_incremental_8 = hw.sharded_roulette_round_cycles(geom_big, 8) as f64
+        / hw.sharded_roulette_round_cycles_incremental(geom_big, 8, 9) as f64;
+    println!(
+        "cycle model : incremental lanes (N=64k, deg 8, S=8) = \
+         {model_incremental_8:.1}x cycles/round"
+    );
 
     let json = format!(
-        "{{\n  \"schema\": \"snowball.bench.shard/v1\",\n  \"profile\": \"{}\",\n  \
+        "{{\n  \"schema\": \"snowball.bench.shard/v2\",\n  \"profile\": \"{}\",\n  \
          \"n\": {n},\n  \"steps\": {steps},\n  \"virtual_parity\": true,\n  \
          \"single_steps_per_sec\": {:.1},\n  \"single_best_energy\": {},\n  \
          \"cores\": {cores},\n  \"sharded\": [\n    {}\n  ],\n  \
-         \"hwsim_speedup_8_lanes\": {model_speedup_8:.2}\n}}\n",
+         \"sparse\": {{\"n\": {sparse_n}, \"edges\": {sparse_edges}, \
+         \"steps\": {sparse_steps}, \"rows\": [\n    {}\n  ]}},\n  \
+         \"hwsim_speedup_8_lanes\": {model_speedup_8:.2},\n  \
+         \"hwsim_incremental_round_speedup_8_lanes\": {model_incremental_8:.2}\n}}\n",
         if quick { "quick" } else { "full" },
         single.0,
         single.1,
-        shard_rows.join(",\n    ")
+        shard_rows.join(",\n    "),
+        sparse_rows.join(",\n    ")
     );
     let path = "BENCH_shard.json";
     match std::fs::write(path, &json) {
@@ -435,6 +510,7 @@ fn main() {
                     planes: None,
                     trace_stride: 0,
                     shards: 1,
+                    pin_lanes: false,
                 };
                 SnowballEngine::new(p.model(), cfg).run().best_energy
             });

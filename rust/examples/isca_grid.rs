@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         planes: None,
         trace_stride: 0,
         shards: 1,
+        pin_lanes: false,
     };
     let mut engine = SnowballEngine::new(problem.model(), cfg);
     let checkpoints = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];

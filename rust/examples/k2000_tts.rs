@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
             seed,
             target_energy: Some(target_energy),
             shards: 1,
+            pin_lanes: false,
             backend: Backend::Native,
         });
         let result = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;

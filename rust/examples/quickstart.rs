@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut engine = SnowballEngine::new(problem.model(), cfg);
         let run = engine.run();

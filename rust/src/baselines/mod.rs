@@ -78,6 +78,7 @@ impl Solver for SnowballSolver {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut engine = SnowballEngine::new(model, cfg);
         let r = engine.run();

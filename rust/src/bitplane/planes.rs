@@ -174,29 +174,66 @@ impl BitPlanes {
         u: &mut [i64],
         j: usize,
         s_j_old: i8,
-        mut touched: impl FnMut(usize),
+        touched: impl FnMut(usize),
     ) {
         debug_assert_eq!(u.len(), self.n);
+        self.incr_update_range_touched(u, 0..self.n, j, s_j_old, touched);
+    }
+
+    /// Range-restricted incremental update — the shard-lane view of
+    /// column `j`. Only spins in `range` are updated: `u_local` is the
+    /// field slice `u[range]` (indexed from 0), and `touched` receives
+    /// **range-local** indices (`global − range.start`), which is what
+    /// feeds a range-restricted lane kernel's dirty set directly. Words
+    /// outside the range are never scanned and boundary words are
+    /// masked, so the cost is `Θ(B · ⌈|range|/64⌉)` words plus
+    /// `Θ(deg j ∩ range)` adds. With `range == 0..n` this is exactly
+    /// [`Self::incr_update_touched`] (same adds, same order).
+    pub fn incr_update_range_touched(
+        &self,
+        u_local: &mut [i64],
+        range: std::ops::Range<usize>,
+        j: usize,
+        s_j_old: i8,
+        mut touched: impl FnMut(usize),
+    ) {
+        let (lo, hi) = (range.start, range.end);
+        debug_assert!(hi <= self.n && lo <= hi);
+        debug_assert_eq!(u_local.len(), hi - lo);
+        if lo == hi {
+            return;
+        }
+        let w0 = lo >> 6;
+        let w1 = (hi + 63) >> 6;
         let s_old = s_j_old as i64;
         for plane in 0..self.b as usize {
             let delta = 2i64 * (1i64 << plane) * s_old;
             let base = (plane * self.n + j) * self.words;
-            for w in 0..self.words {
+            for w in w0..w1 {
+                // Mask off bits below `lo` in the first word and at or
+                // above `hi` in the last word.
+                let mut keep = u64::MAX;
+                if w == w0 {
+                    keep &= u64::MAX << (lo & 63);
+                }
+                if w == w1 - 1 && (hi & 63) != 0 {
+                    keep &= u64::MAX >> (64 - (hi & 63));
+                }
                 // Positive planes: u_i -= 2·2^b·s_old (Eq. 19)
-                let mut bits = self.col_pos[base + w];
+                let mut bits = self.col_pos[base + w] & keep;
                 while bits != 0 {
                     let t = bits.trailing_zeros() as usize;
-                    let i = (w << 6) + t;
-                    u[i] -= delta;
+                    let i = (w << 6) + t - lo;
+                    u_local[i] -= delta;
                     touched(i);
                     bits &= bits - 1;
                 }
                 // Negative planes: u_i += 2·2^b·s_old (Eq. 20)
-                let mut bits = self.col_neg[base + w];
+                let mut bits = self.col_neg[base + w] & keep;
                 while bits != 0 {
                     let t = bits.trailing_zeros() as usize;
-                    let i = (w << 6) + t;
-                    u[i] += delta;
+                    let i = (w << 6) + t - lo;
+                    u_local[i] += delta;
                     touched(i);
                     bits &= bits - 1;
                 }
@@ -307,6 +344,42 @@ mod tests {
             assert_eq!(touched, expect, "flip {t} at spin {j}");
         }
         assert_eq!(u, bp.init_fields(&s), "fields must still track exactly");
+    }
+
+    /// The range-restricted update is the full update, tiled: for any
+    /// partition of `0..n` into ranges, applying the range variant per
+    /// slice produces the same fields as the global update, and the
+    /// range-local touched reports union to the global touched set.
+    #[test]
+    fn incr_update_range_tiles_the_full_update() {
+        let m = random_model(150, 15, 21);
+        let bp = BitPlanes::encode(&m, None);
+        let rng = StatelessRng::new(22);
+        let mut s = SpinVec::random(150, &rng);
+        // Uneven cuts that exercise word-boundary masking (64, interior
+        // of a word, exact word edge).
+        let cuts = [0usize, 37, 64, 65, 128, 150];
+        let mut u_full = bp.init_fields(&s);
+        let mut u_tiled = u_full.clone();
+        for t in 0..60u64 {
+            let j = rng.below(23, t, salt::SITE, 150) as usize;
+            let s_old = s.flip(j);
+            let mut want_touched = std::collections::BTreeSet::new();
+            bp.incr_update_touched(&mut u_full, j, s_old, |i| {
+                want_touched.insert(i);
+            });
+            let mut got_touched = std::collections::BTreeSet::new();
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                bp.incr_update_range_touched(&mut u_tiled[lo..hi], lo..hi, j, s_old, |i| {
+                    got_touched.insert(lo + i);
+                });
+            }
+            assert_eq!(got_touched, want_touched, "flip {t} at spin {j}");
+            assert_eq!(u_tiled, u_full, "flip {t} at spin {j}");
+        }
+        // Empty range is a no-op.
+        bp.incr_update_range_touched(&mut [], 10..10, 0, 1, |_| panic!("no-op touched"));
     }
 
     #[test]

@@ -154,6 +154,7 @@ impl Config {
             seed: self.i64_or("job", "seed", seed_default as i64) as u64,
             target: self.get("job", "target").and_then(|v| v.as_i64()),
             shards: self.i64_or("job", "shards", 1) as u32,
+            pin_lanes: self.bool_or("job", "pin_lanes", false),
         })
     }
 }
@@ -172,6 +173,8 @@ pub struct JobConfig {
     /// Shard lanes per replica (`1` = classic engine, `0` = auto,
     /// `>1` = async sharded lanes — see `crate::engine::shard`).
     pub shards: u32,
+    /// Pin shard lane threads to cores (`pin_lanes = true`; Linux).
+    pub pin_lanes: bool,
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -225,8 +228,10 @@ tolerance = 0.25
         assert_eq!(j.replicas, 16);
         assert_eq!(j.target, Some(-65000));
         assert_eq!(j.shards, 1, "sharding defaults off");
-        let cs = Config::parse("[job]\nshards = 8\n").unwrap();
+        assert!(!j.pin_lanes, "pinning defaults off");
+        let cs = Config::parse("[job]\nshards = 8\npin_lanes = true\n").unwrap();
         assert_eq!(cs.job(1).unwrap().shards, 8);
+        assert!(cs.job(1).unwrap().pin_lanes);
         assert!(matches!(j.mode, crate::engine::Mode::RouletteWheel));
         // Defaults to the Fenwick selection path; `selector = "scan"`
         // switches to the legacy prefix scan.

@@ -39,6 +39,10 @@ pub struct JobSpec {
     /// NOT bit-reproducible across runs), `0` = let the scheduler pick
     /// by instance size ([`crate::engine::shard::plan_parallelism`]).
     pub shards: u32,
+    /// Pin shard lane threads round-robin to cores (async sharded
+    /// replicas only; Linux `sched_setaffinity`, no-op elsewhere — see
+    /// [`crate::engine::shard::affinity`]).
+    pub pin_lanes: bool,
     /// Execution backend for this job.
     pub backend: Backend,
 }

@@ -265,6 +265,7 @@ impl Coordinator {
     ///     seed: 7,
     ///     target_energy: None,
     ///     shards: 1,
+    ///     pin_lanes: false,
     ///     backend: Backend::Native,
     /// });
     /// let result = coord.wait(id).expect("job completes");
@@ -589,6 +590,7 @@ mod tests {
             seed,
             target_energy: None,
             shards: 1,
+            pin_lanes: false,
             backend: Backend::Native,
         }
     }

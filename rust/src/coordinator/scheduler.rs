@@ -78,6 +78,7 @@ pub fn run_replica(spec: &JobSpec, r: usize, worker_budget: usize) -> ReplicaRes
         planes: None,
         trace_stride: 0,
         shards,
+        pin_lanes: spec.pin_lanes,
     };
     let run = if shards > 1 {
         ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run()
@@ -232,6 +233,7 @@ mod tests {
             seed: 42,
             target_energy: None,
             shards: 1,
+            pin_lanes: false,
             backend: Backend::Native,
         }
     }

@@ -120,6 +120,15 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 "shards must be <= {} (got {shards})",
                 crate::engine::shard::MAX_SHARDS
             );
+            // Core affinity for the shard lane threads (async sharded
+            // replicas only; docs/PROTOCOL.md). Strict like every other
+            // SOLVE field: unrecognized values are an ERR, not a
+            // silent `false`.
+            let pin_lanes: bool = match kv.get("pin_lanes").copied() {
+                None | Some("0") | Some("false") => false,
+                Some("1") | Some("true") => true,
+                Some(other) => anyhow::bail!("pin_lanes must be 0|1|true|false (got {other})"),
+            };
             let schedule = match kv.get("schedule") {
                 Some(s) => Schedule::parse(s)?,
                 None => Schedule::Geometric { t0: 8.0, t1: 0.05 },
@@ -139,6 +148,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 seed,
                 target_energy: target,
                 shards,
+                pin_lanes,
                 backend: Backend::Native,
             })?;
             Ok(Reply::Line(format!("JOB id={id}")))
@@ -347,6 +357,7 @@ mod tests {
                 seed: 1,
                 target_energy: None,
                 shards: 1,
+                pin_lanes: false,
                 backend: Backend::Native,
             }
         };

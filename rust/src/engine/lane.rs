@@ -1,0 +1,571 @@
+//! The shared lane kernel: one contiguous spin range's worth of
+//! dual-mode MCMC selection state, extracted so the single-lane engine
+//! and the sharded engine's lanes run the *same* machinery.
+//!
+//! A [`LaneKernel`] owns a view of the spins in `[lo, hi)`: their packed
+//! signs, their local fields `u_i` (h folded in at init), the Mode II
+//! lane weights `p_q16`, and — when the incremental selector is on — a
+//! Fenwick tree over those weights plus the dirty-set bookkeeping that
+//! keeps both current at `Θ(dirty + log(hi−lo))` per step instead of
+//! `Θ(hi−lo)`.
+//!
+//! Instantiations:
+//!
+//! * [`SnowballEngine`] is the single-lane case, `range == 0..N`: its
+//!   per-step selection (`sync_weights` + `select_local`) and its flip
+//!   application (`flip_local`) are this kernel, unchanged.
+//! * Each sharded lane ([`crate::engine::shard`]) is a range-restricted
+//!   case: local flips go through `flip_local`; peers' flips arriving
+//!   over the mailboxes go through [`apply_remote`](LaneKernel::apply_remote),
+//!   which folds only the row slice that intersects the range and feeds
+//!   the **same dirty set** — so cross-shard traffic costs
+//!   `Θ(deg ∩ range)` marks, never a full lane recompute.
+//!
+//! Refresh policy (identical for every instantiation, which is what
+//! keeps the sharded virtual-time merge bit-identical to the engine):
+//! a temperature change or a dense-row flip forces one bulk refresh
+//! through the chunked lane kernel and only marks the tree stale (that
+//! step selects by prefix scan; the `Θ(n)` rebuild is paid lazily iff
+//! an incremental step follows), while plateau-interior steps
+//! re-evaluate exactly the dirtied lanes and descend the tree.
+//!
+//! [`SnowballEngine`]: super::SnowballEngine
+
+use super::lut::{LaneCtx, PwlLogistic};
+use super::select::Fenwick;
+use crate::bitplane::BitPlanes;
+use crate::ising::{Adjacency, IsingModel, SpinVec};
+use std::ops::Range;
+
+/// Above this directed density the flip paths keep the dense row walk
+/// and bulk-refresh every lane per flip instead of building a CSR
+/// adjacency (CSR walks lose to the contiguous row once most entries
+/// are nonzero anyway).
+pub(crate) const MAX_CSR_DENSITY: f64 = 0.25;
+
+/// Incremental Mode II selection state: the Fenwick tree over the Q16
+/// lane weights plus dirty-lane bookkeeping (see the module docs for
+/// the refresh policy).
+struct SelState {
+    fenwick: Fenwick,
+    /// Lane-evaluation context for `cached_temp`.
+    ctx: LaneCtx,
+    /// Temperature the lanes/tree currently reflect (None = stale).
+    cached_temp: Option<f64>,
+    /// Lanes (local indices) whose `(s_i, u_i)` changed since the last
+    /// sync — fed by local flips AND remote-flip applications.
+    dirty: Vec<u32>,
+    /// Epoch stamps deduplicating `dirty` pushes.
+    stamp: Vec<u64>,
+    epoch: u64,
+    /// Set by the dense-row fast path (no CSR): the flip touched ~every
+    /// lane, so the next sync does one bulk refresh instead of n marks.
+    all_dirty: bool,
+    /// True while the tree does not reflect `p_q16`. Bulk refreshes only
+    /// mark the tree stale instead of paying a Θ(n) rebuild — selection
+    /// falls back to the prefix scan for that step, and the rebuild
+    /// happens lazily on the first *incremental* step that follows. A
+    /// run that bulk-refreshes every step (continuous ramp, dense row)
+    /// therefore never builds the tree at all and costs exactly what the
+    /// legacy scan does.
+    tree_stale: bool,
+}
+
+impl SelState {
+    fn new(n: usize, lut: &PwlLogistic) -> Self {
+        Self {
+            fenwick: Fenwick::new(n),
+            ctx: lut.lane_ctx(1.0), // placeholder; cached_temp None forces a refresh
+            cached_temp: None,
+            dirty: Vec::new(),
+            stamp: vec![0; n],
+            epoch: 1,
+            all_dirty: false,
+            tree_stale: true,
+        }
+    }
+
+    #[inline(always)]
+    fn mark(&mut self, i: usize) {
+        if self.stamp[i] != self.epoch {
+            self.stamp[i] = self.epoch;
+            self.dirty.push(i as u32);
+        }
+    }
+}
+
+/// One contiguous spin range's selection/update state (module docs).
+///
+/// All indices on the public API are **range-local** (`0..hi−lo`)
+/// except the `j` of [`apply_remote`](Self::apply_remote), which is the
+/// global index of a spin some *other* kernel owns. The kernel does not
+/// hold the field-update data sources; each flip call takes the model
+/// plus the optional CSR / bit-plane stores, so the same kernel value
+/// works whether those are owned (the engine) or shared across lane
+/// threads (the sharded engine).
+pub struct LaneKernel {
+    lo: usize,
+    hi: usize,
+    /// Local spins, indexed `0..hi−lo`.
+    spins: SpinVec,
+    /// Local fields of the local spins (global `u[lo..hi]`, h included).
+    u: Vec<i64>,
+    /// Mode II lane weights (Q16, local).
+    p_q16: Vec<u32>,
+    /// Incremental selection state; `None` runs the legacy full
+    /// evaluate + prefix scan every step (`SelectorKind::LinearScan`,
+    /// or a mode that never selects by roulette).
+    sel: Option<SelState>,
+}
+
+impl LaneKernel {
+    /// Build a kernel over `range`, slicing the initial global spins and
+    /// fields. `incremental` arms the Fenwick/dirty-set state (the
+    /// caller passes `mode is roulette && selector == Fenwick`).
+    pub fn new(
+        range: Range<usize>,
+        init_spins: &SpinVec,
+        init_u: &[i64],
+        lut: &PwlLogistic,
+        incremental: bool,
+    ) -> Self {
+        assert!(range.end <= init_spins.len() && range.end <= init_u.len());
+        let n = range.len();
+        let mut spins = SpinVec::all_down(n);
+        for (k, i) in range.clone().enumerate() {
+            spins.set(k, init_spins.get(i));
+        }
+        Self {
+            lo: range.start,
+            hi: range.end,
+            spins,
+            u: init_u[range].to_vec(),
+            p_q16: vec![0; n],
+            sel: incremental.then(|| SelState::new(n, lut)),
+        }
+    }
+
+    /// The global index range this kernel owns.
+    pub fn range(&self) -> Range<usize> {
+        self.lo..self.hi
+    }
+
+    /// Start of the owned range (global index of local lane 0).
+    #[inline(always)]
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    /// Lanes in the kernel.
+    #[inline(always)]
+    pub fn n_local(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// The local spins (bit `k` is global spin `lo + k`).
+    pub fn spins(&self) -> &SpinVec {
+        &self.spins
+    }
+
+    /// Local spin `k` (±1).
+    #[inline(always)]
+    pub fn spin(&self, k: usize) -> i8 {
+        self.spins.get(k)
+    }
+
+    /// The local fields (h folded in).
+    pub fn fields(&self) -> &[i64] {
+        &self.u
+    }
+
+    /// Local field of lane `k`.
+    #[inline(always)]
+    pub fn field(&self, k: usize) -> i64 {
+        self.u[k]
+    }
+
+    /// The current lane-weight buffer (meaningful after
+    /// [`sync_weights`](Self::sync_weights)).
+    pub fn weights(&self) -> &[u32] {
+        &self.p_q16
+    }
+
+    /// ΔE of flipping local lane `k` right now (Eq. 24).
+    #[inline(always)]
+    pub fn delta_e(&self, k: usize) -> i64 {
+        IsingModel::delta_e(self.spins.get(k), self.u[k])
+    }
+
+    /// Bring the lane weights (and, incrementally, the Fenwick tree) in
+    /// sync with the current `(spins, u, temp)`; returns this kernel's
+    /// aggregate weight `W = Σ p_q16`. Without incremental state this is
+    /// one bulk evaluation through the chunked lane kernel — the legacy
+    /// scan path. With it, a temperature change (plateau boundary) or a
+    /// dense-row flip forces the bulk refresh; otherwise only the lanes
+    /// dirtied since the last sync are re-evaluated.
+    pub fn sync_weights(&mut self, lut: &PwlLogistic, temp: f64) -> u64 {
+        let Some(st) = self.sel.as_mut() else {
+            let ctx = lut.lane_ctx(temp);
+            return lut.eval_lanes(&ctx, &self.u, self.spins.words(), &mut self.p_q16);
+        };
+        if st.cached_temp != Some(temp) || st.all_dirty {
+            // Bulk refresh: re-evaluate every lane, but only mark the
+            // tree stale — this step selects by prefix scan, and the
+            // Θ(n) rebuild is paid once, lazily, iff an incremental step
+            // follows (so back-to-back bulk steps cost what the legacy
+            // scan costs).
+            st.ctx = lut.lane_ctx(temp);
+            let w = lut.eval_lanes(&st.ctx, &self.u, self.spins.words(), &mut self.p_q16);
+            st.tree_stale = true;
+            st.cached_temp = Some(temp);
+            st.all_dirty = false;
+            st.dirty.clear();
+            st.epoch += 1;
+            w
+        } else {
+            if st.tree_stale {
+                st.fenwick.rebuild(&self.p_q16);
+                st.tree_stale = false;
+            }
+            let words = self.spins.words();
+            for &i in &st.dirty {
+                let i = i as usize;
+                let bit = (words[i >> 6] >> (i & 63)) & 1;
+                let p = lut.lane_p(&st.ctx, bit, self.u[i]);
+                let old = self.p_q16[i];
+                if p != old {
+                    st.fenwick.add(i, p as i64 - old as i64);
+                    self.p_q16[i] = p;
+                }
+            }
+            st.dirty.clear();
+            st.epoch += 1;
+            st.fenwick.total()
+        }
+    }
+
+    /// The unique local lane `k` with `cum(k−1) <= r < cum(k)` over the
+    /// synced weights: Θ(log n) tree descent when the Fenwick tree is
+    /// current, Θ(n) prefix scan otherwise (the legacy path, and
+    /// bulk-refresh steps where rebuilding the tree for one selection
+    /// would cost more than the scan) — identical `k` either way.
+    /// Requires `r < W` from the matching [`sync_weights`](Self::sync_weights).
+    pub fn select_local(&self, r: u64) -> usize {
+        match &self.sel {
+            Some(st) if !st.tree_stale => st.fenwick.select(r),
+            _ => {
+                let mut acc = 0u64;
+                let mut chosen = self.p_q16.len() - 1;
+                for (i, &w) in self.p_q16.iter().enumerate() {
+                    acc += w as u64;
+                    if r < acc {
+                        chosen = i;
+                        break;
+                    }
+                }
+                chosen
+            }
+        }
+    }
+
+    /// Flip local lane `k`, fold the flip into THIS kernel's fields
+    /// (asynchronous update, Eqs. 12/17/27/31) and dirty-set, and return
+    /// `(global index, pre-flip sign, ΔE)`. The caller owns energy
+    /// bookkeeping (`energy += ΔE`) and, in the sharded case, posting
+    /// the flip to peer mailboxes — this method is the single source of
+    /// truth for the field updates themselves.
+    pub fn flip_local(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
+        k: usize,
+    ) -> (usize, i8, i64) {
+        let de = self.delta_e(k);
+        let s_old = self.spins.flip(k);
+        let j = self.lo + k;
+        self.fold_flip(model, adj, planes, j, s_old);
+        if let Some(st) = self.sel.as_mut() {
+            // The flipped spin's own lane changes sign (ΔE_k → −ΔE_k)
+            // even though u_k does not (J_kk == 0).
+            st.mark(k);
+        }
+        (j, s_old, de)
+    }
+
+    /// Fold a flip of global spin `j` (owned by ANOTHER kernel; pre-flip
+    /// sign `s_old`) into this kernel's fields, marking the touched
+    /// lanes dirty — the mailbox-consumer path. Costs `Θ(deg ∩ range)`
+    /// through the CSR row slice or the masked bit-plane column walk;
+    /// only the dense row walk (no CSR built) bulk-dirties the kernel.
+    pub fn apply_remote(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
+        j: usize,
+        s_old: i8,
+    ) {
+        debug_assert!(j < self.lo || j >= self.hi, "apply_remote on an owned spin");
+        self.fold_flip(model, adj, planes, j, s_old);
+    }
+
+    /// `u_i ← u_i − 2·s_old·J_ij` over this kernel's range, through
+    /// whichever data source exists: bit-plane column slice, CSR row
+    /// slice, or dense row segment. Exactly one of `adj` / `planes`
+    /// should be `Some` (both `None` = dense row walk).
+    fn fold_flip(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
+        j: usize,
+        s_old: i8,
+    ) {
+        let factor = 2 * s_old as i64;
+        if let Some(bp) = planes {
+            // Bit-plane column walk, masked to [lo, hi): Θ(B·W_local)
+            // words, Θ(deg ∩ range) adds, each reported into the dirty
+            // set (range-local indices — exactly what `mark` wants).
+            match self.sel.as_mut() {
+                Some(st) => bp.incr_update_range_touched(
+                    &mut self.u,
+                    self.lo..self.hi,
+                    j,
+                    s_old,
+                    |i| st.mark(i),
+                ),
+                None => {
+                    bp.incr_update_range_touched(&mut self.u, self.lo..self.hi, j, s_old, |_| {})
+                }
+            }
+        } else if let Some(adj) = adj {
+            // Sparse: Θ(deg ∩ range) CSR slice walk; the touched set is
+            // the in-range row.
+            let (neigh, vals) = adj.row_range(j, self.lo..self.hi);
+            match self.sel.as_mut() {
+                Some(st) => {
+                    for (&i, &jv) in neigh.iter().zip(vals.iter()) {
+                        let k = i as usize - self.lo;
+                        self.u[k] -= factor * jv as i64;
+                        st.mark(k);
+                    }
+                }
+                None => {
+                    for (&i, &jv) in neigh.iter().zip(vals.iter()) {
+                        self.u[i as usize - self.lo] -= factor * jv as i64;
+                    }
+                }
+            }
+        } else {
+            // Dense-row fast path: contiguous Θ(hi−lo) walk
+            // (u_i ← u_i − 2 J_ij s_j_old, J symmetric); nearly every
+            // lane changes, so the incremental state takes one bulk
+            // refresh instead of n individual marks.
+            let row = &model.j_row(j)[self.lo..self.hi];
+            for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
+                *ui -= factor * jv as i64;
+            }
+            if let Some(st) = self.sel.as_mut() {
+                st.all_dirty = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::{salt, StatelessRng};
+
+    fn sparse_instance(n: usize, seed: u64) -> MaxCut {
+        let rng = StatelessRng::new(seed);
+        MaxCut::new(generators::erdos_renyi(n, 4 * n, &[-1, 1], &rng))
+    }
+
+    /// Reference weights: one bulk evaluation over the kernel's range of
+    /// the CURRENT global configuration.
+    fn bulk_weights(
+        lut: &PwlLogistic,
+        model: &IsingModel,
+        spins: &SpinVec,
+        range: Range<usize>,
+        temp: f64,
+    ) -> (Vec<u32>, u64) {
+        let u = model.local_fields(spins);
+        let mut local = SpinVec::all_down(range.len());
+        for (k, i) in range.clone().enumerate() {
+            local.set(k, spins.get(i));
+        }
+        let ctx = lut.lane_ctx(temp);
+        let mut out = vec![0u32; range.len()];
+        let w = lut.eval_lanes(&ctx, &u[range], local.words(), &mut out);
+        (out, w)
+    }
+
+    /// Drive a kernel with a mix of local and remote flips across
+    /// plateaus and temperature changes; after every sync the weights,
+    /// aggregate W, fields and selections must match a from-scratch bulk
+    /// evaluation — through the CSR, dense-row and bit-plane sources.
+    #[test]
+    fn kernel_incremental_matches_bulk_through_every_source() {
+        let p = sparse_instance(72, 5);
+        let m = p.model();
+        let adj = m.adjacency();
+        let bp = crate::bitplane::BitPlanes::encode(m, None);
+        let lut = PwlLogistic::default();
+        let rng = StatelessRng::new(6);
+        for (label, use_adj, use_bp) in
+            [("csr", true, false), ("dense", false, false), ("bitplane", false, true)]
+        {
+            let adj = use_adj.then_some(&adj);
+            let planes = use_bp.then_some(&bp);
+            let mut spins = SpinVec::random(72, &rng);
+            let u = m.local_fields(&spins);
+            let range = 16usize..57;
+            let mut k = LaneKernel::new(range.clone(), &spins, &u, &lut, true);
+            let temps = [1.5f64, 1.5, 1.5, 0.8, 0.8, 1.5];
+            for (step, &temp) in temps.iter().enumerate() {
+                // A few flips between syncs: local ones through the
+                // kernel, out-of-range ones as remote applications.
+                for f in 0..4u64 {
+                    let j =
+                        rng.below(step as u64 + 10, f, salt::SITE, 72) as usize;
+                    if range.contains(&j) {
+                        let (jg, _, de) = k.flip_local(m, adj, planes, j - range.start);
+                        assert_eq!(jg, j, "{label}");
+                        let want_de =
+                            IsingModel::delta_e(spins.get(j), m.local_field(&spins, j));
+                        assert_eq!(de, want_de, "{label}: ΔE from kernel fields");
+                        spins.flip(j);
+                    } else {
+                        let s_old = spins.flip(j);
+                        k.apply_remote(m, adj, planes, j, s_old);
+                    }
+                }
+                // Fields must track the dense oracle continuously.
+                let u_now = m.local_fields(&spins);
+                assert_eq!(k.fields(), &u_now[range.clone()], "{label}: fields drifted");
+                // Weights after sync must equal the bulk evaluation.
+                let w = k.sync_weights(&lut, temp);
+                let (want_p, want_w) = bulk_weights(&lut, m, &spins, range.clone(), temp);
+                assert_eq!(w, want_w, "{label}: aggregate W at step {step}");
+                assert_eq!(k.weights(), &want_p[..], "{label}: weights at step {step}");
+                // Selection parity against the linear reference, both on
+                // bulk-refresh steps (stale tree → scan) and
+                // plateau-interior steps (fresh tree → descent).
+                if w > 0 {
+                    for trial in 0..16u64 {
+                        let r = rng.u64(step as u64 + 40, trial, salt::ROULETTE) % w;
+                        let mut acc = 0u64;
+                        let mut want = want_p.len() - 1;
+                        for (i, &pw) in want_p.iter().enumerate() {
+                            acc += pw as u64;
+                            if r < acc {
+                                want = i;
+                                break;
+                            }
+                        }
+                        assert_eq!(k.select_local(r), want, "{label}: r = {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// A full-range kernel without incremental state is the legacy path:
+    /// every sync is a bulk refresh and selection is the prefix scan —
+    /// and it must agree with an incremental full-range kernel.
+    #[test]
+    fn legacy_and_incremental_kernels_agree_on_full_range() {
+        let p = sparse_instance(48, 9);
+        let m = p.model();
+        let adj = m.adjacency();
+        let lut = PwlLogistic::default();
+        let rng = StatelessRng::new(10);
+        let spins = SpinVec::random(48, &rng);
+        let u = m.local_fields(&spins);
+        let mut legacy = LaneKernel::new(0..48, &spins, &u, &lut, false);
+        let mut incr = LaneKernel::new(0..48, &spins, &u, &lut, true);
+        for step in 0..40u64 {
+            let temp = if step < 20 { 1.2 } else { 0.6 };
+            let wl = legacy.sync_weights(&lut, temp);
+            let wi = incr.sync_weights(&lut, temp);
+            assert_eq!(wl, wi, "step {step}");
+            assert_eq!(legacy.weights(), incr.weights(), "step {step}");
+            if wl == 0 {
+                continue;
+            }
+            let r = rng.u64(1, step, salt::ROULETTE) % wl;
+            let chosen = legacy.select_local(r);
+            assert_eq!(chosen, incr.select_local(r), "step {step}");
+            let (jl, sl, dl) = legacy.flip_local(m, Some(&adj), None, chosen);
+            let (ji, si, di) = incr.flip_local(m, Some(&adj), None, chosen);
+            assert_eq!((jl, sl, dl), (ji, si, di), "step {step}");
+        }
+        assert_eq!(legacy.fields(), incr.fields());
+        assert_eq!(legacy.spins().to_spins(), incr.spins().to_spins());
+    }
+
+    /// Tiling a model into range-restricted kernels and folding every
+    /// flip into all of them (owner via `flip_local`, peers via
+    /// `apply_remote`) reproduces a single full-range kernel exactly.
+    #[test]
+    fn tiled_kernels_reproduce_the_full_range_kernel() {
+        let p = sparse_instance(60, 11);
+        let m = p.model();
+        let adj = m.adjacency();
+        let lut = PwlLogistic::default();
+        let rng = StatelessRng::new(12);
+        let spins = SpinVec::random(60, &rng);
+        let u = m.local_fields(&spins);
+        let cuts = [0usize, 17, 33, 60];
+        let mut whole = LaneKernel::new(0..60, &spins, &u, &lut, true);
+        let mut tiles: Vec<LaneKernel> = cuts
+            .windows(2)
+            .map(|w| LaneKernel::new(w[0]..w[1], &spins, &u, &lut, true))
+            .collect();
+        for step in 0..60u64 {
+            let temp = 1.0 + (step % 3) as f64 * 0.4;
+            let w_whole = whole.sync_weights(&lut, temp);
+            let w_tiles: u64 = tiles.iter_mut().map(|t| t.sync_weights(&lut, temp)).sum();
+            assert_eq!(w_whole, w_tiles, "step {step}: aggregate W");
+            if w_whole == 0 {
+                continue;
+            }
+            let r = rng.u64(2, step, salt::ROULETTE) % w_whole;
+            let chosen = whole.select_local(r);
+            // Locate the owning tile by weight prefix; the local pick
+            // must land on the same global spin.
+            let mut cum = 0u64;
+            let mut global = usize::MAX;
+            for t in tiles.iter() {
+                let w_t: u64 = t.weights().iter().map(|&w| w as u64).sum();
+                if r < cum + w_t {
+                    global = t.lo() + t.select_local(r - cum);
+                    break;
+                }
+                cum += w_t;
+            }
+            assert_eq!(global, chosen, "step {step}: tiled selection diverged");
+            let (_, s_old, _) = whole.flip_local(m, Some(&adj), None, chosen);
+            for t in tiles.iter_mut() {
+                if t.range().contains(&chosen) {
+                    let (_, so, _) = t.flip_local(m, Some(&adj), None, chosen - t.lo());
+                    assert_eq!(so, s_old);
+                } else {
+                    t.apply_remote(m, Some(&adj), None, chosen, s_old);
+                }
+            }
+        }
+        for t in &tiles {
+            let r = t.range();
+            assert_eq!(t.fields(), &whole.fields()[r.clone()], "tile {r:?} fields");
+            for k in 0..t.n_local() {
+                assert_eq!(t.spin(k), whole.spin(r.start + k), "tile {r:?} spin {k}");
+            }
+        }
+    }
+}

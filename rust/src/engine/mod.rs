@@ -8,10 +8,14 @@
 //! through [`pool::ReplicaPool`] — the layer the coordinator's
 //! overlapping dispatcher saturates. Within-instance parallelism
 //! (asynchronous sharded lanes with a deterministic virtual-time merge
-//! mode) lives in [`shard::ShardedEngine`]. `docs/ARCHITECTURE.md`
-//! maps the whole stack.
+//! mode) lives in [`shard::ShardedEngine`]. Both engines run their
+//! per-step Mode II selection and flip application through the shared
+//! [`lane::LaneKernel`] — the engine as one full-range kernel, each
+//! shard lane as a range-restricted one. `docs/ARCHITECTURE.md` maps
+//! the whole stack.
 
 pub mod diagnostics;
+pub mod lane;
 pub mod lut;
 pub mod pool;
 pub mod schedule;
@@ -20,6 +24,7 @@ pub mod shard;
 pub mod snowball;
 pub mod tempering;
 
+pub use lane::LaneKernel;
 pub use lut::{glauber_exact, LaneCtx, PwlLogistic, ONE_Q16};
 pub use pool::ReplicaPool;
 pub use schedule::{Plateau, Plateaus, Schedule};

@@ -46,6 +46,12 @@ impl SelectorKind {
 /// Node sums fit `u64` for any realistic instance (`N · 2^16 < 2^64`);
 /// negative point deltas are applied with two's-complement wrapping adds,
 /// which is exact because every true node sum stays non-negative.
+///
+/// The tree is range-parameterized by construction: `n` is whatever
+/// lane count the caller owns, so a range-restricted lane kernel
+/// (`engine::lane`, the sharded engine's per-shard instantiation)
+/// builds a tree over its `N/S` *local* lanes and selects with
+/// range-local draws — no global-index awareness needed here.
 #[derive(Clone, Debug)]
 pub struct Fenwick {
     n: usize,

@@ -1,0 +1,104 @@
+//! Minimal thread→core pinning for shard lanes (the ROADMAP
+//! "NUMA/affinity" item, smallest useful cut).
+//!
+//! Shard lanes are long-lived OS threads that ping-pong cache lines
+//! through their mailboxes and stream their own partition rows; letting
+//! the scheduler migrate them across cores (or worse, sockets) costs
+//! exactly the locality the partition bought. `pin_current_thread`
+//! pins the calling thread to one CPU via a raw `sched_setaffinity(2)`
+//! call on Linux — no `libc` crate, just the symbol every Linux libc
+//! exports — and is an honest no-op (returns `false`) elsewhere.
+//!
+//! The policy (round-robin over [`allowed_cpus`], so restricted
+//! cpusets whose ids start above 0 still pin correctly) lives in the
+//! caller; this module only does the syscalls. Failures are reported,
+//! not fatal: a pin that doesn't stick simply leaves the lane
+//! floating, and [`ShardStats::pinned_lanes`] says how many did.
+//!
+//! [`ShardStats::pinned_lanes`]: super::ShardStats::pinned_lanes
+
+/// Pin the calling thread to CPU `cpu % 1024`, returning whether the
+/// kernel accepted the mask. Linux-only; other platforms return `false`.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    // A fixed 1024-bit cpu_set_t, the glibc default width.
+    const MASK_WORDS: usize = 16;
+    extern "C" {
+        // pid 0 = the calling thread. The symbol is part of every Linux
+        // libc's stable ABI; binding it directly avoids a crate
+        // dependency the offline build environment does not have.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    let cpu = cpu % (MASK_WORDS * 64);
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: `mask` outlives the call and `cpusetsize` matches its
+    // byte length; the kernel only reads the buffer.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux platforms: no portable affinity API in std — report
+/// "not pinned" and let the lane float.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+/// The CPU ids the calling thread is currently allowed to run on
+/// (Linux: read back via `sched_getaffinity(2)`; empty elsewhere).
+/// Diagnostic companion of [`pin_current_thread`] — a restricted
+/// cpuset (container, `--cpuset-cpus`) may start well above CPU 0, in
+/// which case round-robin pins near 0 legitimately fail and
+/// `ShardStats::pinned_lanes` reports it.
+#[cfg(target_os = "linux")]
+pub fn allowed_cpus() -> Vec<usize> {
+    const MASK_WORDS: usize = 16;
+    extern "C" {
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    // SAFETY: `mask` outlives the call and `cpusetsize` matches its
+    // byte length; the kernel only writes within the buffer.
+    let rc = unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+    if rc != 0 {
+        return Vec::new();
+    }
+    (0..MASK_WORDS * 64).filter(|&c| mask[c / 64] >> (c % 64) & 1 == 1).collect()
+}
+
+/// Non-Linux: no affinity introspection.
+#[cfg(not(target_os = "linux"))]
+pub fn allowed_cpus() -> Vec<usize> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinning must never crash or wedge, whatever the index — including
+    /// indices past the core count (the round-robin wrap case) — and on
+    /// Linux, pinning to a CPU the kernel itself reports as allowed
+    /// must succeed (candidates come from `sched_getaffinity`, not an
+    /// assumed 0-based range, so restricted cpusets don't fail this).
+    #[test]
+    fn pinning_is_safe_and_reports_honestly() {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        // Arbitrary indices (including past the core count — the
+        // round-robin wrap case) must not crash, whatever they return.
+        for c in 0..(cores * 2).max(4) {
+            std::thread::spawn(move || pin_current_thread(c)).join().expect("no panic");
+        }
+        let allowed = allowed_cpus();
+        if cfg!(target_os = "linux") {
+            assert!(!allowed.is_empty(), "a running thread must have allowed CPUs");
+            let cpu = allowed[0];
+            let ok =
+                std::thread::spawn(move || pin_current_thread(cpu)).join().expect("no panic");
+            assert!(ok, "pin to kernel-reported allowed CPU {cpu} failed");
+        } else {
+            assert!(allowed.is_empty(), "non-Linux reports no affinity introspection");
+            assert!(!pin_current_thread(0), "non-Linux must report not-pinned");
+        }
+    }
+}

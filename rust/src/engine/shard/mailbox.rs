@@ -8,7 +8,12 @@
 //! [`Flip`] — the flipped spin's global index plus its pre-flip sign —
 //! and the *receiver* derives its own field deltas by walking its slice
 //! of the coupling row, so a flip costs one message per peer regardless
-//! of degree.
+//! of degree. On the consumer side a drained flip feeds the lane
+//! kernel's **dirty set** ([`LaneKernel::apply_remote`]): the touched
+//! in-range lanes are marked for the next incremental weight refresh,
+//! so cross-shard traffic never forces a full `Θ(N/S)` lane recompute.
+//!
+//! [`LaneKernel::apply_remote`]: crate::engine::lane::LaneKernel::apply_remote
 //!
 //! The rings are classic Lamport SPSC queues: the producer owns `tail`,
 //! the consumer owns `head`, and a release-store / acquire-load pair on

@@ -34,14 +34,29 @@
 //! whenever `S` exceeds the free worker count. Replica-level fan-out
 //! (which never blocks) stays on the pool; the
 //! [`plan_parallelism`] policy decides which level gets the machine.
+//! With [`EngineConfig::pin_lanes`] each lane thread additionally pins
+//! itself round-robin to a core ([`affinity`]), so long async runs keep
+//! their partition rows and mailbox lines cache-local.
+//!
+//! Each lane's per-step selection/update state is a range-restricted
+//! [`LaneKernel`] — the same kernel the single-lane engine runs — so
+//! lanes honor [`EngineConfig::selector`] end to end: with the Fenwick
+//! selector a local step costs `Θ(log(N/S) + deg)` (remote flips from
+//! the mailboxes land in the kernel's dirty set via the per-shard
+//! CSR / bit-plane row slices instead of forcing full recomputes), and
+//! with the legacy scan it stays the `Θ(N/S)` bulk refresh.
 //!
 //! [`SnowballEngine`]: super::SnowballEngine
+//! [`LaneKernel`]: super::lane::LaneKernel
 
+pub mod affinity;
 pub mod mailbox;
 
 use self::mailbox::{Flip, MailboxGrid};
+use super::lane::LaneKernel;
 use super::lut::{PwlLogistic, ONE_Q16};
 use super::snowball::{EngineConfig, Mode, RunResult};
+use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, Partition, SpinVec};
 use crate::rng::{salt, StatelessRng};
 use std::sync::atomic::{AtomicI64, Ordering};
@@ -136,16 +151,22 @@ pub struct ShardStats {
     pub per_shard_flips: Vec<u64>,
     /// Epoch synchronization points taken (global energy samples).
     pub sync_points: u64,
+    /// Lanes whose thread was successfully pinned to a core
+    /// ([`EngineConfig::pin_lanes`]; 0 when pinning is off, on
+    /// non-Linux hosts, or in the single-threaded virtual-time mode).
+    pub pinned_lanes: usize,
 }
 
 /// The sharded engine over one Ising instance.
 ///
-/// Consumes the same [`EngineConfig`] as [`SnowballEngine`]; the
-/// `shards` field picks the lane count and [`MergeMode`] picks the
-/// execution strategy. `datapath` is ignored (shard lanes are a dense /
-/// CSR datapath of their own); `selector` is ignored in the lanes (the
-/// virtual-time mode matches *both* selectors, which are bit-identical
-/// to each other by the PR-2 parity contract).
+/// Consumes the same [`EngineConfig`] as [`SnowballEngine`], honored
+/// end to end: `shards` picks the lane count, [`MergeMode`] the
+/// execution strategy, `selector` the per-lane Mode II implementation
+/// (Fenwick = incremental `Θ(log(N/S) + deg)` local steps, scan = the
+/// legacy `Θ(N/S)` bulk refresh — bit-identical outcomes either way),
+/// `datapath` the field-update source shared by every lane (dense/CSR
+/// rows or the bit-plane column store), and `pin_lanes` the per-thread
+/// core affinity in async mode.
 ///
 /// [`SnowballEngine`]: super::SnowballEngine
 pub struct ShardedEngine<'m> {
@@ -200,13 +221,17 @@ impl<'m> ShardedEngine<'m> {
     // Virtual-time merge: deterministic fixed-order interleave.
     // ------------------------------------------------------------------
 
-    /// One global MCMC chain, with every per-step quantity composed
-    /// shard-by-shard in ascending shard order. Because the partition
-    /// is contiguous, concatenating the shards' lanes reproduces the
-    /// global lane order; because `u64`/`i64` sums are exact and the
-    /// stateless RNG is addressed by `(t, salt)` rather than call
-    /// order, every draw, weight, selection and field update equals the
-    /// single-shard engine's — byte for byte.
+    /// One global MCMC chain over S range-restricted [`LaneKernel`]s,
+    /// with every per-step quantity composed shard-by-shard in
+    /// ascending shard order. Because the partition is contiguous,
+    /// concatenating the kernels' lanes reproduces the global lane
+    /// order; because `u64`/`i64` sums are exact, the kernels share the
+    /// single-lane engine's refresh policy, and the stateless RNG is
+    /// addressed by `(t, salt)` rather than call order, every draw,
+    /// weight, selection and field update equals the single-shard
+    /// engine's — byte for byte, for BOTH selectors and BOTH datapaths.
+    ///
+    /// [`LaneKernel`]: super::lane::LaneKernel
     fn run_virtual(&mut self) -> (RunResult, ShardStats) {
         let start = std::time::Instant::now();
         let model = self.model;
@@ -215,9 +240,20 @@ impl<'m> ShardedEngine<'m> {
         let lut = PwlLogistic::default();
         let rng = StatelessRng::new(self.cfg.seed);
         let mut spins = SpinVec::random(n, &rng);
-        let mut u = model.local_fields(&spins);
+        let u = model.local_fields(&spins);
         let mut energy = model.energy(&spins);
-        let mut p_q16 = vec![0u32; n];
+
+        // The same field-update sources and incremental-selection gate
+        // the single-lane engine derives from the config (one shared
+        // derivation — `EngineConfig::field_sources`).
+        let (adj, planes) = self.cfg.field_sources(model);
+        let (adj, planes) = (adj.as_ref(), planes.as_ref());
+        let incremental = self.cfg.incremental_selection();
+        let mut kernels: Vec<LaneKernel> = self
+            .part
+            .ranges()
+            .map(|r| LaneKernel::new(r, &spins, &u, &lut, incremental))
+            .collect();
 
         let steps = self.cfg.steps;
         let mut best_energy = energy;
@@ -235,29 +271,29 @@ impl<'m> ShardedEngine<'m> {
             let temp = self.cfg.schedule.temperature(t, steps);
             match self.cfg.mode {
                 Mode::RandomScan => {
-                    if let Some((j, de)) =
-                        virtual_random_scan(model, &lut, &rng, &spins, &u, t, temp)
-                    {
-                        apply_flip_sharded(model, &self.part, &mut u, j, spins.get(j));
-                        // `apply_flip_sharded` updates fields only; the
-                        // flip + energy happen here, like the engine.
-                        spins.flip(j);
+                    if let Some(de) = virtual_random_scan(
+                        &mut kernels,
+                        &self.part,
+                        model,
+                        adj,
+                        planes,
+                        &mut spins,
+                        &lut,
+                        &rng,
+                        t,
+                        temp,
+                    ) {
                         energy += de;
                         flips += 1;
                     }
                 }
                 Mode::RouletteWheel | Mode::RouletteUniformized => {
-                    // Per-shard lane refresh in shard order; W_s are
-                    // summed exactly as `eval_lanes` sums lane weights.
-                    let ctx = lut.lane_ctx(temp);
+                    // Per-shard kernel sync in shard order; W_s are
+                    // summed exactly as `eval_lanes` sums lane weights
+                    // (u64 adds are exact, so any grouping agrees).
                     let mut w_total = 0u64;
-                    for s in 0..s_count {
-                        let mut w_s = 0u64;
-                        for i in self.part.range(s) {
-                            let p = lut.lane_p(&ctx, spins.bit(i), u[i]);
-                            p_q16[i] = p;
-                            w_s += p as u64;
-                        }
+                    for (s, k) in kernels.iter_mut().enumerate() {
+                        let w_s = k.sync_weights(&lut, temp);
                         w_shard[s] = w_s;
                         w_total += w_s;
                     }
@@ -265,11 +301,18 @@ impl<'m> ShardedEngine<'m> {
                         // Degenerate weight → Mode I fallback, exactly
                         // like the engine (fallback bookkeeping too).
                         fallbacks += 1;
-                        if let Some((j, de)) =
-                            virtual_random_scan(model, &lut, &rng, &spins, &u, t, temp)
-                        {
-                            apply_flip_sharded(model, &self.part, &mut u, j, spins.get(j));
-                            spins.flip(j);
+                        if let Some(de) = virtual_random_scan(
+                            &mut kernels,
+                            &self.part,
+                            model,
+                            adj,
+                            planes,
+                            &mut spins,
+                            &lut,
+                            &rng,
+                            t,
+                            temp,
+                        ) {
                             energy += de;
                             flips += 1;
                         }
@@ -281,28 +324,29 @@ impl<'m> ShardedEngine<'m> {
                         if uniformized && r >= w_total {
                             nulls += 1;
                         } else {
-                            // Locate the owning shard by prefix, then
-                            // the lane inside it — the same unique j
-                            // the global prefix scan finds.
+                            // Locate the owning shard by weight prefix,
+                            // then the lane inside it — the same unique
+                            // j the global prefix scan (or tree
+                            // descent) finds.
                             let mut cum = 0u64;
                             let mut chosen = n - 1;
-                            'outer: for s in 0..s_count {
-                                if r < cum + w_shard[s] {
-                                    let mut acc = cum;
-                                    for i in self.part.range(s) {
-                                        acc += p_q16[i] as u64;
-                                        if r < acc {
-                                            chosen = i;
-                                            break 'outer;
-                                        }
-                                    }
+                            for (s, &w_s) in w_shard.iter().enumerate() {
+                                if r < cum + w_s {
+                                    chosen =
+                                        self.part.range(s).start + kernels[s].select_local(r - cum);
+                                    break;
                                 }
-                                cum += w_shard[s];
+                                cum += w_s;
                             }
-                            let de = IsingModel::delta_e(spins.get(chosen), u[chosen]);
-                            let s_old = spins.get(chosen);
-                            apply_flip_sharded(model, &self.part, &mut u, chosen, s_old);
-                            spins.flip(chosen);
+                            let de = flip_across_lanes(
+                                &mut kernels,
+                                &self.part,
+                                model,
+                                adj,
+                                planes,
+                                &mut spins,
+                                chosen,
+                            );
                             energy += de;
                             flips += 1;
                         }
@@ -336,6 +380,7 @@ impl<'m> ShardedEngine<'m> {
             max_lag: 0,
             per_shard_flips: vec![0; s_count], // interleaved, not per-lane
             sync_points: 0,
+            pinned_lanes: 0,
         };
         (result, stats)
     }
@@ -380,15 +425,19 @@ impl<'m> ShardedEngine<'m> {
             max_lag: 0,
             per_shard_flips: vec![0; s_count],
             sync_points: 0,
+            pinned_lanes: 0,
         };
         if steps_local == 0 || n == 0 {
             result.wall = start.elapsed();
             return (result, stats);
         }
 
-        // Shared CSR (sparse instances): lanes slice rows to their own
-        // range for Θ(deg ∩ range) remote applies.
-        let adj = Adjacency::build_if_sparse(model, 0.25);
+        // Shared field-update sources (the engine's datapath choice,
+        // via the one shared `EngineConfig::field_sources` derivation):
+        // CSR rows (sparse instances) / dense rows, or the bit-plane
+        // column store — lanes slice either to their own range for
+        // Θ(deg ∩ range) remote applies.
+        let (adj, planes) = self.cfg.field_sources(model);
         let lut = PwlLogistic::default();
         let epochs = steps_local.div_ceil(window);
         // Ring capacity ≥ the flips a producer can emit between the
@@ -405,28 +454,32 @@ impl<'m> ShardedEngine<'m> {
             samples: Vec::new(),
         });
 
-        let mut lanes: Vec<Lane> = (0..s_count)
-            .map(|s| {
-                let range = self.part.range(s);
-                let mut spins = SpinVec::all_down(range.len());
-                for (k, i) in range.clone().enumerate() {
-                    spins.set(k, init_spins.get(i));
-                }
-                Lane {
-                    index: s,
-                    lo: range.start,
-                    hi: range.end,
-                    spins,
-                    u: init_u[range.clone()].to_vec(),
-                    p: vec![0u32; range.len()],
-                    rng: rng.child(s as u64),
-                    flips: 0,
-                    fallbacks: 0,
-                    nulls: 0,
-                    max_lag: 0,
-                }
+        let incremental = self.cfg.incremental_selection();
+        let mut lanes: Vec<Lane> = self
+            .part
+            .ranges()
+            .enumerate()
+            .map(|(s, range)| Lane {
+                index: s,
+                kernel: LaneKernel::new(range, &init_spins, &init_u, &lut, incremental),
+                rng: rng.child(s as u64),
+                flips: 0,
+                fallbacks: 0,
+                nulls: 0,
+                max_lag: 0,
+                pinned: false,
             })
             .collect();
+        // Round-robin pin targets come from the kernel's OWN report of
+        // allowed CPUs, not an assumed 0-based range — under a
+        // restricted cpuset (containers, `taskset`) the allowed ids
+        // may start anywhere. Empty (non-Linux, or getaffinity
+        // failure) disables pinning.
+        let pin_targets = if cfg!(target_os = "linux") && self.cfg.pin_lanes {
+            affinity::allowed_cpus()
+        } else {
+            Vec::new()
+        };
 
         // A panicking lane must fail the whole run, not wedge its
         // siblings at the gate: the panic payload is parked here, the
@@ -435,17 +488,25 @@ impl<'m> ShardedEngine<'m> {
         // boundary in the scheduler sees an ordinary panic.
         let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
         let cfg = &self.cfg;
-        let (model_ref, adj_ref, lut_ref) = (model, adj.as_ref(), &lut);
+        let (model_ref, adj_ref, planes_ref) = (model, adj.as_ref(), planes.as_ref());
+        let (lut_ref, pins_ref) = (&lut, &pin_targets);
         let (grid_ref, gate_ref, partials_ref) = (&grid, &gate, &partials);
         let (snapshot_ref, tracker_ref, panic_ref) = (&snapshot, &tracker, &panic_slot);
         std::thread::scope(|scope| {
             for lane in lanes.iter_mut() {
                 scope.spawn(move || {
+                    // Round-robin pinning over the allowed CPUs; a pin
+                    // failure just leaves the lane floating (reported
+                    // via ShardStats.pinned_lanes).
+                    if let Some(&cpu) = pins_ref.get(lane.index % pins_ref.len().max(1)) {
+                        lane.pinned = affinity::pin_current_thread(cpu);
+                    }
                     let outcome =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                             lane.run(
                                 model_ref,
                                 adj_ref,
+                                planes_ref,
                                 lut_ref,
                                 cfg,
                                 steps_local,
@@ -484,6 +545,7 @@ impl<'m> ShardedEngine<'m> {
             result.nulls += lane.nulls;
             stats.per_shard_flips[lane.index] = lane.flips;
             stats.max_lag = stats.max_lag.max(lane.max_lag);
+            stats.pinned_lanes += lane.pinned as usize;
         }
         stats.sync_points = epochs;
         result.wall = start.elapsed();
@@ -568,97 +630,83 @@ struct EnergyTracker {
     samples: Vec<(u64, i64)>,
 }
 
-/// One asynchronous shard lane: the spins in `[lo, hi)`, their local
-/// fields (which include every remote flip applied so far), and the
-/// lane's own stateless RNG stream.
+/// One asynchronous shard lane: a range-restricted [`LaneKernel`]
+/// (spins in `[lo, hi)`, their local fields — which include every
+/// remote flip applied so far — lane weights and incremental selection
+/// state) plus the lane's own stateless RNG stream and counters.
+///
+/// [`LaneKernel`]: super::lane::LaneKernel
 struct Lane {
     index: usize,
-    lo: usize,
-    hi: usize,
-    /// Local spins, indexed `0..hi-lo`.
-    spins: SpinVec,
-    /// Local fields of the local spins (global `u[lo..hi]`).
-    u: Vec<i64>,
-    /// Mode II lane weights (local).
-    p: Vec<u32>,
+    kernel: LaneKernel,
     rng: StatelessRng,
     flips: u64,
     fallbacks: u64,
     nulls: u64,
     max_lag: u64,
+    /// Whether this lane's thread was pinned to a core.
+    pinned: bool,
 }
 
 impl Lane {
-    fn n_local(&self) -> usize {
-        self.hi - self.lo
+    /// Apply a peer's flip to this lane's kernel: fold the coupling row
+    /// restricted to the lane's range (CSR slice / bit-plane column
+    /// slice / dense row segment) into the fields AND the kernel's
+    /// dirty set — a mailbox message costs `Θ(deg ∩ range)` marks, not
+    /// a lane-wide recompute.
+    fn apply_remote(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
+        flip: Flip,
+    ) {
+        self.kernel.apply_remote(model, adj, planes, flip.j as usize, flip.s_old);
     }
 
-    /// Apply a peer's flip to this lane's fields: walk the coupling row
-    /// restricted to `[lo, hi)` (CSR slice when the instance is sparse,
-    /// dense row segment otherwise).
-    fn apply_remote(&mut self, model: &IsingModel, adj: Option<&Adjacency>, flip: Flip) {
-        let j = flip.j as usize;
-        let factor = 2 * flip.s_old as i64;
-        match adj {
-            Some(adj) => {
-                let (neigh, vals) = adj.row(j);
-                let from = neigh.partition_point(|&i| (i as usize) < self.lo);
-                for (&i, &jv) in neigh[from..].iter().zip(vals[from..].iter()) {
-                    if i as usize >= self.hi {
-                        break;
-                    }
-                    self.u[i as usize - self.lo] -= factor * jv as i64;
-                }
-            }
-            None => {
-                let row = &model.j_row(j)[self.lo..self.hi];
-                for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
-                    *ui -= factor * jv as i64;
-                }
-            }
-        }
-    }
-
-    /// Flip local spin `j_local`, update the lane's own fields, and
-    /// broadcast the flip. Returns the pre-flip sign.
+    /// Flip local spin `j_local` through the kernel (fields + dirty
+    /// set, single source of truth) and broadcast the flip to peers.
     fn apply_local(
         &mut self,
         model: &IsingModel,
         adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
         grid: &MailboxGrid,
         j_local: usize,
         step: u64,
     ) {
-        let s_old = self.spins.flip(j_local);
-        let j = self.lo + j_local;
-        self.apply_remote(model, adj, Flip { j: j as u32, s_old, step });
+        let (j, s_old, _de) = self.kernel.flip_local(model, adj, planes, j_local);
         grid.post(self.index, Flip { j: j as u32, s_old, step });
         self.flips += 1;
     }
 
     /// One local MCMC step at temperature `temp` (dual-mode, mirroring
-    /// the engine's step but over the lane's own spins and RNG stream).
+    /// the engine's step but over the lane's own kernel and RNG
+    /// stream). With the Fenwick selector the kernel's `sync_weights`
+    /// makes plateau-interior steps `Θ(dirty + log(N/S))`; the legacy
+    /// scan selector re-evaluates the `Θ(N/S)` local lanes every step.
     #[allow(clippy::too_many_arguments)]
     fn step(
         &mut self,
         model: &IsingModel,
         adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
         lut: &PwlLogistic,
         grid: &MailboxGrid,
         mode: Mode,
         k: u64,
         temp: f64,
     ) {
-        let n_local = self.n_local();
-        // `move` copies the (Copy) shared refs in, so `adj` keeps its
-        // `Option<&Adjacency>` type inside the closure.
+        let n_local = self.kernel.n_local();
+        // `move` copies the (Copy) shared refs in, so `adj`/`planes`
+        // keep their `Option<&_>` types inside the closure.
         let random_scan = move |lane: &mut Lane, is_fallback: bool| {
             let j = lane.rng.below(k, 0, salt::SITE, n_local as u32) as usize;
-            let de = IsingModel::delta_e(lane.spins.get(j), lane.u[j]);
+            let de = lane.kernel.delta_e(j);
             let p = lut.flip_prob_q16(de, temp);
             let r = lane.rng.u32(k, 0, salt::ACCEPT) >> 16;
             if r < p {
-                lane.apply_local(model, adj, grid, j, k);
+                lane.apply_local(model, adj, planes, grid, j, k);
             }
             if is_fallback {
                 lane.fallbacks += 1;
@@ -667,8 +715,7 @@ impl Lane {
         match mode {
             Mode::RandomScan => random_scan(self, false),
             Mode::RouletteWheel | Mode::RouletteUniformized => {
-                let ctx = lut.lane_ctx(temp);
-                let w_total = lut.eval_lanes(&ctx, &self.u, self.spins.words(), &mut self.p);
+                let w_total = self.kernel.sync_weights(lut, temp);
                 if w_total == 0 {
                     random_scan(self, true);
                     return;
@@ -682,16 +729,8 @@ impl Lane {
                     self.nulls += 1;
                     return;
                 }
-                let mut acc = 0u64;
-                let mut chosen = n_local - 1;
-                for (i, &p) in self.p.iter().enumerate() {
-                    acc += p as u64;
-                    if r < acc {
-                        chosen = i;
-                        break;
-                    }
-                }
-                self.apply_local(model, adj, grid, chosen, k);
+                let chosen = self.kernel.select_local(r);
+                self.apply_local(model, adj, planes, grid, chosen, k);
             }
         }
     }
@@ -706,6 +745,7 @@ impl Lane {
         &mut self,
         model: &IsingModel,
         adj: Option<&Adjacency>,
+        planes: Option<&BitPlanes>,
         lut: &PwlLogistic,
         cfg: &EngineConfig,
         steps_local: u64,
@@ -728,10 +768,10 @@ impl Lane {
                 grid.drain(self.index, |f| {
                     let lag = (k as i64 - f.step as i64).unsigned_abs();
                     self.max_lag = self.max_lag.max(lag);
-                    self.apply_remote(model, adj, f);
+                    self.apply_remote(model, adj, planes, f);
                 });
                 let temp = cfg.schedule.temperature(k, steps_local);
-                self.step(model, adj, lut, grid, cfg.mode, k, temp);
+                self.step(model, adj, planes, lut, grid, cfg.mode, k, temp);
             }
             // Phase A: every lane has finished the epoch — no more
             // producers until phase C releases.
@@ -743,18 +783,19 @@ impl Lane {
             grid.drain(self.index, |f| {
                 let lag = (end as i64 - f.step as i64).unsigned_abs();
                 self.max_lag = self.max_lag.max(lag);
-                self.apply_remote(model, adj, f);
+                self.apply_remote(model, adj, planes, f);
             });
+            let lo = self.kernel.lo();
             let mut partial = 0i64;
-            for i in 0..self.n_local() {
-                let s = self.spins.get(i) as i64;
-                partial += s * (self.u[i] + model.h(self.lo + i) as i64);
+            for i in 0..self.kernel.n_local() {
+                let s = self.kernel.spin(i) as i64;
+                partial += s * (self.kernel.field(i) + model.h(lo + i) as i64);
             }
             partials[self.index].store(partial, Ordering::Relaxed);
             {
                 let mut snap = snapshot.lock().unwrap();
-                for i in 0..self.n_local() {
-                    snap.set(self.lo + i, self.spins.get(i));
+                for i in 0..self.kernel.n_local() {
+                    snap.set(lo + i, self.kernel.spin(i));
                 }
             }
             match gate.wait() {
@@ -792,49 +833,67 @@ impl Lane {
 
 /// Mode I site draw + Glauber accept on the GLOBAL stream — the shared
 /// helper of the virtual-time mode (both as Mode I proper and as the
-/// Mode II fallback). Returns `Some((j, ΔE))` when the flip is
-/// accepted; the caller applies it. Byte-compatible with
-/// `SnowballEngine::step_random_scan`.
+/// Mode II fallback). Returns `Some(ΔE)` when a flip was accepted and
+/// applied across the lanes. Byte-compatible with
+/// `SnowballEngine::step_random_scan`: same draws, and the ΔE comes
+/// from the owning kernel's fields exactly as the engine reads its own.
+#[allow(clippy::too_many_arguments)]
 fn virtual_random_scan(
+    kernels: &mut [LaneKernel],
+    part: &Partition,
     model: &IsingModel,
+    adj: Option<&Adjacency>,
+    planes: Option<&BitPlanes>,
+    spins: &mut SpinVec,
     lut: &PwlLogistic,
     rng: &StatelessRng,
-    spins: &SpinVec,
-    u: &[i64],
     t: u64,
     temp: f64,
-) -> Option<(usize, i64)> {
+) -> Option<i64> {
     let n = model.len() as u32;
     let j = rng.below(t, 0, salt::SITE, n) as usize;
-    let de = IsingModel::delta_e(spins.get(j), u[j]);
+    let owner = part.owner(j);
+    let de = kernels[owner].delta_e(j - part.range(owner).start);
     let p = lut.flip_prob_q16(de, temp);
     let r = rng.u32(t, 0, salt::ACCEPT) >> 16;
     if r < p {
-        Some((j, de))
+        let applied = flip_across_lanes(kernels, part, model, adj, planes, spins, j);
+        debug_assert_eq!(applied, de);
+        Some(de)
     } else {
         None
     }
 }
 
-/// Propagate a flip of global spin `j` (current sign `s_j`, about to be
-/// flipped by the caller) into the full field vector, walking the row
-/// one shard segment at a time in shard order — the same i64 adds as
-/// the engine's dense row walk, grouped differently.
-fn apply_flip_sharded(
-    model: &IsingModel,
+/// Propagate a flip of global spin `j` into every lane kernel — the
+/// owner through `flip_local` (which also returns ΔE from its own
+/// fields), every peer through `apply_remote` — plus the global spin
+/// mirror. Kernels walk their own row segment, so the total work is
+/// the same i64 adds as the engine's single-lane flip, grouped by
+/// shard; the kernels' dirty sets absorb the touched-lane reports.
+fn flip_across_lanes(
+    kernels: &mut [LaneKernel],
     part: &Partition,
-    u: &mut [i64],
+    model: &IsingModel,
+    adj: Option<&Adjacency>,
+    planes: Option<&BitPlanes>,
+    spins: &mut SpinVec,
     j: usize,
-    s_old: i8,
-) {
-    let row = model.j_row(j);
-    let factor = 2 * s_old as i64;
-    for s in 0..part.shards() {
-        let r = part.range(s);
-        for (ui, &jv) in u[r.clone()].iter_mut().zip(row[r].iter()) {
-            *ui -= factor * jv as i64;
+) -> i64 {
+    let owner = part.owner(j);
+    let s_old = spins.flip(j);
+    let mut de = 0i64;
+    for (s, kernel) in kernels.iter_mut().enumerate() {
+        if s == owner {
+            let (_, k_s_old, k_de) =
+                kernel.flip_local(model, adj, planes, j - part.range(s).start);
+            debug_assert_eq!(k_s_old, s_old);
+            de = k_de;
+        } else {
+            kernel.apply_remote(model, adj, planes, j, s_old);
         }
     }
+    de
 }
 
 #[cfg(test)]
@@ -855,6 +914,7 @@ mod tests {
             planes: None,
             trace_stride: 0,
             shards,
+            pin_lanes: false,
         }
     }
 
@@ -920,6 +980,68 @@ mod tests {
         assert_eq!(r0.best_energy, p.model().energy(&r0.best_spins));
         assert_eq!(r0.flips, 0);
         assert_eq!(r0.steps, 0);
+    }
+
+    /// Lanes honor `EngineConfig.selector`: both selectors make
+    /// progress with exact bookkeeping, and in the deterministic
+    /// virtual-time mode they are bit-identical to each other (the
+    /// in-module smoke of the selector × shard matrix in
+    /// rust/tests/shard_parity.rs).
+    #[test]
+    fn lanes_honor_the_selector_config() {
+        let rng = StatelessRng::new(45);
+        let p = MaxCut::new(generators::erdos_renyi(160, 640, &[-1, 1], &rng));
+        let run_virtual = |selector: SelectorKind| {
+            let mut c = cfg(Mode::RouletteWheel, 3_000, 5, 4);
+            c.selector = selector;
+            c.schedule = Schedule::Geometric { t0: 4.0, t1: 0.1 }.quantized(16);
+            let r = ShardedEngine::new(p.model(), c, MergeMode::VirtualTime).run();
+            (r.best_energy, r.final_energy, r.flips, r.fallbacks, r.nulls)
+        };
+        assert_eq!(
+            run_virtual(SelectorKind::Fenwick),
+            run_virtual(SelectorKind::LinearScan),
+            "virtual-time selectors diverged"
+        );
+        for selector in [SelectorKind::Fenwick, SelectorKind::LinearScan] {
+            let mut c = cfg(Mode::RouletteWheel, 4_000, 7, 3);
+            c.selector = selector;
+            let (r, _) = ShardedEngine::new(p.model(), c, MergeMode::Async)
+                .with_window(16)
+                .run_with_stats();
+            assert_eq!(
+                r.final_energy,
+                p.model().energy(&r.final_spins),
+                "{selector:?}: bookkeeping drifted"
+            );
+            assert!(r.flips > 0, "{selector:?}: async lanes made no progress");
+        }
+    }
+
+    /// `pin_lanes` pins the async lane threads (round-robin) and
+    /// reports the count; runs stay exact either way, and the
+    /// single-threaded virtual mode reports zero.
+    #[test]
+    fn pin_lanes_is_plumbed_and_harmless() {
+        let rng = StatelessRng::new(46);
+        let p = MaxCut::new(generators::erdos_renyi(96, 380, &[-1, 1], &rng));
+        let mut c = cfg(Mode::RouletteWheel, 2_000, 3, 3);
+        c.pin_lanes = true;
+        let (r, stats) = ShardedEngine::new(p.model(), c.clone(), MergeMode::Async)
+            .with_window(16)
+            .run_with_stats();
+        assert_eq!(r.final_energy, p.model().energy(&r.final_spins));
+        assert!(stats.pinned_lanes <= stats.shards);
+        // Lanes pin round-robin over the kernel-reported allowed CPU
+        // set; whenever that set is non-empty (any Linux host,
+        // restricted cpuset or not), every lane's target is allowed
+        // and all the pins must stick.
+        if !affinity::allowed_cpus().is_empty() {
+            assert_eq!(stats.pinned_lanes, stats.shards, "allowed CPUs but lanes unpinned");
+        }
+        let (_, vstats) =
+            ShardedEngine::new(p.model(), c, MergeMode::VirtualTime).run_with_stats();
+        assert_eq!(vstats.pinned_lanes, 0, "virtual mode runs unpinned on the caller");
     }
 
     #[test]

@@ -21,19 +21,21 @@
 //! `Datapath::Dense` walks the i32 coupling row (the CPU-fast hot path),
 //! `Datapath::BitPlane` streams the column-major bit-planes word by word
 //! (bit-faithful to the FPGA; same results, verified by tests).
+//!
+//! The per-step selection/update machinery itself — lane weights,
+//! Fenwick tree, dirty-set refresh, flip application — lives in the
+//! shared [`LaneKernel`](super::lane::LaneKernel); this engine is its
+//! single-lane (`range == 0..N`) instantiation, and the sharded engine
+//! ([`crate::engine::shard`]) composes S range-restricted instances of
+//! the same kernel.
 
-use super::lut::{LaneCtx, PwlLogistic, ONE_Q16};
+use super::lane::{LaneKernel, MAX_CSR_DENSITY};
+use super::lut::{PwlLogistic, ONE_Q16};
 use super::schedule::Schedule;
-use super::select::{Fenwick, SelectorKind};
+use super::select::SelectorKind;
 use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
-
-/// Above this directed density the engine keeps the dense row walk and
-/// refreshes every lane per flip instead of building a CSR adjacency
-/// (the dense-row fast path — CSR walks lose to the contiguous row once
-/// most entries are nonzero anyway).
-const MAX_CSR_DENSITY: f64 = 0.25;
 
 /// Spin-selection mode (the paper's dual-mode switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +98,12 @@ pub struct EngineConfig {
     /// this; [`crate::engine::ShardedEngine`] partitions the instance
     /// into this many lanes (clamped to `[1, min(N, MAX_SHARDS)]`).
     pub shards: usize,
+    /// Pin each shard lane thread round-robin over the process's
+    /// *allowed* CPU set (`sched_setaffinity`, Linux only; a no-op
+    /// elsewhere — see [`crate::engine::shard::affinity`]). Only the
+    /// async sharded engine consults this; the single-lane engine and
+    /// the virtual-time merge run on the caller's thread.
+    pub pin_lanes: bool,
 }
 
 impl EngineConfig {
@@ -112,7 +120,31 @@ impl EngineConfig {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         }
+    }
+
+    /// The flip-application data sources this config implies for
+    /// `model`: `(CSR adjacency, bit-plane store)`, at most one
+    /// `Some` (both `None` = dense row walk). The ONE derivation the
+    /// single-lane engine and both sharded modes share — if the CSR
+    /// density gate or plane sizing ever changes, it changes for all
+    /// three at once, so the bit-identity contract cannot drift.
+    pub(crate) fn field_sources(
+        &self,
+        model: &IsingModel,
+    ) -> (Option<Adjacency>, Option<BitPlanes>) {
+        match self.datapath {
+            Datapath::Dense => (Adjacency::build_if_sparse(model, MAX_CSR_DENSITY), None),
+            Datapath::BitPlane => (None, Some(BitPlanes::encode(model, self.planes))),
+        }
+    }
+
+    /// True when Mode II selection runs the incremental Fenwick /
+    /// dirty-set path (shared gate of the engine and the shard lanes).
+    pub(crate) fn incremental_selection(&self) -> bool {
+        matches!(self.mode, Mode::RouletteWheel | Mode::RouletteUniformized)
+            && self.selector == SelectorKind::Fenwick
     }
 }
 
@@ -136,56 +168,6 @@ pub struct RunResult {
     pub wall: std::time::Duration,
 }
 
-/// Incremental Mode II selection state (the Fenwick path): the tree over
-/// the Q16 lane weights plus dirty-lane bookkeeping, so a
-/// plateau-interior step costs Θ(deg + log N) instead of Θ(N).
-struct RwaState {
-    fenwick: Fenwick,
-    /// Lane-evaluation context for `cached_temp`.
-    ctx: LaneCtx,
-    /// Temperature the lanes/tree currently reflect (None = stale).
-    cached_temp: Option<f64>,
-    /// Lanes whose `(s_i, u_i)` changed since the last sync.
-    dirty: Vec<u32>,
-    /// Epoch stamps deduplicating `dirty` pushes.
-    stamp: Vec<u64>,
-    epoch: u64,
-    /// Set by the dense-row fast path (no CSR): the flip touched ~every
-    /// lane, so the next sync does one bulk refresh instead of N marks.
-    all_dirty: bool,
-    /// True while the tree does not reflect `p_q16`. Bulk refreshes only
-    /// mark the tree stale instead of paying a Θ(N) rebuild — selection
-    /// falls back to the prefix scan for that step, and the rebuild
-    /// happens lazily on the first *incremental* step that follows. A
-    /// run that bulk-refreshes every step (continuous ramp, dense row)
-    /// therefore never builds the tree at all and costs exactly what the
-    /// legacy scan does.
-    tree_stale: bool,
-}
-
-impl RwaState {
-    fn new(n: usize, lut: &PwlLogistic) -> Self {
-        Self {
-            fenwick: Fenwick::new(n),
-            ctx: lut.lane_ctx(1.0), // placeholder; cached_temp None forces a refresh
-            cached_temp: None,
-            dirty: Vec::new(),
-            stamp: vec![0; n],
-            epoch: 1,
-            all_dirty: false,
-            tree_stale: true,
-        }
-    }
-
-    #[inline(always)]
-    fn mark(&mut self, i: usize) {
-        if self.stamp[i] != self.epoch {
-            self.stamp[i] = self.epoch;
-            self.dirty.push(i as u32);
-        }
-    }
-}
-
 /// The Snowball engine over one Ising instance.
 pub struct SnowballEngine<'m> {
     model: &'m IsingModel,
@@ -196,16 +178,12 @@ pub struct SnowballEngine<'m> {
     /// CSR adjacency for sparse dense-datapath instances: Θ(deg) field
     /// updates with an exact touched-lane report.
     adj: Option<Adjacency>,
-    // Mutable chain state.
-    spins: SpinVec,
-    /// Full local fields `u_i = u_i^(J) + h_i` (the engine folds h in at
-    /// init; both update paths only ever add coupler deltas, Eq. 12).
-    u: Vec<i64>,
+    /// The single full-range lane: spins, local fields
+    /// `u_i = u_i^(J) + h_i` (h folded in at init; every update path
+    /// only ever adds coupler deltas, Eq. 12), Mode II lane weights and
+    /// the incremental Fenwick/dirty-set state.
+    kernel: LaneKernel,
     energy: i64,
-    /// Scratch: per-spin flip probabilities (Q16) for Mode II.
-    p_q16: Vec<u32>,
-    /// Fenwick-selection state (roulette modes with `SelectorKind::Fenwick`).
-    rwa: Option<RwaState>,
 }
 
 impl<'m> SnowballEngine<'m> {
@@ -220,32 +198,23 @@ impl<'m> SnowballEngine<'m> {
     pub fn with_spins(model: &'m IsingModel, cfg: EngineConfig, spins: SpinVec) -> Self {
         assert_eq!(spins.len(), model.len());
         let rng = StatelessRng::new(cfg.seed);
-        let bitplanes = match cfg.datapath {
-            Datapath::BitPlane => Some(BitPlanes::encode(model, cfg.planes)),
-            Datapath::Dense => None,
-        };
-        let adj = match cfg.datapath {
-            Datapath::Dense => Adjacency::build_if_sparse(model, MAX_CSR_DENSITY),
-            Datapath::BitPlane => None,
-        };
+        let (adj, bitplanes) = cfg.field_sources(model);
         let u = model.local_fields(&spins);
         let energy = model.energy(&spins);
         let n = model.len();
         let lut = PwlLogistic::default();
-        let uses_roulette = matches!(cfg.mode, Mode::RouletteWheel | Mode::RouletteUniformized);
-        let rwa = (uses_roulette && cfg.selector == SelectorKind::Fenwick)
-            .then(|| RwaState::new(n, &lut));
-        Self { model, cfg, lut, rng, bitplanes, adj, spins, u, energy, p_q16: vec![0; n], rwa }
+        let kernel = LaneKernel::new(0..n, &spins, &u, &lut, cfg.incremental_selection());
+        Self { model, cfg, lut, rng, bitplanes, adj, kernel, energy }
     }
 
     /// Current spins.
     pub fn spins(&self) -> &SpinVec {
-        &self.spins
+        self.kernel.spins()
     }
 
     /// Current local fields.
     pub fn fields(&self) -> &[i64] {
-        &self.u
+        self.kernel.fields()
     }
 
     /// Current (incrementally tracked) energy.
@@ -264,7 +233,7 @@ impl<'m> SnowballEngine<'m> {
         let steps = self.cfg.steps;
         let mut best_energy = self.energy;
         let mut best_step = 0u64;
-        let mut best_spins = self.spins.clone();
+        let mut best_spins = self.kernel.spins().clone();
         let mut trace = Vec::new();
         let mut flips = 0u64;
         let mut fallbacks = 0u64;
@@ -290,7 +259,7 @@ impl<'m> SnowballEngine<'m> {
                 best_step = t + 1;
                 // Overwrite the preallocated buffer — no allocation on
                 // the (frequent, early-anneal) improvement path.
-                best_spins.assign_from(&self.spins);
+                best_spins.assign_from(self.kernel.spins());
             }
             if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
                 trace.push((t + 1, self.energy));
@@ -301,7 +270,7 @@ impl<'m> SnowballEngine<'m> {
             best_step,
             best_spins,
             final_energy: self.energy,
-            final_spins: self.spins.clone(),
+            final_spins: self.kernel.spins().clone(),
             trace,
             steps,
             flips,
@@ -325,11 +294,11 @@ impl<'m> SnowballEngine<'m> {
     fn step_random_scan(&mut self, t: u64, temp: f64, is_fallback: bool) -> StepOutcome {
         let n = self.model.len() as u32;
         let j = self.rng.below(t, 0, salt::SITE, n) as usize; // Eq. 22
-        let de = IsingModel::delta_e(self.spins.get(j), self.u[j]); // Eq. 24
+        let de = self.kernel.delta_e(j); // Eq. 24
         let p = self.lut.flip_prob_q16(de, temp); // Eq. 25
         let r = self.rng.u32(t, 0, salt::ACCEPT) >> 16; // 16-bit uniform
         if r < p {
-            self.apply_flip(j, de);
+            self.apply_flip(j);
             if is_fallback {
                 StepOutcome::FallbackFlipped(j)
             } else {
@@ -345,25 +314,17 @@ impl<'m> SnowballEngine<'m> {
     /// Mode II (paper §IV-B3c): evaluate all spins, roulette-select one,
     /// flip deterministically.
     ///
-    /// Two bit-identical implementations share this entry point. The
-    /// legacy scan re-evaluates all N lanes and prefix-scans them every
-    /// step (Θ(N) twice). The Fenwick path keeps the lane weights and
-    /// their tree current incrementally — inside a temperature plateau
-    /// only the lanes whose local field actually changed since the last
-    /// flip are re-evaluated (Θ(deg) with CSR/bit-plane delta reports, a
-    /// bulk kernel refresh on the dense row walk), and selection descends
-    /// the tree in Θ(log N).
+    /// Two bit-identical implementations share this entry point, both
+    /// inside [`LaneKernel`]. The legacy scan re-evaluates all N lanes
+    /// and prefix-scans them every step (Θ(N) twice). The Fenwick path
+    /// keeps the lane weights and their tree current incrementally —
+    /// inside a temperature plateau only the lanes whose local field
+    /// actually changed since the last flip are re-evaluated (Θ(deg)
+    /// with CSR/bit-plane delta reports, a bulk kernel refresh on the
+    /// dense row walk), and selection descends the tree in Θ(log N).
     fn step_roulette(&mut self, t: u64, temp: f64, uniformized: bool) -> StepOutcome {
         let n = self.model.len();
-        let w_total = match self.cfg.selector {
-            SelectorKind::LinearScan => {
-                // Full lane evaluation through the chunked kernel (the
-                // FPGA's `eval_lanes`; `p_q16` is the lane buffer).
-                let ctx = self.lut.lane_ctx(temp);
-                self.lut.eval_lanes(&ctx, &self.u, self.spins.words(), &mut self.p_q16)
-            }
-            SelectorKind::Fenwick => self.sync_lanes(temp),
-        };
+        let w_total = self.kernel.sync_weights(&self.lut, temp);
         if w_total == 0 {
             // Degenerate aggregate weight → sequential fallback (paper:
             // "falls back to a conventional one-site update").
@@ -377,72 +338,9 @@ impl<'m> SnowballEngine<'m> {
         if uniformized && r >= w_total {
             return StepOutcome::Null;
         }
-        // The unique j with cum(j-1) <= r < cum(j): Θ(log N) tree descent
-        // when the Fenwick tree is current, Θ(N) prefix scan otherwise
-        // (legacy path, and bulk-refresh steps where rebuilding the tree
-        // for a single selection would cost more than the scan) —
-        // identical j either way.
-        let chosen = match &self.rwa {
-            Some(st) if !st.tree_stale => st.fenwick.select(r),
-            _ => {
-                let mut acc = 0u64;
-                let mut chosen = n - 1;
-                for i in 0..n {
-                    acc += self.p_q16[i] as u64;
-                    if r < acc {
-                        chosen = i;
-                        break;
-                    }
-                }
-                chosen
-            }
-        };
-        let de = IsingModel::delta_e(self.spins.get(chosen), self.u[chosen]);
-        self.apply_flip(chosen, de);
+        let chosen = self.kernel.select_local(r);
+        self.apply_flip(chosen);
         StepOutcome::Flipped(chosen)
-    }
-
-    /// Bring the lane weights and Fenwick tree in sync with the current
-    /// `(spins, u, temp)`; returns the aggregate weight W. A temperature
-    /// change (plateau boundary) or a dense-row flip forces a bulk
-    /// refresh through the chunked lane kernel; otherwise only the lanes
-    /// dirtied by the last flip are re-evaluated.
-    fn sync_lanes(&mut self, temp: f64) -> u64 {
-        let st = self.rwa.as_mut().expect("sync_lanes requires Fenwick state");
-        if st.cached_temp != Some(temp) || st.all_dirty {
-            // Bulk refresh: re-evaluate every lane, but only mark the
-            // tree stale — this step selects by prefix scan, and the
-            // Θ(N) rebuild is paid once, lazily, iff an incremental step
-            // follows (so back-to-back bulk steps cost what the legacy
-            // scan costs).
-            st.ctx = self.lut.lane_ctx(temp);
-            let w = self.lut.eval_lanes(&st.ctx, &self.u, self.spins.words(), &mut self.p_q16);
-            st.tree_stale = true;
-            st.cached_temp = Some(temp);
-            st.all_dirty = false;
-            st.dirty.clear();
-            st.epoch += 1;
-            w
-        } else {
-            if st.tree_stale {
-                st.fenwick.rebuild(&self.p_q16);
-                st.tree_stale = false;
-            }
-            let words = self.spins.words();
-            for &i in &st.dirty {
-                let i = i as usize;
-                let bit = (words[i >> 6] >> (i & 63)) & 1;
-                let p = self.lut.lane_p(&st.ctx, bit, self.u[i]);
-                let old = self.p_q16[i];
-                if p != old {
-                    st.fenwick.add(i, p as i64 - old as i64);
-                    self.p_q16[i] = p;
-                }
-            }
-            st.dirty.clear();
-            st.epoch += 1;
-            st.fenwick.total()
-        }
     }
 
     /// Uniform draw in [0, bound) from the stateless stream (64-bit
@@ -454,61 +352,14 @@ impl<'m> SnowballEngine<'m> {
     }
 
     /// Flip spin `j` and propagate to all local fields (asynchronous
-    /// update, Eqs. 12/17/27/31) and the tracked energy. Every update
-    /// path reports the touched fields into the Fenwick dirty set (when
-    /// one is active), so the incremental lane maintenance never misses
-    /// a changed `u_i`.
-    fn apply_flip(&mut self, j: usize, de: i64) {
-        let s_old = self.spins.flip(j);
+    /// update, Eqs. 12/17/27/31) and the tracked energy — one call into
+    /// the shared kernel, which also reports every touched field into
+    /// the Fenwick dirty set (when one is active), so the incremental
+    /// lane maintenance never misses a changed `u_i`.
+    fn apply_flip(&mut self, j: usize) {
+        let (_, _, de) =
+            self.kernel.flip_local(self.model, self.adj.as_ref(), self.bitplanes.as_ref(), j);
         self.energy += de;
-        match self.cfg.datapath {
-            Datapath::Dense => match &self.adj {
-                Some(adj) => {
-                    // Sparse: Θ(deg) CSR walk; the touched set is the row.
-                    let factor = 2 * s_old as i64;
-                    let (neigh, vals) = adj.row(j);
-                    match self.rwa.as_mut() {
-                        Some(st) => {
-                            for (&i, &jv) in neigh.iter().zip(vals.iter()) {
-                                self.u[i as usize] -= factor * jv as i64;
-                                st.mark(i as usize);
-                            }
-                        }
-                        None => {
-                            for (&i, &jv) in neigh.iter().zip(vals.iter()) {
-                                self.u[i as usize] -= factor * jv as i64;
-                            }
-                        }
-                    }
-                }
-                None => {
-                    // Dense-row fast path: contiguous Θ(N) walk
-                    // (u_i ← u_i − 2 J_ij s_j_old, J symmetric); nearly
-                    // every lane changes, so the Fenwick state takes one
-                    // bulk refresh instead of N individual marks.
-                    let row = self.model.j_row(j);
-                    let factor = 2 * s_old as i64;
-                    for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
-                        *ui -= factor * jv as i64;
-                    }
-                    if let Some(st) = self.rwa.as_mut() {
-                        st.all_dirty = true;
-                    }
-                }
-            },
-            Datapath::BitPlane => {
-                let bp = self.bitplanes.as_ref().unwrap();
-                match self.rwa.as_mut() {
-                    Some(st) => bp.incr_update_touched(&mut self.u, j, s_old, |i| st.mark(i)),
-                    None => bp.incr_update(&mut self.u, j, s_old),
-                }
-            }
-        }
-        if let Some(st) = self.rwa.as_mut() {
-            // The flipped spin's own lane changes sign (ΔE_j → −ΔE_j)
-            // even though u_j does not (J_jj == 0).
-            st.mark(j);
-        }
     }
 }
 

@@ -108,6 +108,7 @@ impl ParallelTempering {
                     planes: None,
                     trace_stride: 0,
                     shards: 1,
+                    pin_lanes: false,
                 };
                 SnowballEngine::new(model, cfg)
             })

@@ -345,6 +345,7 @@ pub fn fig15(seed: u64) -> Fig15Result {
         planes: Some(16),
         trace_stride: 500,
         shards: 1,
+        pin_lanes: false,
     };
     let mut engine = SnowballEngine::new(&model, cfg);
     let run = engine.run();
@@ -446,6 +447,7 @@ pub fn fig4(steps: u64, seed: u64) -> (f64, Vec<(u64, i64)>, (usize, usize)) {
         planes: None,
         trace_stride: (steps / 64).max(1),
         shards: 1,
+        pin_lanes: false,
     };
     let mut engine = SnowballEngine::new(p.model(), cfg);
     let run = engine.run();

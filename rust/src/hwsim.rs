@@ -184,6 +184,49 @@ impl HwModel {
         self.report(g, init, step)
     }
 
+    /// Cycles per asynchronous round when each lane runs the
+    /// **incremental** per-lane datapath (the shared lane kernel with
+    /// Fenwick selection): only `touched` lanes (≈ deg + 1, the local
+    /// flip's plus the mailbox flips' in-range neighbourhoods)
+    /// re-evaluate through the LUT, selection descends a
+    /// comparator/Fenwick tree over the `⌈N/S⌉` local lanes (two reads
+    /// per level), and the update/exchange terms are unchanged from
+    /// [`Self::sharded_roulette_round_cycles`]. `shards == 1`
+    /// degenerates exactly to
+    /// [`Self::roulette_step_cycles_incremental`].
+    pub fn sharded_roulette_round_cycles_incremental(
+        &self,
+        g: Geometry,
+        shards: usize,
+        touched: usize,
+    ) -> u64 {
+        let s = shards.clamp(1, g.n.max(1)) as u64;
+        let local_n = (g.n as u64).div_ceil(s);
+        let local = Geometry { n: local_n as usize, planes: g.planes };
+        let lanes = (touched.min(local.n) as u64).div_ceil(self.params.eval_lanes as u64).max(1);
+        let select = 2 * (local_n.next_power_of_two().trailing_zeros() as u64) + 2;
+        let updates = s * self.update_cycles(local);
+        let exchange = 2 * (s - 1);
+        lanes + select + updates + exchange
+    }
+
+    /// Full report for `steps` TOTAL Mode II steps over `shards`
+    /// incremental lanes (plateau-interior accounting; boundary bulk
+    /// refreshes excluded, as in [`Self::roulette_run_incremental`]).
+    pub fn sharded_roulette_run_incremental(
+        &self,
+        g: Geometry,
+        shards: usize,
+        steps: u64,
+        touched: usize,
+    ) -> HwReport {
+        let s = shards.clamp(1, g.n.max(1)) as u64;
+        let init = self.init_cycles(g);
+        let rounds = steps.div_ceil(s);
+        let step = self.sharded_roulette_round_cycles_incremental(g, shards, touched) * rounds;
+        self.report(g, init, step)
+    }
+
     /// Cycles for one Mode I (random-scan) step: single-site evaluate
     /// (constant) + incremental update on accept.
     pub fn random_scan_step_cycles(&self, g: Geometry, accepted: bool) -> u64 {
@@ -363,6 +406,36 @@ mod tests {
             steps.div_ceil(8) * hw.sharded_roulette_round_cycles(g, 8)
         );
         assert!(run.kernel_seconds < hw.roulette_run(g, steps).kernel_seconds);
+    }
+
+    #[test]
+    fn incremental_sharded_round_beats_bulk_and_degenerates_cleanly() {
+        let hw = HwModel::default();
+        let g = k2000();
+        // One lane degenerates exactly to the single-lane incremental
+        // step, as the bulk round degenerates to the classic step.
+        assert_eq!(
+            hw.sharded_roulette_round_cycles_incremental(g, 1, 9),
+            hw.roulette_step_cycles_incremental(g, 9)
+        );
+        // At scale the local evaluate dominates and the incremental
+        // round wins for every lane count; on small local lane counts
+        // the doubled tree-descent reads can eat the saving — which is
+        // exactly the SHARD_AUTO_MIN_N-style size story.
+        let big = Geometry { n: 65_536, planes: 1 };
+        for s in [2usize, 4, 8] {
+            let inc = hw.sharded_roulette_round_cycles_incremental(big, s, 9);
+            let bulk = hw.sharded_roulette_round_cycles(big, s);
+            assert!(inc < bulk, "S = {s}: incremental {inc} !< bulk {bulk}");
+            // Monotone in the touched count.
+            assert!(inc <= hw.sharded_roulette_round_cycles_incremental(big, s, big.n));
+        }
+        // Run-level accounting matches step-level accounting.
+        let r = hw.sharded_roulette_run_incremental(g, 4, 10_000, 9);
+        assert_eq!(
+            r.step_cycles,
+            10_000u64.div_ceil(4) * hw.sharded_roulette_round_cycles_incremental(g, 4, 9)
+        );
     }
 
     #[test]

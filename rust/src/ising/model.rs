@@ -266,6 +266,19 @@ impl Adjacency {
         (&self.neighbors[a..b], &self.weights[a..b])
     }
 
+    /// Row `i` restricted to neighbours in `range` — the per-shard row
+    /// view a range-restricted lane kernel folds remote flips through.
+    /// Two binary searches over the (ascending) neighbour list, then the
+    /// same parallel slices as [`Self::row`]: `Θ(log deg)` to locate,
+    /// `Θ(deg ∩ range)` to walk, identical visit order.
+    #[inline]
+    pub fn row_range(&self, i: usize, range: std::ops::Range<usize>) -> (&[u32], &[i32]) {
+        let (neigh, vals) = self.row(i);
+        let from = neigh.partition_point(|&k| (k as usize) < range.start);
+        let to = from + neigh[from..].partition_point(|&k| (k as usize) < range.end);
+        (&neigh[from..to], &vals[from..to])
+    }
+
     /// Degree of row `i`.
     pub fn degree(&self, i: usize) -> usize {
         self.offsets[i + 1] - self.offsets[i]
@@ -372,6 +385,41 @@ mod tests {
             assert_eq!(adj.degree(i), dense.len());
         }
         assert_eq!(adj.max_degree(), 2); // spins 1, 2 and 3 have degree 2
+    }
+
+    /// `row_range` must return exactly the row entries whose neighbour
+    /// index falls in the range, for arbitrary (including empty and
+    /// full) ranges — the filtered-row reference the shard lanes rely on.
+    #[test]
+    fn row_range_filters_exactly() {
+        let rng = StatelessRng::new(31);
+        let mut m = IsingModel::zeros(40);
+        let mut idx = 0u64;
+        for i in 0..40usize {
+            for k in (i + 1)..40 {
+                let v = rng.below(1, idx, crate::rng::salt::PROBLEM, 5) as i32 - 2;
+                idx += 1;
+                if v != 0 {
+                    m.set_j(i, k, v);
+                }
+            }
+        }
+        let adj = m.adjacency();
+        for i in [0usize, 7, 39] {
+            let (neigh, vals) = adj.row(i);
+            for (lo, hi) in [(0usize, 40usize), (0, 13), (13, 27), (27, 40), (5, 5), (38, 40)] {
+                let (rn, rv) = adj.row_range(i, lo..hi);
+                let want: Vec<(u32, i32)> = neigh
+                    .iter()
+                    .copied()
+                    .zip(vals.iter().copied())
+                    .filter(|&(k, _)| (k as usize) >= lo && (k as usize) < hi)
+                    .collect();
+                let got: Vec<(u32, i32)> =
+                    rn.iter().copied().zip(rv.iter().copied()).collect();
+                assert_eq!(got, want, "row {i}, range {lo}..{hi}");
+            }
+        }
     }
 
     #[test]

@@ -92,6 +92,12 @@ impl Partition {
         self.bounds[s]..self.bounds[s + 1]
     }
 
+    /// All shard ranges in shard order — what the sharded engine
+    /// iterates to build one range-restricted lane kernel per shard.
+    pub fn ranges(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.shards()).map(move |s| self.range(s))
+    }
+
     /// Spins in shard `s`.
     #[inline(always)]
     pub fn shard_len(&self, s: usize) -> usize {
@@ -187,6 +193,16 @@ mod tests {
             }
             assert_eq!(next, 33);
         }
+    }
+
+    #[test]
+    fn ranges_iterates_all_shards_in_order() {
+        let p = Partition::uniform(20, 3);
+        let got: Vec<_> = p.ranges().collect();
+        let want: Vec<_> = (0..p.shards()).map(|s| p.range(s)).collect();
+        assert_eq!(got, want);
+        assert_eq!(got.first().unwrap().start, 0);
+        assert_eq!(got.last().unwrap().end, 20);
     }
 
     #[test]

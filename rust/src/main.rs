@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   solve  --instance <id|er:n:m> [--mode rsa|rwa] [--steps N] [--replicas R]
 //!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
-//!          [--workers W] [--selector scan|fenwick] [--shards S]
+//!          [--workers W] [--selector scan|fenwick] [--shards S] [--pin-lanes]
 //!   serve  [--addr host:port] [--workers W] [--max-inflight-replicas N]
 //!          [--reject-saturated]
 //!   bench  <table1|table2|table3|fig3|fig8|fig13|fig14|fig15> [options]
@@ -49,9 +49,10 @@ USAGE:
   snowball solve --instance <G6|G11|...|K2000|er:n:m> [--mode rsa|rwa]
                  [--steps N] [--replicas R] [--seed S]
                  [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
-                 [--selector scan|fenwick] [--shards S]
+                 [--selector scan|fenwick] [--shards S] [--pin-lanes]
                     (--shards: 1 = classic engine, >1 = async sharded
-                     lanes per replica, 0 = auto by instance size)
+                     lanes per replica, 0 = auto by instance size;
+                     --pin-lanes: pin lane threads to cores, Linux)
   snowball serve [--addr 127.0.0.1:7878] [--workers W]
                  [--max-inflight-replicas N] [--reject-saturated]
   snowball bench <table1|table2|table3|fig3|fig5|fig8|fig13|fig14|fig15> [--quick]
@@ -102,6 +103,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "--shards must be <= {} (got {shards})",
         snowball::engine::shard::MAX_SHARDS
     );
+    let pin_lanes = args.flag("pin-lanes") || fj.map(|j| j.pin_lanes).unwrap_or(false);
 
     let w_total: i64 = -model.j_matrix().iter().map(|&v| v as i64).sum::<i64>() / 2;
     let coord = Coordinator::start(workers);
@@ -116,6 +118,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         seed,
         target_energy: target,
         shards,
+        pin_lanes,
         backend: Backend::Native,
     });
     let r = coord.wait(id).ok_or_else(|| {

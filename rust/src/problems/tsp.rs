@@ -208,6 +208,7 @@ mod tests {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut e = SnowballEngine::new(tsp.model(), cfg);
         let r = e.run();

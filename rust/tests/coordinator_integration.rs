@@ -101,6 +101,7 @@ fn coordinator_direct_api_with_target_statistics() {
         seed: 3,
         target_energy: None,
         shards: 1,
+        pin_lanes: false,
         backend: Backend::Native,
     });
     let res = coord.wait(id).unwrap();

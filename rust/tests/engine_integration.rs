@@ -46,6 +46,7 @@ fn rwa_converges_in_fewer_steps_than_rsa() {
                 planes: None,
                 trace_stride: 0,
                 shards: 1,
+                pin_lanes: false,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let r = e.run();
@@ -100,6 +101,7 @@ fn uniformized_null_rate_tracks_weight() {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let r = e.run();

@@ -73,6 +73,7 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
         seed,
         target_energy: None,
         shards: 1,
+        pin_lanes: false,
         backend: Backend::Native,
     }
 }

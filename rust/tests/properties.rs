@@ -3,7 +3,9 @@
 
 use snowball::bitplane::BitPlanes;
 use snowball::coordinator::batcher;
-use snowball::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
+use snowball::engine::{
+    Datapath, EngineConfig, LaneKernel, Mode, PwlLogistic, Schedule, SelectorKind, SnowballEngine,
+};
 use snowball::ising::{IsingModel, SpinVec};
 use snowball::problems::quantize;
 use snowball::rng::salt;
@@ -175,6 +177,7 @@ fn prop_engine_state_consistency() {
             planes: None,
             trace_stride: 0,
             shards: 1,
+            pin_lanes: false,
         };
         let mut e = SnowballEngine::new(&m, cfg);
         e.run();
@@ -183,6 +186,89 @@ fn prop_engine_state_consistency() {
         }
         if e.fields() != &m.local_fields(e.spins())[..] {
             return Err(format!("field drift in {mode:?}/{dp:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Lane-kernel dirty-set invariant: for an arbitrary model, an
+/// arbitrary contiguous sub-range, and an arbitrary interleaving of
+/// local flips, remote flips and temperature changes, the kernel's
+/// incrementally maintained weights after a sync equal a from-scratch
+/// bulk evaluation of the current configuration, its fields track the
+/// dense oracle, and Fenwick selection matches the linear-scan
+/// reference — through the CSR and the bit-plane delta sources.
+#[test]
+fn prop_lane_kernel_dirty_set_tracks_bulk_refresh() {
+    Cases::new(0xC3, 16).run(|rng, size| {
+        let n = (size + 8).min(72);
+        let m = gen::model(rng, n, 4);
+        let adj = m.adjacency();
+        let bp = BitPlanes::encode(&m, None);
+        let lut = PwlLogistic::default();
+        // Random non-empty sub-range.
+        let lo = rng.below(20, 0, salt::SITE, (n as u32) / 2 + 1) as usize;
+        let hi = (lo + 1 + rng.below(21, 0, salt::SITE, (n - lo) as u32) as usize).min(n);
+        for (label, use_adj) in [("csr", true), ("bitplane", false)] {
+            let adj = use_adj.then_some(&adj);
+            let planes = (!use_adj).then_some(&bp);
+            let mut spins = gen::spins(rng, n);
+            let u = m.local_fields(&spins);
+            let mut k = LaneKernel::new(lo..hi, &spins, &u, &lut, true);
+            for step in 0..8u64 {
+                // Plateaus of 4 steps, then a temperature change.
+                let temp = if step < 4 { 1.3 } else { 0.7 };
+                for f in 0..3u64 {
+                    let j = rng.below(22, step * 8 + f, salt::SITE, n as u32) as usize;
+                    if (lo..hi).contains(&j) {
+                        let (_, _, de) = k.flip_local(&m, adj, planes, j - lo);
+                        let want = IsingModel::delta_e(spins.get(j), m.local_field(&spins, j));
+                        if de != want {
+                            return Err(format!("{label}: ΔE {de} != oracle {want}"));
+                        }
+                        spins.flip(j);
+                    } else {
+                        let s_old = spins.flip(j);
+                        k.apply_remote(&m, adj, planes, j, s_old);
+                    }
+                }
+                let u_now = m.local_fields(&spins);
+                if k.fields() != &u_now[lo..hi] {
+                    return Err(format!("{label}: fields drifted at step {step}"));
+                }
+                let w = k.sync_weights(&lut, temp);
+                // Bulk reference over the same range.
+                let mut local = SpinVec::all_down(hi - lo);
+                for i in lo..hi {
+                    local.set(i - lo, spins.get(i));
+                }
+                let ctx = lut.lane_ctx(temp);
+                let mut want = vec![0u32; hi - lo];
+                let w_want = lut.eval_lanes(&ctx, &u_now[lo..hi], local.words(), &mut want);
+                if w != w_want {
+                    return Err(format!("{label}: W {w} != bulk {w_want} at step {step}"));
+                }
+                if k.weights() != &want[..] {
+                    return Err(format!("{label}: weights diverged at step {step}"));
+                }
+                if w > 0 {
+                    for trial in 0..6u64 {
+                        let r = rng.u64(23, step * 100 + trial, salt::ROULETTE) % w;
+                        let mut acc = 0u64;
+                        let mut linear = want.len() - 1;
+                        for (i, &pw) in want.iter().enumerate() {
+                            acc += pw as u64;
+                            if r < acc {
+                                linear = i;
+                                break;
+                            }
+                        }
+                        if k.select_local(r) != linear {
+                            return Err(format!("{label}: selection diverged at r = {r}"));
+                        }
+                    }
+                }
+            }
         }
         Ok(())
     });

@@ -35,6 +35,7 @@ fn run_signature(
         planes: None,
         trace_stride: 0,
         shards: 1,
+        pin_lanes: false,
     };
     let mut e = SnowballEngine::new(model, cfg);
     let r = e.run();

@@ -51,6 +51,7 @@ fn reference_spec(c: usize) -> JobSpec {
         seed,
         target_energy: None,
         shards: 1,
+        pin_lanes: false,
         backend: Backend::Native,
     }
 }

@@ -28,6 +28,7 @@ fn cfg(mode: Mode, steps: u64, seed: u64, shards: usize) -> EngineConfig {
         planes: None,
         trace_stride: 97,
         shards,
+        pin_lanes: false,
     }
 }
 
@@ -50,7 +51,8 @@ fn signature(r: snowball::engine::RunResult) -> Signature {
 /// The tentpole guarantee: virtual-time S-shard runs are bit-identical
 /// to the single-shard engine — every observable, including the energy
 /// trace and both spin configurations — for every mode, both
-/// selectors, both datapaths, several shard counts and seeds, on a
+/// selectors (now honored INSIDE the shard lanes via the shared lane
+/// kernel), both datapaths, several shard counts and seeds, on a
 /// sparse (CSR path) and a dense (row-walk path) instance.
 #[test]
 fn virtual_time_merge_is_bit_identical_to_single_shard_engine() {
@@ -75,21 +77,58 @@ fn virtual_time_merge_is_bit_identical_to_single_shard_engine() {
                 for w in refs.windows(2) {
                     assert_eq!(w[0], w[1], "{label}/{mode:?}/seed {seed}: references diverged");
                 }
-                for shards in [2usize, 3, 5, 8] {
-                    let got = signature(
-                        ShardedEngine::new(
-                            p.model(),
-                            cfg(mode, 1_200, seed, shards),
-                            MergeMode::VirtualTime,
-                        )
-                        .run(),
-                    );
-                    assert_eq!(
-                        got, refs[0],
-                        "{label}/{mode:?}/seed {seed}/{shards} shards: virtual-time merge \
-                         diverged from the single-shard engine"
-                    );
+                // The sharded matrix: selector × datapath × shard
+                // count, every cell bit-identical to the references.
+                for selector in [SelectorKind::Fenwick, SelectorKind::LinearScan] {
+                    for dp in [Datapath::Dense, Datapath::BitPlane] {
+                        for shards in [2usize, 3, 5, 8] {
+                            let mut c = cfg(mode, 1_200, seed, shards);
+                            c.selector = selector;
+                            c.datapath = dp;
+                            let got = signature(
+                                ShardedEngine::new(p.model(), c, MergeMode::VirtualTime).run(),
+                            );
+                            assert_eq!(
+                                got, refs[0],
+                                "{label}/{mode:?}/{selector:?}/{dp:?}/seed {seed}/{shards} \
+                                 shards: virtual-time merge diverged from the single-shard \
+                                 engine"
+                            );
+                        }
+                    }
                 }
+            }
+        }
+    }
+}
+
+/// Sparse incremental-vs-bulk parity under a plateau schedule: the
+/// Fenwick (incremental dirty-set) lanes and the linear-scan (bulk
+/// refresh) lanes must produce bit-identical virtual-time runs across
+/// shard counts — i.e. the speedup the sparse BENCH_shard section
+/// measures can never come from diverging work. Quantized schedules
+/// maximize the incremental path's exposure (long plateaus, dirty-set
+/// refresh on almost every step).
+#[test]
+fn sparse_incremental_and_bulk_lanes_are_bit_identical() {
+    let n = 512usize;
+    let p = MaxCut::new(generators::erdos_renyi(n, 2 * n, &[-1, 1], &StatelessRng::new(73)));
+    let schedule = Schedule::Geometric { t0: 5.0, t1: 0.08 }.quantized(32);
+    for mode in [Mode::RouletteWheel, Mode::RouletteUniformized] {
+        let run = |selector: SelectorKind, shards: usize| {
+            let mut c = cfg(mode, 4_000, 19, shards);
+            c.selector = selector;
+            c.schedule = schedule.clone();
+            signature(ShardedEngine::new(p.model(), c, MergeMode::VirtualTime).run())
+        };
+        let reference = run(SelectorKind::Fenwick, 1);
+        for shards in [1usize, 3, 8] {
+            for selector in [SelectorKind::Fenwick, SelectorKind::LinearScan] {
+                assert_eq!(
+                    run(selector, shards),
+                    reference,
+                    "{mode:?}/{selector:?}/{shards} shards diverged on the sparse plateau run"
+                );
             }
         }
     }
