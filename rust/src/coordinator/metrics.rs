@@ -21,6 +21,11 @@
 //! locked long enough to clone an `Arc`.
 
 use std::collections::BTreeMap;
+// std::sync::atomic (not crate::sync::atomic) by design: the registry
+// relies on `Arc<AtomicU64>: Default` via `or_default()`, which loom's
+// instrumented atomics don't provide, and metrics are never part of a
+// loom model. This file is on the xtask lint-safety std-atomics
+// allowlist; keep it in sync with docs/ARCHITECTURE.md if that changes.
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 

@@ -738,12 +738,12 @@ mod tests {
             max_inflight_replicas: cap,
             ..Default::default()
         });
-        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let done = Arc::new(crate::sync::atomic::AtomicBool::new(false));
         let poller = {
             let (c, done) = (c.clone(), done.clone());
             std::thread::spawn(move || {
                 let mut peak = 0i64;
-                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                while !done.load(crate::sync::atomic::Ordering::Relaxed) {
                     peak = peak.max(c.metrics.gauge("replicas_inflight"));
                     std::thread::yield_now();
                 }
@@ -754,7 +754,7 @@ mod tests {
         for id in ids {
             assert!(c.wait(id).is_some(), "job {id} must complete under the cap");
         }
-        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        done.store(true, crate::sync::atomic::Ordering::Relaxed);
         let peak = poller.join().unwrap();
         assert!(peak <= cap as i64, "inflight replicas peaked at {peak}, cap {cap}");
         assert_eq!(c.metrics.gauge("replicas_inflight"), 0);

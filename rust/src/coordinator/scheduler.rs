@@ -39,7 +39,7 @@ use super::job::{JobSpec, ReplicaResult};
 use crate::engine::pool::ReplicaPool;
 use crate::engine::{shard, Datapath, EngineConfig, MergeMode, ShardedEngine, SnowballEngine};
 use crate::rng::StatelessRng;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Lanes `spec` resolves to under a `worker_budget`-thread compute

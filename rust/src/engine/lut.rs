@@ -11,6 +11,16 @@
 //! Pallas side (see `python/compile/kernels/pwl.py`) so L1/L2/L3 share
 //! numerics.
 
+// AUDITED UNSAFE ALLOWLIST MEMBER (see docs/ARCHITECTURE.md
+// § Concurrency correctness): the only unsafe here is the AVX2 lane
+// kernel — `#[target_feature]` dispatch (feature presence verified at
+// runtime before every call) and bounds-checked-by-construction SIMD
+// loads/stores. Every unsafe operation carries a `SAFETY:` comment
+// (enforced by `cargo run -p xtask -- lint-safety`), and the kernel is
+// pinned bit-identical to the safe scalar path by
+// `simd_lane_kernel_matches_scalar`.
+#![allow(unsafe_code)]
+
 /// Fixed-point scale of stored probabilities: Q16, so 65536 == 1.0.
 pub const ONE_Q16: u32 = 1 << 16;
 
@@ -317,6 +327,13 @@ impl PwlLogistic {
     /// through to the scalar PWL interpolation. Bit-identical to
     /// [`Self::eval_lanes_scalar`] (same comparisons, same endpoint
     /// values, same interior evaluation).
+    ///
+    /// # Safety
+    ///
+    /// The caller must verify the CPU supports AVX2 (e.g. via
+    /// `is_x86_feature_detected!("avx2")`) before calling; executing
+    /// the 256-bit instructions on a CPU without them is undefined
+    /// behaviour.
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     #[target_feature(enable = "avx2")]
     unsafe fn eval_lanes_avx2(
@@ -330,51 +347,60 @@ impl PwlLogistic {
         debug_assert!(ctx.temp > 0.0);
         let n = u.len();
         let mut w_total = 0u64;
-        let zero = _mm256_setzero_si256();
-        // `cmpgt` is strict: de >= hi ⇔ de > hi−1, de <= lo ⇔ lo+1 > de.
-        let hi_m1 = _mm256_set1_epi64x(ctx.de_hi - 1);
-        let lo_p1 = _mm256_set1_epi64x(ctx.de_lo + 1);
         let mut i = 0usize;
-        while i + 4 <= n {
-            // i is a multiple of 4, so the four lanes share one spin word.
-            let word = spin_words[i >> 6];
-            let k = i & 63;
-            let bitsel = _mm256_set_epi64x(
-                (1u64 << (k + 3)) as i64,
-                (1u64 << (k + 2)) as i64,
-                (1u64 << (k + 1)) as i64,
-                (1u64 << k) as i64,
-            );
-            let wv = _mm256_set1_epi64x(word as i64);
-            let up = _mm256_cmpeq_epi64(_mm256_and_si256(wv, bitsel), bitsel);
-            let uv = _mm256_loadu_si256(u.as_ptr().add(i) as *const __m256i);
-            // s·u: u where the spin bit is set, −u otherwise.
-            let su = _mm256_blendv_epi8(_mm256_sub_epi64(zero, uv), uv, up);
-            let de = _mm256_add_epi64(su, su); // 2·s·u
-            let hi = _mm256_cmpgt_epi64(de, hi_m1);
-            let lo = _mm256_cmpgt_epi64(lo_p1, de);
-            let hi_bits = _mm256_movemask_pd(_mm256_castsi256_pd(hi)) as u32;
-            let lo_bits = _mm256_movemask_pd(_mm256_castsi256_pd(lo)) as u32;
-            let mut de_arr = [0i64; 4];
-            _mm256_storeu_si256(de_arr.as_mut_ptr() as *mut __m256i, de);
-            for lane in 0..4 {
-                let p = if hi_bits & (1 << lane) != 0 {
-                    ctx.p_tail
-                } else if lo_bits & (1 << lane) != 0 {
-                    ctx.p_head
-                } else {
-                    self.flip_prob_q16_inv(de_arr[lane], ctx.inv_t)
-                };
-                out[i + lane] = p;
-                w_total += p as u64;
+        // SAFETY: the fn-level contract guarantees AVX2 is present, so
+        // every intrinsic is executable. The only memory operations
+        // are the unaligned load from `u[i..i + 4]` — in bounds
+        // because the loop condition holds `i + 4 <= n == u.len()` —
+        // and the unaligned store into the local `de_arr: [i64; 4]`,
+        // whose size matches the 256-bit register exactly.
+        unsafe {
+            let zero = _mm256_setzero_si256();
+            // `cmpgt` is strict: de >= hi ⇔ de > hi−1, de <= lo ⇔ lo+1 > de.
+            let hi_m1 = _mm256_set1_epi64x(ctx.de_hi - 1);
+            let lo_p1 = _mm256_set1_epi64x(ctx.de_lo + 1);
+            while i + 4 <= n {
+                // i is a multiple of 4, so the four lanes share one spin word.
+                let word = spin_words[i >> 6];
+                let k = i & 63;
+                let bitsel = _mm256_set_epi64x(
+                    (1u64 << (k + 3)) as i64,
+                    (1u64 << (k + 2)) as i64,
+                    (1u64 << (k + 1)) as i64,
+                    (1u64 << k) as i64,
+                );
+                let wv = _mm256_set1_epi64x(word as i64);
+                let up = _mm256_cmpeq_epi64(_mm256_and_si256(wv, bitsel), bitsel);
+                let uv = _mm256_loadu_si256(u.as_ptr().add(i) as *const __m256i);
+                // s·u: u where the spin bit is set, −u otherwise.
+                let su = _mm256_blendv_epi8(_mm256_sub_epi64(zero, uv), uv, up);
+                let de = _mm256_add_epi64(su, su); // 2·s·u
+                let hi = _mm256_cmpgt_epi64(de, hi_m1);
+                let lo = _mm256_cmpgt_epi64(lo_p1, de);
+                let hi_bits = _mm256_movemask_pd(_mm256_castsi256_pd(hi)) as u32;
+                let lo_bits = _mm256_movemask_pd(_mm256_castsi256_pd(lo)) as u32;
+                let mut de_arr = [0i64; 4];
+                _mm256_storeu_si256(de_arr.as_mut_ptr() as *mut __m256i, de);
+                for lane in 0..4 {
+                    let p = if hi_bits & (1 << lane) != 0 {
+                        ctx.p_tail
+                    } else if lo_bits & (1 << lane) != 0 {
+                        ctx.p_head
+                    } else {
+                        self.flip_prob_q16_inv(de_arr[lane], ctx.inv_t)
+                    };
+                    out[i + lane] = p;
+                    w_total += p as u64;
+                }
+                i += 4;
             }
-            i += 4;
         }
         while i < n {
             let bit = (spin_words[i >> 6] >> (i & 63)) & 1;
             let p = self.lane_p(ctx, bit, u[i]);
             out[i] = p;
             w_total += p as u64;
+            i += 1;
         }
         w_total
     }
@@ -406,6 +432,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "100k-sample sweep is too slow under the interpreter")]
     fn max_error_is_small() {
         let l = PwlLogistic::default();
         let err = l.max_error(100_000);
@@ -518,6 +545,8 @@ mod tests {
                 let mut scalar = vec![0u32; n];
                 let ws = l.eval_lanes_scalar(&ctx, &u, spins.words(), &mut scalar);
                 let mut simd = vec![0u32; n];
+                // SAFETY: AVX2 presence verified by the
+                // `is_x86_feature_detected!` guard at the top of the test.
                 let wv = unsafe { l.eval_lanes_avx2(&ctx, &u, spins.words(), &mut simd) };
                 assert_eq!(scalar, simd, "n={n}, T={temp}");
                 assert_eq!(ws, wv);

@@ -14,14 +14,25 @@
 //! shard lane as a range-restricted one. `docs/ARCHITECTURE.md` maps
 //! the whole stack.
 
+// `lut` and `shard` (for `shard::mailbox` / `shard::affinity`) are the
+// engine's audited-unsafe subtrees and stay under the crate-level
+// `deny`; every other submodule is re-escalated to `forbid`, which a
+// file-local allow cannot override.
+#[forbid(unsafe_code)]
 pub mod diagnostics;
+#[forbid(unsafe_code)]
 pub mod lane;
 pub mod lut;
+#[forbid(unsafe_code)]
 pub mod pool;
+#[forbid(unsafe_code)]
 pub mod schedule;
+#[forbid(unsafe_code)]
 pub mod select;
 pub mod shard;
+#[forbid(unsafe_code)]
 pub mod snowball;
+#[forbid(unsafe_code)]
 pub mod tempering;
 
 pub use lane::LaneKernel;

@@ -17,6 +17,14 @@
 //!
 //! [`ShardStats::pinned_lanes`]: super::ShardStats::pinned_lanes
 
+// AUDITED UNSAFE ALLOWLIST MEMBER (see docs/ARCHITECTURE.md
+// § Concurrency correctness): the only unsafe here is the FFI
+// boundary — two raw libc syscall bindings whose buffers are local,
+// correctly sized and outlive the call. Every unsafe operation
+// carries a `SAFETY:` comment (enforced by
+// `cargo run -p xtask -- lint-safety`).
+#![allow(unsafe_code)]
+
 /// Pin the calling thread to CPU `cpu % 1024`, returning whether the
 /// kernel accepted the mask. Linux-only; other platforms return `false`.
 #[cfg(target_os = "linux")]
@@ -82,6 +90,7 @@ mod tests {
     /// must succeed (candidates come from `sched_getaffinity`, not an
     /// assumed 0-based range, so restricted cpusets don't fail this).
     #[test]
+    #[cfg_attr(miri, ignore = "FFI: Miri cannot emulate sched_{get,set}affinity")]
     fn pinning_is_safe_and_reports_honestly() {
         let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         // Arbitrary indices (including past the core count — the

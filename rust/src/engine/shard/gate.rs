@@ -1,0 +1,228 @@
+//! [`SyncGate`]: the abortable S-party epoch barrier of the async
+//! shard engine.
+//!
+//! `std::sync::Barrier` cannot be interrupted: if one lane dies, its
+//! siblings wait forever and the job wedges — exactly the failure mode
+//! the coordinator's panic path exists to prevent. This gate adds
+//! [`abort`](SyncGate::abort): aborting wakes every current waiter and
+//! makes every future [`wait`](SyncGate::wait) return
+//! `Err(`[`GateAborted`]`)` immediately, so surviving lanes unwind
+//! cleanly and the panic can be re-raised at the replica boundary.
+//!
+//! Rounds are tracked by a **wrapping** generation counter: a waiter
+//! parks while `generation` still equals the value it read on arrival,
+//! and the last arriver bumps the counter (waking the round). Equality
+//! is wraparound-safe, so the gate survives generation rollover — a
+//! property the tests pin by starting the counter at `u64::MAX`
+//! ([`SyncGate::with_start_generation`]) rather than hoping 2⁶⁴ epochs
+//! never happen.
+//!
+//! **Verification.** The gate is built exclusively on [`crate::sync`]
+//! primitives, so under `--cfg loom` it compiles against loom's
+//! instrumented `Mutex`/`Condvar` and `rust/tests/loom_shard.rs`
+//! model-checks arrive/leader-election, abort-while-parked and
+//! generation rollover across every interleaving. The deterministic
+//! in-module stress tests below additionally run under Miri in CI.
+
+use crate::sync::{Condvar, Mutex};
+
+/// An abortable S-party barrier (see the module docs).
+///
+/// One round: each party calls [`wait`](Self::wait); the LAST arriver
+/// is the leader (`Ok(true)`), everyone else `Ok(false)`. The gate is
+/// reusable round after round. [`abort`](Self::abort) permanently
+/// fails the gate: all current waiters wake with `Err(GateAborted)`
+/// and all future waits fail immediately.
+pub struct SyncGate {
+    parties: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+/// The gate was aborted — a sibling lane panicked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GateAborted;
+
+impl SyncGate {
+    /// Gate for `parties` participants (min 1).
+    pub fn new(parties: usize) -> Self {
+        Self::with_start_generation(parties, 0)
+    }
+
+    /// Gate whose generation counter starts at `generation` — lets the
+    /// rollover tests cross the `u64::MAX → 0` wrap in one round
+    /// instead of 2⁶⁴. Behaviour is otherwise identical to
+    /// [`new`](Self::new): the counter only ever matters through
+    /// wrapping-equality comparisons.
+    pub fn with_start_generation(parties: usize, generation: u64) -> Self {
+        Self {
+            parties: parties.max(1),
+            state: Mutex::new(GateState { arrived: 0, generation, aborted: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Number of participants per round.
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Block until all parties arrive; the LAST arriver is the leader
+    /// (`Ok(true)`). Returns `Err(GateAborted)` — immediately, or from
+    /// mid-wait — once [`abort`](Self::abort) has been called.
+    pub fn wait(&self) -> Result<bool, GateAborted> {
+        let mut st = self.state.lock().unwrap();
+        if st.aborted {
+            return Err(GateAborted);
+        }
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        while st.generation == gen && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            Err(GateAborted)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Wake every waiter and fail all future waits.
+    pub fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// A sibling-lane panic must not wedge the survivors: aborting the
+    /// gate wakes every current waiter and fails every future wait.
+    #[test]
+    fn abort_releases_all_waiters() {
+        let gate = Arc::new(SyncGate::new(4));
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let gate = gate.clone();
+                std::thread::spawn(move || gate.wait().is_err())
+            })
+            .collect();
+        // Give the three waiters time to block (4th party never comes —
+        // it "panicked"), then abort as the panic handler would.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        gate.abort();
+        for w in waiters {
+            assert!(w.join().unwrap(), "waiter must observe the abort");
+        }
+        assert!(gate.wait().is_err(), "post-abort waits must fail immediately");
+    }
+
+    /// Deterministic abort-while-parked stress: round after round, a
+    /// waiter parks with no hope of a full quorum and the controller
+    /// aborts it. Every wait must resolve to `Err(GateAborted)` — no
+    /// round may wedge, whatever the park/abort interleaving was.
+    #[test]
+    fn abort_while_parked_stress_never_wedges() {
+        let rounds: usize = if cfg!(miri) { 8 } else { 200 };
+        for round in 0..rounds {
+            let gate = Arc::new(SyncGate::new(2));
+            let parked = {
+                let gate = gate.clone();
+                std::thread::spawn(move || gate.wait())
+            };
+            if round % 2 == 0 {
+                // Let the waiter actually park before aborting (best
+                // effort; aborting earlier is equally valid).
+                std::thread::yield_now();
+            }
+            gate.abort();
+            assert_eq!(parked.join().unwrap(), Err(GateAborted), "round {round}");
+            assert_eq!(gate.wait(), Err(GateAborted), "round {round}: abort must be sticky");
+        }
+    }
+
+    /// Normal rounds elect exactly one leader per round and reuse
+    /// cleanly across rounds.
+    #[test]
+    fn elects_one_leader_per_round() {
+        let rounds: usize = if cfg!(miri) { 4 } else { 10 };
+        let gate = Arc::new(SyncGate::new(3));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..3)
+            .map(|_| {
+                let (gate, leaders) = (gate.clone(), leaders.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..rounds {
+                        if gate.wait().unwrap() {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(leaders.load(Ordering::Relaxed), rounds, "one leader per round");
+    }
+
+    /// Generation wraparound: a gate whose counter starts just below
+    /// `u64::MAX` must run many rounds straight across the wrap with
+    /// exactly one leader per round and no wedged waiter. (Wrapping
+    /// equality is what the park loop relies on; this pins it.)
+    #[test]
+    fn generation_rollover_is_seamless() {
+        let rounds: usize = if cfg!(miri) { 8 } else { 100 };
+        // Start so the wrap lands mid-stress, not at the edges.
+        let gate = Arc::new(SyncGate::with_start_generation(3, u64::MAX - (rounds as u64) / 2));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..3)
+            .map(|_| {
+                let (gate, leaders) = (gate.clone(), leaders.clone());
+                std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        match gate.wait() {
+                            Ok(true) => {
+                                leaders.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(false) => {}
+                            Err(GateAborted) => panic!("spurious abort in round {r}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(leaders.load(Ordering::Relaxed), rounds, "one leader per wrapped round");
+    }
+
+    /// Degenerate single-party gate: every wait is its own leader.
+    #[test]
+    fn single_party_gate_is_a_no_op_barrier() {
+        let gate = SyncGate::new(1);
+        assert_eq!(gate.parties(), 1);
+        for _ in 0..3 {
+            assert_eq!(gate.wait(), Ok(true));
+        }
+        gate.abort();
+        assert_eq!(gate.wait(), Err(GateAborted));
+    }
+}

@@ -24,9 +24,25 @@
 //! than the window allows, so a producer that somehow outruns the epoch
 //! barrier parks in [`MailboxGrid::post`] instead of widening the
 //! window.
+//!
+//! **Verification.** Every primitive here comes from [`crate::sync`],
+//! so the ring compiles against loom's instrumented doubles under
+//! `--cfg loom`: `rust/tests/loom_shard.rs` model-checks push/pop
+//! delivery, wraparound reuse, full-ring refusal and the `len()`
+//! snapshot against every interleaving (and memory-model reordering)
+//! loom can produce. The in-module tests additionally run under Miri
+//! in CI, which checks the `UnsafeCell` accesses for aliasing and
+//! initialization errors the type system cannot see.
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+// AUDITED UNSAFE ALLOWLIST MEMBER (see docs/ARCHITECTURE.md
+// § Concurrency correctness): the SPSC slot accesses below are the
+// crate's only lock-free unsafe. Every unsafe operation carries a
+// `SAFETY:` comment (enforced by `cargo run -p xtask -- lint-safety`)
+// and the whole protocol is loom-model-checked.
+#![allow(unsafe_code)]
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::UnsafeCell;
 
 /// One spin flip, as exchanged between shards.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -41,17 +57,22 @@ pub struct Flip {
     pub step: u64,
 }
 
-/// Single-producer single-consumer ring of [`Flip`]s.
+/// Single-producer single-consumer Lamport ring.
 ///
-/// Safety contract (enforced by [`MailboxGrid`]'s indexing, not the
+/// Usage contract (enforced by [`MailboxGrid`]'s indexing, not the
 /// type system): exactly one thread calls [`try_push`](Self::try_push)
 /// and exactly one thread calls [`pop`](Self::pop) over the ring's
 /// lifetime. Distinct slots are only written by the producer while not
 /// visible to the consumer (tail not yet published) and only read by
 /// the consumer while not reusable by the producer (head not yet
 /// published), so the `UnsafeCell` accesses never race.
-pub struct FlipRing {
-    slots: Box<[UnsafeCell<Flip>]>,
+///
+/// The payload is constrained to `T: Copy` so a slot hand-off is a
+/// plain bitwise copy: no destructor can run twice when a slot is
+/// recycled and no partially-moved value can be observed. The shard
+/// engine instantiates it as [`FlipRing`].
+pub struct SpscRing<T> {
+    slots: Box<[UnsafeCell<T>]>,
     mask: usize,
     /// Next slot to read; owned by the consumer.
     head: AtomicUsize,
@@ -59,18 +80,46 @@ pub struct FlipRing {
     tail: AtomicUsize,
 }
 
-// SAFETY: see the struct-level contract — SPSC usage makes every
-// UnsafeCell access exclusive, and the atomics publish between the two
-// threads with release/acquire pairs.
-unsafe impl Send for FlipRing {}
-unsafe impl Sync for FlipRing {}
+/// The shard engine's ring of [`Flip`] messages.
+pub type FlipRing = SpscRing<Flip>;
 
-impl FlipRing {
+// SAFETY: moving a ring to another thread moves the payload values in
+// its slots with it, so `Send` needs `T: Send`; `T: Copy` guarantees
+// the slots hold plain bits with no drop obligations that could be
+// split across threads.
+unsafe impl<T: Copy + Send> Send for SpscRing<T> {}
+
+// SAFETY: `&SpscRing<T>` is shared between exactly one producer and
+// one consumer (the struct-level contract). Each slot is accessed
+// exclusively — the producer writes slot `i` only while `i` is outside
+// the published `[head, tail)` window, the consumer reads it only
+// while inside — and the release-store / acquire-load pairs on
+// `tail`/`head` order those accesses. Values cross threads by copy,
+// so `T: Send` (with `T: Copy`) is required and sufficient.
+unsafe impl<T: Copy + Send> Sync for SpscRing<T> {}
+
+impl<T: Copy + Default> SpscRing<T> {
     /// Ring with capacity `cap` rounded up to a power of two (min 2).
+    ///
+    /// The index arithmetic (`idx & mask`, wrapping monotone counters)
+    /// is only sound for power-of-two capacities, so the invariant is
+    /// asserted here at the single point of construction rather than
+    /// trusted throughout: `next_power_of_two` wraps to 0 in release
+    /// builds when `cap` exceeds the largest representable power of
+    /// two, and a zero capacity would turn `mask` into `usize::MAX`.
     pub fn new(cap: usize) -> Self {
         let cap = cap.max(2).next_power_of_two();
-        let slots = (0..cap).map(|_| UnsafeCell::new(Flip::default())).collect();
-        Self { slots, mask: cap - 1, head: AtomicUsize::new(0), tail: AtomicUsize::new(0) }
+        assert!(
+            cap.is_power_of_two() && cap >= 2,
+            "SpscRing capacity must round to a power of two >= 2 (overflowed?)"
+        );
+        let slots = (0..cap).map(|_| UnsafeCell::new(T::default())).collect();
+        Self {
+            slots,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
     }
 
     /// Slots in the ring.
@@ -78,43 +127,60 @@ impl FlipRing {
         self.mask + 1
     }
 
-    /// Producer side: append `flip`, or return `false` when full.
+    /// Producer side: append `value`, or return `false` when full.
     #[inline]
-    pub fn try_push(&self, flip: Flip) -> bool {
+    pub fn try_push(&self, value: T) -> bool {
         let tail = self.tail.load(Ordering::Relaxed); // producer-owned
         let head = self.head.load(Ordering::Acquire);
         if tail.wrapping_sub(head) == self.capacity() {
             return false;
         }
-        // SAFETY: slot `tail` is outside [head, tail) so the consumer
-        // cannot be reading it, and we are the only producer.
-        unsafe { *self.slots[tail & self.mask].get() = flip };
+        // SAFETY: slot `tail` is outside the published `[head, tail)`
+        // window so the consumer cannot be reading it (it only reads
+        // after observing our release-store of `tail`), and the SPSC
+        // contract makes us the only producer — the raw pointer is
+        // exclusive for the duration of the closure.
+        self.slots[tail & self.mask].with_mut(|slot| unsafe { *slot = value });
         self.tail.store(tail.wrapping_add(1), Ordering::Release);
         true
     }
 
-    /// Consumer side: take the oldest pending flip, if any.
+    /// Consumer side: take the oldest pending value, if any.
     #[inline]
-    pub fn pop(&self) -> Option<Flip> {
+    pub fn pop(&self) -> Option<T> {
         let head = self.head.load(Ordering::Relaxed); // consumer-owned
         let tail = self.tail.load(Ordering::Acquire);
         if head == tail {
             return None;
         }
-        // SAFETY: slot `head` is inside [head, tail): published by the
-        // producer's release-store of `tail`, not yet recycled.
-        let flip = unsafe { *self.slots[head & self.mask].get() };
+        // SAFETY: slot `head` is inside `[head, tail)`: the acquire
+        // load of `tail` synchronized with the producer's release
+        // store, so the slot write happens-before this read; the
+        // producer will not reuse the slot until it observes our
+        // release-store of the advanced `head`. `T: Copy`, so reading
+        // through the shared pointer duplicates plain bits.
+        let value = self.slots[head & self.mask].with(|slot| unsafe { *slot });
         self.head.store(head.wrapping_add(1), Ordering::Release);
-        Some(flip)
+        Some(value)
     }
 
-    /// Approximate backlog (exact when called from either endpoint's
-    /// thread between its own operations).
+    /// Backlog snapshot. Exact when called from the producer or the
+    /// consumer thread between that endpoint's own operations (the
+    /// loads then bracket a quiescent own-index); from any *other*
+    /// thread it is approximate — possibly stale, possibly counting
+    /// in-flight traffic — but never underflows: `head` is loaded
+    /// FIRST, so the `tail` value read afterwards is always `>=` it
+    /// (tail only grows, and `tail >= head` holds at every instant).
+    /// Loading in the opposite order could observe a `tail` older than
+    /// an advancing `head` and wrap the subtraction to a huge value —
+    /// the hazard this ordering exists to rule out.
     pub fn len(&self) -> usize {
-        self.tail.load(Ordering::Acquire).wrapping_sub(self.head.load(Ordering::Acquire))
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        tail.wrapping_sub(head)
     }
 
-    /// True when no flips are pending.
+    /// True when no values are pending.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -153,7 +219,7 @@ impl MailboxGrid {
             }
             let ring = &self.rings[from * self.shards + c];
             while !ring.try_push(flip) {
-                std::thread::yield_now();
+                crate::sync::yield_now();
             }
         }
     }
@@ -183,7 +249,7 @@ impl MailboxGrid {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -208,7 +274,9 @@ mod tests {
     #[test]
     fn ring_delivers_across_threads_in_order() {
         let r = Arc::new(FlipRing::new(8));
-        let total = 10_000u32;
+        // Miri executes this faithfully but ~2 orders of magnitude
+        // slower; a shorter stream checks the same protocol.
+        let total: u32 = if cfg!(miri) { 256 } else { 10_000 };
         let producer = {
             let r = r.clone();
             std::thread::spawn(move || {
@@ -230,6 +298,94 @@ mod tests {
         }
         producer.join().unwrap();
         assert!(r.is_empty());
+    }
+
+    /// Full-ring backpressure (the staleness backstop): a tiny ring
+    /// refuses pushes while full, resumes after a pop, and never loses
+    /// or duplicates a message under sustained producer pressure. The
+    /// deterministic single-threaded prefix pins the exact
+    /// full/refuse/resume sequence; the threaded suffix runs the same
+    /// protocol with real contention. Runs under Miri in CI; the loom
+    /// twin (`loom_ring_full_refusal_then_wraparound_reuse` in
+    /// `rust/tests/loom_shard.rs`) model-checks the interleavings this
+    /// test can only sample.
+    #[test]
+    fn full_ring_backpressure_refuses_then_resumes() {
+        let r = FlipRing::new(2);
+        assert_eq!(r.capacity(), 2);
+        // Deterministic: fill, refuse, drain one, resume, wrap.
+        assert!(r.try_push(Flip { j: 0, s_old: 1, step: 0 }));
+        assert!(r.try_push(Flip { j: 1, s_old: 1, step: 1 }));
+        assert!(!r.try_push(Flip { j: 2, s_old: 1, step: 2 }), "full ring must refuse");
+        assert_eq!(r.len(), 2, "consumer-side len is exact");
+        assert_eq!(r.pop().map(|f| f.j), Some(0));
+        assert!(r.try_push(Flip { j: 2, s_old: 1, step: 2 }), "one free slot after pop");
+        assert!(!r.try_push(Flip { j: 3, s_old: 1, step: 3 }), "full again");
+        assert_eq!(r.pop().map(|f| f.j), Some(1));
+        assert_eq!(r.pop().map(|f| f.j), Some(2));
+        assert!(r.pop().is_none());
+
+        // Contended: cap-2 ring, many messages — the producer MUST hit
+        // backpressure (it can never be more than 2 ahead) and every
+        // message must still arrive exactly once, in order.
+        let r = Arc::new(FlipRing::new(2));
+        let total: u32 = if cfg!(miri) { 64 } else { 4_096 };
+        let producer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                let mut refusals = 0u64;
+                for k in 0..total {
+                    while !r.try_push(Flip { j: k, s_old: -1, step: k as u64 }) {
+                        refusals += 1;
+                        std::thread::yield_now();
+                    }
+                }
+                refusals
+            })
+        };
+        let mut next = 0u32;
+        while next < total {
+            if let Some(f) = r.pop() {
+                assert_eq!(f.j, next, "lost, duplicated or reordered under backpressure");
+                next += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        let _refusals = producer.join().unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.len(), 0);
+    }
+
+    /// `len()` from a third-party observer thread never underflows
+    /// (the head-before-tail load order): concurrent traffic may make
+    /// it stale, but it can never wrap to a huge value.
+    #[test]
+    fn len_never_underflows_for_observers() {
+        let r = Arc::new(FlipRing::new(4));
+        let rounds: u32 = if cfg!(miri) { 64 } else { 20_000 };
+        let traffic = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for k in 0..rounds {
+                    while !r.try_push(Flip { j: k, s_old: 1, step: 0 }) {
+                        std::thread::yield_now();
+                    }
+                    while r.pop().is_none() {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        // Observer: under the old tail-then-head order this could see
+        // tail from before a pop and head from after it → wrap to
+        // ~usize::MAX. Bound it by a generous sanity ceiling.
+        while !traffic.is_finished() {
+            let len = r.len();
+            assert!(len <= 1024, "observer len() underflowed/wrapped: {len}");
+            std::thread::yield_now();
+        }
+        traffic.join().unwrap();
     }
 
     #[test]

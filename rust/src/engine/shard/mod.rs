@@ -46,12 +46,27 @@
 //! CSR / bit-plane row slices instead of forcing full recomputes), and
 //! with the legacy scan it stays the `Θ(N/S)` bulk refresh.
 //!
+//! **Concurrency verification.** The lock-free core of this module —
+//! the [`mailbox`] SPSC rings, the [`gate::SyncGate`] epoch barrier
+//! and the per-lane energy partials — is built on [`crate::sync`] and
+//! model-checked by loom (`rust/tests/loom_shard.rs`, run with
+//! `RUSTFLAGS="--cfg loom" cargo test --features loom --test
+//! loom_shard`); CI additionally runs the unit tests under Miri and
+//! the async parity tests under ThreadSanitizer. See
+//! `docs/ARCHITECTURE.md` § Concurrency correctness.
+//!
 //! [`SnowballEngine`]: super::SnowballEngine
 //! [`LaneKernel`]: super::lane::LaneKernel
 
+// `mailbox` and `affinity` are audited-unsafe allowlist members (see
+// docs/ARCHITECTURE.md § Concurrency correctness); `gate` is pure safe
+// code and stays forbidden like the rest of the crate.
 pub mod affinity;
+#[forbid(unsafe_code)]
+pub mod gate;
 pub mod mailbox;
 
+use self::gate::{GateAborted, SyncGate};
 use self::mailbox::{Flip, MailboxGrid};
 use super::lane::LaneKernel;
 use super::lut::{PwlLogistic, ONE_Q16};
@@ -59,8 +74,8 @@ use super::snowball::{EngineConfig, Mode, RunResult};
 use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, Partition, SpinVec};
 use crate::rng::{salt, StatelessRng};
-use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::{Condvar, Mutex};
+use crate::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
 
 /// Below this spin count sharding is never chosen automatically —
 /// replica-level parallelism already saturates the machine and the
@@ -553,73 +568,6 @@ impl<'m> ShardedEngine<'m> {
     }
 }
 
-/// An abortable S-party barrier for the epoch syncs.
-///
-/// `std::sync::Barrier` cannot be interrupted: if one lane dies, its
-/// siblings wait forever and the job wedges — exactly the failure mode
-/// the coordinator's panic path exists to prevent. This gate adds
-/// [`abort`](Self::abort): aborting wakes every current waiter and
-/// makes every future [`wait`](Self::wait) return `Err(GateAborted)`
-/// immediately, so surviving lanes unwind cleanly and the panic can be
-/// re-raised at the replica boundary.
-struct SyncGate {
-    parties: usize,
-    state: Mutex<GateState>,
-    cv: Condvar,
-}
-
-struct GateState {
-    arrived: usize,
-    generation: u64,
-    aborted: bool,
-}
-
-/// The gate was aborted — a sibling lane panicked.
-#[derive(Clone, Copy, Debug)]
-struct GateAborted;
-
-impl SyncGate {
-    fn new(parties: usize) -> Self {
-        Self {
-            parties: parties.max(1),
-            state: Mutex::new(GateState { arrived: 0, generation: 0, aborted: false }),
-            cv: Condvar::new(),
-        }
-    }
-
-    /// Block until all parties arrive; the LAST arriver is the leader
-    /// (`Ok(true)`). Returns `Err(GateAborted)` — immediately, or from
-    /// mid-wait — once [`abort`](Self::abort) has been called.
-    fn wait(&self) -> Result<bool, GateAborted> {
-        let mut st = self.state.lock().unwrap();
-        if st.aborted {
-            return Err(GateAborted);
-        }
-        let gen = st.generation;
-        st.arrived += 1;
-        if st.arrived == self.parties {
-            st.arrived = 0;
-            st.generation += 1;
-            self.cv.notify_all();
-            return Ok(true);
-        }
-        while st.generation == gen && !st.aborted {
-            st = self.cv.wait(st).unwrap();
-        }
-        if st.aborted {
-            Err(GateAborted)
-        } else {
-            Ok(false)
-        }
-    }
-
-    /// Wake every waiter and fail all future waits.
-    fn abort(&self) {
-        self.state.lock().unwrap().aborted = true;
-        self.cv.notify_all();
-    }
-}
-
 /// Best/final energy bookkeeping, written only by the barrier leader.
 struct EnergyTracker {
     best_energy: i64,
@@ -896,7 +844,7 @@ fn flip_across_lanes(
     de
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::engine::{Datapath, Schedule, SelectorKind, SnowballEngine};
@@ -1073,51 +1021,6 @@ mod tests {
         assert!(p.shards <= 4096 / MIN_SPINS_PER_SHARD, "{p:?}");
         // Degenerate inputs.
         assert_eq!(plan_parallelism(0, 0, 0), ParallelismPlan { replica_workers: 1, shards: 1 });
-    }
-
-    /// A sibling-lane panic must not wedge the survivors: aborting the
-    /// gate wakes every current waiter and fails every future wait.
-    #[test]
-    fn sync_gate_abort_releases_all_waiters() {
-        let gate = std::sync::Arc::new(SyncGate::new(4));
-        let waiters: Vec<_> = (0..3)
-            .map(|_| {
-                let gate = gate.clone();
-                std::thread::spawn(move || gate.wait().is_err())
-            })
-            .collect();
-        // Give the three waiters time to block (4th party never comes —
-        // it "panicked"), then abort as the panic handler would.
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        gate.abort();
-        for w in waiters {
-            assert!(w.join().unwrap(), "waiter must observe the abort");
-        }
-        assert!(gate.wait().is_err(), "post-abort waits must fail immediately");
-    }
-
-    /// Normal rounds elect exactly one leader per round and reuse
-    /// cleanly across rounds.
-    #[test]
-    fn sync_gate_elects_one_leader_per_round() {
-        let gate = std::sync::Arc::new(SyncGate::new(3));
-        let leaders = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let threads: Vec<_> = (0..3)
-            .map(|_| {
-                let (gate, leaders) = (gate.clone(), leaders.clone());
-                std::thread::spawn(move || {
-                    for _ in 0..10 {
-                        if gate.wait().unwrap() {
-                            leaders.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                })
-            })
-            .collect();
-        for t in threads {
-            t.join().unwrap();
-        }
-        assert_eq!(leaders.load(Ordering::Relaxed), 10, "one leader per round");
     }
 
     #[test]

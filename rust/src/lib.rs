@@ -17,19 +17,54 @@
 //!   dispatch over the shared replica pool, metrics, TCP service
 //!   (`docs/ARCHITECTURE.md`, `docs/PROTOCOL.md`).
 //! * [`harness`] — regeneration of every paper table and figure.
+//! * [`sync`] — the concurrency shim: `std::sync` in normal builds,
+//!   loom's instrumented primitives under `--cfg loom`, so the shard
+//!   engine's synchronization is model-checkable
+//!   (`docs/ARCHITECTURE.md` § Concurrency correctness).
+//!
+//! ## Unsafe-code policy
+//!
+//! `unsafe` is **denied crate-wide** and re-forbidden on every module
+//! below except the four audited allowlist members ([`sync`],
+//! `engine::lut`, `engine::shard::mailbox`, `engine::shard::affinity`),
+//! which opt back in with a file-local `#![allow(unsafe_code)]` plus an
+//! audit header. Every unsafe operation in those files must carry a
+//! `SAFETY:` comment — enforced by `cargo run -p xtask -- lint-safety`
+//! in CI, alongside the loom, Miri and ThreadSanitizer lanes.
 
+// deny (not forbid) at the crate root so the audited allowlist modules
+// can locally `#![allow(unsafe_code)]`; everything else is re-escalated
+// to forbid on its `mod` item, which no inner allow can override.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
+#[forbid(unsafe_code)]
 pub mod baselines;
+#[forbid(unsafe_code)]
 pub mod bitplane;
+#[forbid(unsafe_code)]
 pub mod cli;
+#[forbid(unsafe_code)]
 pub mod config;
+#[forbid(unsafe_code)]
 pub mod coordinator;
 pub mod engine;
+#[forbid(unsafe_code)]
 pub mod graph;
+#[forbid(unsafe_code)]
 pub mod harness;
+#[forbid(unsafe_code)]
 pub mod hwsim;
+#[forbid(unsafe_code)]
 pub mod ising;
+#[forbid(unsafe_code)]
 pub mod problems;
+#[forbid(unsafe_code)]
 pub mod rng;
+#[forbid(unsafe_code)]
 pub mod runtime;
+pub mod sync;
+#[forbid(unsafe_code)]
 pub mod testutil;
+#[forbid(unsafe_code)]
 pub mod tts;

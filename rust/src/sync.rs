@@ -1,0 +1,159 @@
+//! Concurrency shim: `std::sync` primitives in normal builds, `loom`'s
+//! model-checked doubles under `RUSTFLAGS="--cfg loom"`.
+//!
+//! The asynchronous shard engine rests on hand-rolled lock-free code —
+//! the `FlipRing` SPSC mailboxes, the abortable `SyncGate` epoch
+//! barrier, the per-lane energy partials. Races in that code do not
+//! crash an Ising machine; they silently degrade solution quality,
+//! which is the worst possible failure mode for a solver whose claims
+//! are statistical. So the memory-model contract is machine-checked:
+//! every type that participates in cross-thread publication imports its
+//! primitives from THIS module, and the loom permutation tests
+//! (`rust/tests/loom_shard.rs`) recompile the crate with
+//! `--cfg loom` + `--features loom` to run those types through loom's
+//! exhaustive interleaving explorer (C11-memory-model aware: it tries
+//! the reorderings a relaxed architecture is allowed to perform, not
+//! just the ones one test machine happens to exhibit).
+//!
+//! Build matrix:
+//!
+//! * default build — everything here is a zero-cost re-export of
+//!   `std::sync` (plus a thin `UnsafeCell` wrapper, see below), so the
+//!   production binary is byte-for-byte what it was before the shim.
+//! * `RUSTFLAGS="--cfg loom" cargo test --features loom --test
+//!   loom_shard` — the same paths resolve to `loom`'s instrumented
+//!   doubles and the model tests run. The `loom` cargo feature gates
+//!   the optional `loom` dependency; the `--cfg` flag swaps the types.
+//!   Setting the cfg without the feature is a compile error (below)
+//!   rather than a pile of unresolved imports.
+//!
+//! The `UnsafeCell` here is a wrapper, not a re-export: loom's cell
+//! exposes closure-based `with`/`with_mut` accessors (so the model can
+//! track every access), and the std version mirrors that API over
+//! `std::cell::UnsafeCell`. Code written against the closure API is
+//! therefore checkable for free — which is exactly why `clippy.toml`
+//! bans `std::cell::UnsafeCell` everywhere else in the tree.
+//!
+//! Policy (enforced by `cargo run -p xtask -- lint-safety` in CI, see
+//! `docs/ARCHITECTURE.md` § Concurrency correctness): the literal path
+//! `std::sync::atomic` may appear only in this file and in the audited
+//! allowlist; `Ordering::SeqCst` is banned outright (if a new algorithm
+//! seems to need it, it needs a loom model first); `Ordering::Relaxed`
+//! is restricted to audited files whose relaxed operations are
+//! single-owner index reads or commutative counter updates.
+
+// AUDITED UNSAFE ALLOWLIST MEMBER (see docs/ARCHITECTURE.md
+// § Concurrency correctness). The only unsafe here is in the in-module
+// tests, dereferencing the raw pointers the closure API hands out —
+// the same obligation every production caller of `with`/`with_mut`
+// documents with its own `SAFETY:` comment.
+#![allow(unsafe_code)]
+
+#[cfg(all(loom, not(feature = "loom")))]
+compile_error!(
+    "`--cfg loom` requires the `loom` cargo feature: \
+     RUSTFLAGS=\"--cfg loom\" cargo test --features loom --test loom_shard"
+);
+
+/// Atomic integers and [`atomic::Ordering`], model-checked under loom.
+#[cfg(not(loom))]
+pub mod atomic {
+    #[allow(clippy::disallowed_types)] // the one sanctioned re-export point
+    pub use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Atomic integers and [`atomic::Ordering`], model-checked under loom.
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex};
+
+/// Yield the current thread's timeslice. In loom models this is the
+/// scheduler hint that lets bounded spin loops (mailbox backpressure)
+/// terminate instead of exploding the state space.
+#[cfg(not(loom))]
+pub fn yield_now() {
+    std::thread::yield_now();
+}
+
+/// Yield the current thread's timeslice (loom-instrumented).
+#[cfg(loom)]
+pub fn yield_now() {
+    loom::thread::yield_now();
+}
+
+/// Interior-mutability cell with loom's closure-based access API.
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;
+
+/// Interior-mutability cell with loom's closure-based access API.
+///
+/// The std flavour: a transparent wrapper over
+/// [`std::cell::UnsafeCell`] exposing `with`/`with_mut` so the same
+/// call sites compile against loom's instrumented cell under
+/// `--cfg loom`. The closures receive raw pointers; dereferencing them
+/// is still `unsafe` and still the caller's obligation — the wrapper
+/// only fixes the *shape* of the access so the model checker can see
+/// every read and write.
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(
+    #[allow(clippy::disallowed_types)] // the wrapper IS the sanctioned use
+    std::cell::UnsafeCell<T>,
+);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    /// Wrap `data`.
+    pub fn new(data: T) -> UnsafeCell<T> {
+        #[allow(clippy::disallowed_types)]
+        UnsafeCell(std::cell::UnsafeCell::new(data))
+    }
+
+    /// Run `f` with a shared raw pointer to the contents.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Run `f` with an exclusive raw pointer to the contents.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// The std wrapper must behave like a plain cell through the
+    /// closure API (this is what Miri exercises for aliasing hygiene).
+    #[test]
+    fn unsafe_cell_with_and_with_mut_round_trip() {
+        let cell = UnsafeCell::new(41u64);
+        // SAFETY: single-threaded test — no concurrent access to the
+        // cell exists while either raw pointer is live.
+        let read = cell.with(|p| unsafe { *p });
+        assert_eq!(read, 41);
+        // SAFETY: as above; the exclusive pointer is the only live one.
+        cell.with_mut(|p| unsafe { *p += 1 });
+        // SAFETY: as above.
+        assert_eq!(cell.with(|p| unsafe { *p }), 42);
+    }
+
+    #[test]
+    fn atomics_and_locks_are_std_in_normal_builds() {
+        let a = atomic::AtomicUsize::new(7);
+        a.store(9, atomic::Ordering::Release);
+        assert_eq!(a.load(atomic::Ordering::Acquire), 9);
+        let m = Mutex::new(3i32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 4);
+        yield_now(); // must not panic outside a loom model
+    }
+}

@@ -1,0 +1,323 @@
+//! `cargo run -p xtask -- lint-safety` — the repo's unsafe-code and
+//! atomics policy gate (CI job `lint-safety`; policy rationale in
+//! `docs/ARCHITECTURE.md` § Concurrency correctness).
+//!
+//! The compiler already enforces the hard boundary (`#![deny(unsafe_code)]`
+//! at the crate root, re-escalated to `forbid` on every non-audited
+//! module). This scanner enforces what lints cannot express:
+//!
+//! * **R1** — `unsafe` (and `allow(unsafe_code)`) may appear only in the
+//!   four audited allowlist files. Growing the allowlist is a reviewed
+//!   decision: it requires editing this file.
+//! * **R2** — inside allowlisted files, every `unsafe` operation must
+//!   carry a `SAFETY:` comment (or a `# Safety` doc section for
+//!   `unsafe fn`) within the preceding lines.
+//! * **R3** — `Ordering::SeqCst` is banned everywhere. SeqCst is how
+//!   lock-free code hides a fence it cannot explain; an algorithm that
+//!   seems to need it needs a loom model first.
+//! * **R4** — the literal path `std::sync::atomic` may appear only in
+//!   `src/sync.rs` (the shim itself) and `src/coordinator/metrics.rs`
+//!   (documented exception: `or_default()` needs `Default`, which
+//!   loom's doubles don't implement). Everything else must import from
+//!   `crate::sync::atomic` so it stays loom-checkable.
+//! * **R5** — `Ordering::Relaxed` is restricted to audited files whose
+//!   relaxed operations are single-owner index reads or commutative
+//!   counter updates; new code gets Acquire/Release until a loom model
+//!   argues otherwise.
+//!
+//! The checks are textual by design: zero dependencies, no syn/AST, so
+//! the gate runs in CI before (and regardless of) any full build. The
+//! scanner reads `rust/{src,tests,benches,examples}` only — its own
+//! source (which must spell the banned tokens) is not scanned.
+
+#![forbid(unsafe_code)]
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files allowed to contain `unsafe` (with per-operation `SAFETY:`
+/// comments — rule R2). Paths relative to `rust/`.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "src/sync.rs",
+    "src/engine/lut.rs",
+    "src/engine/shard/affinity.rs",
+    "src/engine/shard/mailbox.rs",
+];
+
+/// Files allowed to name the literal path `std::sync::atomic` (rule R4).
+const STD_ATOMIC_ALLOWLIST: &[&str] = &["src/sync.rs", "src/coordinator/metrics.rs"];
+
+/// Files allowed to use `Ordering::Relaxed` (rule R5).
+const RELAXED_ALLOWLIST: &[&str] = &[
+    "src/sync.rs",
+    "src/engine/shard/gate.rs",
+    "src/engine/shard/mailbox.rs",
+    "src/engine/shard/mod.rs",
+    "src/coordinator/metrics.rs",
+    "src/coordinator/mod.rs",
+    "src/coordinator/scheduler.rs",
+];
+
+/// How far back (in lines) a `SAFETY:` / `# Safety` marker may sit from
+/// the unsafe operation it justifies. Generous enough for a doc-comment
+/// `# Safety` section above an `unsafe fn`'s attributes.
+const SAFETY_WINDOW: usize = 10;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint-safety") => lint_safety(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint-safety");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint_safety() -> ExitCode {
+    // CARGO_MANIFEST_DIR = <repo>/xtask, the crate root lives beside it.
+    let rust_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust");
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches", "examples"] {
+        collect_rs_files(&rust_root.join(sub), &mut files);
+    }
+    files.sort();
+    if files.is_empty() {
+        eprintln!("lint-safety: no .rs files found under {}", rust_root.display());
+        return ExitCode::from(2);
+    }
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&rust_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("lint-safety: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        check_file(&rel, &text, &mut violations);
+    }
+    if violations.is_empty() {
+        println!("lint-safety: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("lint-safety: {v}");
+        }
+        eprintln!("lint-safety: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return; // `examples/` etc. may legitimately not exist
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Run every rule against one file, appending human-readable violations.
+fn check_file(rel: &str, text: &str, violations: &mut Vec<String>) {
+    let unsafe_ok = UNSAFE_ALLOWLIST.contains(&rel);
+    let std_atomic_ok = STD_ATOMIC_ALLOWLIST.contains(&rel);
+    let relaxed_ok = RELAXED_ALLOWLIST.contains(&rel);
+    let lines: Vec<&str> = text.lines().collect();
+    for (idx, raw) in lines.iter().enumerate() {
+        let n = idx + 1;
+        if is_comment(raw) {
+            continue;
+        }
+        if is_attribute(raw) {
+            // R1b: an attribute re-allowing unsafe outside the audited
+            // set is exactly the bypass this gate exists to catch.
+            if !unsafe_ok && raw.contains("allow(unsafe_code)") {
+                violations.push(format!(
+                    "{rel}:{n}: allow(unsafe_code) outside the audited allowlist \
+                     (R1; the list lives in xtask/src/main.rs)"
+                ));
+            }
+            continue;
+        }
+        let code = strip_trailing_comment(raw);
+        if has_word(code, "unsafe") {
+            if !unsafe_ok {
+                violations.push(format!(
+                    "{rel}:{n}: `unsafe` outside the audited allowlist \
+                     (R1; the list lives in xtask/src/main.rs)"
+                ));
+            } else if !safety_marker_near(&lines, idx) {
+                violations.push(format!(
+                    "{rel}:{n}: unsafe operation without a `SAFETY:` comment \
+                     within the preceding {SAFETY_WINDOW} lines (R2)"
+                ));
+            }
+        }
+        if has_word(code, "SeqCst") {
+            violations.push(format!(
+                "{rel}:{n}: Ordering::SeqCst is banned — justify the exact \
+                 Acquire/Release pairing, with a loom model if novel (R3)"
+            ));
+        }
+        if code.contains("std::sync::atomic") && !std_atomic_ok {
+            violations.push(format!(
+                "{rel}:{n}: literal std::sync::atomic — import from \
+                 crate::sync::atomic so the code stays loom-checkable (R4)"
+            ));
+        }
+        if code.contains("Ordering::Relaxed") && !relaxed_ok {
+            violations.push(format!(
+                "{rel}:{n}: Ordering::Relaxed outside the audited relaxed \
+                 allowlist — start from Acquire/Release (R5)"
+            ));
+        }
+    }
+}
+
+/// Is there a `SAFETY:` / `# Safety` marker on this line or within the
+/// preceding window? (The same-line case covers `unsafe { ... } // SAFETY:`,
+/// which rustfmt sometimes produces for short expressions.)
+fn safety_marker_near(lines: &[&str], idx: usize) -> bool {
+    let lo = idx.saturating_sub(SAFETY_WINDOW);
+    lines[lo..=idx]
+        .iter()
+        .any(|l| l.contains("SAFETY:") || l.contains("# Safety"))
+}
+
+/// Line is entirely a comment (`//`, `///`, `//!`).
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Line is an attribute (`#[...]` / `#![...]`). One-line attributes
+/// only — which is all rustfmt emits for the lint attributes we police.
+fn is_attribute(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// Drop a trailing `//` comment so prose there can mention the policed
+/// tokens. Naive about `//` inside string literals, which is fine for a
+/// linter that only ever produces false *positives* loud enough to read.
+fn strip_trailing_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}
+
+/// `word` appears in `s` delimited by non-identifier characters — so
+/// `unsafe` does not match `unsafe_code` and `SeqCst` does not match a
+/// hypothetical `SeqCstLike` identifier.
+fn has_word(s: &str, word: &str) -> bool {
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut start = 0;
+    while let Some(pos) = s[start..].find(word) {
+        let at = start + pos;
+        let before_ok = s[..at].chars().next_back().is_none_or(|c| !is_ident(c));
+        let after_ok = s[at + word.len()..].chars().next().is_none_or(|c| !is_ident(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_matching_respects_identifier_boundaries() {
+        assert!(has_word("let x = unsafe { *p };", "unsafe"));
+        assert!(has_word("unsafe impl Send for T {}", "unsafe"));
+        assert!(!has_word("#![deny(unsafe_code)]", "unsafe"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(has_word("a.load(Ordering::SeqCst)", "SeqCst"));
+        assert!(!has_word("SeqCstLike::thing()", "SeqCst"));
+    }
+
+    #[test]
+    fn comment_and_attribute_lines_are_classified() {
+        assert!(is_comment("  // unsafe is discussed here"));
+        assert!(is_comment("//! module docs mention SeqCst"));
+        assert!(is_attribute("#[forbid(unsafe_code)]"));
+        assert!(is_attribute("    #![allow(unsafe_code)]"));
+        assert!(!is_attribute("let x = 1; // #[not_an_attr]"));
+        assert_eq!(strip_trailing_comment("foo(); // SeqCst prose"), "foo(); ");
+    }
+
+    fn run(rel: &str, text: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_file(rel, text, &mut v);
+        v
+    }
+
+    #[test]
+    fn r1_flags_unsafe_outside_allowlist_only() {
+        let v = run("src/engine/pool.rs", "fn f() { unsafe { danger() } }\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R1"));
+        // Same code in an allowlisted file trips R2 instead (no SAFETY).
+        let v = run("src/engine/lut.rs", "fn f() { unsafe { danger() } }\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R2"));
+    }
+
+    #[test]
+    fn r1_flags_sneaky_allow_attribute() {
+        let v = run("src/graph.rs", "#![allow(unsafe_code)]\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R1"));
+        // The audited files may allow — that is the whole mechanism.
+        assert!(run("src/sync.rs", "#![allow(unsafe_code)]\n").is_empty());
+    }
+
+    #[test]
+    fn r2_accepts_nearby_safety_comment_and_doc_section() {
+        let ok = "// SAFETY: p is valid for the closure's lifetime.\n\
+                  let v = cell.with(|p| unsafe { *p });\n";
+        assert!(run("src/engine/shard/mailbox.rs", ok).is_empty());
+        let doc = "/// # Safety\n/// Caller checked AVX2.\n\
+                   #[target_feature(enable = \"avx2\")]\nunsafe fn kernel() {}\n";
+        assert!(run("src/engine/lut.rs", doc).is_empty());
+        let gap = "\n".repeat(SAFETY_WINDOW + 1);
+        let far = format!("// SAFETY: too far away.\n{gap}unsafe fn f() {{}}\n");
+        assert_eq!(run("src/engine/lut.rs", &far).len(), 1);
+    }
+
+    #[test]
+    fn r3_bans_seqcst_in_code_but_not_prose() {
+        let v = run("src/engine/select.rs", "a.load(Ordering::SeqCst);\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R3"));
+        assert!(run("src/engine/select.rs", "// SeqCst is banned, see xtask\n").is_empty());
+        // Banned even in the unsafe/relaxed allowlists — no file may use it.
+        assert_eq!(run("src/sync.rs", "a.load(Ordering::SeqCst);\n").len(), 1);
+    }
+
+    #[test]
+    fn r4_and_r5_respect_their_allowlists() {
+        let v = run("src/engine/pool.rs", "use std::sync::atomic::AtomicU64;\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R4"));
+        let metrics = "use std::sync::atomic::AtomicU64;\n";
+        assert!(run("src/coordinator/metrics.rs", metrics).is_empty());
+        let v = run("src/engine/pool.rs", "a.load(Ordering::Relaxed);\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("R5"));
+        assert!(run("src/engine/shard/gate.rs", "a.load(Ordering::Relaxed);\n").is_empty());
+    }
+}
