@@ -68,6 +68,8 @@ fn main() -> anyhow::Result<()> {
             target_energy: Some(target_energy),
             shards: 1,
             pin_lanes: false,
+            budget_ms: 0,
+            max_retries: 0,
             backend: Backend::Native,
         });
         let result = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;

@@ -1,0 +1,202 @@
+//! The deadline wheel: one background timer thread that trips job
+//! [`StopToken`]s when their `budget_ms` deadlines (or the shutdown
+//! grace period) elapse.
+//!
+//! A min-heap of `(when, token, cause)` entries, drained by the
+//! dedicated "snowball-deadline" thread the coordinator spawns at
+//! startup. The thread sleeps exactly until the earliest pending
+//! deadline (condvar with timeout, re-woken on every
+//! [`schedule`](DeadlineWheel::schedule)), trips everything due, and
+//! parks again — no polling interval, so deadline latency is bounded
+//! by OS scheduling, not a tick.
+//!
+//! Cancellation is **lazy**: entries for jobs that finished early are
+//! left in the heap and simply trip a token nobody reads anymore —
+//! [`StopToken::trip`] on a job that already reached a terminal state
+//! is a no-op by construction (first-cause-wins, and the replicas that
+//! would observe it are gone). This keeps the hot path (`schedule`,
+//! job completion) free of heap surgery.
+
+use crate::stop::{StopCause, StopToken};
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One pending deadline.
+struct Entry {
+    when: Instant,
+    /// Tie-break so the heap order is total without comparing tokens.
+    seq: u64,
+    cause: StopCause,
+    token: Arc<StopToken>,
+}
+
+// `BinaryHeap` is a max-heap; reverse the comparison so the EARLIEST
+// deadline surfaces at the top. Only `when`/`seq` participate —
+// tokens are payload, not identity.
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.when == other.when && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.when.cmp(&self.when).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct WheelState {
+    heap: BinaryHeap<Entry>,
+    closed: bool,
+    next_seq: u64,
+}
+
+/// See the module docs.
+pub struct DeadlineWheel {
+    state: Mutex<WheelState>,
+    cv: Condvar,
+}
+
+impl DeadlineWheel {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(WheelState { heap: BinaryHeap::new(), closed: false, next_seq: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arrange for `token` to be tripped with `cause` at `when`.
+    /// Past-due instants trip on the wheel thread's next pass
+    /// (immediately — scheduling always wakes it).
+    pub fn schedule(&self, when: Instant, cause: StopCause, token: Arc<StopToken>) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            // Wheel thread gone (coordinator shut down): honor the
+            // contract inline so no deadline is silently dropped.
+            drop(st);
+            token.trip(cause);
+            return;
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { when, seq, cause, token });
+        self.cv.notify_one();
+    }
+
+    /// Stop the wheel thread. Entries still pending trip immediately
+    /// (a shutdown must not leave replicas waiting on a deadline that
+    /// will never fire).
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        for e in st.heap.drain() {
+            e.token.trip(e.cause);
+        }
+        self.cv.notify_all();
+    }
+
+    /// The wheel thread body: trip everything due, sleep until the
+    /// next deadline (or forever, until a `schedule`/`close` wakes us).
+    pub fn run(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return;
+            }
+            let now = Instant::now();
+            while st.heap.peek().is_some_and(|e| e.when <= now) {
+                let e = st.heap.pop().unwrap();
+                e.token.trip(e.cause);
+            }
+            match st.heap.peek().map(|e| e.when) {
+                Some(when) => {
+                    let timeout = when.saturating_duration_since(now);
+                    let (guard, _) = self.cv.wait_timeout(st, timeout).unwrap();
+                    st = guard;
+                }
+                None => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+impl Default for DeadlineWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn spawn_wheel() -> (Arc<DeadlineWheel>, std::thread::JoinHandle<()>) {
+        let wheel = Arc::new(DeadlineWheel::new());
+        let body = wheel.clone();
+        let h = std::thread::spawn(move || body.run());
+        (wheel, h)
+    }
+
+    #[test]
+    fn due_entries_trip_in_deadline_order() {
+        let (wheel, h) = spawn_wheel();
+        let (a, b) = (Arc::new(StopToken::new()), Arc::new(StopToken::new()));
+        let now = Instant::now();
+        // Scheduled out of order; the later one must not gate the earlier.
+        wheel.schedule(now + Duration::from_millis(40), StopCause::Deadline, b.clone());
+        wheel.schedule(now + Duration::from_millis(5), StopCause::Deadline, a.clone());
+        let t0 = Instant::now();
+        while a.get().is_none() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(a.get(), Some(StopCause::Deadline));
+        while b.get().is_none() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.get(), Some(StopCause::Deadline));
+        wheel.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn lazy_cancellation_is_harmless_and_past_due_fires() {
+        let (wheel, h) = spawn_wheel();
+        // A token whose job "already finished": tripping it later must
+        // not disturb anything (first-cause-wins keeps the label).
+        let done = Arc::new(StopToken::new());
+        done.trip(StopCause::Cancel);
+        wheel.schedule(Instant::now() + Duration::from_millis(1), StopCause::Deadline, done.clone());
+        // A deadline already in the past fires on the next pass.
+        let late = Arc::new(StopToken::new());
+        wheel.schedule(Instant::now(), StopCause::Deadline, late.clone());
+        let t0 = Instant::now();
+        while late.get().is_none() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(late.get(), Some(StopCause::Deadline));
+        assert_eq!(done.get(), Some(StopCause::Cancel), "lazy entry must not relabel");
+        wheel.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn close_trips_pending_and_stops_the_thread() {
+        let (wheel, h) = spawn_wheel();
+        let far = Arc::new(StopToken::new());
+        wheel.schedule(Instant::now() + Duration::from_secs(3600), StopCause::Shutdown, far.clone());
+        wheel.close();
+        h.join().unwrap(); // must return promptly despite the 1h entry
+        assert_eq!(far.get(), Some(StopCause::Shutdown), "close must not drop deadlines");
+        // Post-close schedules trip inline.
+        let after = Arc::new(StopToken::new());
+        wheel.schedule(Instant::now() + Duration::from_secs(3600), StopCause::Deadline, after.clone());
+        assert_eq!(after.get(), Some(StopCause::Deadline));
+    }
+}

@@ -43,6 +43,18 @@ pub struct JobSpec {
     /// replicas only; Linux `sched_setaffinity`, no-op elsewhere — see
     /// [`crate::engine::shard::affinity`]).
     pub pin_lanes: bool,
+    /// Wall-clock budget in milliseconds (`0` = none). When it elapses
+    /// the coordinator's deadline wheel trips the job's stop token; the
+    /// replicas return their best-so-far incumbents and the job lands
+    /// in [`JobState::TimedOut`] with a partial [`JobResult`]
+    /// (`completed == false`).
+    pub budget_ms: u64,
+    /// How many times a panicking replica is retried (`0` = fail the
+    /// job on the first panic, the legacy behaviour). Retries resume
+    /// from the replica's last journaled checkpoint with exponential
+    /// backoff and are bit-identical to an uninterrupted run — see
+    /// docs/ARCHITECTURE.md § Job lifecycle & fault tolerance.
+    pub max_retries: u32,
     /// Execution backend for this job.
     pub backend: Backend,
 }
@@ -72,6 +84,11 @@ pub struct JobResult {
     pub label: String,
     pub replicas: Vec<ReplicaResult>,
     pub wall: std::time::Duration,
+    /// `true` when every replica ran its full step budget; `false` for
+    /// a preempted job (cancel / deadline / shutdown), whose replica
+    /// results are the best-so-far incumbents at preemption time. A
+    /// cancelled job preempted before dispatch has `replicas` empty.
+    pub completed: bool,
 }
 
 impl JobResult {
@@ -98,10 +115,30 @@ impl JobResult {
 }
 
 /// Lifecycle of a submitted job.
+///
+/// Legal transitions (pinned by `rust/tests/properties.rs`):
+/// `Queued → Running → {Done, Failed, Cancelled, TimedOut}`, plus the
+/// pre-dispatch shortcut `Queued → {Cancelled, TimedOut}` for jobs
+/// preempted while still in the admission queue. Terminal states never
+/// change again.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum JobState {
     Queued,
     Running,
     Done,
     Failed(String),
+    /// Preempted by `Coordinator::cancel` / protocol `CANCEL`, or by a
+    /// graceful shutdown after `shutdown_grace_ms`. A partial
+    /// [`JobResult`] (`completed == false`) is still published.
+    Cancelled,
+    /// Preempted by the job's own `budget_ms` deadline; partial
+    /// [`JobResult`] published like [`JobState::Cancelled`].
+    TimedOut,
+}
+
+impl JobState {
+    /// Terminal states never transition again.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
 }

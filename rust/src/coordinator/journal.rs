@@ -1,0 +1,137 @@
+//! Per-job fault-tolerance state: the checkpoint journal and the
+//! control block ([`JobCtl`]) the coordinator threads through the
+//! scheduler into every replica.
+//!
+//! Replicas running the single-lane engine snapshot an
+//! [`EngineCheckpoint`] into their job's [`JobJournal`] every
+//! checkpoint stride. When a replica panics (a real fault or an
+//! injected one — see [`crate::failpoint`]) and the job allows
+//! retries, the scheduler re-runs the replica **resuming from the last
+//! journaled checkpoint**; because the engine's RNG is stateless
+//! (addressed by `(seed, step, salt)`, never by call order) the
+//! resumed run is bit-identical to an uninterrupted one — pinned by
+//! `checkpoint_resume_is_bit_identical` in the engine and the
+//! chaos-suite determinism test.
+//!
+//! Everything here is in-memory and job-scoped: the journal dies with
+//! the job, which is exactly the durability the retry path needs (a
+//! coordinator crash loses the jobs themselves anyway).
+
+use crate::engine::EngineCheckpoint;
+use crate::stop::StopToken;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// In-memory checkpoint store for one job: the latest
+/// [`EngineCheckpoint`] per replica, plus the retry count the metrics
+/// report as `jobs_retried`.
+#[derive(Default)]
+pub struct JobJournal {
+    slots: Mutex<HashMap<u32, EngineCheckpoint>>,
+    retries: Mutex<u64>,
+}
+
+impl JobJournal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `ck` as replica `replica`'s latest checkpoint (replacing
+    /// any earlier one — retries only ever resume from the newest).
+    pub fn record(&self, replica: u32, ck: EngineCheckpoint) {
+        self.slots.lock().unwrap().insert(replica, ck);
+    }
+
+    /// The replica's latest checkpoint, if it ever recorded one.
+    pub fn checkpoint(&self, replica: u32) -> Option<EngineCheckpoint> {
+        self.slots.lock().unwrap().get(&replica).cloned()
+    }
+
+    /// Count one replica retry (any replica; the metric is per job).
+    pub fn note_retry(&self) {
+        *self.retries.lock().unwrap() += 1;
+    }
+
+    /// Total replica retries this job performed.
+    pub fn retries(&self) -> u64 {
+        *self.retries.lock().unwrap()
+    }
+}
+
+/// The per-job control block: one stop token (cancel / deadline /
+/// shutdown all trip it), one checkpoint journal, and the job's retry
+/// and deadline policy. Cheap to clone — everything shared is behind
+/// an `Arc`.
+#[derive(Clone)]
+pub struct JobCtl {
+    /// The job's shared preemption signal.
+    pub stop: Arc<StopToken>,
+    /// The job's checkpoint journal (retry resume source).
+    pub journal: Arc<JobJournal>,
+    /// Panicking replicas are re-run up to this many times.
+    pub max_retries: u32,
+    /// Absolute deadline derived from `JobSpec.budget_ms` at submit
+    /// time (`None` = no budget). The wheel trips `stop` at this
+    /// instant; the terminal path measures `deadline_slack_us` from it.
+    pub deadline: Option<Instant>,
+}
+
+impl JobCtl {
+    /// A control block for callers outside the coordinator lifecycle
+    /// (direct scheduler users, benches, tests): never preempted,
+    /// never retried, journal unused.
+    pub fn unmanaged() -> Self {
+        Self {
+            stop: Arc::new(StopToken::new()),
+            journal: Arc::new(JobJournal::new()),
+            max_retries: 0,
+            deadline: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::SpinVec;
+
+    fn ck(step: u64) -> EngineCheckpoint {
+        EngineCheckpoint {
+            seed: 7,
+            step,
+            spins: SpinVec::all_up(4),
+            energy: -1,
+            best_energy: -2,
+            best_step: 1,
+            best_spins: SpinVec::all_up(4),
+            flips: 3,
+            fallbacks: 0,
+            nulls: 0,
+        }
+    }
+
+    #[test]
+    fn journal_keeps_latest_checkpoint_per_replica() {
+        let j = JobJournal::new();
+        assert!(j.checkpoint(0).is_none());
+        j.record(0, ck(100));
+        j.record(1, ck(200));
+        j.record(0, ck(300)); // replaces the step-100 snapshot
+        assert_eq!(j.checkpoint(0).unwrap().step, 300);
+        assert_eq!(j.checkpoint(1).unwrap().step, 200);
+        assert!(j.checkpoint(2).is_none());
+        assert_eq!(j.retries(), 0);
+        j.note_retry();
+        j.note_retry();
+        assert_eq!(j.retries(), 2);
+    }
+
+    #[test]
+    fn unmanaged_ctl_is_inert() {
+        let ctl = JobCtl::unmanaged();
+        assert!(ctl.stop.get().is_none());
+        assert_eq!(ctl.max_retries, 0);
+        assert!(ctl.deadline.is_none());
+    }
+}

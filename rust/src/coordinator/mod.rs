@@ -51,19 +51,24 @@
 //! `replicas_inflight` — all visible through the TCP `METRICS` command.
 
 pub mod batcher;
+pub mod deadline;
 pub mod job;
+pub mod journal;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
 pub use job::{Backend, JobResult, JobSpec, JobState, ReplicaResult};
+pub use journal::{JobCtl, JobJournal};
 pub use metrics::Metrics;
 pub use scheduler::ReplicaScheduler;
 pub use service::Service;
 
+use crate::stop::{StopCause, StopToken};
+use deadline::DeadlineWheel;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How the dispatcher feeds the pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,6 +104,12 @@ pub struct CoordinatorConfig {
     /// jobs while the committed (queued + running) replica count
     /// exceeds the cap, instead of parking them in the queue.
     pub reject_when_saturated: bool,
+    /// How long [`Coordinator::shutdown`] lets in-flight jobs keep
+    /// running before preempting them ([`StopCause::Shutdown`] →
+    /// `JobState::Cancelled` with a partial result). `0` (the default)
+    /// is the legacy drain: shutdown waits for every job, however
+    /// long it runs.
+    pub shutdown_grace_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -109,6 +120,7 @@ impl Default for CoordinatorConfig {
             classes: batcher::DEFAULT_CLASSES.to_vec(),
             max_inflight_replicas: 0,
             reject_when_saturated: false,
+            shutdown_grace_ms: 0,
         }
     }
 }
@@ -139,6 +151,17 @@ impl std::fmt::Display for AdmissionError {
 }
 
 impl std::error::Error for AdmissionError {}
+
+/// Outcome of a bounded [`Coordinator::wait_for`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WaitOutcome {
+    /// The job reached this terminal state within the window.
+    Terminal(JobState),
+    /// Still queued / running when the window closed.
+    Pending,
+    /// No job with that id.
+    Unknown,
+}
 
 /// A job waiting in the admission queue.
 struct Queued {
@@ -179,6 +202,14 @@ struct Inner {
     /// machine) — the budget auto-sharding plans against, needed at
     /// submit time to weight jobs consistently with execution.
     worker_budget: usize,
+    /// Per-job control blocks (stop token, checkpoint journal, retry
+    /// and deadline policy) for every NON-terminal job; entries are
+    /// removed when the job's terminal state is published.
+    ctls: Mutex<HashMap<u64, JobCtl>>,
+    /// The deadline timer ("snowball-deadline" thread); also reused by
+    /// the shutdown grace period.
+    wheel: Arc<DeadlineWheel>,
+    shutdown_grace_ms: u64,
 }
 
 /// The job coordinator. Cloneable handle; `Drop` of the last handle does
@@ -228,9 +259,17 @@ impl Coordinator {
             } else {
                 cfg.workers
             },
+            ctls: Mutex::new(HashMap::new()),
+            wheel: Arc::new(DeadlineWheel::new()),
+            shutdown_grace_ms: cfg.shutdown_grace_ms,
         });
         let metrics = Arc::new(Metrics::new());
         let c = Self { inner: inner.clone(), metrics: metrics.clone() };
+        let wheel = inner.wheel.clone();
+        std::thread::Builder::new()
+            .name("snowball-deadline".into())
+            .spawn(move || wheel.run())
+            .expect("spawn deadline wheel");
         let dispatcher = c.clone();
         std::thread::Builder::new()
             .name("snowball-dispatch".into())
@@ -266,6 +305,8 @@ impl Coordinator {
     ///     target_energy: None,
     ///     shards: 1,
     ///     pin_lanes: false,
+    ///     budget_ms: 0,
+    ///     max_retries: 0,
     ///     backend: Backend::Native,
     /// });
     /// let result = coord.wait(id).expect("job completes");
@@ -319,6 +360,20 @@ impl Coordinator {
             *next += 1;
             id
         };
+        // The job's control block: cancel, the deadline wheel and
+        // shutdown all trip the same token; the journal feeds
+        // checkpointed retries (docs/ARCHITECTURE.md § Job lifecycle).
+        let ctl = JobCtl {
+            stop: Arc::new(StopToken::new()),
+            journal: Arc::new(JobJournal::new()),
+            max_retries: spec.max_retries,
+            deadline: (spec.budget_ms > 0)
+                .then(|| Instant::now() + Duration::from_millis(spec.budget_ms)),
+        };
+        if let Some(when) = ctl.deadline {
+            self.inner.wheel.schedule(when, StopCause::Deadline, ctl.stop.clone());
+        }
+        self.inner.ctls.lock().unwrap().insert(id, ctl);
         self.inner.states.lock().unwrap().insert(id, JobState::Queued);
         self.inner
             .queue
@@ -331,6 +386,31 @@ impl Coordinator {
         Ok(id)
     }
 
+    /// Request cancellation of a queued or running job. Returns `true`
+    /// if the request was delivered (the job's stop token tripped —
+    /// though a racing deadline/shutdown may still label the outcome),
+    /// `false` for unknown or already-terminal jobs. Cancellation is
+    /// cooperative and asynchronous: the job reaches
+    /// [`JobState::Cancelled`] with a partial [`JobResult`] once its
+    /// replicas observe the token (engine stop stride / shard epoch
+    /// boundary) — use [`Self::wait`] to rendezvous.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.inner.states.lock().unwrap().get(&id) {
+            None => return false,
+            Some(s) if s.is_terminal() => return false,
+            Some(_) => {}
+        }
+        // The ctl may vanish between the check and here (job went
+        // terminal) — that is the same benign race as a late deadline.
+        match self.inner.ctls.lock().unwrap().get(&id) {
+            Some(ctl) => {
+                ctl.stop.trip(StopCause::Cancel);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Current state of a job (None = unknown id).
     pub fn state(&self, id: u64) -> Option<JobState> {
         self.inner.states.lock().unwrap().get(&id).cloned()
@@ -341,9 +421,10 @@ impl Coordinator {
         self.inner.results.lock().unwrap().get(&id).cloned()
     }
 
-    /// Block until the job finishes (or fails); returns its result, or
-    /// `None` for an unknown id or a failed job. Condvar-notified on
-    /// every terminal transition — no poll loop, so wait latency is not
+    /// Block until the job is terminal; returns its result — including
+    /// the partial result of a cancelled / timed-out job — or `None`
+    /// for an unknown id or a failed job. Condvar-notified on every
+    /// terminal transition — no poll loop, so wait latency is not
     /// quantized to a sleep interval.
     ///
     /// ```
@@ -358,26 +439,63 @@ impl Coordinator {
         loop {
             match states.get(&id) {
                 None => return None,
-                Some(JobState::Done) => {
+                Some(JobState::Failed(_)) => return None,
+                Some(s) if s.is_terminal() => {
                     drop(states);
                     return self.result(id);
                 }
-                Some(JobState::Failed(_)) => return None,
                 Some(_) => states = self.inner.state_cv.wait(states).unwrap(),
             }
         }
     }
 
-    /// Stop the dispatcher: queued jobs still drain, in-flight jobs
-    /// complete, then the dispatcher thread exits.
+    /// Bounded [`Self::wait`]: block until the job is terminal or
+    /// `timeout` elapses. Unlike `wait`, the outcome distinguishes "no
+    /// such job" from "still running" — the service's disconnect-aware
+    /// `WAIT` loop needs both.
+    pub fn wait_for(&self, id: u64, timeout: Duration) -> WaitOutcome {
+        let deadline = Instant::now() + timeout;
+        let mut states = self.inner.states.lock().unwrap();
+        loop {
+            match states.get(&id) {
+                None => return WaitOutcome::Unknown,
+                Some(s) if s.is_terminal() => return WaitOutcome::Terminal(s.clone()),
+                Some(_) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return WaitOutcome::Pending;
+                    }
+                    let (guard, _) =
+                        self.inner.state_cv.wait_timeout(states, deadline - now).unwrap();
+                    states = guard;
+                }
+            }
+        }
+    }
+
+    /// Stop the dispatcher. Queued and in-flight jobs still reach a
+    /// terminal state before the dispatcher exits; with a nonzero
+    /// [`CoordinatorConfig::shutdown_grace_ms`] any job still running
+    /// when the grace period ends is preempted ([`StopCause::Shutdown`]
+    /// → [`JobState::Cancelled`], partial result published), so
+    /// shutdown completes promptly even under a multi-hour job. The
+    /// default grace of `0` keeps the legacy drain-to-completion.
     pub fn shutdown(&self) {
+        if self.inner.shutdown_grace_ms > 0 {
+            let when = Instant::now() + Duration::from_millis(self.inner.shutdown_grace_ms);
+            for ctl in self.inner.ctls.lock().unwrap().values() {
+                self.inner.wheel.schedule(when, StopCause::Shutdown, ctl.stop.clone());
+            }
+        }
         *self.inner.shutdown.lock().unwrap() = true;
         self.inner.queue_cv.notify_all();
     }
 
-    /// Publish a finished job: result map, terminal state, stage timers.
-    /// Runs on the dispatcher thread (serial mode) or on the pool thread
-    /// that completed the job's last replica (overlapping mode).
+    /// Publish a finished job: result map, terminal state (`Done`, or
+    /// `Cancelled`/`TimedOut` when the job's stop token tripped —
+    /// first cause wins), stage timers and lifecycle counters. Runs on
+    /// the dispatcher thread (serial mode) or on the pool thread that
+    /// completed the job's last replica (overlapping mode).
     fn complete(
         &self,
         id: u64,
@@ -386,18 +504,51 @@ impl Coordinator {
         replicas: Vec<ReplicaResult>,
         submitted: Instant,
         run_start: Instant,
+        ctl: &JobCtl,
     ) {
-        let result = JobResult { job_id: id, label, replicas, wall: run_start.elapsed() };
+        let cause = ctl.stop.get();
+        let result = JobResult {
+            job_id: id,
+            label,
+            replicas,
+            wall: run_start.elapsed(),
+            completed: cause.is_none(),
+        };
         self.metrics.observe("run", result.wall);
         self.metrics.observe("job_wall", submitted.elapsed());
-        self.metrics.inc("jobs_done");
         self.metrics.gauge_add("jobs_running", -1);
+        let retries = ctl.journal.retries();
+        if retries > 0 {
+            self.metrics.add("jobs_retried", retries);
+        }
+        let state = match cause {
+            None => {
+                self.metrics.inc("jobs_done");
+                JobState::Done
+            }
+            Some(StopCause::Cancel) | Some(StopCause::Shutdown) => {
+                self.metrics.inc("jobs_cancelled");
+                JobState::Cancelled
+            }
+            Some(StopCause::Deadline) => {
+                self.metrics.inc("jobs_timed_out");
+                if let Some(dl) = ctl.deadline {
+                    // How far past its budget the preempted job landed
+                    // — the cooperative-preemption latency (stop
+                    // stride / epoch barrier + teardown).
+                    self.metrics
+                        .observe("deadline_slack_us", Instant::now().saturating_duration_since(dl));
+                }
+                JobState::TimedOut
+            }
+        };
         self.inner.results.lock().unwrap().insert(id, result);
+        self.inner.ctls.lock().unwrap().remove(&id);
         // Release the admission budget BEFORE waking waiters: a client
         // unblocked by `wait` must be able to submit its next job
         // without racing the bookkeeping.
         self.release_committed(weight);
-        self.inner.states.lock().unwrap().insert(id, JobState::Done);
+        self.inner.states.lock().unwrap().insert(id, state);
         self.inner.state_cv.notify_all();
     }
 
@@ -405,9 +556,14 @@ impl Coordinator {
     /// preserved for `STATUS`/`RESULT`), waiters woken, committed
     /// replicas released — the job's waiters see `None`, nothing
     /// wedges. Runs wherever [`Self::complete`] would have.
-    fn fail(&self, id: u64, weight: usize, message: String) {
+    fn fail(&self, id: u64, weight: usize, message: String, ctl: &JobCtl) {
         self.metrics.inc("jobs_failed");
         self.metrics.gauge_add("jobs_running", -1);
+        let retries = ctl.journal.retries();
+        if retries > 0 {
+            self.metrics.add("jobs_retried", retries);
+        }
+        self.inner.ctls.lock().unwrap().remove(&id);
         // Budget back before the wake-up, as in `complete`.
         self.release_committed(weight);
         self.inner.states.lock().unwrap().insert(id, JobState::Failed(message));
@@ -418,6 +574,15 @@ impl Coordinator {
     fn release_committed(&self, weight: usize) {
         let mut committed = self.inner.committed_replicas.lock().unwrap();
         *committed = committed.saturating_sub(weight);
+    }
+
+    /// Replica units currently committed (queued + running) against the
+    /// admission cap. Exposed so the chaos suite can assert the budget
+    /// is conserved — it must drain to 0 once every job is terminal,
+    /// whatever mix of completions, failures, cancels and timeouts got
+    /// them there.
+    pub fn committed_weight(&self) -> usize {
+        *self.inner.committed_replicas.lock().unwrap()
     }
 
     fn dispatch_loop(&self, cfg: CoordinatorConfig) {
@@ -434,11 +599,17 @@ impl Coordinator {
                     if *self.inner.shutdown.lock().unwrap() {
                         drop(q);
                         // Let in-flight overlapping jobs finish before the
-                        // scheduler (and its pool) is torn down.
+                        // scheduler (and its pool) is torn down. With a
+                        // grace period configured, `shutdown` already
+                        // armed Shutdown trips on every live job, so
+                        // this drain is bounded by the grace + one
+                        // preemption latency rather than job length.
                         let mut inflight = self.inner.inflight.lock().unwrap();
                         while *inflight > 0 {
                             inflight = self.inner.inflight_cv.wait(inflight).unwrap();
                         }
+                        drop(inflight);
+                        self.inner.wheel.close();
                         return;
                     }
                     let (guard, _) = self
@@ -474,12 +645,41 @@ impl Coordinator {
                 let picked_up = Instant::now();
                 self.metrics.observe("queue_wait", submitted.elapsed());
                 self.metrics.gauge_add("jobs_queued", -1);
-                self.inner.states.lock().unwrap().insert(id, JobState::Running);
-                self.metrics.gauge_add("jobs_running", 1);
+                // The control block was created at submit; a missing
+                // entry (impossible today) degrades to an unmanaged
+                // run rather than a panic on the dispatcher thread.
+                let ctl = self
+                    .inner
+                    .ctls
+                    .lock()
+                    .unwrap()
+                    .get(&id)
+                    .cloned()
+                    .unwrap_or_else(JobCtl::unmanaged);
                 let replica_count = spec.replicas;
                 // Admission weight = replicas × shard lanes: the thread
                 // count the job will actually occupy.
                 let weight = self.admission_weight(&spec);
+                // Preempted while still queued (cancel before dispatch,
+                // a deadline shorter than the queue wait, shutdown
+                // grace): finalize right here with an empty partial
+                // result — no pool time is spent on a dead job.
+                if ctl.stop.is_stopped() {
+                    self.metrics.gauge_add("jobs_running", 1);
+                    self.metrics.observe("dispatch", picked_up.elapsed());
+                    self.complete(
+                        id,
+                        spec.label.clone(),
+                        weight,
+                        Vec::new(),
+                        submitted,
+                        picked_up,
+                        &ctl,
+                    );
+                    continue;
+                }
+                self.inner.states.lock().unwrap().insert(id, JobState::Running);
+                self.metrics.gauge_add("jobs_running", 1);
                 // The XLA backend is driven synchronously by callers that
                 // own a runtime (examples/k2000_tts.rs); queued jobs fall
                 // back to native execution so the service never needs a
@@ -488,7 +688,7 @@ impl Coordinator {
                     DispatchMode::Serial => {
                         self.metrics.observe("dispatch", picked_up.elapsed());
                         let run_start = Instant::now();
-                        match scheduler.try_run_native(&spec) {
+                        match scheduler.try_run_native_ctl(&spec, &ctl) {
                             Ok(replicas) => self.complete(
                                 id,
                                 spec.label.clone(),
@@ -496,8 +696,9 @@ impl Coordinator {
                                 replicas,
                                 submitted,
                                 run_start,
+                                &ctl,
                             ),
-                            Err(msg) => self.fail(id, weight, msg),
+                            Err(msg) => self.fail(id, weight, msg, &ctl),
                         }
                     }
                     DispatchMode::Overlapping => {
@@ -535,8 +736,10 @@ impl Coordinator {
                         // already be visible.
                         self.metrics.observe("dispatch", picked_up.elapsed());
                         let run_start = Instant::now();
+                        let job_ctl = ctl.clone();
                         scheduler.spawn_native(
                             Arc::new(spec),
+                            ctl,
                             move || {
                                 per_replica.metrics.gauge_add("replicas_inflight", -1);
                                 let mut inflight =
@@ -553,8 +756,9 @@ impl Coordinator {
                                         replicas,
                                         submitted,
                                         run_start,
+                                        &job_ctl,
                                     ),
-                                    Err(msg) => this.fail(id, weight, msg),
+                                    Err(msg) => this.fail(id, weight, msg, &job_ctl),
                                 }
                                 let mut inflight = this.inner.inflight.lock().unwrap();
                                 *inflight -= 1;
@@ -591,6 +795,8 @@ mod tests {
             target_energy: None,
             shards: 1,
             pin_lanes: false,
+            budget_ms: 0,
+            max_retries: 0,
             backend: Backend::Native,
         }
     }
@@ -786,6 +992,86 @@ mod tests {
         // Budget released: admission works again.
         let id2 = c.try_submit(spec("retry", 11)).expect("drained coordinator admits");
         assert!(c.wait(id2).is_some());
+        c.shutdown();
+    }
+
+    /// `cancel` preempts a running job: `wait` returns a partial
+    /// result (`completed == false`), the state is `Cancelled`, the
+    /// lifecycle counters and occupancy gauges settle, and repeated /
+    /// unknown cancels are refused.
+    #[test]
+    fn cancel_preempts_running_job_with_partial_result() {
+        let c = Coordinator::start(2);
+        let mut long = spec("cancel-me", 31);
+        long.steps = 2_000_000_000; // minutes if not preempted
+        long.replicas = 2;
+        let id = c.submit(long);
+        // Let the dispatcher hand it to the pool, then cancel.
+        while c.state(id) == Some(JobState::Queued) {
+            std::thread::yield_now();
+        }
+        assert!(c.cancel(id), "live job must accept the cancel");
+        let t0 = Instant::now();
+        let r = c.wait(id).expect("cancelled job still publishes a partial result");
+        assert!(t0.elapsed() < Duration::from_secs(30), "preemption must be prompt");
+        assert!(!r.completed);
+        assert_eq!(r.replicas.len(), 2, "every replica reports its incumbent");
+        assert_eq!(c.state(id), Some(JobState::Cancelled));
+        assert_eq!(c.metrics.get("jobs_cancelled"), 1);
+        assert_eq!(c.metrics.get("jobs_done"), 0);
+        assert!(!c.cancel(id), "terminal job refuses further cancels");
+        assert!(!c.cancel(9999), "unknown job refuses cancels");
+        assert_eq!(c.metrics.gauge("jobs_running"), 0);
+        assert_eq!(c.metrics.gauge("replicas_inflight"), 0);
+        assert_eq!(c.committed_weight(), 0, "admission budget must be conserved");
+        c.shutdown();
+    }
+
+    /// `budget_ms` flows from spec to deadline wheel to stop token:
+    /// the job lands in `TimedOut` with a valid partial result well
+    /// before its uninterrupted runtime, and the slack histogram gets
+    /// its sample.
+    #[test]
+    fn budget_ms_deadline_times_out_with_partial_result() {
+        let c = Coordinator::start(2);
+        let mut long = spec("deadline", 32);
+        long.steps = 2_000_000_000;
+        long.replicas = 2;
+        long.budget_ms = 50;
+        let id = c.submit(long);
+        let r = c.wait(id).expect("timed-out job still publishes a partial result");
+        assert!(!r.completed);
+        assert_eq!(c.state(id), Some(JobState::TimedOut));
+        assert_eq!(c.metrics.get("jobs_timed_out"), 1);
+        assert_eq!(c.metrics.samples("deadline_slack_us"), 1);
+        assert_eq!(c.metrics.gauge("jobs_running"), 0);
+        assert_eq!(c.committed_weight(), 0);
+        c.shutdown();
+    }
+
+    /// A job cancelled while still queued is finalized by the
+    /// dispatcher without touching the pool: empty replica vector,
+    /// `Cancelled`, budget conserved.
+    #[test]
+    fn queued_job_cancelled_before_dispatch_finalizes_empty() {
+        // Serial dispatcher + a long head job keep the victim queued.
+        let c = Coordinator::start_serial(1);
+        let mut head = spec("head", 33);
+        head.steps = 50_000_000;
+        head.replicas = 1;
+        let head_id = c.submit(head);
+        let mut victim = spec("victim", 34);
+        victim.replicas = 3;
+        let victim_id = c.submit(victim);
+        assert!(c.cancel(victim_id), "queued job must accept the cancel");
+        assert!(c.cancel(head_id)); // unblock the head quickly too
+        let v = c.wait(victim_id).expect("queued-cancelled job publishes a result");
+        assert!(!v.completed);
+        assert!(v.replicas.is_empty(), "never dispatched → no replica results");
+        assert_eq!(c.state(victim_id), Some(JobState::Cancelled));
+        assert!(c.wait(head_id).is_some());
+        assert_eq!(c.committed_weight(), 0);
+        assert_eq!(c.metrics.gauge("jobs_running"), 0);
         c.shutdown();
     }
 

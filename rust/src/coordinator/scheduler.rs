@@ -23,10 +23,18 @@
 //!   of job B start the moment a worker frees up, even while job A is
 //!   still running (see `docs/ARCHITECTURE.md`).
 //!
-//! Replica panics (poisoned instances, absurd sizes) are caught at the
-//! work-item boundary — a panicking replica fails its **job** (the
-//! coordinator flips it to `JobState::Failed` and wakes waiters), never
-//! the dispatcher, the pool, or the process.
+//! Replica panics (poisoned instances, absurd sizes, injected faults)
+//! are caught at the work-item boundary — a panicking replica fails
+//! its **job** (the coordinator flips it to `JobState::Failed` and
+//! wakes waiters), never the dispatcher, the pool, or the process.
+//! With `JobSpec.max_retries > 0` the panic boundary first **retries**
+//! the replica (exponential backoff, resuming from its last journaled
+//! [`EngineCheckpoint`](crate::engine::EngineCheckpoint) — see
+//! [`super::journal`]); only when the retry budget is exhausted does
+//! the job fail. Every replica body also polls the job's
+//! [`StopToken`](crate::stop::StopToken), so cancel / deadline /
+//! shutdown preempt mid-run and the replica returns its best-so-far
+//! incumbent.
 //!
 //! Each replica's *engine* is chosen per job: `spec.shards <= 1` runs
 //! the classic single-lane [`SnowballEngine`] (bit-reproducible);
@@ -36,6 +44,7 @@
 //! replica-level parallelism from the instance size and machine width.
 
 use super::job::{JobSpec, ReplicaResult};
+use super::journal::JobCtl;
 use crate::engine::pool::ReplicaPool;
 use crate::engine::{shard, Datapath, EngineConfig, MergeMode, ShardedEngine, SnowballEngine};
 use crate::rng::StatelessRng;
@@ -66,6 +75,32 @@ pub fn effective_shards(spec: &JobSpec, worker_budget: usize) -> usize {
 /// overlapping path, so the two are bit-identical by construction
 /// (same `EngineConfig`, same `child(r)` seed derivation).
 pub fn run_replica(spec: &JobSpec, r: usize, worker_budget: usize) -> ReplicaResult {
+    run_replica_ctl(spec, r, worker_budget, &JobCtl::unmanaged())
+}
+
+/// How often a retryable single-lane replica journals a checkpoint: 8
+/// per run, clamped so tiny jobs still checkpoint and huge jobs don't
+/// snapshot megabyte spin vectors every few milliseconds.
+fn checkpoint_stride(steps: u64) -> u64 {
+    (steps / 8).clamp(1_000, 250_000)
+}
+
+/// [`run_replica`] under a [`JobCtl`]: honors the job's stop token
+/// (single-lane via `run_session`, sharded via `run_with_stop`), and —
+/// when the job allows retries — journals periodic checkpoints and
+/// resumes from the latest one a previous attempt recorded. Resumed
+/// runs are bit-identical to uninterrupted ones (stateless RNG +
+/// pure schedule; pinned by the engine's resume test and the chaos
+/// suite). Sharded replicas don't checkpoint (their interleaving is
+/// real nondeterminism) — a retried sharded replica restarts from
+/// step 0.
+pub fn run_replica_ctl(
+    spec: &JobSpec,
+    r: usize,
+    worker_budget: usize,
+    ctl: &JobCtl,
+) -> ReplicaResult {
+    crate::failpoint::hit("pool.run");
     let root = StatelessRng::new(spec.seed);
     let shards = effective_shards(spec, worker_budget);
     let cfg = EngineConfig {
@@ -81,9 +116,18 @@ pub fn run_replica(spec: &JobSpec, r: usize, worker_budget: usize) -> ReplicaRes
         pin_lanes: spec.pin_lanes,
     };
     let run = if shards > 1 {
-        ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run()
+        ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run_with_stop(&ctl.stop).0
     } else {
-        SnowballEngine::new(&spec.model, cfg).run()
+        let stride = if ctl.max_retries > 0 { checkpoint_stride(spec.steps) } else { 0 };
+        let resume = ctl.journal.checkpoint(r as u32);
+        let mut engine = match &resume {
+            Some(ck) => SnowballEngine::from_checkpoint(&spec.model, cfg, ck),
+            None => SnowballEngine::new(&spec.model, cfg),
+        };
+        let journal = ctl.journal.clone();
+        engine.run_session(&ctl.stop, resume.as_ref(), stride, |ck| {
+            journal.record(r as u32, ck.clone());
+        })
     };
     ReplicaResult {
         replica: r as u32,
@@ -93,24 +137,44 @@ pub fn run_replica(spec: &JobSpec, r: usize, worker_budget: usize) -> ReplicaRes
     }
 }
 
-/// [`run_replica`] with the panic boundary: a panicking replica becomes
-/// an `Err` describing the panic instead of unwinding into the pool
-/// (rayon would escalate an uncaught panic in a spawned item to a
-/// process abort).
+/// [`run_replica_ctl`] with the panic boundary AND the retry loop: a
+/// panicking replica is re-run up to `ctl.max_retries` times with
+/// exponential backoff (5 ms doubling, capped at 100 ms), resuming
+/// from its journaled checkpoint; only when the budget is exhausted —
+/// or the job was preempted anyway — does it become an `Err`
+/// describing the first panic (rayon would escalate an uncaught panic
+/// in a spawned item to a process abort).
 fn run_replica_caught(
     spec: &JobSpec,
     r: usize,
     worker_budget: usize,
+    ctl: &JobCtl,
 ) -> Result<ReplicaResult, String> {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_replica(spec, r, worker_budget)))
-        .map_err(|payload| {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
-            format!("replica {r} panicked: {msg}")
-        })
+    let mut attempt = 0u32;
+    loop {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_replica_ctl(spec, r, worker_budget, ctl)
+        }));
+        match caught {
+            Ok(result) => return Ok(result),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                // A preempted job never retries: the point of the stop
+                // was to give the machine back.
+                if attempt >= ctl.max_retries || ctl.stop.is_stopped() {
+                    return Err(format!("replica {r} panicked: {msg}"));
+                }
+                attempt += 1;
+                ctl.journal.note_retry();
+                let backoff = 5u64 << (attempt - 1).min(5);
+                std::thread::sleep(std::time::Duration::from_millis(backoff.min(100)));
+            }
+        }
+    }
 }
 
 /// Collects replica results by index; the closing replica hands the
@@ -149,9 +213,20 @@ impl ReplicaScheduler {
     /// results ordered by replica index, or the first replica failure.
     /// Blocks until the whole job is done.
     pub fn try_run_native(&self, spec: &JobSpec) -> Result<Vec<ReplicaResult>, String> {
+        self.try_run_native_ctl(spec, &JobCtl::unmanaged())
+    }
+
+    /// [`Self::try_run_native`] under a job control block: replicas
+    /// honor `ctl.stop` (the serial dispatcher's cancel/deadline path)
+    /// and panics retry per `ctl.max_retries`.
+    pub fn try_run_native_ctl(
+        &self,
+        spec: &JobSpec,
+        ctl: &JobCtl,
+    ) -> Result<Vec<ReplicaResult>, String> {
         let budget = self.workers();
         self.pool
-            .run_indexed(spec.replicas as usize, |r| run_replica_caught(spec, r, budget))
+            .run_indexed(spec.replicas as usize, |r| run_replica_caught(spec, r, budget, ctl))
             .into_iter()
             .collect()
     }
@@ -167,9 +242,10 @@ impl ReplicaScheduler {
     /// finishes last) with the results in replica-index order — or the
     /// first replica failure — bit-identical to
     /// [`try_run_native`](Self::try_run_native) because both share
-    /// [`run_replica`]. `on_replica_done` fires after each replica
-    /// completes (occupancy accounting).
-    pub fn spawn_native<F, G>(&self, spec: Arc<JobSpec>, on_replica_done: G, on_done: F)
+    /// [`run_replica_ctl`]. `on_replica_done` fires after each replica
+    /// completes (occupancy accounting). `ctl` carries the job's stop
+    /// token, checkpoint journal and retry budget.
+    pub fn spawn_native<F, G>(&self, spec: Arc<JobSpec>, ctl: JobCtl, on_replica_done: G, on_done: F)
     where
         F: FnOnce(Result<Vec<ReplicaResult>, String>) + Send + 'static,
         G: Fn() + Send + Sync + 'static,
@@ -188,10 +264,11 @@ impl ReplicaScheduler {
         let budget = self.workers();
         for r in 0..n {
             let spec = spec.clone();
+            let ctl = ctl.clone();
             let collector = collector.clone();
             let on_replica_done = on_replica_done.clone();
             self.pool.spawn(move || {
-                let result = run_replica_caught(&spec, r, budget);
+                let result = run_replica_caught(&spec, r, budget, &ctl);
                 collector.slots.lock().unwrap()[r] = Some(result);
                 on_replica_done();
                 // AcqRel: the closing thread must see every slot write.
@@ -234,6 +311,8 @@ mod tests {
             target_energy: None,
             shards: 1,
             pin_lanes: false,
+            budget_ms: 0,
+            max_retries: 0,
             backend: Backend::Native,
         }
     }
@@ -327,6 +406,7 @@ mod tests {
         let t = ticks.clone();
         s.spawn_native(
             spec.clone(),
+            JobCtl::unmanaged(),
             move || {
                 t.fetch_add(1, Ordering::Relaxed);
             },
@@ -343,6 +423,45 @@ mod tests {
         assert_eq!(key(&blocking), key(&spawned));
     }
 
+    /// A pre-tripped stop token preempts every replica promptly; the
+    /// job still yields one well-formed (partial) result per replica —
+    /// preemption is not a failure.
+    #[test]
+    fn preempted_job_returns_partial_results() {
+        let s = ReplicaScheduler::new(2);
+        let mut sp = spec(3);
+        sp.steps = 1_000_000_000; // would run for minutes if not stopped
+        let ctl = JobCtl::unmanaged();
+        ctl.stop.trip(crate::stop::StopCause::Cancel);
+        let t0 = std::time::Instant::now();
+        let out = s.try_run_native_ctl(&sp, &ctl).expect("preemption is not a failure");
+        assert_eq!(out.len(), 3);
+        for (r, result) in out.iter().enumerate() {
+            assert_eq!(result.replica, r as u32);
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(10), "preemption must be prompt");
+    }
+
+    /// Turning on the checkpoint journal (max_retries > 0) must not
+    /// change a healthy job's results — checkpoint capture draws no
+    /// randomness and mutates nothing.
+    #[test]
+    fn checkpointing_does_not_perturb_results() {
+        let s = ReplicaScheduler::new(2);
+        let mut sp = spec(4);
+        sp.steps = 4_000; // > the 1000-step stride floor, so checkpoints fire
+        let plain = s.run_native(&sp);
+        let mut ctl = JobCtl::unmanaged();
+        ctl.max_retries = 2;
+        let journaled = s.try_run_native_ctl(&sp, &ctl).unwrap();
+        let key = |v: &[ReplicaResult]| -> Vec<(u32, i64, u64)> {
+            v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
+        };
+        assert_eq!(key(&plain), key(&journaled));
+        // And the journal actually accumulated checkpoints to resume from.
+        assert!(ctl.journal.checkpoint(0).is_some(), "stride must journal checkpoints");
+    }
+
     /// The overlapping path reports failures through the callback too.
     #[test]
     fn spawn_native_reports_panics() {
@@ -350,7 +469,7 @@ mod tests {
         bad.model = Arc::new(IsingModel::zeros(0));
         let s = ReplicaScheduler::new(2);
         let (tx, rx) = std::sync::mpsc::channel();
-        s.spawn_native(Arc::new(bad), || {}, move |results| {
+        s.spawn_native(Arc::new(bad), JobCtl::unmanaged(), || {}, move |results| {
             let _ = tx.send(results);
         });
         let got = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
@@ -368,7 +487,7 @@ mod tests {
             sp.seed = 100 + k;
             sp.label = format!("job-{k}");
             let tx = tx.clone();
-            s.spawn_native(Arc::new(sp), || {}, move |results| {
+            s.spawn_native(Arc::new(sp), JobCtl::unmanaged(), || {}, move |results| {
                 let _ = tx.send((k, results));
             });
         }

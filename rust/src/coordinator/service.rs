@@ -2,21 +2,30 @@
 //! face of the Ising machine).
 //!
 //! **The full wire protocol is specified in `docs/PROTOCOL.md`** —
-//! every command (`PING`/`SOLVE`/`STATUS`/`WAIT`/`RESULT`/`METRICS`/
-//! `QUIT`), every `ERR` form, and the `selector=`/`schedule=` syntax.
-//! In one breath: one request per line, one reply per line (`METRICS`
-//! is multi-line, terminated by `END`); `SOLVE` returns `JOB id=<u64>`
-//! immediately and the job runs asynchronously on the coordinator;
-//! `WAIT id=` blocks (condvar-notified, no client poll loop) until the
-//! job is terminal; errors reply `ERR <message>`.
+//! every command (`PING`/`SOLVE`/`STATUS`/`WAIT`/`CANCEL`/`RESULT`/
+//! `METRICS`/`QUIT`), every `ERR` form, and the
+//! `selector=`/`schedule=` syntax. In one breath: one request per
+//! line, one reply per line (`METRICS` is multi-line, terminated by
+//! `END`); `SOLVE` returns `JOB id=<u64>` immediately and the job runs
+//! asynchronously on the coordinator; `WAIT id=` blocks until the job
+//! is terminal; `CANCEL id=` requests cooperative preemption; errors
+//! reply `ERR <message>`.
 //!
 //! One thread per connection; compute runs on the coordinator pool
 //! (overlapping dispatch by default, so many clients' jobs execute
 //! concurrently), which means slow jobs never block the listener — the
 //! load harness in `rust/tests/service_load.rs` drives 100+ concurrent
 //! clients through this path.
+//!
+//! **Client hang-up mid-`WAIT`**: a blocked `WAIT` probes its socket
+//! between bounded `wait_for` windows; when the peer is gone the
+//! handler returns immediately, releasing the connection thread and
+//! its waiter registration (`service_waiters` gauge, guard-scoped) —
+//! a disconnected client can no longer pin coordinator state. Pinned
+//! by the disconnect cohort in `rust/tests/service_load.rs` and the
+//! chaos suite.
 
-use super::{Backend, Coordinator, JobSpec, JobState};
+use super::{Backend, Coordinator, JobSpec, JobState, Metrics, WaitOutcome};
 use crate::engine::{Mode, Schedule, SelectorKind};
 use crate::graph::{generators, gset};
 use crate::rng::StatelessRng;
@@ -25,6 +34,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// The TCP service.
 pub struct Service {
@@ -76,12 +86,15 @@ fn handle_connection(coord: Coordinator, stream: TcpStream) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // peer closed
         }
-        let reply = match handle_line(&coord, line.trim()) {
+        let reply = match handle_line(&coord, line.trim(), &writer) {
             Ok(Reply::Line(s)) => s,
             Ok(Reply::Quit) => {
                 writeln!(writer, "BYE")?;
                 return Ok(());
             }
+            // Peer vanished mid-blocking-command: nothing to write, no
+            // one to write it to — just release the thread.
+            Ok(Reply::Disconnect) => return Ok(()),
             Err(e) => format!("ERR {e}"),
         };
         writeln!(writer, "{reply}")?;
@@ -93,9 +106,52 @@ fn handle_connection(coord: Coordinator, stream: TcpStream) -> Result<()> {
 enum Reply {
     Line(String),
     Quit,
+    /// The client hung up while the handler was blocked (WAIT).
+    Disconnect,
 }
 
-fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
+/// Wire name of a job state (docs/PROTOCOL.md state table).
+fn state_name(state: &JobState) -> &'static str {
+    match state {
+        JobState::Queued => "queued",
+        JobState::Running => "running",
+        JobState::Done => "done",
+        JobState::Failed(_) => "failed",
+        JobState::Cancelled => "cancelled",
+        JobState::TimedOut => "timed_out",
+    }
+}
+
+/// Liveness probe for a blocked handler: peek the socket without
+/// consuming. `Ok(0)` is an orderly hang-up; pending bytes (pipelined
+/// requests) and `WouldBlock` (idle but connected) mean alive; any
+/// other error means the connection is unusable.
+fn peer_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    // Restore; failing to means reads/writes would misbehave, so treat
+    // it as gone too.
+    stream.set_nonblocking(false).is_err() || gone
+}
+
+/// Decrements `service_waiters` however the WAIT ends (reply, ERR,
+/// disconnect) — the gauge cannot leak on any exit path.
+struct WaiterGuard<'a>(&'a Metrics);
+impl Drop for WaiterGuard<'_> {
+    fn drop(&mut self) {
+        self.0.gauge_add("service_waiters", -1);
+    }
+}
+
+fn handle_line(coord: &Coordinator, line: &str, stream: &TcpStream) -> Result<Reply> {
     let mut parts = line.split_whitespace();
     let cmd = parts.next().unwrap_or("");
     let kv: HashMap<&str, &str> = parts.filter_map(|t| t.split_once('=')).collect();
@@ -133,6 +189,11 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 Some(s) => Schedule::parse(s)?,
                 None => Schedule::Geometric { t0: 8.0, t1: 0.05 },
             };
+            // Fault-tolerant lifecycle knobs (docs/PROTOCOL.md):
+            // budget_ms=0 = no deadline, max_retries=0 = fail on the
+            // first replica panic.
+            let budget_ms: u64 = kv.get("budget_ms").copied().unwrap_or("0").parse()?;
+            let max_retries: u32 = kv.get("max_retries").copied().unwrap_or("0").parse()?;
             let (label, model) = build_instance(instance, seed)?;
             // try_submit: with admission control configured, a
             // saturated coordinator refuses here (`ERR saturated …`)
@@ -149,6 +210,8 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 target_energy: target,
                 shards,
                 pin_lanes,
+                budget_ms,
+                max_retries,
                 backend: Backend::Native,
             })?;
             Ok(Reply::Line(format!("JOB id={id}")))
@@ -157,31 +220,64 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
             let state = match coord.state(id) {
                 None => anyhow::bail!("unknown job {id}"),
-                Some(JobState::Queued) => "queued",
-                Some(JobState::Running) => "running",
-                Some(JobState::Done) => "done",
-                Some(JobState::Failed(_)) => "failed",
+                Some(s) => state_name(&s),
             };
             Ok(Reply::Line(format!("STATE id={id} state={state}")))
+        }
+        "CANCEL" => {
+            let id: u64 = kv.get("id").context("missing id=")?.parse()?;
+            match coord.state(id) {
+                None => anyhow::bail!("unknown job {id}"),
+                Some(s) if s.is_terminal() => {
+                    anyhow::bail!("job {id} already terminal ({})", state_name(&s))
+                }
+                Some(_) => {}
+            }
+            if coord.cancel(id) {
+                // Delivery, not completion: rendezvous with WAIT.
+                Ok(Reply::Line(format!("CANCELLED id={id}")))
+            } else {
+                // Lost the race against the job's own completion.
+                anyhow::bail!("job {id} already terminal")
+            }
         }
         "WAIT" => {
             // Blocking is fine: the service runs one thread per
             // connection and compute happens on the coordinator pool.
+            // The block is a bounded-probe loop rather than one
+            // indefinite wait so a client hang-up releases this thread
+            // (and its waiter registration) instead of pinning them
+            // until the job ends.
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
-            match coord.wait(id) {
-                Some(_) => Ok(Reply::Line(format!("STATE id={id} state=done"))),
-                None => match coord.state(id) {
-                    None => anyhow::bail!("unknown job {id}"),
-                    _ => Ok(Reply::Line(format!("STATE id={id} state=failed"))),
-                },
+            coord.metrics.gauge_add("service_waiters", 1);
+            let _waiter = WaiterGuard(&coord.metrics);
+            loop {
+                match coord.wait_for(id, Duration::from_millis(100)) {
+                    WaitOutcome::Unknown => anyhow::bail!("unknown job {id}"),
+                    WaitOutcome::Terminal(state) => {
+                        return Ok(Reply::Line(format!(
+                            "STATE id={id} state={}",
+                            state_name(&state)
+                        )));
+                    }
+                    WaitOutcome::Pending => {
+                        if peer_gone(stream) {
+                            return Ok(Reply::Disconnect);
+                        }
+                    }
+                }
             }
         }
         "RESULT" => {
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
-            if let Some(JobState::Failed(msg)) = coord.state(id) {
+            let state = coord.state(id);
+            if let Some(JobState::Failed(msg)) = state {
                 anyhow::bail!("job {id} failed: {msg}");
             }
             let r = coord.result(id).with_context(|| format!("job {id} has no result yet"))?;
+            // The result exists, so the job is terminal — but re-read
+            // defensively for the wire field.
+            let state = state.map_or("done", |s| state_name(&s));
             let ta = r.mean_replica_seconds();
             let (pa, tts) = match kv.get("target").map(|v| v.parse::<i64>()).transpose()? {
                 Some(t) => {
@@ -192,8 +288,10 @@ fn handle_line(coord: &Coordinator, line: &str) -> Result<Reply> {
                 None => (f64::NAN, f64::NAN),
             };
             Ok(Reply::Line(format!(
-                "RESULT id={id} label={} best={} replicas={} pa={pa:.3} ta_ms={:.3} tts99_ms={:.3}",
+                "RESULT id={id} label={} state={state} completed={} best={} replicas={} \
+                 pa={pa:.3} ta_ms={:.3} tts99_ms={:.3}",
                 r.label,
+                r.completed,
                 r.best_energy(),
                 r.replicas.len(),
                 ta * 1e3,
@@ -358,6 +456,8 @@ mod tests {
                 target_energy: None,
                 shards: 1,
                 pin_lanes: false,
+                budget_ms: 0,
+                max_retries: 0,
                 backend: Backend::Native,
             }
         };
@@ -376,5 +476,69 @@ mod tests {
     fn quit_closes() {
         let addr = start();
         assert_eq!(roundtrip(addr, "QUIT"), "BYE");
+    }
+
+    /// CANCEL end to end: SOLVE a job that would run for minutes,
+    /// CANCEL it, WAIT reports `state=cancelled`, RESULT carries
+    /// `completed=false` — all promptly. Plus the CANCEL ERR forms.
+    #[test]
+    fn cancel_flows_end_to_end() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "SOLVE instance=er:64:256 steps=2000000000 replicas=2 seed=9").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "CANCEL id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("CANCELLED id={id}"));
+        line.clear();
+        let t0 = std::time::Instant::now();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=cancelled"));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(30), "cancel must be prompt");
+        line.clear();
+        writeln!(s, "RESULT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("state=cancelled"), "{line}");
+        assert!(line.contains("completed=false"), "{line}");
+        // ERR forms: unknown id, then already-terminal.
+        assert!(roundtrip(addr, "CANCEL id=424242").starts_with("ERR unknown job"));
+        let second = roundtrip(addr, &format!("CANCEL id={id}"));
+        assert!(second.starts_with(&format!("ERR job {id} already terminal")), "{second}");
+    }
+
+    /// `budget_ms=` end to end: an oversized SOLVE with a 50 ms budget
+    /// comes back `state=timed_out` with a valid best-so-far partial
+    /// result, well within the acceptance envelope.
+    #[test]
+    fn budget_ms_flows_end_to_end() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "SOLVE instance=er:128:512 steps=2000000000 replicas=2 seed=4 budget_ms=50")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=timed_out"));
+        line.clear();
+        writeln!(s, "RESULT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("state=timed_out"), "{line}");
+        assert!(line.contains("completed=false"), "{line}");
+        assert!(line.contains("replicas=2"), "{line}");
+        assert!(line.contains("best=-"), "partial result still carries an incumbent: {line}");
+        // Malformed budgets are strict ERRs like every other field.
+        assert!(roundtrip(addr, "SOLVE instance=er:8:10 budget_ms=soon").starts_with("ERR"));
+        assert!(roundtrip(addr, "SOLVE instance=er:8:10 max_retries=lots").starts_with("ERR"));
     }
 }

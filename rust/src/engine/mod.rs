@@ -41,5 +41,7 @@ pub use pool::ReplicaPool;
 pub use schedule::{Plateau, Plateaus, Schedule};
 pub use select::{Fenwick, SelectorKind};
 pub use shard::{MergeMode, ParallelismPlan, ShardStats, ShardedEngine};
-pub use snowball::{Datapath, EngineConfig, Mode, RunResult, SnowballEngine, StepOutcome};
+pub use snowball::{
+    Datapath, EngineCheckpoint, EngineConfig, Mode, RunResult, SnowballEngine, StepOutcome,
+};
 pub use tempering::{ParallelTempering, TemperingResult};

@@ -9,6 +9,15 @@
 //! `Err(`[`GateAborted`]`)` immediately, so surviving lanes unwind
 //! cleanly and the panic can be re-raised at the replica boundary.
 //!
+//! The same release path doubles as **graceful preemption**:
+//! [`stop`](SyncGate::stop) aborts the gate *with* a [`StopCause`]
+//! (cancel / deadline / shutdown). Waiters unwind identically; the
+//! shard engine then reads [`stop_cause`](SyncGate::stop_cause) after
+//! joining its lanes to tell "a lane died" (no cause — re-raise the
+//! panic) from "the job was preempted" (cause — return the best-so-far
+//! incumbent as a partial result). The first cause recorded wins and
+//! is sticky, matching [`crate::stop::StopToken`] semantics.
+//!
 //! Rounds are tracked by a **wrapping** generation counter: a waiter
 //! parks while `generation` still equals the value it read on arrival,
 //! and the last arriver bumps the counter (waking the round). Equality
@@ -24,6 +33,7 @@
 //! generation rollover across every interleaving. The deterministic
 //! in-module stress tests below additionally run under Miri in CI.
 
+use crate::stop::StopCause;
 use crate::sync::{Condvar, Mutex};
 
 /// An abortable S-party barrier (see the module docs).
@@ -43,6 +53,9 @@ struct GateState {
     arrived: usize,
     generation: u64,
     aborted: bool,
+    /// Why the gate was aborted, when the abort was a *preemption*
+    /// ([`SyncGate::stop`]) rather than a lane panic ([`SyncGate::abort`]).
+    cause: Option<StopCause>,
 }
 
 /// The gate was aborted — a sibling lane panicked.
@@ -63,7 +76,7 @@ impl SyncGate {
     pub fn with_start_generation(parties: usize, generation: u64) -> Self {
         Self {
             parties: parties.max(1),
-            state: Mutex::new(GateState { arrived: 0, generation, aborted: false }),
+            state: Mutex::new(GateState { arrived: 0, generation, aborted: false, cause: None }),
             cv: Condvar::new(),
         }
     }
@@ -77,6 +90,7 @@ impl SyncGate {
     /// (`Ok(true)`). Returns `Err(GateAborted)` — immediately, or from
     /// mid-wait — once [`abort`](Self::abort) has been called.
     pub fn wait(&self) -> Result<bool, GateAborted> {
+        crate::failpoint::hit("gate.arrive");
         let mut st = self.state.lock().unwrap();
         if st.aborted {
             return Err(GateAborted);
@@ -103,6 +117,25 @@ impl SyncGate {
     pub fn abort(&self) {
         self.state.lock().unwrap().aborted = true;
         self.cv.notify_all();
+    }
+
+    /// Abort the gate as a *preemption*, recording why. Identical
+    /// release semantics to [`abort`](Self::abort); additionally the
+    /// first cause ever recorded is kept (sticky, first wins) so a
+    /// panic-abort racing a cancel-stop cannot relabel the outcome.
+    pub fn stop(&self, cause: StopCause) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        if st.cause.is_none() {
+            st.cause = Some(cause);
+        }
+        self.cv.notify_all();
+    }
+
+    /// The preemption cause, if the gate was released by
+    /// [`stop`](Self::stop) rather than a bare [`abort`](Self::abort).
+    pub fn stop_cause(&self) -> Option<StopCause> {
+        self.state.lock().unwrap().cause
     }
 }
 
@@ -212,6 +245,30 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(leaders.load(Ordering::Relaxed), rounds, "one leader per wrapped round");
+    }
+
+    /// `stop` releases waiters exactly like `abort` but records a
+    /// sticky first-wins cause; a bare `abort` records none.
+    #[test]
+    fn stop_carries_a_sticky_first_cause() {
+        use crate::stop::StopCause;
+        let gate = Arc::new(SyncGate::new(2));
+        let parked = {
+            let gate = gate.clone();
+            std::thread::spawn(move || gate.wait())
+        };
+        gate.stop(StopCause::Deadline);
+        assert_eq!(parked.join().unwrap(), Err(GateAborted), "stop must release waiters");
+        assert_eq!(gate.wait(), Err(GateAborted), "stop is sticky like abort");
+        assert_eq!(gate.stop_cause(), Some(StopCause::Deadline));
+        // Later causes (and bare aborts) never relabel the first.
+        gate.stop(StopCause::Cancel);
+        gate.abort();
+        assert_eq!(gate.stop_cause(), Some(StopCause::Deadline));
+
+        let plain = SyncGate::new(1);
+        plain.abort();
+        assert_eq!(plain.stop_cause(), None, "panic-abort carries no cause");
     }
 
     /// Degenerate single-party gate: every wait is its own leader.

@@ -213,6 +213,7 @@ impl MailboxGrid {
     /// window this only triggers if a peer stops draining entirely, in
     /// which case stalling *is* the bounded-staleness guarantee.
     pub fn post(&self, from: usize, flip: Flip) {
+        crate::failpoint::hit("mailbox.post");
         for c in 0..self.shards {
             if c == from {
                 continue;

@@ -70,10 +70,11 @@ use self::gate::{GateAborted, SyncGate};
 use self::mailbox::{Flip, MailboxGrid};
 use super::lane::LaneKernel;
 use super::lut::{PwlLogistic, ONE_Q16};
-use super::snowball::{EngineConfig, Mode, RunResult};
+use super::snowball::{EngineConfig, Mode, RunResult, STOP_CHECK_STRIDE};
 use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, Partition, SpinVec};
 use crate::rng::{salt, StatelessRng};
+use crate::stop::StopToken;
 use crate::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 
@@ -226,9 +227,19 @@ impl<'m> ShardedEngine<'m> {
 
     /// Run to completion, returning the result plus shard diagnostics.
     pub fn run_with_stats(&mut self) -> (RunResult, ShardStats) {
+        self.run_with_stop(&StopToken::new())
+    }
+
+    /// Run, honoring cooperative preemption: the virtual-time loop
+    /// polls `stop` every [`STOP_CHECK_STRIDE`] steps; async lanes
+    /// check it at each epoch boundary and propagate the cause to
+    /// their siblings through [`SyncGate::stop`] — so a preempted
+    /// sharded run returns its best incumbent as of the last sync
+    /// point (`stopped = Some(cause)`) instead of wedging or vanishing.
+    pub fn run_with_stop(&mut self, stop: &StopToken) -> (RunResult, ShardStats) {
         match self.merge {
-            MergeMode::VirtualTime => self.run_virtual(),
-            MergeMode::Async => self.run_async(),
+            MergeMode::VirtualTime => self.run_virtual(stop),
+            MergeMode::Async => self.run_async(stop),
         }
     }
 
@@ -247,7 +258,7 @@ impl<'m> ShardedEngine<'m> {
     /// engine's — byte for byte, for BOTH selectors and BOTH datapaths.
     ///
     /// [`LaneKernel`]: super::lane::LaneKernel
-    fn run_virtual(&mut self) -> (RunResult, ShardStats) {
+    fn run_virtual(&mut self, stop: &StopToken) -> (RunResult, ShardStats) {
         let start = std::time::Instant::now();
         let model = self.model;
         let n = model.len();
@@ -282,7 +293,15 @@ impl<'m> ShardedEngine<'m> {
 
         let uniformized = matches!(self.cfg.mode, Mode::RouletteUniformized);
         let mut w_shard = vec![0u64; s_count];
+        let mut executed = 0u64;
+        let mut stopped = None;
         for t in 0..steps {
+            if t % STOP_CHECK_STRIDE == 0 {
+                if let Some(cause) = stop.get() {
+                    stopped = Some(cause);
+                    break;
+                }
+            }
             let temp = self.cfg.schedule.temperature(t, steps);
             match self.cfg.mode {
                 Mode::RandomScan => {
@@ -376,6 +395,7 @@ impl<'m> ShardedEngine<'m> {
             if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
                 trace.push((t + 1, energy));
             }
+            executed = t + 1;
         }
         let result = RunResult {
             best_energy,
@@ -384,11 +404,12 @@ impl<'m> ShardedEngine<'m> {
             final_energy: energy,
             final_spins: spins,
             trace,
-            steps,
+            steps: executed,
             flips,
             fallbacks,
             nulls,
             wall: start.elapsed(),
+            stopped,
         };
         let stats = ShardStats {
             shards: s_count,
@@ -404,7 +425,7 @@ impl<'m> ShardedEngine<'m> {
     // Async merge: one thread per shard, mailboxes, epoch barriers.
     // ------------------------------------------------------------------
 
-    fn run_async(&mut self) -> (RunResult, ShardStats) {
+    fn run_async(&mut self, stop: &StopToken) -> (RunResult, ShardStats) {
         let start = std::time::Instant::now();
         let model = self.model;
         let n = model.len();
@@ -434,6 +455,7 @@ impl<'m> ShardedEngine<'m> {
             fallbacks: 0,
             nulls: 0,
             wall: std::time::Duration::ZERO,
+            stopped: None,
         };
         let mut stats = ShardStats {
             shards: s_count,
@@ -482,6 +504,7 @@ impl<'m> ShardedEngine<'m> {
                 fallbacks: 0,
                 nulls: 0,
                 max_lag: 0,
+                steps_done: 0,
                 pinned: false,
             })
             .collect();
@@ -507,6 +530,7 @@ impl<'m> ShardedEngine<'m> {
         let (lut_ref, pins_ref) = (&lut, &pin_targets);
         let (grid_ref, gate_ref, partials_ref) = (&grid, &gate, &partials);
         let (snapshot_ref, tracker_ref, panic_ref) = (&snapshot, &tracker, &panic_slot);
+        let stop_ref = stop;
         std::thread::scope(|scope| {
             for lane in lanes.iter_mut() {
                 scope.spawn(move || {
@@ -532,6 +556,7 @@ impl<'m> ShardedEngine<'m> {
                                 partials_ref,
                                 snapshot_ref,
                                 tracker_ref,
+                                stop_ref,
                             );
                         }));
                     if let Err(payload) = outcome {
@@ -554,13 +579,26 @@ impl<'m> ShardedEngine<'m> {
         if self.cfg.trace_stride > 0 {
             result.trace.extend(tracker.samples);
         }
+        result.steps = 0;
         for lane in &lanes {
             result.flips += lane.flips;
             result.fallbacks += lane.fallbacks;
             result.nulls += lane.nulls;
+            result.steps += lane.steps_done;
             stats.per_shard_flips[lane.index] = lane.flips;
             stats.max_lag = stats.max_lag.max(lane.max_lag);
             stats.pinned_lanes += lane.pinned as usize;
+        }
+        result.stopped = gate.stop_cause();
+        if result.stopped.is_some() {
+            // Preempted mid-barrier: the spin snapshot may mix slices
+            // published after the last leader pass with older ones, so
+            // the tracked `last_energy` can describe a configuration
+            // the snapshot no longer holds. One oracle evaluation (once
+            // per preempted run) restores the final-state invariant;
+            // best_* stays internally consistent by construction (the
+            // leader copies energy and spins under one lock).
+            result.final_energy = model.energy(&result.final_spins);
         }
         stats.sync_points = epochs;
         result.wall = start.elapsed();
@@ -592,6 +630,10 @@ struct Lane {
     fallbacks: u64,
     nulls: u64,
     max_lag: u64,
+    /// Local steps completed, updated at each epoch boundary — summed
+    /// across lanes into `RunResult.steps` so a preempted run reports
+    /// how far it actually got.
+    steps_done: u64,
     /// Whether this lane's thread was pinned to a core.
     pinned: bool,
 }
@@ -704,9 +746,18 @@ impl Lane {
         partials: &[AtomicI64],
         snapshot: &Mutex<SpinVec>,
         tracker: &Mutex<EnergyTracker>,
+        stop: &StopToken,
     ) {
         let epochs = steps_local.div_ceil(window);
         for e in 0..epochs {
+            // Preemption check once per epoch: whichever lane notices
+            // first stops the gate with the cause, which releases (and
+            // permanently fails) every sibling's next `wait` — all S
+            // lanes unwind within one epoch.
+            if let Some(cause) = stop.get() {
+                gate.stop(cause);
+                return;
+            }
             let end = ((e + 1) * window).min(steps_local);
             for k in (e * window)..end {
                 // Opportunistic drain keeps cross-shard fields as fresh
@@ -721,6 +772,7 @@ impl Lane {
                 let temp = cfg.schedule.temperature(k, steps_local);
                 self.step(model, adj, planes, lut, grid, cfg.mode, k, temp);
             }
+            self.steps_done = end;
             // Phase A: every lane has finished the epoch — no more
             // producers until phase C releases.
             if gate.wait().is_err() {
@@ -928,6 +980,53 @@ mod tests {
         assert_eq!(r0.best_energy, p.model().energy(&r0.best_spins));
         assert_eq!(r0.flips, 0);
         assert_eq!(r0.steps, 0);
+    }
+
+    /// Cooperative preemption in both merge modes: a tripped
+    /// [`StopToken`] turns the run into a well-formed partial result —
+    /// `stopped` carries the cause, `steps` reports how far the run
+    /// got, and the energies still match the dense oracle.
+    #[test]
+    fn stop_token_preempts_both_merge_modes() {
+        use crate::stop::StopCause;
+        let rng = StatelessRng::new(47);
+        let p = MaxCut::new(generators::erdos_renyi(96, 380, &[-1, 1], &rng));
+
+        // Pre-tripped: both modes must bail before doing any work.
+        for merge in [MergeMode::VirtualTime, MergeMode::Async] {
+            let stop = StopToken::new();
+            stop.trip(StopCause::Cancel);
+            let mut e = ShardedEngine::new(p.model(), cfg(Mode::RouletteWheel, 10_000, 5, 3), merge)
+                .with_window(16);
+            let (r, _) = e.run_with_stop(&stop);
+            assert_eq!(r.stopped, Some(StopCause::Cancel), "{merge:?}");
+            assert_eq!(r.steps, 0, "{merge:?}: no step may run after a pre-trip");
+            assert_eq!(r.final_energy, p.model().energy(&r.final_spins), "{merge:?}");
+            assert_eq!(r.best_energy, p.model().energy(&r.best_spins), "{merge:?}");
+        }
+
+        // Mid-run: trip from another thread; async lanes must propagate
+        // the cause through the gate and all unwind within one epoch.
+        let stop = std::sync::Arc::new(StopToken::new());
+        let tripper = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                stop.trip(StopCause::Deadline);
+            })
+        };
+        let mut e = ShardedEngine::new(
+            p.model(),
+            cfg(Mode::RouletteWheel, 400_000_000, 5, 3),
+            MergeMode::Async,
+        )
+        .with_window(64);
+        let (r, _) = e.run_with_stop(&stop);
+        tripper.join().unwrap();
+        assert_eq!(r.stopped, Some(StopCause::Deadline));
+        assert!(r.steps < 400_000_000, "preempted run must stop early");
+        assert_eq!(r.final_energy, p.model().energy(&r.final_spins));
+        assert_eq!(r.best_energy, p.model().energy(&r.best_spins));
     }
 
     /// Lanes honor `EngineConfig.selector`: both selectors make

@@ -36,6 +36,12 @@ use super::select::SelectorKind;
 use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
+use crate::stop::{StopCause, StopToken};
+
+/// How often the run loop polls its [`StopToken`]: one `Acquire` load
+/// every this many steps — noise next to a single step's field walk,
+/// yet ~10⁴× finer than any millisecond-scale deadline needs.
+pub const STOP_CHECK_STRIDE: u64 = 64;
 
 /// Spin-selection mode (the paper's dual-mode switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -158,6 +164,8 @@ pub struct RunResult {
     pub final_spins: SpinVec,
     /// `(step, energy)` samples when tracing was enabled.
     pub trace: Vec<(u64, i64)>,
+    /// Steps actually executed — `cfg.steps` unless the run was
+    /// preempted (then [`stopped`](Self::stopped) says why).
     pub steps: u64,
     /// Accepted flips (== steps − nulls − rejected in Mode I).
     pub flips: u64,
@@ -166,6 +174,41 @@ pub struct RunResult {
     /// Uniformized null transitions.
     pub nulls: u64,
     pub wall: std::time::Duration,
+    /// `Some(cause)` when a [`StopToken`] preempted the run before
+    /// `cfg.steps`; the best/final state is the valid best-so-far
+    /// incumbent at the preemption point.
+    pub stopped: Option<StopCause>,
+}
+
+/// A point-in-time snapshot of a running engine, sufficient to resume
+/// the run **bit-identically** (see
+/// [`SnowballEngine::from_checkpoint`]): the stateless RNG is keyed by
+/// `(seed, t, salt)` and the schedule temperature is a pure function
+/// of `(t, steps)`, so replaying from `(spins, step)` regenerates
+/// exactly the trajectory an uninterrupted run would have taken.
+///
+/// This is what the coordinator's `JobJournal` stores per replica —
+/// the checkpoint/retry path never re-materializes coupling state (the
+/// model stays shared) and never re-runs completed steps.
+#[derive(Clone, Debug)]
+pub struct EngineCheckpoint {
+    /// The engine seed (`cfg.seed` — already the per-replica child
+    /// seed when the scheduler took the snapshot).
+    pub seed: u64,
+    /// Steps already executed; the resumed loop starts at `t = step`.
+    pub step: u64,
+    /// Chain configuration at `step`.
+    pub spins: SpinVec,
+    /// Energy of `spins` (cross-checked on resume).
+    pub energy: i64,
+    pub best_energy: i64,
+    pub best_step: u64,
+    pub best_spins: SpinVec,
+    /// Cumulative counters at `step`, carried across resume so the
+    /// final `RunResult` is identical to an uninterrupted run's.
+    pub flips: u64,
+    pub fallbacks: u64,
+    pub nulls: u64,
 }
 
 /// The Snowball engine over one Ising instance.
@@ -192,6 +235,19 @@ impl<'m> SnowballEngine<'m> {
         let rng = StatelessRng::new(cfg.seed);
         let spins = SpinVec::random(model.len(), &rng);
         Self::with_spins(model, cfg, spins)
+    }
+
+    /// Rebuild an engine from a [`EngineCheckpoint`], ready for
+    /// [`run_session`](Self::run_session) with `resume = Some(ck)`.
+    /// Local fields and energy are recomputed from the snapshot spins
+    /// (the cheap part — the model itself is shared, never rebuilt).
+    pub fn from_checkpoint(
+        model: &'m IsingModel,
+        cfg: EngineConfig,
+        ck: &EngineCheckpoint,
+    ) -> Self {
+        assert_eq!(cfg.seed, ck.seed, "resume must reuse the checkpointed seed");
+        Self::with_spins(model, cfg, ck.spins.clone())
     }
 
     /// Build with an explicit initial configuration.
@@ -229,19 +285,69 @@ impl<'m> SnowballEngine<'m> {
 
     /// Run the configured number of steps.
     pub fn run(&mut self) -> RunResult {
+        self.run_with_stop(&StopToken::new())
+    }
+
+    /// Run, checking `stop` at [`STOP_CHECK_STRIDE`]-step boundaries; a
+    /// tripped token returns the best-so-far incumbent as a well-formed
+    /// partial result (`stopped = Some(cause)`).
+    pub fn run_with_stop(&mut self, stop: &StopToken) -> RunResult {
+        self.run_session(stop, None, 0, |_| {})
+    }
+
+    /// The full-control run loop behind [`run`](Self::run): cooperative
+    /// preemption via `stop`, optional resume from a checkpoint, and
+    /// periodic checkpoint capture.
+    ///
+    /// * `resume` — continue a run snapshot taken by an earlier
+    ///   session; the engine must have been built with
+    ///   [`from_checkpoint`](Self::from_checkpoint) on the same
+    ///   checkpoint. Because every RNG draw is keyed by `(seed, t,
+    ///   salt)` and the temperature is a pure function of `(t, steps)`,
+    ///   the resumed trajectory is **bit-identical** to an
+    ///   uninterrupted run (pinned by `tests/lifecycle.rs`); only
+    ///   `trace` (covers the resumed tail) and `wall` differ.
+    /// * `checkpoint_stride` — hand a fresh [`EngineCheckpoint`] to
+    ///   `on_checkpoint` every that-many steps (0 = never). Capture
+    ///   draws nothing from the RNG, so checkpointing cannot perturb
+    ///   the run.
+    pub fn run_session(
+        &mut self,
+        stop: &StopToken,
+        resume: Option<&EngineCheckpoint>,
+        checkpoint_stride: u64,
+        mut on_checkpoint: impl FnMut(&EngineCheckpoint),
+    ) -> RunResult {
         let start = std::time::Instant::now();
         let steps = self.cfg.steps;
-        let mut best_energy = self.energy;
-        let mut best_step = 0u64;
-        let mut best_spins = self.kernel.spins().clone();
+        let t0 = resume.map_or(0, |ck| ck.step);
+        if let Some(ck) = resume {
+            assert_eq!(ck.seed, self.cfg.seed, "resume must reuse the checkpointed seed");
+            assert_eq!(
+                ck.energy, self.energy,
+                "resume state mismatch: engine was not built from this checkpoint"
+            );
+        }
+        let mut best_energy = resume.map_or(self.energy, |ck| ck.best_energy);
+        let mut best_step = resume.map_or(0, |ck| ck.best_step);
+        let mut best_spins =
+            resume.map_or_else(|| self.kernel.spins().clone(), |ck| ck.best_spins.clone());
         let mut trace = Vec::new();
-        let mut flips = 0u64;
-        let mut fallbacks = 0u64;
-        let mut nulls = 0u64;
-        if self.cfg.trace_stride > 0 {
+        let mut flips = resume.map_or(0, |ck| ck.flips);
+        let mut fallbacks = resume.map_or(0, |ck| ck.fallbacks);
+        let mut nulls = resume.map_or(0, |ck| ck.nulls);
+        let mut executed = t0;
+        let mut stopped = None;
+        if self.cfg.trace_stride > 0 && t0 == 0 {
             trace.push((0, self.energy));
         }
-        for t in 0..steps {
+        for t in t0..steps {
+            if t % STOP_CHECK_STRIDE == 0 {
+                if let Some(cause) = stop.get() {
+                    stopped = Some(cause);
+                    break;
+                }
+            }
             let temp = self.cfg.schedule.temperature(t, steps);
             let outcome = self.step(t, temp);
             match outcome {
@@ -264,6 +370,23 @@ impl<'m> SnowballEngine<'m> {
             if self.cfg.trace_stride > 0 && (t + 1) % self.cfg.trace_stride == 0 {
                 trace.push((t + 1, self.energy));
             }
+            executed = t + 1;
+            if checkpoint_stride > 0 && (t + 1) % checkpoint_stride == 0 && t + 1 < steps {
+                let ck = EngineCheckpoint {
+                    seed: self.cfg.seed,
+                    step: t + 1,
+                    spins: self.kernel.spins().clone(),
+                    energy: self.energy,
+                    best_energy,
+                    best_step,
+                    best_spins: best_spins.clone(),
+                    flips,
+                    fallbacks,
+                    nulls,
+                };
+                on_checkpoint(&ck);
+                crate::failpoint::hit("engine.checkpoint");
+            }
         }
         RunResult {
             best_energy,
@@ -272,11 +395,12 @@ impl<'m> SnowballEngine<'m> {
             final_energy: self.energy,
             final_spins: self.kernel.spins().clone(),
             trace,
-            steps,
+            steps: executed,
             flips,
             fallbacks,
             nulls,
             wall: start.elapsed(),
+            stopped,
         }
     }
 
@@ -507,6 +631,64 @@ mod tests {
         let r = e.run();
         let steps: Vec<u64> = r.trace.iter().map(|&(s, _)| s).collect();
         assert_eq!(steps, vec![0, 25, 50, 75, 100]);
+    }
+
+    /// A pre-tripped stop token preempts the run at the first check
+    /// boundary with a well-formed partial result; an untripped one is
+    /// invisible.
+    #[test]
+    fn stop_token_preempts_with_valid_partial_result() {
+        let p = small_instance(110);
+        let cfg = EngineConfig::new(Mode::RouletteWheel, 5_000, 19);
+        let stop = StopToken::new();
+        stop.trip(StopCause::Cancel);
+        let mut e = SnowballEngine::new(p.model(), cfg.clone());
+        let r = e.run_with_stop(&stop);
+        assert_eq!(r.stopped, Some(StopCause::Cancel));
+        assert_eq!(r.steps, 0, "pre-tripped token stops at the first boundary");
+        assert_eq!(r.best_energy, p.model().energy(&r.best_spins), "incumbent must be valid");
+
+        let mut e = SnowballEngine::new(p.model(), cfg);
+        let r = e.run_with_stop(&StopToken::new());
+        assert_eq!(r.stopped, None);
+        assert_eq!(r.steps, 5_000);
+    }
+
+    /// Checkpoint capture + resume is bit-identical to the
+    /// uninterrupted run (the contract the coordinator's retry path
+    /// builds on), and capture itself never perturbs the trajectory.
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let p = small_instance(111);
+        let cfg = EngineConfig::new(Mode::RouletteWheel, 2_000, 23);
+        let baseline = SnowballEngine::new(p.model(), cfg.clone()).run();
+
+        let mut checkpoints = Vec::new();
+        let mut e = SnowballEngine::new(p.model(), cfg.clone());
+        let observed =
+            e.run_session(&StopToken::new(), None, 300, |ck| checkpoints.push(ck.clone()));
+        assert_eq!(observed.best_energy, baseline.best_energy, "capture perturbed the run");
+        assert_eq!(observed.final_energy, baseline.final_energy);
+        assert_eq!(checkpoints.len(), 6, "2000/300 interior checkpoints");
+
+        // Resume from EVERY checkpoint: identical observable run tuple.
+        for ck in &checkpoints {
+            let mut r = SnowballEngine::from_checkpoint(p.model(), cfg.clone(), ck);
+            let resumed = r.run_session(&StopToken::new(), Some(ck), 0, |_| {});
+            assert_eq!(resumed.best_energy, baseline.best_energy, "resume from {}", ck.step);
+            assert_eq!(resumed.best_step, baseline.best_step);
+            assert_eq!(resumed.best_spins, baseline.best_spins);
+            assert_eq!(resumed.final_energy, baseline.final_energy);
+            assert_eq!(resumed.final_spins, baseline.final_spins);
+            assert_eq!(resumed.steps, baseline.steps);
+            assert_eq!(
+                (resumed.flips, resumed.fallbacks, resumed.nulls),
+                (baseline.flips, baseline.fallbacks, baseline.nulls),
+                "cumulative counters must carry across resume (from {})",
+                ck.step
+            );
+            assert_eq!(resumed.stopped, None);
+        }
     }
 
     /// Statistical check of the detailed-balance consequence: at fixed T

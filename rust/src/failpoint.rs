@@ -1,0 +1,116 @@
+//! Fault-injection failpoints: named sites where tests can make the
+//! process misbehave on purpose.
+//!
+//! Compiled only under the `failpoints` cargo feature; in default
+//! builds [`hit`] is an empty `#[inline(always)]` function, so the
+//! sites cost nothing in release binaries and cannot fire in
+//! production. With the feature on, a test arms a site by name
+//! ([`arm_panic`]) and the next hits of that site count down a skip
+//! budget and then panic — exercising exactly the unwind paths the
+//! checkpoint/retry machinery (docs/ARCHITECTURE.md § Job lifecycle &
+//! fault tolerance) exists to survive.
+//!
+//! Sites in the tree (grep for `failpoint::hit`):
+//!
+//! | site                | where it fires                                  |
+//! |---------------------|--------------------------------------------------|
+//! | `pool.run`          | inside a replica work item, before the run       |
+//! | `mailbox.post`      | a shard lane broadcasting a flip to its peers    |
+//! | `gate.arrive`       | a shard lane arriving at the epoch barrier       |
+//! | `engine.checkpoint` | right after a replica records a checkpoint       |
+//!
+//! The registry is process-global, so tests that arm sites must not
+//! run concurrently with tests that assume clean sites —
+//! `tests/chaos.rs` runs under `--test-threads=1` in CI and disarms in
+//! a drop guard. The panic payload carries the site name
+//! (`"failpoint <site> fired"`), which the scheduler's catch-unwind
+//! path surfaces verbatim in the job's failure message.
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    fn registry() -> &'static Mutex<HashMap<String, usize>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<String, usize>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Arm `site` to panic on its `skip + 1`-th upcoming hit (`skip = 0`
+    /// fires on the very next hit). One-shot: firing disarms the site.
+    /// Re-arming an armed site replaces its skip budget.
+    pub fn arm_panic(site: &str, skip: usize) {
+        registry().lock().unwrap().insert(site.to_string(), skip);
+    }
+
+    /// Disarm `site` if armed.
+    pub fn disarm(site: &str) {
+        registry().lock().unwrap().remove(site);
+    }
+
+    /// Disarm every site (test-teardown hygiene).
+    pub fn disarm_all() {
+        registry().lock().unwrap().clear();
+    }
+
+    /// Execution passes through the failpoint `site`: counts down an
+    /// armed skip budget and panics when it expires. The lock is
+    /// released before panicking so the registry is never poisoned.
+    pub fn hit(site: &str) {
+        let fire = {
+            let mut reg = registry().lock().unwrap();
+            match reg.get_mut(site) {
+                Some(0) => {
+                    reg.remove(site);
+                    true
+                }
+                Some(skip) => {
+                    *skip -= 1;
+                    false
+                }
+                None => false,
+            }
+        };
+        if fire {
+            panic!("failpoint {site} fired");
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn unarmed_sites_are_inert_and_skip_counts_down() {
+            // One sequential test owns every site it touches (the
+            // registry is process-global; site names are unique here).
+            hit("fp.test.inert");
+
+            arm_panic("fp.test.skip", 2);
+            hit("fp.test.skip");
+            hit("fp.test.skip");
+            let fired =
+                std::panic::catch_unwind(|| hit("fp.test.skip")).expect_err("third hit fires");
+            let msg = fired.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("failpoint fp.test.skip fired"), "payload names the site: {msg}");
+            // One-shot: the site disarmed itself.
+            hit("fp.test.skip");
+
+            arm_panic("fp.test.disarm", 0);
+            disarm("fp.test.disarm");
+            hit("fp.test.disarm");
+
+            arm_panic("fp.test.all", 0);
+            disarm_all();
+            hit("fp.test.all");
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use imp::{arm_panic, disarm, disarm_all, hit};
+
+/// Default build: failpoints compile to nothing.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn hit(_site: &str) {}

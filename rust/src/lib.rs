@@ -21,6 +21,10 @@
 //!   loom's instrumented primitives under `--cfg loom`, so the shard
 //!   engine's synchronization is model-checkable
 //!   (`docs/ARCHITECTURE.md` § Concurrency correctness).
+//! * [`stop`] — the shared cancel/deadline/shutdown [`stop::StopToken`]
+//!   behind the fault-tolerant job lifecycle.
+//! * [`failpoint`] — named fault-injection sites (feature
+//!   `failpoints`; zero-cost when off) driving `tests/chaos.rs`.
 //!
 //! ## Unsafe-code policy
 //!
@@ -50,6 +54,8 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 #[forbid(unsafe_code)]
+pub mod failpoint;
+#[forbid(unsafe_code)]
 pub mod graph;
 #[forbid(unsafe_code)]
 pub mod harness;
@@ -63,6 +69,8 @@ pub mod problems;
 pub mod rng;
 #[forbid(unsafe_code)]
 pub mod runtime;
+#[forbid(unsafe_code)]
+pub mod stop;
 pub mod sync;
 #[forbid(unsafe_code)]
 pub mod testutil;

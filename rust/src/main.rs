@@ -4,8 +4,9 @@
 //!   solve  --instance <id|er:n:m> [--mode rsa|rwa] [--steps N] [--replicas R]
 //!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
 //!          [--workers W] [--selector scan|fenwick] [--shards S] [--pin-lanes]
+//!          [--budget-ms MS] [--max-retries K]
 //!   serve  [--addr host:port] [--workers W] [--max-inflight-replicas N]
-//!          [--reject-saturated]
+//!          [--reject-saturated] [--shutdown-grace-ms MS]
 //!   bench  <table1|table2|table3|fig3|fig8|fig13|fig14|fig15> [options]
 //!   gen    --instance <id> --out <path>       (write Gset-format file)
 //!   info                                        (platform / artifact info)
@@ -50,11 +51,20 @@ USAGE:
                  [--steps N] [--replicas R] [--seed S]
                  [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
                  [--selector scan|fenwick] [--shards S] [--pin-lanes]
+                 [--budget-ms MS] [--max-retries K]
                     (--shards: 1 = classic engine, >1 = async sharded
                      lanes per replica, 0 = auto by instance size;
-                     --pin-lanes: pin lane threads to cores, Linux)
+                     --pin-lanes: pin lane threads to cores, Linux;
+                     --budget-ms: wall-clock budget, 0 = none — on
+                     expiry the job is preempted and the best-so-far
+                     partial result is reported;
+                     --max-retries: re-run panicked replicas from
+                     their last checkpoint up to K times)
   snowball serve [--addr 127.0.0.1:7878] [--workers W]
                  [--max-inflight-replicas N] [--reject-saturated]
+                 [--shutdown-grace-ms MS]
+                    (--shutdown-grace-ms: on shutdown, abort jobs
+                     still running after MS instead of draining)
   snowball bench <table1|table2|table3|fig3|fig5|fig8|fig13|fig14|fig15> [--quick]
   snowball gen   --instance <id> --out <path>
   snowball info
@@ -104,6 +114,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         snowball::engine::shard::MAX_SHARDS
     );
     let pin_lanes = args.flag("pin-lanes") || fj.map(|j| j.pin_lanes).unwrap_or(false);
+    let budget_ms: u64 = args.get_parse_or("budget-ms", 0u64)?;
+    let max_retries: u32 = args.get_parse_or("max-retries", 0u32)?;
 
     let w_total: i64 = -model.j_matrix().iter().map(|&v| v as i64).sum::<i64>() / 2;
     let coord = Coordinator::start(workers);
@@ -119,6 +131,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         target_energy: target,
         shards,
         pin_lanes,
+        budget_ms,
+        max_retries,
         backend: Backend::Native,
     });
     let r = coord.wait(id).ok_or_else(|| {
@@ -131,6 +145,16 @@ fn cmd_solve(args: &Args) -> Result<()> {
             _ => anyhow::anyhow!("job failed"),
         }
     })?;
+    if !r.completed {
+        // Preempted (deadline or signal): the result below is the
+        // best-so-far partial, clearly labelled.
+        let state = match coord.state(id) {
+            Some(snowball::coordinator::JobState::TimedOut) => "timed_out",
+            Some(snowball::coordinator::JobState::Cancelled) => "cancelled",
+            _ => "preempted",
+        };
+        println!("state={state} (partial best-so-far result)");
+    }
     let best = r.best_energy();
     println!("instance={label} mode={} steps={steps} replicas={replicas}", mode.name());
     println!("best_energy={best} (cut={})", (w_total - best) / 2);
@@ -151,10 +175,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let workers: usize = args.get_parse_or("workers", 0usize)?;
     let max_inflight: usize = args.get_parse_or("max-inflight-replicas", 0usize)?;
+    let shutdown_grace_ms: u64 = args.get_parse_or("shutdown-grace-ms", 0u64)?;
     let coord = Coordinator::start_with(snowball::coordinator::CoordinatorConfig {
         workers,
         max_inflight_replicas: max_inflight,
         reject_when_saturated: args.flag("reject-saturated"),
+        shutdown_grace_ms,
         ..Default::default()
     });
     let svc = Service::bind(coord, &addr)?;

@@ -1,0 +1,141 @@
+//! Cooperative preemption: a shared [`StopToken`] that carries *why* a
+//! job is being stopped.
+//!
+//! The fault-tolerant job lifecycle (docs/ARCHITECTURE.md § Job
+//! lifecycle & fault tolerance) needs one signal that reaches every
+//! layer — `Coordinator::cancel`, the deadline wheel, and shutdown all
+//! trip the same token; the engine checks it at plateau boundaries and
+//! the shard lanes at epoch barriers. A preempted run then returns its
+//! best-so-far incumbent as a well-formed partial result instead of
+//! vanishing.
+//!
+//! The token is a single atomic: the **first** cause to trip wins and
+//! is sticky (a deadline firing after a cancel does not relabel the
+//! job), and observers read it with one `Acquire` load — cheap enough
+//! to poll every few engine steps. All primitives come from
+//! [`crate::sync`], so the token stays loom-checkable; only
+//! Acquire/Release orderings are used (the atomics policy bans SeqCst
+//! and restricts Relaxed — see `xtask lint-safety`).
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
+/// Why a run is being asked to stop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopCause {
+    /// An explicit `Coordinator::cancel` / protocol `CANCEL`.
+    Cancel,
+    /// The job's `budget_ms` deadline elapsed.
+    Deadline,
+    /// Coordinator shutdown after `shutdown_grace_ms`.
+    Shutdown,
+}
+
+impl StopCause {
+    fn code(self) -> usize {
+        match self {
+            StopCause::Cancel => 1,
+            StopCause::Deadline => 2,
+            StopCause::Shutdown => 3,
+        }
+    }
+
+    fn from_code(code: usize) -> Option<Self> {
+        match code {
+            1 => Some(StopCause::Cancel),
+            2 => Some(StopCause::Deadline),
+            3 => Some(StopCause::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// A shared, sticky, first-cause-wins stop request.
+///
+/// Clone-free by design: share it behind an `Arc` (the coordinator
+/// hands one per job to every replica and keeps one to trip).
+#[derive(Debug)]
+pub struct StopToken(AtomicUsize);
+
+// Manual impl: loom's `AtomicUsize` double has no `Default`, and the
+// token must stay loom-checkable.
+impl Default for StopToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StopToken {
+    /// A fresh, untripped token.
+    pub fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+
+    /// Request a stop with `cause`. Returns `true` if this call was the
+    /// first to trip the token; a later cause never overwrites the
+    /// first (cancel-then-deadline stays `Cancel`).
+    pub fn trip(&self, cause: StopCause) -> bool {
+        self.0.compare_exchange(0, cause.code(), Ordering::AcqRel, Ordering::Acquire).is_ok()
+    }
+
+    /// The cause the token was tripped with, if any.
+    pub fn get(&self) -> Option<StopCause> {
+        StopCause::from_code(self.0.load(Ordering::Acquire))
+    }
+
+    /// True once any cause has been recorded.
+    pub fn is_stopped(&self) -> bool {
+        self.get().is_some()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fresh_token_is_untripped() {
+        let t = StopToken::new();
+        assert_eq!(t.get(), None);
+        assert!(!t.is_stopped());
+    }
+
+    #[test]
+    fn first_cause_wins_and_is_sticky() {
+        let t = StopToken::new();
+        assert!(t.trip(StopCause::Cancel));
+        assert!(!t.trip(StopCause::Deadline), "second trip must lose");
+        assert!(!t.trip(StopCause::Cancel), "even the same cause trips once");
+        assert_eq!(t.get(), Some(StopCause::Cancel));
+        assert!(t.is_stopped());
+    }
+
+    #[test]
+    fn every_cause_round_trips() {
+        for cause in [StopCause::Cancel, StopCause::Deadline, StopCause::Shutdown] {
+            let t = StopToken::new();
+            assert!(t.trip(cause));
+            assert_eq!(t.get(), Some(cause));
+        }
+    }
+
+    #[test]
+    fn racing_trips_elect_exactly_one_cause() {
+        // Not a loom model (the token is one CAS — the interesting
+        // property is agreement, not ordering): many threads race to
+        // trip with different causes; all must observe the same winner.
+        let t = Arc::new(StopToken::new());
+        let handles: Vec<_> = [StopCause::Cancel, StopCause::Deadline, StopCause::Shutdown]
+            .into_iter()
+            .cycle()
+            .take(12)
+            .map(|cause| {
+                let t = t.clone();
+                std::thread::spawn(move || t.trip(cause))
+            })
+            .collect();
+        let winners = handles.into_iter().filter(|h| h.join().unwrap()).count();
+        assert_eq!(winners, 1, "exactly one trip call may win");
+        assert!(t.get().is_some());
+    }
+}

@@ -1,0 +1,291 @@
+//! Chaos suite (PR 7): seeded fault injection against the job
+//! lifecycle. Gated on the `failpoints` feature and run with
+//! `--test-threads=1` in CI (`cargo test --features failpoints --test
+//! chaos -- --test-threads=1`) because the failpoint registry is
+//! process-global.
+//!
+//! Every scenario asserts the robustness invariants, not scenario
+//! specifics: no wedged waiters (every `wait` returns), the admission
+//! budget drains to zero, occupancy gauges settle, terminal states are
+//! legal, and checkpointed retries are bit-identical to uninterrupted
+//! runs.
+
+#![cfg(feature = "failpoints")]
+
+use snowball::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, JobCtl, JobSpec, JobState, ReplicaScheduler, Service,
+};
+use snowball::engine::{Mode, Schedule, SelectorKind};
+use snowball::failpoint;
+use snowball::graph::generators;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Teardown hygiene: whatever a test armed (fired or not) is cleared
+/// even when the test itself panics.
+struct DisarmGuard;
+impl Drop for DisarmGuard {
+    fn drop(&mut self) {
+        failpoint::disarm_all();
+    }
+}
+
+/// Tiny seeded generator for churn decisions (the suite must be
+/// reproducible; no entropy from time or thread order).
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        // splitmix64 step — plenty for churn decisions.
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+fn spec(label: &str, seed: u64, steps: u64) -> JobSpec {
+    let rng = StatelessRng::new(seed);
+    let p = MaxCut::new(generators::erdos_renyi(40, 150, &[-1, 1], &rng));
+    JobSpec {
+        model: Arc::new(p.model().clone()),
+        label: label.into(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 5.0, t1: 0.05 },
+        steps,
+        replicas: 2,
+        seed,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
+        backend: Backend::Native,
+    }
+}
+
+fn key(v: &[snowball::coordinator::ReplicaResult]) -> Vec<(u32, i64, u64)> {
+    v.iter().map(|r| (r.replica, r.best_energy, r.flips)).collect()
+}
+
+/// Random cancels and a deadline storm against one coordinator:
+/// whatever order the preemptions land in, every job reaches a legal
+/// terminal state, the lifecycle counters account for every job
+/// exactly once, and the admission budget + occupancy gauges drain to
+/// zero.
+#[test]
+fn seeded_cancel_and_deadline_storm_conserves_accounting() {
+    let _guard = DisarmGuard;
+    let coord = Coordinator::start_with(CoordinatorConfig {
+        workers: 2,
+        max_inflight_replicas: 4,
+        ..Default::default()
+    });
+    let mut lcg = Lcg(0xC4A0_5);
+    const JOBS: usize = 18;
+    let mut ids = Vec::new();
+    let mut victims = Vec::new();
+    for j in 0..JOBS {
+        let slow = lcg.next() % 3 == 0;
+        let mut sp = spec(&format!("storm-{j}"), 900 + j as u64, if slow { 50_000_000 } else { 2_000 });
+        // Slow jobs always carry a tight budget so the storm drains
+        // even if their cancel loses the race.
+        sp.budget_ms = if slow { 10 + lcg.next() % 20 } else { 0 };
+        let id = coord.submit(sp);
+        if lcg.next() % 2 == 0 {
+            victims.push(id);
+        }
+        ids.push(id);
+    }
+    for &v in &victims {
+        // Cancel returning false is fine — the job may already be
+        // terminal; the verdict just must match the observed state.
+        let accepted = coord.cancel(v);
+        let state = coord.state(v).expect("submitted job has a state");
+        assert!(accepted || state.is_terminal(), "cancel refused a live job {v}: {state:?}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut tallies = (0u64, 0u64, 0u64); // done, cancelled, timed_out
+    for &id in &ids {
+        // No wedged waiters: every wait returns (None only for Failed,
+        // which nothing in this storm injects).
+        let r = coord.wait(id).expect("storm jobs never Fail");
+        match coord.state(id).expect("terminal state persists") {
+            JobState::Done => {
+                assert!(r.completed);
+                tallies.0 += 1;
+            }
+            JobState::Cancelled => {
+                assert!(!r.completed);
+                tallies.1 += 1;
+            }
+            JobState::TimedOut => {
+                assert!(!r.completed);
+                tallies.2 += 1;
+            }
+            other => panic!("illegal terminal state {other:?}"),
+        }
+    }
+    let m = &coord.metrics;
+    assert_eq!(m.get("jobs_done"), tallies.0);
+    assert_eq!(m.get("jobs_cancelled"), tallies.1);
+    assert_eq!(m.get("jobs_timed_out"), tallies.2);
+    assert_eq!(m.get("jobs_failed"), 0);
+    assert_eq!(tallies.0 + tallies.1 + tallies.2, JOBS as u64, "a job escaped the tally");
+    assert_eq!(coord.committed_weight(), 0, "admission budget leaked");
+    assert_eq!(m.gauge("jobs_running"), 0);
+    assert_eq!(m.gauge("jobs_queued"), 0);
+    assert_eq!(m.gauge("replicas_inflight"), 0);
+    coord.shutdown();
+}
+
+/// A replica killed before it runs (`pool.run` failpoint) is retried
+/// and the job completes — bit-identical to a fault-free run, since
+/// the retry replays the same stateless-RNG trajectory.
+#[test]
+fn injected_pool_panic_is_retried_and_completes_bit_identically() {
+    let _guard = DisarmGuard;
+    let clean = ReplicaScheduler::new(1).run_native(&spec("clean", 77, 6_000));
+    let coord = Coordinator::start(1);
+    let mut sp = spec("faulted", 77, 6_000);
+    sp.max_retries = 1;
+    failpoint::arm_panic("pool.run", 0);
+    let id = coord.submit(sp);
+    let r = coord.wait(id).expect("retried job completes");
+    assert_eq!(coord.state(id), Some(JobState::Done));
+    assert!(r.completed);
+    assert_eq!(key(&r.replicas), key(&clean), "retry diverged from the fault-free run");
+    assert_eq!(coord.metrics.get("jobs_retried"), 1);
+    assert_eq!(coord.metrics.get("jobs_failed"), 0);
+    coord.shutdown();
+}
+
+/// The acceptance scenario: a replica killed *mid-run* right after its
+/// first journaled checkpoint (`engine.checkpoint` failpoint) resumes
+/// from that checkpoint and finishes bit-identical to an uninterrupted
+/// run — both against a checkpointing-but-healthy control and against
+/// a plain run with no journal at all.
+#[test]
+fn injected_checkpoint_panic_resumes_bit_identically() {
+    let _guard = DisarmGuard;
+    let sched = ReplicaScheduler::new(1);
+    let mut sp = spec("ckpt", 31, 16_000); // stride 2000: 7 checkpoints fire
+    sp.replicas = 1;
+    let plain = sched.run_native(&sp);
+
+    let mut healthy_ctl = JobCtl::unmanaged();
+    healthy_ctl.max_retries = 1;
+    let healthy = sched.try_run_native_ctl(&sp, &healthy_ctl).expect("healthy run");
+
+    let mut faulted_ctl = JobCtl::unmanaged();
+    faulted_ctl.max_retries = 1;
+    failpoint::arm_panic("engine.checkpoint", 0); // dies right after checkpoint #1
+    let faulted = sched.try_run_native_ctl(&sp, &faulted_ctl).expect("retry survives the kill");
+
+    assert_eq!(faulted_ctl.journal.retries(), 1, "exactly one retry");
+    assert!(
+        faulted_ctl.journal.checkpoint(0).is_some(),
+        "the resumed attempt keeps journaling"
+    );
+    assert_eq!(key(&faulted), key(&healthy), "resume diverged from healthy checkpointed run");
+    assert_eq!(key(&faulted), key(&plain), "resume diverged from the plain engine run");
+}
+
+/// A shard lane killed mid-broadcast (`mailbox.post`) or at the epoch
+/// barrier (`gate.arrive`) aborts the gate — siblings unwind instead of
+/// wedging — and the sharded replica is retried from scratch (sharded
+/// runs don't checkpoint) to a well-formed result, promptly.
+#[test]
+fn sharded_lane_panic_unwinds_the_gate_and_retries() {
+    let _guard = DisarmGuard;
+    let sched = ReplicaScheduler::new(2);
+    for (site, skip) in [("mailbox.post", 8), ("gate.arrive", 4)] {
+        let mut sp = spec("lanes", 64, 2_000);
+        sp.replicas = 1;
+        sp.shards = 4;
+        let mut ctl = JobCtl::unmanaged();
+        ctl.max_retries = 1;
+        failpoint::arm_panic(site, skip);
+        let t0 = Instant::now();
+        let out = sched.try_run_native_ctl(&sp, &ctl).expect("lane panic must be retried");
+        assert!(t0.elapsed() < Duration::from_secs(30), "{site}: siblings wedged at the gate");
+        assert_eq!(ctl.journal.retries(), 1, "{site}: exactly one retry");
+        assert_eq!(out.len(), 1);
+        assert!(out[0].flips > 0, "{site}: retried replica made no progress");
+    }
+}
+
+/// With the retry budget exhausted the injected fault surfaces as a
+/// clean job failure: `wait` returns `None`, the state names the
+/// failpoint, and the coordinator keeps serving later jobs.
+#[test]
+fn retry_budget_exhaustion_fails_the_job_cleanly() {
+    let _guard = DisarmGuard;
+    let coord = Coordinator::start(1);
+    failpoint::arm_panic("pool.run", 0);
+    let doomed = coord.submit(spec("doomed", 5, 2_000)); // max_retries = 0
+    assert!(coord.wait(doomed).is_none(), "failed jobs yield no result");
+    match coord.state(doomed) {
+        Some(JobState::Failed(msg)) => {
+            assert!(msg.contains("failpoint pool.run fired"), "payload lost: {msg}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert_eq!(coord.metrics.get("jobs_failed"), 1);
+    assert_eq!(coord.committed_weight(), 0, "failure leaked admission budget");
+    // The coordinator is unharmed: the next job completes normally.
+    let next = coord.submit(spec("after", 6, 2_000));
+    assert!(coord.wait(next).is_some());
+    assert_eq!(coord.state(next), Some(JobState::Done));
+    coord.shutdown();
+}
+
+/// Client hang-up churn: clients park in `WAIT` on long jobs and
+/// vanish. The waiter gauge settles to zero (no leaked handler state),
+/// a surviving connection cancels everything, and nothing wedges.
+#[test]
+fn client_hangup_churn_leaves_no_wedged_waiters() {
+    let _guard = DisarmGuard;
+    let coord = Coordinator::start(2);
+    let metrics = coord.metrics.clone();
+    let addr = Service::bind(coord.clone(), "127.0.0.1:0").unwrap().serve_in_background();
+    let mut ids = Vec::new();
+    for c in 0..4u64 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "SOLVE instance=er:64:256 steps=2000000000 replicas=2 seed={}", 70 + c)
+            .unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        ids.push(id);
+        writeln!(s, "WAIT id={id}").unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        drop((s, r)); // hang up mid-WAIT
+    }
+    let t0 = Instant::now();
+    while metrics.gauge("service_waiters") != 0 && t0.elapsed() < Duration::from_secs(30) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(metrics.gauge("service_waiters"), 0, "abandoned waiters leaked");
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for id in &ids {
+        writeln!(s, "CANCEL id={id}").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("CANCELLED id={id}"));
+    }
+    for &id in &ids {
+        assert!(coord.wait(id).is_some(), "cancelled job {id} wedged");
+        assert_eq!(coord.state(id), Some(JobState::Cancelled));
+    }
+    assert_eq!(coord.committed_weight(), 0);
+    coord.shutdown();
+}

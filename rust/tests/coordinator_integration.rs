@@ -102,6 +102,8 @@ fn coordinator_direct_api_with_target_statistics() {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
         backend: Backend::Native,
     });
     let res = coord.wait(id).unwrap();

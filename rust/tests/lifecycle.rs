@@ -1,0 +1,127 @@
+//! Tier-1 end-to-end lifecycle acceptance (PR 7): deadlines, cancel
+//! and grace-bounded shutdown observed through the public coordinator
+//! API. The wire-level (`SOLVE budget_ms=` / `CANCEL`) counterparts
+//! live in the service unit tests; these exercise the same machinery
+//! on jobs whose *natural* runtime is minutes, so any promptness
+//! assertion that passes can only be explained by preemption working.
+
+use snowball::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, JobSpec, JobState,
+};
+use snowball::engine::{Mode, Schedule, SelectorKind};
+use snowball::graph::generators;
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A job that would run for minutes uninterrupted: the promptness
+/// bounds below are only satisfiable via preemption.
+fn long_job(label: &str, seed: u64, steps: u64, budget_ms: u64) -> JobSpec {
+    let rng = StatelessRng::new(seed);
+    let p = MaxCut::new(generators::erdos_renyi(96, 380, &[-1, 1], &rng));
+    JobSpec {
+        model: Arc::new(p.model().clone()),
+        label: label.into(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 6.0, t1: 0.05 },
+        steps,
+        replicas: 2,
+        seed,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms,
+        max_retries: 0,
+        backend: Backend::Native,
+    }
+}
+
+/// Acceptance: a `budget_ms = 50` job over an instance sized for
+/// minutes of work comes back `TimedOut` promptly, with a well-formed
+/// best-so-far partial result from every replica.
+#[test]
+fn deadline_preempts_oversized_job_within_envelope() {
+    let coord = Coordinator::start(2);
+    let t0 = Instant::now();
+    let id = coord.submit(long_job("deadline", 11, 2_000_000_000, 50));
+    let r = coord.wait(id).expect("timed-out job still publishes a result");
+    let elapsed = t0.elapsed();
+    assert_eq!(coord.state(id), Some(JobState::TimedOut));
+    assert!(!r.completed, "a preempted job must not claim completion");
+    assert_eq!(r.replicas.len(), 2, "partial result covers every replica");
+    // Promptness: the nominal acceptance envelope is ~2× the budget;
+    // the CI bound is looser (shared runners stall arbitrarily) but
+    // still orders of magnitude below the natural runtime, so only
+    // working preemption can pass it.
+    assert!(elapsed < Duration::from_secs(30), "preemption too slow: {elapsed:?}");
+    // The partial result carries a real incumbent, not a placeholder.
+    assert!(r.best_energy() < i64::MAX, "partial result must carry an incumbent energy");
+    for rep in &r.replicas {
+        assert!(rep.wall < Duration::from_secs(30), "replica wall time out of envelope");
+    }
+    assert_eq!(coord.metrics.get("jobs_timed_out"), 1);
+    assert_eq!(coord.metrics.get("jobs_done"), 0);
+    coord.shutdown();
+}
+
+/// Satellite (a): with `shutdown_grace_ms` set, `shutdown` under a
+/// 10⁹-step in-flight job completes promptly — the job is preempted to
+/// `Cancelled` with its best-so-far published, instead of the legacy
+/// drain waiting minutes for it.
+#[test]
+fn shutdown_grace_aborts_billion_step_job_promptly() {
+    let coord = Coordinator::start_with(CoordinatorConfig {
+        workers: 2,
+        shutdown_grace_ms: 50,
+        ..Default::default()
+    });
+    let id = coord.submit(long_job("grace", 13, 1_000_000_000, 0));
+    // Let it get off the queue and into the pool, so the grace path
+    // (not the pre-dispatch shortcut) is what aborts it.
+    let t0 = Instant::now();
+    while coord.state(id) == Some(JobState::Queued) && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(coord.state(id), Some(JobState::Running), "job never started");
+    let t1 = Instant::now();
+    coord.shutdown();
+    let r = coord.wait(id).expect("aborted job still publishes best-so-far");
+    assert!(
+        t1.elapsed() < Duration::from_secs(30),
+        "shutdown grace did not preempt promptly: {:?}",
+        t1.elapsed()
+    );
+    assert_eq!(coord.state(id), Some(JobState::Cancelled));
+    assert!(!r.completed);
+    assert_eq!(r.replicas.len(), 2);
+    assert_eq!(coord.metrics.get("jobs_cancelled"), 1);
+}
+
+/// Cancel is idempotent-safe across the whole lifecycle: before
+/// dispatch, mid-run, and after the terminal state it returns the
+/// documented verdicts and the job ends `Cancelled` exactly once.
+#[test]
+fn cancel_verdicts_across_the_lifecycle() {
+    // Serial single worker: the second job is guaranteed still queued
+    // while the first runs.
+    let coord = Coordinator::start_serial(1);
+    let head = coord.submit(long_job("head", 17, 500_000_000, 0));
+    let queued = coord.submit(long_job("queued", 19, 500_000_000, 0));
+    assert!(coord.cancel(queued), "cancelling a queued job");
+    assert!(coord.cancel(head), "cancelling the running job");
+    let rq = coord.wait(queued).expect("queued-cancel publishes a result");
+    let rh = coord.wait(head).expect("running-cancel publishes a result");
+    assert_eq!(coord.state(queued), Some(JobState::Cancelled));
+    assert_eq!(coord.state(head), Some(JobState::Cancelled));
+    // Pre-dispatch cancel never ran a replica; mid-run cancel ran some.
+    assert!(rq.replicas.is_empty(), "pre-dispatch cancel must not run replicas");
+    assert!(!rh.completed && !rq.completed);
+    // Terminal and unknown ids refuse.
+    assert!(!coord.cancel(head), "cancel after terminal must refuse");
+    assert!(!coord.cancel(424242), "cancel of unknown id must refuse");
+    assert_eq!(coord.metrics.get("jobs_cancelled"), 2);
+    assert_eq!(coord.committed_weight(), 0, "admission budget must drain");
+    coord.shutdown();
+}

@@ -369,6 +369,90 @@ fn prop_spinvec_matches_mirror() {
     });
 }
 
+/// Job lifecycle legality (PR 7): under arbitrary cancel timing and
+/// random deadlines, every observed per-job state sequence is a prefix
+/// of Queued → Running → {Done, Failed, Cancelled, TimedOut} (with the
+/// pre-dispatch shortcut Queued → {Cancelled, TimedOut} allowed), and a
+/// terminal state, once observed, never changes — no resurrection.
+#[test]
+fn prop_job_state_transitions_are_legal() {
+    use snowball::coordinator::{Backend, Coordinator, JobSpec, JobState};
+    use std::sync::Arc;
+
+    fn rank(s: &JobState) -> u8 {
+        match s {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            _ => 2, // terminal
+        }
+    }
+
+    Cases::new(0xD7, 8).run(|rng, size| {
+        let n = (size + 4).min(24);
+        let m = gen::model(rng, n, 3);
+        let coord = Coordinator::start(2);
+        let jobs = 3usize;
+        let mut ids = Vec::new();
+        for j in 0..jobs {
+            // A size mix: some finish instantly, some run long enough to
+            // be caught Running (and to need the cancel below).
+            let steps = 500 + 40_000 * rng.below(30, j as u64, salt::PROBLEM, 500) as u64;
+            ids.push(coord.submit(JobSpec {
+                model: Arc::new(m.clone()),
+                label: format!("prop-{j}"),
+                mode: Mode::RouletteWheel,
+                selector: SelectorKind::Fenwick,
+                schedule: Schedule::Geometric { t0: 4.0, t1: 0.1 },
+                steps,
+                replicas: 2,
+                seed: rng.u64(31, j as u64, salt::PROBLEM),
+                target_energy: None,
+                shards: 1,
+                pin_lanes: false,
+                // A third of the jobs carry a tight deadline.
+                budget_ms: if rng.below(32, j as u64, salt::PROBLEM, 3) == 0 { 5 } else { 0 },
+                max_retries: 0,
+                backend: Backend::Native,
+            }));
+        }
+        let mut last: Vec<Option<JobState>> = vec![None; jobs];
+        let mut cancelled = false;
+        let t0 = std::time::Instant::now();
+        loop {
+            let mut all_terminal = true;
+            for (k, &id) in ids.iter().enumerate() {
+                let s = coord.state(id).ok_or_else(|| format!("job {id} state vanished"))?;
+                if let Some(prev) = &last[k] {
+                    if rank(&s) < rank(prev) {
+                        return Err(format!("job {k} went backwards: {prev:?} -> {s:?}"));
+                    }
+                    if rank(prev) == 2 && s != *prev {
+                        return Err(format!("job {k} resurrected: {prev:?} -> {s:?}"));
+                    }
+                }
+                all_terminal &= rank(&s) == 2;
+                last[k] = Some(s);
+            }
+            if all_terminal {
+                break;
+            }
+            // Mid-flight, cancel one arbitrary job (may race with its
+            // natural completion — both orders must stay legal).
+            if !cancelled && t0.elapsed().as_millis() > 2 {
+                let victim = ids[rng.below(33, 0, salt::PROBLEM, jobs as u32) as usize];
+                coord.cancel(victim);
+                cancelled = true;
+            }
+            if t0.elapsed() > std::time::Duration::from_secs(60) {
+                return Err(format!("jobs wedged; last states {last:?}"));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        coord.shutdown();
+        Ok(())
+    });
+}
+
 /// The batcher never drops or duplicates jobs, and never assigns a class
 /// smaller than the job.
 #[test]

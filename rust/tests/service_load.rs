@@ -52,6 +52,8 @@ fn reference_spec(c: usize) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
         backend: Backend::Native,
     }
 }
@@ -193,5 +195,60 @@ fn saturation_is_observable_and_settles() {
         assert!(dump.contains(&format!("gauge {gauge} 0")), "{gauge} should settle to 0:\n{dump}");
     }
     assert!(dump.contains("counter batch_groups"), "batcher accounting missing:\n{dump}");
+    coord.shutdown();
+}
+
+/// Disconnect-mid-WAIT cohort (PR 7 satellite): clients that hang up
+/// while parked in `WAIT` must not leak waiter state. Each client
+/// submits a job that would run for minutes, issues `WAIT`, and drops
+/// the socket without reading the reply. The service's waiter loop
+/// notices the dead peer, unwinds (the `service_waiters` gauge settles
+/// back to 0), and the coordinator keeps serving fresh connections —
+/// which then CANCEL the abandoned jobs so the trace drains promptly.
+#[test]
+fn disconnect_mid_wait_leaks_no_waiter_state() {
+    let coord = Coordinator::start(2);
+    let metrics = coord.metrics.clone();
+    let addr = Service::bind(coord.clone(), "127.0.0.1:0").unwrap().serve_in_background();
+    let mut ids = Vec::new();
+    for c in 0..6u64 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let reply = send(
+            &mut s,
+            &mut r,
+            &format!("SOLVE instance=er:64:256 steps=2000000000 replicas=2 seed={}", 50 + c),
+        );
+        assert!(reply.starts_with("JOB id="), "{reply}");
+        let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+        ids.push(id);
+        writeln!(s, "WAIT id={id}").unwrap();
+        // Give the handler a beat to enter the waiter loop, then hang up
+        // without ever reading the STATE reply.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(r);
+        drop(s);
+    }
+    // The waiter loop re-checks its peer every poll tick; every
+    // abandoned waiter must be reaped, not parked forever.
+    let t0 = std::time::Instant::now();
+    while metrics.gauge("service_waiters") != 0
+        && t0.elapsed() < std::time::Duration::from_secs(30)
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(metrics.gauge("service_waiters"), 0, "hang-ups leaked waiter state");
+    // The service still answers a fresh connection, and the abandoned
+    // jobs are still cancellable (no handler wedged holding state).
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for id in &ids {
+        let reply = send(&mut s, &mut r, &format!("CANCEL id={id}"));
+        assert_eq!(reply, format!("CANCELLED id={id}"), "job {id} not cancellable");
+    }
+    for id in &ids {
+        let state = send(&mut s, &mut r, &format!("WAIT id={id}"));
+        assert_eq!(state, format!("STATE id={id} state=cancelled"));
+    }
     coord.shutdown();
 }
