@@ -23,17 +23,27 @@
 //! writing `BENCH_shard.json`:
 //!
 //!     cargo bench --bench microbench -- --shards [--quick]
+//!
+//! `--registry` switches to the **content-addressed registry
+//! benchmark**: inline vs by-hash submission latency and the
+//! resident-model-bytes proxy at N = 4096 × 32 jobs (N = 1024 × 8 under
+//! `--quick`), plus locality-hit vs miss placement on the 4-worker
+//! dispatch tier, writing `BENCH_registry.json`:
+//!
+//!     cargo bench --bench microbench -- --registry [--quick]
 
 use snowball::cli::Args;
-use snowball::coordinator::{Coordinator, Service};
+use snowball::coordinator::{Backend, Coordinator, Dispatch, JobSpec, Router, Service, WaitOutcome};
 use snowball::engine::{
     Datapath, EngineConfig, MergeMode, Mode, ReplicaPool, Schedule, SelectorKind, ShardedEngine,
     SnowballEngine,
 };
 use snowball::graph::generators;
 use snowball::harness as hx;
+use snowball::ising::IsingModel;
 use snowball::problems::MaxCut;
 use snowball::rng::StatelessRng;
+use std::sync::Arc;
 
 /// One measured engine configuration, serialized into the JSON report.
 struct BenchRow {
@@ -408,6 +418,132 @@ fn bench_shards(quick: bool) {
     }
 }
 
+/// `--registry`: the content-addressed registry benchmark behind
+/// `BENCH_registry.json`. Three lanes on the same all-to-all model:
+/// inline submission (every job clones the full matrix into its spec —
+/// the pre-registry cost in both submit latency and resident bytes),
+/// by-hash submission (one `put`, then a cheap pin + `Arc` clone per
+/// job), and routed by-hash submission through the 4-worker dispatch
+/// tier (measuring locality hits vs misses on placement).
+fn bench_registry(quick: bool) {
+    let (n, jobs) = if quick { (1024usize, 8usize) } else { (4096usize, 32usize) };
+    let steps: u64 = 200;
+    let rng = StatelessRng::new(31);
+    let p = MaxCut::new(generators::complete(n, &[-1, 1], &rng));
+    let model = p.model().clone();
+    let bytes = model.approx_bytes();
+    let mk_spec = |m: Arc<IsingModel>, seed: u64| JobSpec {
+        model: m,
+        label: "bench".into(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Constant(1.0),
+        steps,
+        replicas: 1,
+        seed,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
+        backend: Backend::Native,
+    };
+
+    // Inline lane: the submit loop pays a full O(N²) matrix clone per
+    // job, and every queued job holds its own copy resident.
+    let coord = Coordinator::start(0);
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> =
+        (0..jobs).map(|j| coord.submit(mk_spec(Arc::new(model.clone()), j as u64))).collect();
+    let inline_submit_us = t0.elapsed().as_secs_f64() * 1e6 / jobs as f64;
+    for id in &ids {
+        coord.wait(*id).expect("inline job result");
+    }
+    coord.shutdown();
+    let inline_bytes = bytes * jobs;
+
+    // By-hash lane: one put, then each submit is a registry checkout
+    // (pin + Arc clone) — no copy, one resident model however many jobs.
+    let coord = Coordinator::start(0);
+    let hash = coord.registry().put(model.clone()).expect("registry put");
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> = (0..jobs)
+        .map(|j| {
+            let m = coord.registry().checkout(hash).expect("checkout");
+            coord.submit_spec(mk_spec(m, j as u64), Some(hash)).expect("submit by hash")
+        })
+        .collect();
+    let by_hash_submit_us = t0.elapsed().as_secs_f64() * 1e6 / jobs as f64;
+    for id in &ids {
+        coord.wait(*id).expect("by-hash job result");
+    }
+    let stats = coord.registry().stats();
+    assert_eq!(stats.entries, 1, "one entry serves every by-hash job");
+    let (reg_hits, reg_dedup) = (stats.hits, stats.dedup);
+    coord.shutdown();
+    let by_hash_bytes = bytes;
+
+    let submit_speedup = inline_submit_us / by_hash_submit_us.max(1e-3);
+    let bytes_ratio = inline_bytes as f64 / by_hash_bytes as f64;
+    println!(
+        "submit      : N={n} x {jobs} jobs | inline {inline_submit_us:>8.1} us/job | \
+         by-hash {by_hash_submit_us:>8.1} us/job | {submit_speedup:.1}x"
+    );
+    println!(
+        "resident    : inline {inline_bytes} bytes | by-hash {by_hash_bytes} bytes | \
+         {bytes_ratio:.0}x"
+    );
+
+    // Routed lane: the first job for a hash establishes its home worker
+    // (one locality miss); every later job for the same hash routes
+    // straight back to it (a hit), keeping the model's pages warm on
+    // one worker instead of spraying the load across all four.
+    let router = Router::start(4, 1);
+    let hash = router.registry().put(model).expect("router put");
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> = (0..jobs)
+        .map(|j| {
+            let m = router.registry().checkout(hash).expect("router checkout");
+            router.submit_spec(mk_spec(m, 500 + j as u64), Some(hash)).expect("routed submit")
+        })
+        .collect();
+    let routed_submit_us = t0.elapsed().as_secs_f64() * 1e6 / jobs as f64;
+    for id in &ids {
+        match router.wait_for(*id, std::time::Duration::from_secs(300)) {
+            WaitOutcome::Terminal(_) => {}
+            other => panic!("routed job {id} did not finish: {other:?}"),
+        }
+    }
+    let hits = router.metrics.get("router_locality_hits");
+    let misses = router.metrics.get("router_locality_misses");
+    assert_eq!(hits + misses, jobs as u64, "every placement is a hit or a miss");
+    assert!(hits >= jobs as u64 - 1, "all but the first placement should hit: {hits}");
+    Dispatch::shutdown(&router);
+    println!(
+        "routed      : 4 workers | {routed_submit_us:>8.1} us/job | \
+         locality {hits} hits / {misses} misses"
+    );
+
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.registry/v1\",\n  \"profile\": \"{}\",\n  \
+         \"n\": {n},\n  \"jobs\": {jobs},\n  \"model_bytes\": {bytes},\n  \
+         \"inline\": {{\"submit_us_per_job\": {inline_submit_us:.1}, \
+         \"resident_model_bytes\": {inline_bytes}}},\n  \
+         \"by_hash\": {{\"submit_us_per_job\": {by_hash_submit_us:.1}, \
+         \"resident_model_bytes\": {by_hash_bytes}, \"registry_hits\": {reg_hits}, \
+         \"registry_dedup\": {reg_dedup}}},\n  \
+         \"submit_speedup\": {submit_speedup:.2},\n  \"bytes_ratio\": {bytes_ratio:.1},\n  \
+         \"routed\": {{\"dispatch_workers\": 4, \"submit_us_per_job\": {routed_submit_us:.1}, \
+         \"locality_hits\": {hits}, \"locality_misses\": {misses}}}\n}}\n",
+        if quick { "quick" } else { "full" }
+    );
+    let path = "BENCH_registry.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
     let smoke = args.flag("smoke");
@@ -418,6 +554,10 @@ fn main() {
     }
     if args.flag("shards") {
         bench_shards(quick);
+        return;
+    }
+    if args.flag("registry") {
+        bench_registry(quick);
         return;
     }
     let sizes: Vec<usize> = if smoke {

@@ -133,6 +133,26 @@ impl Config {
         self.sections.keys().map(|s| s.as_str())
     }
 
+    /// Service / dispatch-tier settings from a `[serve]` section.
+    /// Every key is optional; defaults match the CLI flag defaults
+    /// (`snowball serve` with no arguments).
+    pub fn serve(&self) -> ServeConfig {
+        let reg_cap = crate::coordinator::registry::DEFAULT_CAPACITY_BYTES;
+        let model_max = crate::coordinator::registry::DEFAULT_MAX_MODEL_BYTES;
+        ServeConfig {
+            addr: self.str_or("serve", "addr", "127.0.0.1:7878"),
+            workers: self.i64_or("serve", "workers", 0) as usize,
+            dispatch_workers: self.i64_or("serve", "dispatch_workers", 1) as usize,
+            max_inflight_replicas: self.i64_or("serve", "max_inflight_replicas", 0) as usize,
+            reject_saturated: self.bool_or("serve", "reject_saturated", false),
+            shutdown_grace_ms: self.i64_or("serve", "shutdown_grace_ms", 0) as u64,
+            registry_capacity_bytes: self
+                .i64_or("serve", "registry_capacity_bytes", reg_cap as i64)
+                as usize,
+            max_model_bytes: self.i64_or("serve", "max_model_bytes", model_max as i64) as usize,
+        }
+    }
+
     /// Build a JobSpec skeleton from a `[job]` section (instance name,
     /// mode, selector, schedule, steps, replicas, seed, target).
     pub fn job(&self, seed_default: u64) -> Result<JobConfig> {
@@ -175,6 +195,29 @@ pub struct JobConfig {
     pub shards: u32,
     /// Pin shard lane threads to cores (`pin_lanes = true`; Linux).
     pub pin_lanes: bool,
+}
+
+/// Declarative service description (the `[serve]` section).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`).
+    pub addr: String,
+    /// Compute threads per coordinator worker (0 = one per CPU).
+    pub workers: usize,
+    /// Coordinator workers behind the routing front-end: `1` (the
+    /// default) serves a single coordinator, `>= 2` starts the
+    /// dispatch tier (`crate::coordinator::Router`).
+    pub dispatch_workers: usize,
+    /// Per-worker in-flight replica cap (0 = unbounded).
+    pub max_inflight_replicas: usize,
+    /// Refuse `SOLVE` while saturated instead of queueing.
+    pub reject_saturated: bool,
+    /// Shutdown grace before in-flight jobs are preempted (0 = drain).
+    pub shutdown_grace_ms: u64,
+    /// Registry byte capacity before LRU eviction.
+    pub registry_capacity_bytes: usize,
+    /// Per-model `PUT` size limit in bytes.
+    pub max_model_bytes: usize,
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -238,6 +281,34 @@ tolerance = 0.25
         assert!(matches!(j.selector, crate::engine::SelectorKind::Fenwick));
         let c2 = Config::parse("[job]\nselector = \"scan\"\n").unwrap();
         assert!(matches!(c2.job(1).unwrap().selector, crate::engine::SelectorKind::LinearScan));
+    }
+
+    #[test]
+    fn serve_section_builds_with_defaults_and_overrides() {
+        let defaults = Config::parse("").unwrap().serve();
+        assert_eq!(defaults.addr, "127.0.0.1:7878");
+        assert_eq!(defaults.dispatch_workers, 1, "single coordinator by default");
+        assert_eq!(
+            defaults.registry_capacity_bytes,
+            crate::coordinator::registry::DEFAULT_CAPACITY_BYTES
+        );
+        assert_eq!(
+            defaults.max_model_bytes,
+            crate::coordinator::registry::DEFAULT_MAX_MODEL_BYTES
+        );
+        let c = Config::parse(
+            "[serve]\naddr = \"0.0.0.0:9000\"\ndispatch_workers = 4\nworkers = 2\n\
+             max_inflight_replicas = 64\nreject_saturated = true\nshutdown_grace_ms = 500\n\
+             registry_capacity_bytes = 1048576\nmax_model_bytes = 65536\n",
+        )
+        .unwrap()
+        .serve();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!((c.dispatch_workers, c.workers), (4, 2));
+        assert_eq!(c.max_inflight_replicas, 64);
+        assert!(c.reject_saturated);
+        assert_eq!(c.shutdown_grace_ms, 500);
+        assert_eq!((c.registry_capacity_bytes, c.max_model_bytes), (1 << 20, 64 << 10));
     }
 
     #[test]

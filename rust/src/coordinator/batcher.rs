@@ -88,6 +88,14 @@ pub fn plan(job_sizes: &[usize], classes: &[usize]) -> BatchPlan {
     out
 }
 
+/// The smallest class that fits one job of `size` spins, or `None` when
+/// it fits no class (the overflow case). Single-job form of [`plan`] —
+/// the dispatch-tier router uses it to spread jobs over workers by size
+/// class without building a whole plan per submission.
+pub fn class_of(size: usize, classes: &[usize]) -> Option<usize> {
+    classes.iter().copied().filter(|&c| c >= size).min()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +121,17 @@ mod tests {
         let p = plan(&sizes, &[256]);
         // used = 384, padded = 512 → waste = 0.25
         assert!((p.padding_waste(&sizes) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_of_agrees_with_plan() {
+        let classes = [2048usize, 256]; // deliberately unsorted
+        for size in [1usize, 100, 256, 257, 2048, 2049, 5000] {
+            let p = plan(&[size], &classes);
+            let want = p.assignments.first().map(|a| a.class_n);
+            assert_eq!(class_of(size, &classes), want, "size {size}");
+        }
+        assert_eq!(class_of(10, &[]), None);
     }
 
     #[test]

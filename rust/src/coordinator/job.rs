@@ -59,6 +59,16 @@ pub struct JobSpec {
     pub backend: Backend,
 }
 
+impl JobSpec {
+    /// Bytes the job's model materializes
+    /// ([`IsingModel::approx_bytes`]) — what the registry bench and the
+    /// dispatch tier account when comparing inline (one copy per job)
+    /// against by-hash (one shared copy) submission.
+    pub fn model_bytes(&self) -> usize {
+        self.model.approx_bytes()
+    }
+}
+
 /// Which execution engine runs the replicas.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {

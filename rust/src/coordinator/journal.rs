@@ -71,6 +71,12 @@ pub struct JobCtl {
     pub journal: Arc<JobJournal>,
     /// Panicking replicas are re-run up to this many times.
     pub max_retries: u32,
+    /// Journal checkpoints even when `max_retries == 0`. Router-managed
+    /// jobs set this: the dispatch tier shares one journal across
+    /// placements, so a job re-dispatched off a dead worker resumes
+    /// from its last checkpoint instead of step 0
+    /// (`coordinator::router`).
+    pub checkpoint: bool,
     /// Absolute deadline derived from `JobSpec.budget_ms` at submit
     /// time (`None` = no budget). The wheel trips `stop` at this
     /// instant; the terminal path measures `deadline_slack_us` from it.
@@ -86,6 +92,7 @@ impl JobCtl {
             stop: Arc::new(StopToken::new()),
             journal: Arc::new(JobJournal::new()),
             max_retries: 0,
+            checkpoint: false,
             deadline: None,
         }
     }

@@ -97,6 +97,17 @@ impl Metrics {
         cell.fetch_add(delta, Ordering::Relaxed);
     }
 
+    /// Set a gauge to an absolute value (occupancy republished from an
+    /// authoritative source — e.g. the registry's `registry_bytes` /
+    /// `registry_entries`, recomputed under the registry lock).
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        let cell = {
+            let mut map = self.gauges.lock().unwrap();
+            map.entry(name.to_string()).or_default().clone()
+        };
+        cell.store(v, Ordering::Relaxed);
+    }
+
     /// Read a gauge (0 if never touched).
     pub fn gauge(&self, name: &str) -> i64 {
         self.gauges
@@ -246,6 +257,10 @@ mod tests {
         m.gauge_add("inflight", -2);
         assert_eq!(m.gauge("inflight"), 1);
         assert_eq!(m.gauge("missing"), 0);
+        m.gauge_set("inflight", 40);
+        assert_eq!(m.gauge("inflight"), 40);
+        m.gauge_set("fresh", -7);
+        assert_eq!(m.gauge("fresh"), -7);
     }
 
     #[test]

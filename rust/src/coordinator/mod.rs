@@ -55,12 +55,16 @@ pub mod deadline;
 pub mod job;
 pub mod journal;
 pub mod metrics;
+pub mod registry;
+pub mod router;
 pub mod scheduler;
 pub mod service;
 
 pub use job::{Backend, JobResult, JobSpec, JobState, ReplicaResult};
 pub use journal::{JobCtl, JobJournal};
 pub use metrics::Metrics;
+pub use registry::{ModelHash, PutError, Registry, RegistryStats};
+pub use router::Router;
 pub use scheduler::ReplicaScheduler;
 pub use service::Service;
 
@@ -110,6 +114,12 @@ pub struct CoordinatorConfig {
     /// is the legacy drain: shutdown waits for every job, however
     /// long it runs.
     pub shutdown_grace_ms: u64,
+    /// Content-addressed model store backing `PUT` / `SOLVE model=`.
+    /// `None` (the default) gives the coordinator a private registry
+    /// with default capacity; the dispatch-tier [`Router`] passes
+    /// `Some` so every worker shares one store and one `Arc` per model
+    /// (docs/ARCHITECTURE.md § Registry & dispatch tier).
+    pub registry: Option<Arc<Registry>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -121,6 +131,7 @@ impl Default for CoordinatorConfig {
             max_inflight_replicas: 0,
             reject_when_saturated: false,
             shutdown_grace_ms: 0,
+            registry: None,
         }
     }
 }
@@ -136,6 +147,9 @@ pub enum AdmissionError {
         /// The configured `max_inflight_replicas`.
         cap: usize,
     },
+    /// The dispatch tier has no live workers left to place the job on
+    /// (every worker was [`Router::kill_worker`]ed).
+    NoLiveWorkers,
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -146,6 +160,9 @@ impl std::fmt::Display for AdmissionError {
                 "saturated: {committed} replica units already committed, job would exceed \
                  cap {cap}; retry later"
             ),
+            AdmissionError::NoLiveWorkers => {
+                write!(f, "no live workers to accept the job")
+            }
         }
     }
 }
@@ -161,6 +178,69 @@ pub enum WaitOutcome {
     Pending,
     /// No job with that id.
     Unknown,
+}
+
+/// The submission surface the TCP [`Service`] drives — implemented by a
+/// single [`Coordinator`] and by the multi-worker [`Router`], so one
+/// generic service front-end serves both a standalone machine and a
+/// dispatch tier. Semantics of each method match the identically named
+/// [`Coordinator`] method.
+pub trait Dispatch: Clone + Send + 'static {
+    /// Admission-controlled submit ([`Coordinator::try_submit`]
+    /// semantics). `hash` is `Some` when `spec.model` came out of a
+    /// [`Registry::checkout`]: on `Ok` the implementation takes over
+    /// that checkout pin (released when the job goes terminal); on
+    /// `Err` the pin stays with the caller, who must unpin.
+    fn submit_spec(&self, spec: JobSpec, hash: Option<ModelHash>) -> Result<u64, AdmissionError>;
+    /// Request cooperative cancellation ([`Coordinator::cancel`]).
+    fn cancel(&self, id: u64) -> bool;
+    /// Current state of a job ([`Coordinator::state`]).
+    fn state(&self, id: u64) -> Option<JobState>;
+    /// Result of a finished job ([`Coordinator::result`]).
+    fn result(&self, id: u64) -> Option<JobResult>;
+    /// Bounded wait for a terminal state ([`Coordinator::wait_for`]).
+    fn wait_for(&self, id: u64, timeout: Duration) -> WaitOutcome;
+    /// The metrics sink the `METRICS` command renders.
+    fn metrics(&self) -> &Metrics;
+    /// The content-addressed model store `PUT` / `REGISTRY` /
+    /// `SOLVE model=` drive.
+    fn registry(&self) -> &Arc<Registry>;
+    /// Stop the machine ([`Coordinator::shutdown`]).
+    fn shutdown(&self);
+}
+
+impl Dispatch for Coordinator {
+    fn submit_spec(&self, spec: JobSpec, hash: Option<ModelHash>) -> Result<u64, AdmissionError> {
+        self.try_submit_inner(spec, true, None, hash)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        Coordinator::cancel(self, id)
+    }
+
+    fn state(&self, id: u64) -> Option<JobState> {
+        Coordinator::state(self, id)
+    }
+
+    fn result(&self, id: u64) -> Option<JobResult> {
+        Coordinator::result(self, id)
+    }
+
+    fn wait_for(&self, id: u64, timeout: Duration) -> WaitOutcome {
+        Coordinator::wait_for(self, id, timeout)
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn registry(&self) -> &Arc<Registry> {
+        Coordinator::registry(self)
+    }
+
+    fn shutdown(&self) {
+        Coordinator::shutdown(self)
+    }
 }
 
 /// A job waiting in the admission queue.
@@ -210,6 +290,16 @@ struct Inner {
     /// the shutdown grace period.
     wheel: Arc<DeadlineWheel>,
     shutdown_grace_ms: u64,
+    /// Content-addressed model store (`PUT` / `SOLVE model=`); shared
+    /// with the router and sibling workers in a dispatch tier, private
+    /// otherwise.
+    registry: Arc<Registry>,
+    /// id → model hash for registry-backed jobs. Each entry owns one
+    /// registry pin (taken at [`Registry::checkout`] and handed over on
+    /// a successful submit); the pin is released when the job's
+    /// terminal state publishes, so a model stays eviction-proof
+    /// exactly as long as work references it.
+    pins: Mutex<HashMap<u64, ModelHash>>,
 }
 
 /// The job coordinator. Cloneable handle; `Drop` of the last handle does
@@ -239,6 +329,19 @@ impl Coordinator {
 
     /// Start a coordinator with an explicit [`CoordinatorConfig`].
     pub fn start_with(cfg: CoordinatorConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        // A private registry publishes its gauges into this
+        // coordinator's metrics; a shared (router-provided) one keeps
+        // whatever sink was attached first, so tier-wide registry stats
+        // land in exactly one METRICS output.
+        let registry = match cfg.registry.clone() {
+            Some(shared) => shared,
+            None => {
+                let own = Arc::new(Registry::with_defaults());
+                own.attach_metrics(metrics.clone());
+                own
+            }
+        };
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -262,8 +365,9 @@ impl Coordinator {
             ctls: Mutex::new(HashMap::new()),
             wheel: Arc::new(DeadlineWheel::new()),
             shutdown_grace_ms: cfg.shutdown_grace_ms,
+            registry,
+            pins: Mutex::new(HashMap::new()),
         });
-        let metrics = Arc::new(Metrics::new());
         let c = Self { inner: inner.clone(), metrics: metrics.clone() };
         let wheel = inner.wheel.clone();
         std::thread::Builder::new()
@@ -314,7 +418,8 @@ impl Coordinator {
     /// coord.shutdown();
     /// ```
     pub fn submit(&self, spec: JobSpec) -> u64 {
-        self.try_submit_inner(spec, false).expect("unenforced submit cannot be rejected")
+        self.try_submit_inner(spec, false, None, None)
+            .expect("unenforced submit cannot be rejected")
     }
 
     /// [`Self::submit`] with admission control: refuses the job when
@@ -324,7 +429,24 @@ impl Coordinator {
     /// service's `SOLVE` path — rejected jobs become `ERR saturated …`
     /// on the wire and never enter the queue.
     pub fn try_submit(&self, spec: JobSpec) -> Result<u64, AdmissionError> {
-        self.try_submit_inner(spec, true)
+        self.try_submit_inner(spec, true, None, None)
+    }
+
+    /// Submit on behalf of the dispatch-tier router. The job reuses the
+    /// caller's checkpoint `journal` — so a job re-dispatched after a
+    /// worker death resumes from its last [`journal::EngineCheckpoint`]
+    /// instead of step 0 — and journals checkpoints even with
+    /// `max_retries == 0`. When `hash` is `Some`, a successful submit
+    /// takes ownership of one registry pin for the job's lifetime; on
+    /// `Err` the pin stays with the caller (who must unpin).
+    pub fn submit_managed(
+        &self,
+        spec: JobSpec,
+        journal: Arc<JobJournal>,
+        hash: Option<ModelHash>,
+        enforce: bool,
+    ) -> Result<u64, AdmissionError> {
+        self.try_submit_inner(spec, enforce, Some(journal), hash)
     }
 
     /// A job's admission weight: `replicas × effective shard lanes` —
@@ -334,7 +456,13 @@ impl Coordinator {
         spec.replicas as usize * scheduler::effective_shards(spec, self.inner.worker_budget).max(1)
     }
 
-    fn try_submit_inner(&self, spec: JobSpec, enforce: bool) -> Result<u64, AdmissionError> {
+    fn try_submit_inner(
+        &self,
+        spec: JobSpec,
+        enforce: bool,
+        journal: Option<Arc<JobJournal>>,
+        hash: Option<ModelHash>,
+    ) -> Result<u64, AdmissionError> {
         let weight = self.admission_weight(&spec);
         {
             let mut committed = self.inner.committed_replicas.lock().unwrap();
@@ -363,15 +491,24 @@ impl Coordinator {
         // The job's control block: cancel, the deadline wheel and
         // shutdown all trip the same token; the journal feeds
         // checkpointed retries (docs/ARCHITECTURE.md § Job lifecycle).
+        // A router-provided journal additionally forces checkpointing
+        // so a re-dispatch after worker death resumes mid-run.
+        let managed = journal.is_some();
         let ctl = JobCtl {
             stop: Arc::new(StopToken::new()),
-            journal: Arc::new(JobJournal::new()),
+            journal: journal.unwrap_or_else(|| Arc::new(JobJournal::new())),
             max_retries: spec.max_retries,
+            checkpoint: managed,
             deadline: (spec.budget_ms > 0)
                 .then(|| Instant::now() + Duration::from_millis(spec.budget_ms)),
         };
         if let Some(when) = ctl.deadline {
             self.inner.wheel.schedule(when, StopCause::Deadline, ctl.stop.clone());
+        }
+        if let Some(h) = hash {
+            // The caller's checkout pin now belongs to this job; it is
+            // released when the terminal state publishes.
+            self.inner.pins.lock().unwrap().insert(id, h);
         }
         self.inner.ctls.lock().unwrap().insert(id, ctl);
         self.inner.states.lock().unwrap().insert(id, JobState::Queued);
@@ -544,6 +681,7 @@ impl Coordinator {
         };
         self.inner.results.lock().unwrap().insert(id, result);
         self.inner.ctls.lock().unwrap().remove(&id);
+        self.release_pin(id);
         // Release the admission budget BEFORE waking waiters: a client
         // unblocked by `wait` must be able to submit its next job
         // without racing the bookkeeping.
@@ -564,6 +702,7 @@ impl Coordinator {
             self.metrics.add("jobs_retried", retries);
         }
         self.inner.ctls.lock().unwrap().remove(&id);
+        self.release_pin(id);
         // Budget back before the wake-up, as in `complete`.
         self.release_committed(weight);
         self.inner.states.lock().unwrap().insert(id, JobState::Failed(message));
@@ -574,6 +713,22 @@ impl Coordinator {
     fn release_committed(&self, weight: usize) {
         let mut committed = self.inner.committed_replicas.lock().unwrap();
         *committed = committed.saturating_sub(weight);
+    }
+
+    /// A terminal registry-backed job releases its model pin, making
+    /// the model evictable again once no other job references it.
+    fn release_pin(&self, id: u64) {
+        let pinned = self.inner.pins.lock().unwrap().remove(&id);
+        if let Some(h) = pinned {
+            self.inner.registry.unpin(h);
+        }
+    }
+
+    /// The content-addressed model registry backing `PUT` /
+    /// `SOLVE model=` — shared across the tier when this coordinator is
+    /// a router worker, private otherwise.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.inner.registry
     }
 
     /// Replica units currently committed (queued + running) against the
@@ -992,6 +1147,25 @@ mod tests {
         // Budget released: admission works again.
         let id2 = c.try_submit(spec("retry", 11)).expect("drained coordinator admits");
         assert!(c.wait(id2).is_some());
+        c.shutdown();
+    }
+
+    /// A registry-backed job holds its model pin exactly for its
+    /// lifetime: pinned from submit (the checkout pin is handed over),
+    /// released — hence evictable — once the terminal state publishes.
+    #[test]
+    fn registry_pin_released_at_terminal_state() {
+        let c = Coordinator::start(2);
+        let h = c.registry().put((*spec("pin", 3).model).clone()).unwrap();
+        let model = c.registry().checkout(h).expect("stored model");
+        let mut managed = spec("pin", 3);
+        managed.model = model;
+        let id = c
+            .submit_managed(managed, Arc::new(JobJournal::new()), Some(h), false)
+            .expect("unenforced submit cannot be rejected");
+        assert!(c.wait(id).is_some());
+        assert_eq!(c.registry().stats().pinned, 0, "terminal job must unpin its model");
+        assert!(c.registry().contains(h), "unpinned is not evicted while capacity lasts");
         c.shutdown();
     }
 

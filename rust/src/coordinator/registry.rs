@@ -1,0 +1,440 @@
+//! Content-addressed instance registry (wire verbs `PUT` / `REGISTRY`
+//! / `SOLVE model=`, docs/PROTOCOL.md).
+//!
+//! Every inline `SOLVE` re-ships and re-materializes its full O(N²)
+//! coupling matrix; the registry is the reuse path: a model is uploaded
+//! once, stored under its canonical content hash
+//! ([`IsingModel::content_digest`]), and every job referencing the hash
+//! shares **one** `Arc<IsingModel>` — the copy-on-write contract the
+//! whole dispatch tier leans on (no job ever mutates a model; derived
+//! views like the CSR adjacency are built from the shared matrix).
+//!
+//! Entries are refcount-pinned while any in-flight job references them
+//! and evicted least-recently-used when the store exceeds its byte
+//! capacity; eviction never removes a pinned entry (pinned by the
+//! registry property tests in `rust/tests/properties.rs`).
+//!
+//! Concurrency: one `Mutex` over the whole store. `PUT`/lookup are
+//! O(1) hash-map operations plus (on insert) a hash of the body — the
+//! store is never on the per-step hot path, so a single lock is the
+//! simple correct choice and keeps this module free of atomics (see
+//! the unsafe/atomics policy in docs/ARCHITECTURE.md).
+
+use super::Metrics;
+use crate::ising::IsingModel;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Default byte capacity of a registry: 256 MiB of dense couplings
+/// (an N=8192 all-to-all instance is 256 MiB; typical instances are
+/// far smaller).
+pub const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
+
+/// Default per-model `PUT` size limit: 64 MiB (N=4096 all-to-all).
+pub const DEFAULT_MAX_MODEL_BYTES: usize = 64 << 20;
+
+/// Canonical content hash of an [`IsingModel`]: 128 bits, rendered as
+/// exactly 32 lowercase hex chars on the wire (`STORED model=<hash>`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelHash(u128);
+
+impl ModelHash {
+    /// The hash the registry would store `m` under.
+    pub fn of_model(m: &IsingModel) -> Self {
+        ModelHash(m.content_digest())
+    }
+
+    /// Wire form: 32 lowercase hex chars.
+    pub fn to_hex(self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Parse the wire form; rejects anything that is not exactly 32 hex
+    /// chars (the error text is the `ERR` body, see docs/PROTOCOL.md).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s.len() != 32 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(format!("malformed model hash '{s}' (expect 32 hex chars)"));
+        }
+        u128::from_str_radix(s, 16).map(ModelHash).map_err(|e| e.to_string())
+    }
+}
+
+impl fmt::Display for ModelHash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+impl fmt::Debug for ModelHash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ModelHash({:032x})", self.0)
+    }
+}
+
+/// Why a `PUT` was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PutError {
+    /// The body exceeds the registry's per-model limit. The wire layer
+    /// checks `IsingModel::approx_bytes_for(n)` against the same limit
+    /// before allocating, so an oversized `PUT` never materializes.
+    TooLarge { bytes: usize, max: usize },
+}
+
+impl fmt::Display for PutError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PutError::TooLarge { bytes, max } => {
+                write!(f, "model too large: {bytes} bytes exceeds max_model_bytes {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PutError {}
+
+/// A consistent snapshot of the store (`REGISTRY` wire reply).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Distinct models currently stored.
+    pub entries: usize,
+    /// Bytes those models materialize ([`IsingModel::approx_bytes`]).
+    pub bytes: usize,
+    /// Entries pinned by at least one in-flight job.
+    pub pinned: usize,
+    /// Lookups (`get`/`checkout`) that found their hash.
+    pub hits: u64,
+    /// Lookups that did not.
+    pub misses: u64,
+    /// Entries evicted by the LRU capacity sweep.
+    pub evictions: u64,
+    /// `PUT`s deduplicated against an existing entry.
+    pub dedup: u64,
+}
+
+struct Entry {
+    model: Arc<IsingModel>,
+    bytes: usize,
+    /// In-flight jobs referencing this entry; eviction skips pins > 0.
+    pins: u64,
+    /// LRU clock stamp of the last put/get/checkout.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct RegInner {
+    map: HashMap<ModelHash, Entry>,
+    bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    dedup: u64,
+}
+
+/// The content-addressed model store. Shared `Arc<Registry>` between
+/// the service front door (checkout at `SOLVE model=`), the router
+/// (locality placement + re-dispatch pins) and every coordinator
+/// worker (unpin at job completion).
+pub struct Registry {
+    capacity_bytes: usize,
+    max_model_bytes: usize,
+    inner: Mutex<RegInner>,
+    /// Metrics sink for `registry_hits`/`registry_misses` counters and
+    /// the `registry_bytes`/`registry_entries` gauges. First writer
+    /// wins: a standalone coordinator attaches its own metrics only
+    /// when it created the registry itself; under a router the router
+    /// attaches first and the workers leave it alone.
+    metrics: Mutex<Option<Arc<Metrics>>>,
+}
+
+impl Registry {
+    /// A registry with explicit capacity and per-model limits (bytes).
+    pub fn new(capacity_bytes: usize, max_model_bytes: usize) -> Self {
+        Self {
+            capacity_bytes,
+            max_model_bytes,
+            inner: Mutex::new(RegInner::default()),
+            metrics: Mutex::new(None),
+        }
+    }
+
+    /// A registry with the default limits.
+    pub fn with_defaults() -> Self {
+        Self::new(DEFAULT_CAPACITY_BYTES, DEFAULT_MAX_MODEL_BYTES)
+    }
+
+    /// The per-model `PUT` limit (what the wire layer pre-checks).
+    pub fn max_model_bytes(&self) -> usize {
+        self.max_model_bytes
+    }
+
+    /// Route hit/miss counters and occupancy gauges into `m`. No-op if
+    /// a sink is already attached (first writer wins).
+    pub fn attach_metrics(&self, m: Arc<Metrics>) {
+        let mut slot = self.metrics.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(m);
+        }
+    }
+
+    /// Store `model`, returning its content hash. A body already
+    /// present is deduplicated (one entry, `dedup` counted); a new body
+    /// LRU-evicts unpinned entries while the store exceeds capacity.
+    /// Bodies over `max_model_bytes` are refused.
+    pub fn put(&self, model: IsingModel) -> Result<ModelHash, PutError> {
+        let bytes = model.approx_bytes();
+        if bytes > self.max_model_bytes {
+            return Err(PutError::TooLarge { bytes, max: self.max_model_bytes });
+        }
+        let hash = ModelHash::of_model(&model);
+        let m = self.metrics.lock().unwrap().clone();
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(e) = inner.map.get_mut(&hash) {
+            e.last_used = clock;
+            inner.dedup += 1;
+        } else {
+            inner.map.insert(
+                hash,
+                Entry { model: Arc::new(model), bytes, pins: 0, last_used: clock },
+            );
+            inner.bytes += bytes;
+            self.evict_locked(&mut inner, hash);
+        }
+        self.publish(&m, &inner);
+        Ok(hash)
+    }
+
+    /// Evict least-recently-used *unpinned* entries (never `keep`)
+    /// until the store fits its capacity or nothing more is evictable.
+    fn evict_locked(&self, inner: &mut RegInner, keep: ModelHash) {
+        while inner.bytes > self.capacity_bytes {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(h, e)| e.pins == 0 && **h != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(h, _)| *h);
+            match victim {
+                Some(h) => {
+                    let e = inner.map.remove(&h).expect("victim came from the map");
+                    inner.bytes -= e.bytes;
+                    inner.evictions += 1;
+                }
+                None => break, // everything left is pinned
+            }
+        }
+    }
+
+    /// Look up a model without pinning it.
+    pub fn get(&self, hash: ModelHash) -> Option<Arc<IsingModel>> {
+        self.lookup(hash, false)
+    }
+
+    /// Look up a model **and pin it** in one atomic step — the caller
+    /// owns one pin and must balance it with [`Self::unpin`] (the
+    /// coordinator does so when the job reaches a terminal state).
+    /// Checking out before submitting is what makes eviction safe: a
+    /// hash can never be evicted between lookup and job registration.
+    pub fn checkout(&self, hash: ModelHash) -> Option<Arc<IsingModel>> {
+        self.lookup(hash, true)
+    }
+
+    fn lookup(&self, hash: ModelHash, pin: bool) -> Option<Arc<IsingModel>> {
+        let m = self.metrics.lock().unwrap().clone();
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let found = match inner.map.get_mut(&hash) {
+            Some(e) => {
+                e.last_used = clock;
+                if pin {
+                    e.pins += 1;
+                }
+                Some(e.model.clone())
+            }
+            None => None,
+        };
+        if found.is_some() {
+            inner.hits += 1;
+            if let Some(m) = &m {
+                m.inc("registry_hits");
+            }
+        } else {
+            inner.misses += 1;
+            if let Some(m) = &m {
+                m.inc("registry_misses");
+            }
+        }
+        self.publish(&m, &inner);
+        found
+    }
+
+    /// Add one pin to an existing entry (router re-dispatch path).
+    /// Returns false if the hash is not stored.
+    pub fn pin(&self, hash: ModelHash) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get_mut(&hash) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin. Saturating: unpinning an unpinned (or absent)
+    /// hash is a no-op — the refcount can never go negative.
+    pub fn unpin(&self, hash: ModelHash) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.map.get_mut(&hash) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Whether `hash` is currently stored.
+    pub fn contains(&self, hash: ModelHash) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&hash)
+    }
+
+    /// Consistent snapshot of the store.
+    pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().unwrap();
+        RegistryStats {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            pinned: inner.map.values().filter(|e| e.pins > 0).count(),
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            dedup: inner.dedup,
+        }
+    }
+
+    fn publish(&self, m: &Option<Arc<Metrics>>, inner: &RegInner) {
+        if let Some(m) = m {
+            m.gauge_set("registry_bytes", inner.bytes as i64);
+            m.gauge_set("registry_entries", inner.map.len() as i64);
+        }
+    }
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("Registry")
+            .field("capacity_bytes", &self.capacity_bytes)
+            .field("max_model_bytes", &self.max_model_bytes)
+            .field("entries", &s.entries)
+            .field("bytes", &s.bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(n: usize, j01: i32) -> IsingModel {
+        let mut m = IsingModel::zeros(n);
+        m.set_j(0, 1, j01);
+        m
+    }
+
+    #[test]
+    fn hash_wire_roundtrip_and_malformed_forms() {
+        let h = ModelHash::of_model(&model(4, 2));
+        let hex = h.to_hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(ModelHash::parse(&hex).unwrap(), h);
+        let nonhex = "g".repeat(32);
+        for bad in ["", "deadbeef", nonhex.as_str(), &hex[..31]] {
+            let err = ModelHash::parse(bad).unwrap_err();
+            assert_eq!(err, format!("malformed model hash '{bad}' (expect 32 hex chars)"));
+        }
+    }
+
+    #[test]
+    fn put_dedupes_and_checkout_shares_one_arc() {
+        let reg = Registry::with_defaults();
+        let h1 = reg.put(model(8, 3)).unwrap();
+        let h2 = reg.put(model(8, 3)).unwrap();
+        assert_eq!(h1, h2);
+        let s = reg.stats();
+        assert_eq!((s.entries, s.dedup), (1, 1));
+        assert_eq!(s.bytes, IsingModel::approx_bytes_for(8));
+        let a = reg.checkout(h1).unwrap();
+        let b = reg.checkout(h1).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "checkout must share one instance");
+        assert_eq!(reg.stats().pinned, 1);
+        assert_eq!(reg.stats().hits, 2);
+        reg.unpin(h1);
+        reg.unpin(h1);
+        reg.unpin(h1); // saturates at zero
+        assert_eq!(reg.stats().pinned, 0);
+    }
+
+    #[test]
+    fn oversized_put_is_refused() {
+        let reg = Registry::new(1 << 20, IsingModel::approx_bytes_for(8));
+        assert!(reg.put(model(8, 1)).is_ok());
+        let err = reg.put(model(9, 1)).unwrap_err();
+        assert_eq!(
+            err,
+            PutError::TooLarge {
+                bytes: IsingModel::approx_bytes_for(9),
+                max: IsingModel::approx_bytes_for(8)
+            }
+        );
+        assert_eq!(
+            err.to_string(),
+            format!(
+                "model too large: {} bytes exceeds max_model_bytes {}",
+                IsingModel::approx_bytes_for(9),
+                IsingModel::approx_bytes_for(8)
+            )
+        );
+    }
+
+    #[test]
+    fn lru_eviction_skips_pins_and_the_incoming_entry() {
+        // Capacity fits exactly two 8-spin models.
+        let per = IsingModel::approx_bytes_for(8);
+        let reg = Registry::new(2 * per, per);
+        let h1 = reg.put(model(8, 1)).unwrap();
+        let h2 = reg.put(model(8, 2)).unwrap();
+        // Touch h1 so h2 is the LRU entry, then insert a third.
+        assert!(reg.get(h1).is_some());
+        let h3 = reg.put(model(8, 3)).unwrap();
+        assert!(reg.contains(h1) && reg.contains(h3));
+        assert!(!reg.contains(h2), "LRU entry should be evicted");
+        assert_eq!(reg.stats().evictions, 1);
+        // Pin both survivors: the next insert cannot evict either, so
+        // the store is allowed to exceed capacity rather than drop a
+        // pinned model out from under an in-flight job.
+        assert!(reg.checkout(h1).is_some() && reg.checkout(h3).is_some());
+        let h4 = reg.put(model(8, 4)).unwrap();
+        assert!(reg.contains(h1) && reg.contains(h3) && reg.contains(h4));
+        assert_eq!(reg.stats().bytes, 3 * per);
+        // Unpinning makes them evictable again.
+        reg.unpin(h1);
+        reg.unpin(h3);
+        let h5 = reg.put(model(8, 5)).unwrap();
+        assert!(reg.contains(h5));
+        assert_eq!(reg.stats().bytes, 2 * per);
+    }
+
+    #[test]
+    fn miss_counters_and_pin_of_absent_hash() {
+        let reg = Registry::with_defaults();
+        let absent = ModelHash::of_model(&model(4, 9));
+        assert!(reg.get(absent).is_none());
+        assert!(reg.checkout(absent).is_none());
+        assert!(!reg.pin(absent));
+        reg.unpin(absent); // no-op
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+    }
+}

@@ -1,0 +1,669 @@
+//! Multi-worker dispatch tier: a routing front-end over several
+//! [`Coordinator`] workers.
+//!
+//! The [`Router`] implements the same [`Dispatch`] surface the TCP
+//! service drives, so a client cannot tell a routed tier from a single
+//! coordinator — except that jobs spread over `dispatch_workers`
+//! independent machines and survive the death of any one of them:
+//!
+//! * **Placement** ([`Router::submit_spec`]): registry locality first —
+//!   a `SOLVE model=<hash>` job prefers the worker that last ran that
+//!   hash (`router_locality_hits`), so a hot model's pages stay warm on
+//!   one machine — then size-class spread: jobs are ranked by
+//!   [`batcher::class_of`] and round-robined across live workers per
+//!   class, so one worker does not accumulate all the big instances.
+//! * **Journaled re-dispatch** ([`Router::kill_worker`]): every routed
+//!   job runs with a router-owned [`JobJournal`] and forced
+//!   checkpointing, so when a worker dies its live jobs are cancelled
+//!   and resubmitted to survivors *with the same journal* — the replica
+//!   resumes from its last [`EngineCheckpoint`] on the identical
+//!   deterministic trajectory, so the final result is bit-identical to
+//!   an undisturbed run (`router_redispatches` counts them).
+//! * **Shared registry**: one [`Registry`] (and therefore one
+//!   `Arc<IsingModel>` per distinct model) serves every worker; the
+//!   router holds one pin per live registry-backed job and each worker
+//!   holds its own, so eviction can never race a running job.
+//!
+//! There is no background thread: router job state is reconciled
+//! demand-driven (`sync_job`) from `state`/`result`/`wait_for`/
+//! `cancel`/`kill_worker`, and blocking waits ride the workers' own
+//! condvar-backed [`Coordinator::wait_for`] in bounded slices.
+//!
+//! Lock ordering (deadlock freedom): `jobs` → { `alive`, `locality`,
+//! `rr`, `next_id` }, each of the inner locks taken briefly and never
+//! the other way around. `kill_worker` flips `alive` in its own scope
+//! *before* taking `jobs` for the drain.
+//!
+//! [`EngineCheckpoint`]: super::journal::EngineCheckpoint
+
+use super::{
+    batcher, AdmissionError, Coordinator, CoordinatorConfig, Dispatch, JobJournal, JobResult,
+    JobSpec, JobState, Metrics, ModelHash, Registry, WaitOutcome,
+};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on one blocking slice against a worker's `wait_for`, so
+/// a re-dispatched job's waiter re-reads its placement promptly.
+const WAIT_SLICE: Duration = Duration::from_millis(50);
+
+/// A routed job as the router tracks it.
+struct RouterJob {
+    /// Everything needed to resubmit the job elsewhere.
+    spec: JobSpec,
+    /// Registry hash when submitted by `SOLVE model=`; the router owns
+    /// one pin for the job's lifetime (released at adoption).
+    hash: Option<ModelHash>,
+    /// The shared checkpoint journal every (re-)dispatch of this job
+    /// records into and resumes from.
+    journal: Arc<JobJournal>,
+    /// `(worker index, worker-local job id)` of the current dispatch.
+    placement: Option<(usize, u64)>,
+    /// A client requested cancellation; honored across re-dispatch.
+    cancelled: bool,
+    /// Adopted terminal state — set once, never changes.
+    terminal: Option<JobState>,
+    /// Adopted result, `job_id` rewritten to the router's id.
+    result: Option<JobResult>,
+}
+
+struct RouterInner {
+    workers: Vec<Coordinator>,
+    /// `alive[w]` — false once [`Router::kill_worker`] claimed `w`.
+    alive: Mutex<Vec<bool>>,
+    registry: Arc<Registry>,
+    jobs: Mutex<HashMap<u64, RouterJob>>,
+    next_id: Mutex<u64>,
+    /// Size classes the placement rank is computed against.
+    classes: Vec<usize>,
+    /// hash → worker that last received a job for it.
+    locality: Mutex<HashMap<ModelHash, usize>>,
+    /// Round-robin cursor for the size-class spread.
+    rr: Mutex<usize>,
+}
+
+/// The routing front-end. Cloneable handle, like [`Coordinator`].
+#[derive(Clone)]
+pub struct Router {
+    inner: Arc<RouterInner>,
+    /// Tier-level metrics: `router_redispatches`,
+    /// `router_locality_hits` / `router_locality_misses`, plus the
+    /// shared registry's gauges and whatever the service adds.
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    /// Start `dispatch_workers` coordinator workers (each configured
+    /// with `cfg`, sharing one registry) behind a router.
+    pub fn start_with(dispatch_workers: usize, cfg: CoordinatorConfig) -> Self {
+        assert!(dispatch_workers >= 1, "router needs at least one worker");
+        let metrics = Arc::new(Metrics::new());
+        let registry = match cfg.registry.clone() {
+            Some(shared) => shared,
+            None => Arc::new(Registry::with_defaults()),
+        };
+        // First-writer-wins: tier-wide registry gauges land in the
+        // router's METRICS output, not in any single worker's.
+        registry.attach_metrics(metrics.clone());
+        let classes = if cfg.classes.is_empty() {
+            batcher::DEFAULT_CLASSES.to_vec()
+        } else {
+            cfg.classes.clone()
+        };
+        let workers: Vec<Coordinator> = (0..dispatch_workers)
+            .map(|_| {
+                Coordinator::start_with(CoordinatorConfig {
+                    registry: Some(registry.clone()),
+                    ..cfg.clone()
+                })
+            })
+            .collect();
+        let alive = vec![true; dispatch_workers];
+        Self {
+            inner: Arc::new(RouterInner {
+                workers,
+                alive: Mutex::new(alive),
+                registry,
+                jobs: Mutex::new(HashMap::new()),
+                next_id: Mutex::new(1),
+                classes,
+                locality: Mutex::new(HashMap::new()),
+                rr: Mutex::new(0),
+            }),
+            metrics,
+        }
+    }
+
+    /// [`Self::start_with`] with default worker configuration
+    /// (`workers_per` compute threads each, overlapping dispatch).
+    pub fn start(dispatch_workers: usize, workers_per: usize) -> Self {
+        Self::start_with(
+            dispatch_workers,
+            CoordinatorConfig { workers: workers_per, ..Default::default() },
+        )
+    }
+
+    /// The shared content-addressed model store.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.inner.registry
+    }
+
+    /// Number of workers behind the router (live or killed).
+    pub fn worker_count(&self) -> usize {
+        self.inner.workers.len()
+    }
+
+    /// Direct handle to worker `w` — the churn harness uses it to
+    /// assert per-worker invariants (`committed_weight()` drains to 0).
+    pub fn worker(&self, w: usize) -> &Coordinator {
+        &self.inner.workers[w]
+    }
+
+    /// Routed jobs currently placed on worker `w` and not yet adopted
+    /// as terminal — what [`Self::kill_worker`] would have to drain.
+    pub fn live_jobs_on(&self, w: usize) -> usize {
+        self.inner
+            .jobs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|j| j.terminal.is_none() && matches!(j.placement, Some((pw, _)) if pw == w))
+            .count()
+    }
+
+    /// Pick a live worker for `spec`: registry locality first, then
+    /// size-class rank + round-robin. `None` when no worker is live.
+    /// Takes `alive`/`locality`/`rr` briefly; safe under `jobs`.
+    fn place(&self, spec: &JobSpec, hash: Option<ModelHash>) -> Option<usize> {
+        let alive = self.inner.alive.lock().unwrap();
+        let live: Vec<usize> =
+            alive.iter().enumerate().filter(|(_, &a)| a).map(|(w, _)| w).collect();
+        drop(alive);
+        if live.is_empty() {
+            return None;
+        }
+        if let Some(h) = hash {
+            if let Some(&w) = self.inner.locality.lock().unwrap().get(&h) {
+                if live.contains(&w) {
+                    self.metrics.inc("router_locality_hits");
+                    return Some(w);
+                }
+            }
+            self.metrics.inc("router_locality_misses");
+        }
+        // Same-class jobs round-robin from a per-class offset, so each
+        // class spreads over every live worker instead of piling onto
+        // worker 0.
+        let rank = match batcher::class_of(spec.model.len(), &self.inner.classes) {
+            Some(class) => {
+                self.inner.classes.iter().filter(|&&c| c < class).count()
+            }
+            None => self.inner.classes.len(), // overflow class
+        };
+        let mut rr = self.inner.rr.lock().unwrap();
+        let w = live[(rank + *rr) % live.len()];
+        *rr = rr.wrapping_add(1);
+        Some(w)
+    }
+
+    /// Adopt a worker-terminal outcome into the router job (caller
+    /// holds the `jobs` lock): record the terminal state, rewrite the
+    /// result to the router's id and release the router's model pin.
+    fn adopt(
+        registry: &Registry,
+        metrics: &Metrics,
+        id: u64,
+        job: &mut RouterJob,
+        state: JobState,
+        result: Option<JobResult>,
+    ) {
+        job.terminal = Some(state);
+        job.result = result.map(|mut r| {
+            r.job_id = id;
+            r
+        });
+        if let Some(h) = job.hash {
+            registry.unpin(h);
+        }
+        metrics.inc("router_jobs_adopted");
+    }
+
+    /// Demand-driven reconciliation: if the job's current worker is
+    /// live and reports a terminal state, adopt it. Jobs on a killed
+    /// worker are left alone — `kill_worker`'s drain owns their fate.
+    fn sync_job(&self, id: u64) {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else { return };
+        if job.terminal.is_some() {
+            return;
+        }
+        let Some((w, wid)) = job.placement else { return };
+        if !self.inner.alive.lock().unwrap()[w] {
+            return;
+        }
+        let worker = &self.inner.workers[w];
+        if let Some(state) = Dispatch::state(worker, wid) {
+            if state.is_terminal() {
+                let result = Dispatch::result(worker, wid);
+                Self::adopt(&self.inner.registry, &self.metrics, id, job, state, result);
+            }
+        }
+    }
+
+    /// Kill worker `w`: mark it dead, adopt its already-terminal jobs,
+    /// cancel its live ones and re-dispatch them to survivors — same
+    /// spec, same journal, so each resumes from its last checkpoint and
+    /// finishes bit-identical to an undisturbed run. Finally shuts the
+    /// worker down so its threads drain. Idempotent.
+    pub fn kill_worker(&self, w: usize) {
+        {
+            let mut alive = self.inner.alive.lock().unwrap();
+            if !alive[w] {
+                return;
+            }
+            alive[w] = false;
+        }
+        // Hold the jobs lock for the whole drain: submits, waits and
+        // syncs observe either the old placement (pre-drain) or the
+        // re-dispatched one — never a half-drained tier.
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let victims: Vec<u64> = jobs
+            .iter()
+            .filter(|(_, j)| {
+                j.terminal.is_none() && matches!(j.placement, Some((pw, _)) if pw == w)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        let worker = &self.inner.workers[w];
+        for id in victims {
+            let job = jobs.get_mut(&id).expect("victim listed above");
+            let (_, wid) = job.placement.expect("victim has a placement");
+            match Dispatch::state(worker, wid) {
+                // Finished before the kill: adopt the real outcome.
+                Some(state) if state.is_terminal() => {
+                    let result = Dispatch::result(worker, wid);
+                    Self::adopt(&self.inner.registry, &self.metrics, id, job, state, result);
+                }
+                _ => {
+                    // Preempt the orphaned run; its replica threads may
+                    // linger briefly, but both the old and the new run
+                    // walk the same deterministic trajectory, so any
+                    // checkpoint either records is a valid resume point.
+                    Dispatch::cancel(worker, wid);
+                    if job.cancelled {
+                        // The client already asked for cancellation —
+                        // finalize instead of resurrecting the job
+                        // (empty partial result, like a pre-dispatch
+                        // cancel on a single coordinator).
+                        let result = JobResult {
+                            job_id: id,
+                            label: job.spec.label.clone(),
+                            replicas: Vec::new(),
+                            wall: Duration::ZERO,
+                            completed: false,
+                        };
+                        Self::adopt(
+                            &self.inner.registry,
+                            &self.metrics,
+                            id,
+                            job,
+                            JobState::Cancelled,
+                            Some(result),
+                        );
+                        continue;
+                    }
+                    match self.place(&job.spec, job.hash) {
+                        None => {
+                            let msg = "no live workers to re-dispatch to".to_string();
+                            Self::adopt(
+                                &self.inner.registry,
+                                &self.metrics,
+                                id,
+                                job,
+                                JobState::Failed(msg),
+                                None,
+                            );
+                        }
+                        Some(target) => {
+                            if let Some(h) = job.hash {
+                                // The survivor gets its own pin; the
+                                // dead worker releases the old one when
+                                // its cancelled run drains.
+                                self.inner.registry.pin(h);
+                                self.inner.locality.lock().unwrap().insert(h, target);
+                            }
+                            let new_wid = self.inner.workers[target]
+                                .submit_managed(
+                                    job.spec.clone(),
+                                    job.journal.clone(),
+                                    job.hash,
+                                    // Never reject a re-dispatch: "zero
+                                    // lost jobs" beats the cap for work
+                                    // that was already admitted once.
+                                    false,
+                                )
+                                .expect("unenforced submit cannot be rejected");
+                            job.placement = Some((target, new_wid));
+                            self.metrics.inc("router_redispatches");
+                        }
+                    }
+                }
+            }
+        }
+        drop(jobs);
+        // Let the dead worker's queue and in-flight (now cancelled)
+        // jobs drain; its committed weight returns to zero.
+        Dispatch::shutdown(worker);
+    }
+}
+
+impl Dispatch for Router {
+    /// Place and submit. The `jobs` lock is held across worker
+    /// selection and submission so a concurrent [`Router::kill_worker`]
+    /// either sees the fully recorded placement or runs first (in
+    /// which case `place` already excludes the dead worker).
+    fn submit_spec(&self, spec: JobSpec, hash: Option<ModelHash>) -> Result<u64, AdmissionError> {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let Some(w) = self.place(&spec, hash) else {
+            return Err(AdmissionError::NoLiveWorkers);
+        };
+        if let Some(h) = hash {
+            // One pin for the worker (released when its job goes
+            // terminal); the caller's checkout pin becomes the router's
+            // job-lifetime pin on success.
+            self.inner.registry.pin(h);
+        }
+        // The journal outlives any single dispatch: a re-dispatch after
+        // a worker death resumes from whatever it recorded.
+        let journal = Arc::new(JobJournal::new());
+        match self.inner.workers[w].submit_managed(spec.clone(), journal.clone(), hash, true) {
+            Err(e) => {
+                if let Some(h) = hash {
+                    // The worker refused: take back its pin. The
+                    // caller keeps (and must release) the checkout pin.
+                    self.inner.registry.unpin(h);
+                }
+                Err(e)
+            }
+            Ok(wid) => {
+                if let Some(h) = hash {
+                    self.inner.locality.lock().unwrap().insert(h, w);
+                }
+                let id = {
+                    let mut next = self.inner.next_id.lock().unwrap();
+                    let id = *next;
+                    *next += 1;
+                    id
+                };
+                jobs.insert(
+                    id,
+                    RouterJob {
+                        spec,
+                        hash,
+                        journal,
+                        placement: Some((w, wid)),
+                        cancelled: false,
+                        terminal: None,
+                        result: None,
+                    },
+                );
+                self.metrics.inc("jobs_submitted");
+                Ok(id)
+            }
+        }
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        self.sync_job(id);
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        match jobs.get_mut(&id) {
+            None => false,
+            Some(j) if j.terminal.is_some() => false,
+            Some(j) => {
+                j.cancelled = true;
+                match j.placement {
+                    Some((w, wid)) if self.inner.alive.lock().unwrap()[w] => {
+                        Dispatch::cancel(&self.inner.workers[w], wid)
+                    }
+                    // Dead worker: the kill drain honors `cancelled`.
+                    _ => true,
+                }
+            }
+        }
+    }
+
+    fn state(&self, id: u64) -> Option<JobState> {
+        self.sync_job(id);
+        let jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get(&id)?;
+        if let Some(s) = &job.terminal {
+            return Some(s.clone());
+        }
+        match job.placement {
+            None => Some(JobState::Queued),
+            Some((w, wid)) => {
+                if !self.inner.alive.lock().unwrap()[w] {
+                    // Mid-kill: the drain will adopt or re-dispatch.
+                    return Some(JobState::Running);
+                }
+                match Dispatch::state(&self.inner.workers[w], wid) {
+                    // A terminal state the sync above did not adopt is
+                    // a benign race; report the pre-adoption view.
+                    Some(s) if s.is_terminal() => Some(JobState::Running),
+                    Some(s) => Some(s),
+                    None => Some(JobState::Running),
+                }
+            }
+        }
+    }
+
+    fn result(&self, id: u64) -> Option<JobResult> {
+        self.sync_job(id);
+        self.inner.jobs.lock().unwrap().get(&id).and_then(|j| j.result.clone())
+    }
+
+    fn wait_for(&self, id: u64, timeout: Duration) -> WaitOutcome {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.sync_job(id);
+            let placement = {
+                let jobs = self.inner.jobs.lock().unwrap();
+                match jobs.get(&id) {
+                    None => return WaitOutcome::Unknown,
+                    Some(j) => match &j.terminal {
+                        Some(s) => return WaitOutcome::Terminal(s.clone()),
+                        None => j.placement,
+                    },
+                }
+            };
+            let now = Instant::now();
+            if now >= deadline {
+                return WaitOutcome::Pending;
+            }
+            let slice = (deadline - now).min(WAIT_SLICE);
+            match placement {
+                // Ride the worker's condvar; bounded so a re-dispatch
+                // (placement change) is observed within one slice.
+                Some((w, wid)) => {
+                    let _ = Dispatch::wait_for(&self.inner.workers[w], wid, slice);
+                }
+                None => std::thread::sleep(slice.min(Duration::from_millis(5))),
+            }
+        }
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn registry(&self) -> &Arc<Registry> {
+        &self.inner.registry
+    }
+
+    /// Shut down every live worker, then adopt whatever drained.
+    fn shutdown(&self) {
+        let live: Vec<usize> = {
+            let alive = self.inner.alive.lock().unwrap();
+            alive.iter().enumerate().filter(|(_, &a)| a).map(|(w, _)| w).collect()
+        };
+        for w in live {
+            Dispatch::shutdown(&self.inner.workers[w]);
+        }
+        let ids: Vec<u64> = {
+            let jobs = self.inner.jobs.lock().unwrap();
+            jobs.iter().filter(|(_, j)| j.terminal.is_none()).map(|(&id, _)| id).collect()
+        };
+        for id in ids {
+            self.sync_job(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::engine::{Mode, Schedule, SelectorKind};
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    fn spec(label: &str, seed: u64, steps: u64) -> JobSpec {
+        let rng = StatelessRng::new(seed);
+        let p = MaxCut::new(generators::erdos_renyi(48, 160, &[-1, 1], &rng));
+        JobSpec {
+            model: Arc::new(p.model().clone()),
+            label: label.into(),
+            mode: Mode::RouletteWheel,
+            selector: SelectorKind::Fenwick,
+            schedule: Schedule::Geometric { t0: 5.0, t1: 0.05 },
+            steps,
+            replicas: 2,
+            seed,
+            target_energy: None,
+            shards: 1,
+            pin_lanes: false,
+            budget_ms: 0,
+            max_retries: 0,
+            backend: Backend::Native,
+        }
+    }
+
+    fn wait_terminal(r: &Router, id: u64) -> JobState {
+        loop {
+            match r.wait_for(id, Duration::from_secs(60)) {
+                WaitOutcome::Terminal(s) => return s,
+                WaitOutcome::Pending => continue,
+                WaitOutcome::Unknown => panic!("job {id} unknown"),
+            }
+        }
+    }
+
+    fn key(r: &JobResult) -> Vec<(u32, i64, u64)> {
+        r.replicas.iter().map(|p| (p.replica, p.best_energy, p.flips)).collect()
+    }
+
+    /// A routed job is bit-identical to the same spec on a plain
+    /// coordinator — routing must not perturb results.
+    #[test]
+    fn routed_results_match_single_coordinator() {
+        let router = Router::start(2, 2);
+        let single = Coordinator::start(2);
+        let rid = router.submit_spec(spec("routed", 11, 600), None).unwrap();
+        let sid = single.submit(spec("routed", 11, 600));
+        assert_eq!(wait_terminal(&router, rid), JobState::Done);
+        let routed = Dispatch::result(&router, rid).unwrap();
+        let direct = single.wait(sid).unwrap();
+        assert_eq!(routed.job_id, rid, "adopted result carries the router id");
+        assert_eq!(key(&routed), key(&direct));
+        Dispatch::shutdown(&router);
+        single.shutdown();
+    }
+
+    /// By-hash jobs stick to the worker that last saw the hash; the
+    /// locality counters account every placement decision.
+    #[test]
+    fn locality_prefers_the_resident_worker() {
+        let router = Router::start(3, 1);
+        let model = (*spec("loc", 5, 200).model).clone();
+        let h = router.registry().put(model).unwrap();
+        let mut first_worker = None;
+        for k in 0..4u64 {
+            let arc = router.registry().checkout(h).expect("stored");
+            let mut s = spec("loc", 5, 200);
+            s.model = arc;
+            s.seed = 5 + k;
+            let id = router.submit_spec(s, Some(h)).unwrap();
+            let jobs = router.inner.jobs.lock().unwrap();
+            let (w, _) = jobs[&id].placement.unwrap();
+            drop(jobs);
+            match first_worker {
+                None => first_worker = Some(w),
+                Some(fw) => assert_eq!(w, fw, "by-hash jobs must stay on the resident worker"),
+            }
+            assert_eq!(wait_terminal(&router, id), JobState::Done);
+        }
+        // Pins drain with the jobs: checkout pin → router (released at
+        // adoption), minted pin → worker (released at terminal).
+        assert_eq!(router.registry().stats().pinned, 0);
+        let misses = router.metrics.get("router_locality_misses");
+        assert_eq!(misses, 1, "only the first placement misses");
+        assert_eq!(router.metrics.get("router_locality_hits"), 3);
+        Dispatch::shutdown(&router);
+    }
+
+    /// Killing a worker mid-run re-dispatches its jobs to survivors
+    /// with the same journal: everything still terminates `Done`,
+    /// bit-identical to an undisturbed single-coordinator run.
+    #[test]
+    fn kill_worker_redispatches_and_preserves_results() {
+        let router = Router::start(2, 2);
+        // Enough steps that the kill lands mid-run, small enough to
+        // finish promptly after re-dispatch.
+        let ids: Vec<u64> = (0..4)
+            .map(|k| router.submit_spec(spec(&format!("k{k}"), 70 + k, 2_500_000), None).unwrap())
+            .collect();
+        // Find a worker that actually holds live jobs, then kill it.
+        let victim = (0..router.worker_count())
+            .max_by_key(|&w| router.live_jobs_on(w))
+            .unwrap();
+        assert!(router.live_jobs_on(victim) >= 1, "placement must spread jobs");
+        router.kill_worker(victim);
+        assert!(router.metrics.get("router_redispatches") >= 1, "kill mid-run must re-dispatch");
+        let reference = Coordinator::start(2);
+        for (k, id) in ids.iter().enumerate() {
+            assert_eq!(wait_terminal(&router, *id), JobState::Done, "job {id} lost");
+            let routed = Dispatch::result(&router, *id).unwrap();
+            let sid = reference.submit(spec(&format!("k{k}"), 70 + k as u64, 2_500_000));
+            let direct = reference.wait(sid).unwrap();
+            assert_eq!(key(&routed), key(&direct), "re-dispatched job {id} must be bit-identical");
+        }
+        // Idempotent; killing the last workers leaves re-dispatch
+        // nowhere to go only for *live* jobs — none remain here.
+        router.kill_worker(victim);
+        for w in 0..router.worker_count() {
+            assert_eq!(router.worker(w).committed_weight(), 0, "worker {w} budget must drain");
+        }
+        Dispatch::shutdown(&router);
+        reference.shutdown();
+    }
+
+    /// CANCEL before a kill is honored across the drain: the job lands
+    /// `Cancelled`, never resurrected onto a survivor.
+    #[test]
+    fn cancelled_job_is_not_resurrected_by_kill() {
+        let router = Router::start(2, 1);
+        let id = router.submit_spec(spec("c", 9, 2_000_000_000), None).unwrap();
+        assert!(Dispatch::cancel(&router, id));
+        let (w, _) = {
+            let jobs = router.inner.jobs.lock().unwrap();
+            jobs[&id].placement.unwrap()
+        };
+        router.kill_worker(w);
+        let s = wait_terminal(&router, id);
+        assert_eq!(s, JobState::Cancelled);
+        assert_eq!(router.metrics.get("router_redispatches"), 0);
+        Dispatch::shutdown(&router);
+    }
+}

@@ -118,7 +118,14 @@ pub fn run_replica_ctl(
     let run = if shards > 1 {
         ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run_with_stop(&ctl.stop).0
     } else {
-        let stride = if ctl.max_retries > 0 { checkpoint_stride(spec.steps) } else { 0 };
+        // Retryable jobs journal for their own resume; router-managed
+        // jobs (ctl.checkpoint) journal so a re-dispatch to another
+        // worker resumes instead of restarting.
+        let stride = if ctl.max_retries > 0 || ctl.checkpoint {
+            checkpoint_stride(spec.steps)
+        } else {
+            0
+        };
         let resume = ctl.journal.checkpoint(r as u32);
         let mut engine = match &resume {
             Some(ck) => SnowballEngine::from_checkpoint(&spec.model, cfg, ck),

@@ -2,14 +2,29 @@
 //! face of the Ising machine).
 //!
 //! **The full wire protocol is specified in `docs/PROTOCOL.md`** —
-//! every command (`PING`/`SOLVE`/`STATUS`/`WAIT`/`CANCEL`/`RESULT`/
-//! `METRICS`/`QUIT`), every `ERR` form, and the
+//! every command (`PING`/`PUT`/`REGISTRY`/`SOLVE`/`STATUS`/`WAIT`/
+//! `CANCEL`/`RESULT`/`METRICS`/`QUIT`), every `ERR` form, and the
 //! `selector=`/`schedule=` syntax. In one breath: one request per
 //! line, one reply per line (`METRICS` is multi-line, terminated by
-//! `END`); `SOLVE` returns `JOB id=<u64>` immediately and the job runs
+//! `END`, and `PUT` has a multi-line *body*, terminated by `END`);
+//! `SOLVE` returns `JOB id=<u64>` immediately and the job runs
 //! asynchronously on the coordinator; `WAIT id=` blocks until the job
 //! is terminal; `CANCEL id=` requests cooperative preemption; errors
 //! reply `ERR <message>`.
+//!
+//! The service is generic over its [`Dispatch`] back-end: a single
+//! [`Coordinator`] (the default) or the multi-worker
+//! [`Router`](super::Router) dispatch tier — the wire protocol is
+//! identical either way.
+//!
+//! **Content-addressed submission**: `PUT n=<n>` uploads a model body
+//! (`<i> <k> <J>` coupling lines, `H <i> <h>` field lines, `END`) into
+//! the [`Registry`](super::Registry) and replies `STORED model=<hash>`;
+//! `SOLVE model=<hash>` then references it without re-shipping the
+//! matrix, and every such job shares one `Arc<IsingModel>`. The
+//! checkout pin taken while parsing `SOLVE` is handed to the dispatcher
+//! on success and released here on a refused submit, so no `ERR` path
+//! leaks a pin.
 //!
 //! One thread per connection; compute runs on the coordinator pool
 //! (overlapping dispatch by default, so many clients' jobs execute
@@ -25,9 +40,12 @@
 //! by the disconnect cohort in `rust/tests/service_load.rs` and the
 //! chaos suite.
 
-use super::{Backend, Coordinator, JobSpec, JobState, Metrics, WaitOutcome};
+use super::{
+    Backend, Coordinator, Dispatch, JobSpec, JobState, Metrics, ModelHash, PutError, WaitOutcome,
+};
 use crate::engine::{Mode, Schedule, SelectorKind};
 use crate::graph::{generators, gset};
+use crate::ising::IsingModel;
 use crate::rng::StatelessRng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -36,15 +54,16 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// The TCP service.
-pub struct Service {
-    coordinator: Coordinator,
+/// The TCP service, generic over its [`Dispatch`] back-end (a single
+/// [`Coordinator`] by default, or a [`Router`](super::Router)).
+pub struct Service<D: Dispatch = Coordinator> {
+    coordinator: D,
     listener: TcpListener,
 }
 
-impl Service {
+impl<D: Dispatch> Service<D> {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
-    pub fn bind(coordinator: Coordinator, addr: &str) -> Result<Self> {
+    pub fn bind(coordinator: D, addr: &str) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         Ok(Self { coordinator, listener })
     }
@@ -76,7 +95,7 @@ impl Service {
     }
 }
 
-fn handle_connection(coord: Coordinator, stream: TcpStream) -> Result<()> {
+fn handle_connection<D: Dispatch>(coord: D, stream: TcpStream) -> Result<()> {
     let peer_read = stream.try_clone()?;
     let mut reader = BufReader::new(peer_read);
     let mut writer = stream;
@@ -86,20 +105,133 @@ fn handle_connection(coord: Coordinator, stream: TcpStream) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // peer closed
         }
-        let reply = match handle_line(&coord, line.trim(), &writer) {
-            Ok(Reply::Line(s)) => s,
-            Ok(Reply::Quit) => {
-                writeln!(writer, "BYE")?;
-                return Ok(());
+        let trimmed = line.trim();
+        // PUT is the one command with a multi-line body, so it is
+        // handled here where the connection's reader lives.
+        let cmd = trimmed.split_whitespace().next().unwrap_or("");
+        let reply = if cmd == "PUT" {
+            match handle_put(&coord, trimmed, &mut reader) {
+                Ok(s) => s,
+                Err(e) => format!("ERR {e}"),
             }
-            // Peer vanished mid-blocking-command: nothing to write, no
-            // one to write it to — just release the thread.
-            Ok(Reply::Disconnect) => return Ok(()),
-            Err(e) => format!("ERR {e}"),
+        } else {
+            match handle_line(&coord, trimmed, &writer) {
+                Ok(Reply::Line(s)) => s,
+                Ok(Reply::Quit) => {
+                    writeln!(writer, "BYE")?;
+                    return Ok(());
+                }
+                // Peer vanished mid-blocking-command: nothing to write,
+                // no one to write it to — just release the thread.
+                Ok(Reply::Disconnect) => return Ok(()),
+                Err(e) => format!("ERR {e}"),
+            }
         };
         writeln!(writer, "{reply}")?;
         writer.flush()?;
-        coord.metrics.inc("service_requests");
+        coord.metrics().inc("service_requests");
+    }
+}
+
+/// Handle a `PUT n=<n>` upload: read body lines (`<i> <k> <J>`
+/// couplings, `H <i> <h>` fields) until `END`, store the model in the
+/// registry, reply `STORED model=<hash>`. On any body error the rest of
+/// the body is still drained to `END` so the connection stays
+/// line-synchronized, then the `ERR` is reported.
+fn handle_put<D: Dispatch>(
+    coord: &D,
+    header: &str,
+    reader: &mut BufReader<TcpStream>,
+) -> Result<String> {
+    let kv: HashMap<&str, &str> =
+        header.split_whitespace().skip(1).filter_map(|t| t.split_once('=')).collect();
+    // A refused header must still drain the body to END: the client
+    // already has it in flight, and leaving it unread would desync the
+    // connection (body lines would parse as commands).
+    let n = match kv.get("n").context("missing n=").and_then(|v| Ok(v.parse::<usize>()?)) {
+        Ok(n) => n,
+        Err(e) => {
+            drain_put_body(reader)?;
+            return Err(e);
+        }
+    };
+    let max = coord.registry().max_model_bytes();
+    let bytes = IsingModel::approx_bytes_for(n);
+    // Refuse before materializing an O(N²) matrix; the registry would
+    // apply the same check, this just does it allocation-free.
+    if bytes > max {
+        drain_put_body(reader)?;
+        anyhow::bail!("{}", PutError::TooLarge { bytes, max });
+    }
+    let mut model = IsingModel::zeros(n);
+    let mut body_err: Option<String> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-PUT (missing END)");
+        }
+        let body = line.trim();
+        if body == "END" {
+            break;
+        }
+        if body.is_empty() || body_err.is_some() {
+            continue; // drain the rest after the first error
+        }
+        if let Err(e) = apply_put_line(&mut model, body, n) {
+            body_err = Some(e);
+        }
+    }
+    if let Some(e) = body_err {
+        anyhow::bail!("{e}");
+    }
+    let hash = coord.registry().put(model).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(format!("STORED model={hash}"))
+}
+
+/// One `PUT` body line into the model under construction.
+fn apply_put_line(model: &mut IsingModel, line: &str, n: usize) -> std::result::Result<(), String> {
+    let malformed =
+        format!("malformed PUT body line '{line}' (expect '<i> <k> <J>' or 'H <i> <h>')");
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.as_slice() {
+        ["H", i, h] => {
+            let i: usize = i.parse().map_err(|_| malformed.clone())?;
+            let h: i32 = h.parse().map_err(|_| malformed.clone())?;
+            if i >= n {
+                return Err(format!("spin index {i} out of range (n={n})"));
+            }
+            model.set_h(i, h);
+            Ok(())
+        }
+        [i, k, w] => {
+            let i: usize = i.parse().map_err(|_| malformed.clone())?;
+            let k: usize = k.parse().map_err(|_| malformed.clone())?;
+            let w: i32 = w.parse().map_err(|_| malformed.clone())?;
+            if i >= n || k >= n {
+                return Err(format!("spin index {} out of range (n={n})", i.max(k)));
+            }
+            if i == k {
+                return Err(format!("self-coupling {i} {k} is not allowed (zero diagonal)"));
+            }
+            model.set_j(i, k, w);
+            Ok(())
+        }
+        _ => Err(malformed),
+    }
+}
+
+/// Consume body lines up to `END` (used when the header was refused).
+fn drain_put_body(reader: &mut BufReader<TcpStream>) -> Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-PUT (missing END)");
+        }
+        if line.trim() == "END" {
+            return Ok(());
+        }
     }
 }
 
@@ -151,16 +283,31 @@ impl Drop for WaiterGuard<'_> {
     }
 }
 
-fn handle_line(coord: &Coordinator, line: &str, stream: &TcpStream) -> Result<Reply> {
+fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result<Reply> {
     let mut parts = line.split_whitespace();
     let cmd = parts.next().unwrap_or("");
     let kv: HashMap<&str, &str> = parts.filter_map(|t| t.split_once('=')).collect();
     match cmd {
         "PING" => Ok(Reply::Line("PONG".into())),
         "QUIT" => Ok(Reply::Quit),
-        "METRICS" => Ok(Reply::Line(format!("{}END", coord.metrics.render()))),
+        "METRICS" => Ok(Reply::Line(format!("{}END", coord.metrics().render()))),
+        "REGISTRY" => {
+            let s = coord.registry().stats();
+            if s.entries == 0 {
+                anyhow::bail!("registry empty (PUT a model first)");
+            }
+            Ok(Reply::Line(format!(
+                "REGISTRY entries={} bytes={} pinned={} hits={} misses={} evictions={} dedup={}",
+                s.entries, s.bytes, s.pinned, s.hits, s.misses, s.evictions, s.dedup
+            )))
+        }
         "SOLVE" => {
-            let instance = kv.get("instance").context("missing instance=")?;
+            let instance = kv.get("instance").copied();
+            let model_ref = kv.get("model").copied();
+            anyhow::ensure!(
+                !(instance.is_some() && model_ref.is_some()),
+                "instance= and model= are mutually exclusive"
+            );
             let mode = Mode::parse(kv.get("mode").copied().unwrap_or("rwa"))?;
             let selector = SelectorKind::parse(kv.get("selector").copied().unwrap_or("fenwick"))?;
             let steps: u64 = kv.get("steps").copied().unwrap_or("100000").parse()?;
@@ -194,27 +341,59 @@ fn handle_line(coord: &Coordinator, line: &str, stream: &TcpStream) -> Result<Re
             // first replica panic.
             let budget_ms: u64 = kv.get("budget_ms").copied().unwrap_or("0").parse()?;
             let max_retries: u32 = kv.get("max_retries").copied().unwrap_or("0").parse()?;
-            let (label, model) = build_instance(instance, seed)?;
-            // try_submit: with admission control configured, a
-            // saturated coordinator refuses here (`ERR saturated …`)
-            // instead of parking the client's job forever.
-            let id = coord.try_submit(JobSpec {
-                model: Arc::new(model),
-                label,
-                mode,
-                selector,
-                schedule,
-                steps,
-                replicas,
-                seed,
-                target_energy: target,
-                shards,
-                pin_lanes,
-                budget_ms,
-                max_retries,
-                backend: Backend::Native,
-            })?;
-            Ok(Reply::Line(format!("JOB id={id}")))
+            // Resolve the model LAST, after every other field parsed:
+            // the registry checkout takes a pin, and doing it here
+            // means no earlier `ERR` path can leak one.
+            let (label, model, hash) = match (instance, model_ref) {
+                (Some(name), _) => {
+                    let (label, m) = build_instance(name, seed)?;
+                    (label, Arc::new(m), None)
+                }
+                (None, Some(hex)) => {
+                    let h = ModelHash::parse(hex).map_err(|e| anyhow::anyhow!(e))?;
+                    // Atomic lookup-and-pin: the model cannot be
+                    // evicted between here and job registration.
+                    let m = coord
+                        .registry()
+                        .checkout(h)
+                        .with_context(|| format!("unknown model {h} (PUT it first)"))?;
+                    (format!("model:{}", &h.to_hex()[..12]), m, Some(h))
+                }
+                (None, None) => anyhow::bail!("missing instance= (or model=<hash>)"),
+            };
+            // submit_spec: with admission control configured, a
+            // saturated back-end refuses here (`ERR saturated …`)
+            // instead of parking the client's job forever. On success
+            // the dispatcher owns the checkout pin; on refusal it is
+            // released right here.
+            let submitted = coord.submit_spec(
+                JobSpec {
+                    model,
+                    label,
+                    mode,
+                    selector,
+                    schedule,
+                    steps,
+                    replicas,
+                    seed,
+                    target_energy: target,
+                    shards,
+                    pin_lanes,
+                    budget_ms,
+                    max_retries,
+                    backend: Backend::Native,
+                },
+                hash,
+            );
+            match submitted {
+                Ok(id) => Ok(Reply::Line(format!("JOB id={id}"))),
+                Err(e) => {
+                    if let Some(h) = hash {
+                        coord.registry().unpin(h);
+                    }
+                    Err(e.into())
+                }
+            }
         }
         "STATUS" => {
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
@@ -249,8 +428,8 @@ fn handle_line(coord: &Coordinator, line: &str, stream: &TcpStream) -> Result<Re
             // (and its waiter registration) instead of pinning them
             // until the job ends.
             let id: u64 = kv.get("id").context("missing id=")?.parse()?;
-            coord.metrics.gauge_add("service_waiters", 1);
-            let _waiter = WaiterGuard(&coord.metrics);
+            coord.metrics().gauge_add("service_waiters", 1);
+            let _waiter = WaiterGuard(coord.metrics());
             loop {
                 match coord.wait_for(id, Duration::from_millis(100)) {
                     WaitOutcome::Unknown => anyhow::bail!("unknown job {id}"),
@@ -476,6 +655,69 @@ mod tests {
     fn quit_closes() {
         let addr = start();
         assert_eq!(roundtrip(addr, "QUIT"), "BYE");
+    }
+
+    /// PUT → STORED, dedup across upload order, REGISTRY stats, then
+    /// SOLVE by hash end to end.
+    #[test]
+    fn put_registry_solve_by_hash_flow() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        write!(s, "PUT n=6\n0 1 2\n1 2 -1\nH 0 1\nEND\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STORED model="), "{line}");
+        let hash = line.trim().rsplit('=').next().unwrap().to_string();
+        assert_eq!(hash.len(), 32, "{hash}");
+        // Same body in a different line order → same canonical hash,
+        // deduplicated to one entry.
+        line.clear();
+        write!(s, "PUT n=6\nH 0 1\n1 2 -1\n0 1 2\nEND\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STORED model={hash}"));
+        line.clear();
+        writeln!(s, "REGISTRY").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("REGISTRY entries=1 "), "{line}");
+        assert!(line.contains("dedup=1"), "{line}");
+        line.clear();
+        writeln!(s, "SOLVE model={hash} steps=300 replicas=2 seed=3").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
+        line.clear();
+        writeln!(s, "RESULT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains(&format!("label=model:{}", &hash[..12])), "{line}");
+    }
+
+    /// The same protocol over a router-backed service: the generic
+    /// front-end serves a dispatch tier without any wire change.
+    #[test]
+    fn router_backed_service_speaks_the_same_protocol() {
+        let router = crate::coordinator::Router::start(2, 1);
+        let addr = Service::bind(router, "127.0.0.1:0").unwrap().serve_in_background();
+        assert_eq!(roundtrip(addr, "PING"), "PONG");
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "SOLVE instance=er:16:40 steps=300 replicas=2 seed=2").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
+        line.clear();
+        writeln!(s, "RESULT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("replicas=2"), "{line}");
     }
 
     /// CANCEL end to end: SOLVE a job that would run for minutes,

@@ -178,6 +178,63 @@ impl IsingModel {
         (0..self.n).map(|i| self.local_field(s, i)).collect()
     }
 
+    /// Canonical 128-bit content digest of the model — the identity the
+    /// coordinator's instance registry stores models under
+    /// (`coordinator::registry`, wire verbs `PUT` / `SOLVE model=`).
+    ///
+    /// The digest is computed over the *constructed* model — `n`, every
+    /// nonzero upper-triangle coupling `(i, k, J_ik)` in row-major
+    /// order, and every nonzero field `(i, h_i)` — so two uploads that
+    /// list the same couplings in different orders hash identically,
+    /// while any perturbed coefficient changes the digest. Two
+    /// independent splitmix-style lanes keep the collision surface at
+    /// 128 bits without external dependencies.
+    pub fn content_digest(&self) -> u128 {
+        fn mix(h: u64, x: u64) -> u64 {
+            let mut z = (h ^ x).wrapping_add(0x9e37_79b9_7f4a_7c15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        }
+        let (mut a, mut b) = (
+            mix(0x5357_4241_4c4c_0001, self.n as u64),
+            mix(0x5357_4241_4c4c_0002, (self.n as u64).rotate_left(32)),
+        );
+        let mut absorb = |x: u64| {
+            a = mix(a, x);
+            b = mix(b, x.rotate_left(17));
+        };
+        for i in 0..self.n {
+            let row = self.j_row(i);
+            for k in (i + 1)..self.n {
+                if row[k] != 0 {
+                    absorb(((i as u64) << 32) | k as u64);
+                    absorb(row[k] as i64 as u64);
+                }
+            }
+        }
+        for (i, &h) in self.h.iter().enumerate() {
+            if h != 0 {
+                absorb((i as u64) | (1 << 63));
+                absorb(h as i64 as u64);
+            }
+        }
+        ((a as u128) << 64) | b as u128
+    }
+
+    /// Bytes a dense `n`-spin model materializes: the `n × n` `i32`
+    /// coupling matrix plus the field vector. This is what the registry
+    /// charges against its capacity and what `PUT` checks against
+    /// `max_model_bytes` *before* allocating anything.
+    pub fn approx_bytes_for(n: usize) -> usize {
+        n * n * 4 + n * 4
+    }
+
+    /// [`Self::approx_bytes_for`] of this model.
+    pub fn approx_bytes(&self) -> usize {
+        Self::approx_bytes_for(self.n)
+    }
+
     /// Flip energy change `ΔE_i = H(s^(i→-i)) − H(s) = 2 s_i u_i` (Eq. 2).
     #[inline(always)]
     pub fn delta_e(s_i: i8, u_i: i64) -> i64 {
@@ -420,6 +477,39 @@ mod tests {
                 assert_eq!(got, want, "row {i}, range {lo}..{hi}");
             }
         }
+    }
+
+    /// The content digest is a pure function of the constructed model:
+    /// insertion order is invisible, any coefficient perturbation is
+    /// not, and the byte proxy matches the dense layout.
+    #[test]
+    fn content_digest_is_canonical() {
+        let m = small_model();
+        // Same couplings inserted in reverse order → same matrix →
+        // same digest.
+        let mut rev = IsingModel::zeros(4);
+        rev.set_h(3, -2);
+        rev.set_h(0, 1);
+        rev.set_j(2, 3, 1);
+        rev.set_j(1, 3, 3);
+        rev.set_j(0, 2, -1);
+        rev.set_j(0, 1, 2);
+        assert_eq!(m.content_digest(), rev.content_digest());
+        // Symmetric pair listed from the other side is the same model.
+        let mut sym = m.clone();
+        sym.set_j(1, 0, 2);
+        assert_eq!(m.content_digest(), sym.content_digest());
+        // Any perturbation — a coupling, a field, or the spin count —
+        // moves the digest.
+        let mut p = m.clone();
+        p.set_j(0, 1, 3);
+        assert_ne!(m.content_digest(), p.content_digest());
+        let mut p = m.clone();
+        p.set_h(1, 1);
+        assert_ne!(m.content_digest(), p.content_digest());
+        assert_ne!(IsingModel::zeros(4).content_digest(), IsingModel::zeros(5).content_digest());
+        assert_eq!(m.approx_bytes(), 4 * 4 * 4 + 4 * 4);
+        assert_eq!(IsingModel::approx_bytes_for(4), m.approx_bytes());
     }
 
     #[test]

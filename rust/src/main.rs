@@ -5,19 +5,25 @@
 //!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
 //!          [--workers W] [--selector scan|fenwick] [--shards S] [--pin-lanes]
 //!          [--budget-ms MS] [--max-retries K]
-//!   serve  [--addr host:port] [--workers W] [--max-inflight-replicas N]
-//!          [--reject-saturated] [--shutdown-grace-ms MS]
+//!          [--addr host:port [--model <hash>]]   (submit to a remote service)
+//!   serve  [--addr host:port] [--workers W] [--dispatch-workers D]
+//!          [--max-inflight-replicas N] [--reject-saturated]
+//!          [--shutdown-grace-ms MS] [--registry-capacity-bytes B]
+//!          [--max-model-bytes B]
+//!   put    --addr host:port --instance <id|er:n:m>  (upload to the registry)
 //!   bench  <table1|table2|table3|fig3|fig8|fig13|fig14|fig15> [options]
 //!   gen    --instance <id> --out <path>       (write Gset-format file)
 //!   info                                        (platform / artifact info)
 
 use anyhow::Result;
 use snowball::cli::Args;
-use snowball::coordinator::{service, Backend, Coordinator, JobSpec, Service};
+use snowball::coordinator::{registry, service, Backend, Coordinator, JobSpec, Registry, Service};
 use snowball::engine::{Mode, Schedule, SelectorKind};
 use snowball::graph::gset::{self, GsetId};
 use snowball::harness as hx;
 use snowball::tts;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 fn main() {
@@ -32,6 +38,7 @@ fn run() -> Result<()> {
     match args.command.as_str() {
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "put" => cmd_put(&args),
         "bench" => cmd_bench(&args),
         "gen" => cmd_gen(&args),
         "info" => cmd_info(),
@@ -60,17 +67,35 @@ USAGE:
                      partial result is reported;
                      --max-retries: re-run panicked replicas from
                      their last checkpoint up to K times)
+                 [--addr host:port [--model <hash>]]
+                    (--addr: submit over the wire to a running
+                     `snowball serve` instead of solving in-process;
+                     --model: reference a registry hash from
+                     `snowball put` instead of --instance)
   snowball serve [--addr 127.0.0.1:7878] [--workers W]
-                 [--max-inflight-replicas N] [--reject-saturated]
-                 [--shutdown-grace-ms MS]
-                    (--shutdown-grace-ms: on shutdown, abort jobs
+                 [--dispatch-workers D] [--max-inflight-replicas N]
+                 [--reject-saturated] [--shutdown-grace-ms MS]
+                 [--registry-capacity-bytes B] [--max-model-bytes B]
+                    (--dispatch-workers: >= 2 starts the routed
+                     dispatch tier — D coordinator workers behind one
+                     front-end sharing one model registry;
+                     --shutdown-grace-ms: on shutdown, abort jobs
                      still running after MS instead of draining)
+  snowball put   --addr host:port --instance <id|er:n:m> [--seed S]
+                    (upload the instance to the service's
+                     content-addressed registry; prints the hash to
+                     pass to `solve --model`)
   snowball bench <table1|table2|table3|fig3|fig5|fig8|fig13|fig14|fig15> [--quick]
   snowball gen   --instance <id> --out <path>
   snowball info
 ";
 
 fn cmd_solve(args: &Args) -> Result<()> {
+    // `--addr` redirects the whole job to a running service over the
+    // wire (optionally referencing a registry model via `--model`).
+    if let Some(addr) = args.get("addr") {
+        return cmd_solve_remote(args, addr);
+    }
     // Declarative config file first (`--config run.toml`, `[job]`
     // section), then CLI overrides on top.
     let file_job = match args.get("config") {
@@ -172,23 +197,147 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let addr = args.get_or("addr", "127.0.0.1:7878");
-    let workers: usize = args.get_parse_or("workers", 0usize)?;
-    let max_inflight: usize = args.get_parse_or("max-inflight-replicas", 0usize)?;
-    let shutdown_grace_ms: u64 = args.get_parse_or("shutdown-grace-ms", 0u64)?;
-    let coord = Coordinator::start_with(snowball::coordinator::CoordinatorConfig {
+    // Declarative config file first (`--config serve.toml`, `[serve]`
+    // section), then CLI overrides on top — same layering as `solve`.
+    let file = match args.get("config") {
+        Some(path) => Some(snowball::config::Config::load(std::path::Path::new(path))?.serve()),
+        None => None,
+    };
+    let fs = file.as_ref();
+    let addr = args
+        .get("addr")
+        .map(str::to_string)
+        .or_else(|| fs.map(|s| s.addr.clone()))
+        .unwrap_or_else(|| "127.0.0.1:7878".into());
+    let workers: usize = args.get_parse_or("workers", fs.map(|s| s.workers).unwrap_or(0))?;
+    let dispatch_workers: usize =
+        args.get_parse_or("dispatch-workers", fs.map(|s| s.dispatch_workers).unwrap_or(1))?;
+    anyhow::ensure!(dispatch_workers >= 1, "--dispatch-workers must be >= 1");
+    let max_inflight: usize = args
+        .get_parse_or("max-inflight-replicas", fs.map(|s| s.max_inflight_replicas).unwrap_or(0))?;
+    let shutdown_grace_ms: u64 =
+        args.get_parse_or("shutdown-grace-ms", fs.map(|s| s.shutdown_grace_ms).unwrap_or(0))?;
+    let reject = args.flag("reject-saturated") || fs.map(|s| s.reject_saturated).unwrap_or(false);
+    let cap_bytes: usize = args.get_parse_or(
+        "registry-capacity-bytes",
+        fs.map(|s| s.registry_capacity_bytes).unwrap_or(registry::DEFAULT_CAPACITY_BYTES),
+    )?;
+    let max_model: usize = args.get_parse_or(
+        "max-model-bytes",
+        fs.map(|s| s.max_model_bytes).unwrap_or(registry::DEFAULT_MAX_MODEL_BYTES),
+    )?;
+    let store = Arc::new(Registry::new(cap_bytes, max_model));
+    let cfg = snowball::coordinator::CoordinatorConfig {
         workers,
         max_inflight_replicas: max_inflight,
-        reject_when_saturated: args.flag("reject-saturated"),
+        reject_when_saturated: reject,
         shutdown_grace_ms,
+        registry: Some(store.clone()),
         ..Default::default()
-    });
-    let svc = Service::bind(coord, &addr)?;
-    println!("snowball service listening on {}", svc.addr());
+    };
     if max_inflight > 0 {
         println!("admission: max {max_inflight} inflight replicas");
     }
-    svc.serve()
+    if dispatch_workers >= 2 {
+        let router = snowball::coordinator::Router::start_with(dispatch_workers, cfg);
+        let svc = Service::bind(router, &addr)?;
+        println!(
+            "snowball service listening on {} ({dispatch_workers}-worker dispatch tier)",
+            svc.addr()
+        );
+        svc.serve()
+    } else {
+        let coord = Coordinator::start_with(cfg);
+        // The coordinator only auto-attaches metrics to a registry it
+        // created itself; wire the shared one up (first-writer-wins).
+        store.attach_metrics(coord.metrics.clone());
+        let svc = Service::bind(coord, &addr)?;
+        println!("snowball service listening on {}", svc.addr());
+        svc.serve()
+    }
+}
+
+/// Upload an instance to a running service's content-addressed
+/// registry (`PUT` over the wire) and print the `STORED` hash.
+fn cmd_put(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let name = args.get("instance").ok_or_else(|| anyhow::anyhow!("--instance required"))?;
+    let seed: u64 = args.get_parse_or("seed", 1u64)?;
+    let (label, model) = service::build_instance(name, seed)?;
+    let mut body = format!("PUT n={}\n", model.len());
+    for i in 0..model.len() {
+        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+            if w != 0 {
+                body.push_str(&format!("{i} {k} {w}\n"));
+            }
+        }
+    }
+    for i in 0..model.len() {
+        if model.h(i) != 0 {
+            body.push_str(&format!("H {i} {}\n", model.h(i)));
+        }
+    }
+    body.push_str("END\n");
+    let mut stream = TcpStream::connect(&addr)?;
+    stream.write_all(body.as_bytes())?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let reply = reply.trim();
+    anyhow::ensure!(reply.starts_with("STORED model="), "server replied: {reply}");
+    println!("{label}: {reply}");
+    Ok(())
+}
+
+/// Submit over the wire instead of in-process: `solve --addr host:port`
+/// with either `--model <hash>` (a registry reference from `snowball
+/// put`) or `--instance <id>` (built server-side from the SOLVE line).
+fn cmd_solve_remote(args: &Args, addr: &str) -> Result<()> {
+    let mut req = String::from("SOLVE");
+    match (args.get("model"), args.get("instance")) {
+        (Some(h), None) => req.push_str(&format!(" model={h}")),
+        (None, Some(inst)) => req.push_str(&format!(" instance={inst}")),
+        (Some(_), Some(_)) => anyhow::bail!("--model and --instance are mutually exclusive"),
+        (None, None) => anyhow::bail!("--instance or --model required with --addr"),
+    }
+    for (flag, key) in [
+        ("mode", "mode"),
+        ("selector", "selector"),
+        ("schedule", "schedule"),
+        ("steps", "steps"),
+        ("replicas", "replicas"),
+        ("seed", "seed"),
+        ("target", "target"),
+        ("shards", "shards"),
+        ("budget-ms", "budget_ms"),
+        ("max-retries", "max_retries"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            req.push_str(&format!(" {key}={v}"));
+        }
+    }
+    if args.flag("pin-lanes") {
+        req.push_str(" pin_lanes=1");
+    }
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    writeln!(stream, "{req}")?;
+    reader.read_line(&mut line)?;
+    let submitted = line.trim().to_string();
+    anyhow::ensure!(submitted.starts_with("JOB id="), "server replied: {submitted}");
+    let id: u64 = submitted.rsplit('=').next().unwrap_or_default().parse()?;
+    writeln!(stream, "WAIT id={id}")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("{}", line.trim());
+    match args.get("target") {
+        Some(t) => writeln!(stream, "RESULT id={id} target={t}")?,
+        None => writeln!(stream, "RESULT id={id}")?,
+    }
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("{}", line.trim());
+    Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {

@@ -1,8 +1,10 @@
 //! Coordinator + service integration: end-to-end job lifecycle over TCP,
 //! concurrent clients, replica statistics and TTS plumbing.
 
+use snowball::coordinator::registry::DEFAULT_MAX_MODEL_BYTES;
 use snowball::coordinator::{service, Backend, Coordinator, JobSpec, Service};
 use snowball::engine::{Mode, Schedule, SelectorKind};
+use snowball::ising::IsingModel;
 use snowball::problems::landscape;
 use snowball::rng::StatelessRng;
 use std::io::{BufRead, BufReader, Write};
@@ -138,6 +140,84 @@ fn metrics_surface_through_service() {
         }
     }
     assert!(saw_counter, "metrics should include the request counter");
+}
+
+/// Table-driven coverage of the registry protocol's ERR forms, each
+/// matched *exactly* against the strings docs/PROTOCOL.md specifies —
+/// all on one connection, proving every refusal leaves the line
+/// protocol synchronized (including refused PUT headers, whose bodies
+/// must still be drained to END).
+#[test]
+fn registry_protocol_err_forms_are_exact() {
+    let addr = start_service();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    let over_n = 4100usize;
+    let over_bytes = IsingModel::approx_bytes_for(over_n);
+    assert!(over_bytes > DEFAULT_MAX_MODEL_BYTES, "test premise: n={over_n} must exceed the cap");
+    let unknown = "deadbeefdeadbeefdeadbeefdeadbeef";
+    let bad32 = "g".repeat(32);
+
+    let cases: Vec<(String, String)> = vec![
+        // REGISTRY on an empty store.
+        ("REGISTRY".into(), "ERR registry empty (PUT a model first)".into()),
+        // Well-formed but unknown hash.
+        (
+            format!("SOLVE model={unknown}"),
+            format!("ERR unknown model {unknown} (PUT it first)"),
+        ),
+        // Malformed hashes: wrong length, wrong alphabet.
+        (
+            "SOLVE model=abc123".into(),
+            "ERR malformed model hash 'abc123' (expect 32 hex chars)".into(),
+        ),
+        (
+            format!("SOLVE model={bad32}"),
+            format!("ERR malformed model hash '{bad32}' (expect 32 hex chars)"),
+        ),
+        // Model resolution is mandatory and exclusive.
+        ("SOLVE".into(), "ERR missing instance= (or model=<hash>)".into()),
+        (
+            format!("SOLVE instance=er:8:10 model={unknown}"),
+            "ERR instance= and model= are mutually exclusive".into(),
+        ),
+        // PUT body over the registry's max_model_bytes cap.
+        (
+            format!("PUT n={over_n}\nEND"),
+            format!("ERR model too large: {over_bytes} bytes exceeds max_model_bytes \
+                     {DEFAULT_MAX_MODEL_BYTES}"),
+        ),
+        // PUT header and body malformations.
+        ("PUT\nEND".into(), "ERR missing n=".into()),
+        (
+            "PUT n=4\n0 1 2 3\nEND".into(),
+            "ERR malformed PUT body line '0 1 2 3' (expect '<i> <k> <J>' or 'H <i> <h>')".into(),
+        ),
+        (
+            "PUT n=4\n0 0 2\nEND".into(),
+            "ERR self-coupling 0 0 is not allowed (zero diagonal)".into(),
+        ),
+        ("PUT n=4\n1 7 2\nEND".into(), "ERR spin index 7 out of range (n=4)".into()),
+        ("PUT n=4\nH 9 1\nEND".into(), "ERR spin index 9 out of range (n=4)".into()),
+    ];
+    for (req, want) in &cases {
+        let got = send(&mut s, &mut r, req);
+        assert_eq!(&got, want, "for request {req:?}");
+    }
+
+    // After a dozen refusals the very same connection still serves the
+    // happy path: PUT, REGISTRY, SOLVE by hash.
+    let stored = send(&mut s, &mut r, "PUT n=4\n0 1 2\n2 3 -1\nH 0 1\nEND");
+    let hash = stored.strip_prefix("STORED model=").unwrap_or_else(|| panic!("{stored}"));
+    assert_eq!(hash.len(), 32, "hash is 32 hex chars: {stored}");
+    let reg = send(&mut s, &mut r, "REGISTRY");
+    assert!(reg.starts_with("REGISTRY entries=1 bytes="), "{reg}");
+    let reply = send(&mut s, &mut r, &format!("SOLVE model={hash} steps=500 replicas=2 seed=9"));
+    assert!(reply.starts_with("JOB id="), "{reply}");
+    let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+    let state = send(&mut s, &mut r, &format!("WAIT id={id}"));
+    assert_eq!(state, format!("STATE id={id} state=done"));
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! `testutil::Cases` helper — the offline stand-in for proptest).
 
 use snowball::bitplane::BitPlanes;
-use snowball::coordinator::batcher;
+use snowball::coordinator::{batcher, Registry};
 use snowball::engine::{
     Datapath, EngineConfig, LaneKernel, Mode, PwlLogistic, Schedule, SelectorKind, SnowballEngine,
 };
@@ -484,6 +484,174 @@ fn prop_batcher_conservation() {
         }
         if !seen.iter().all(|&b| b) {
             return Err("job dropped".into());
+        }
+        Ok(())
+    });
+}
+
+/// Rebuild `m` by applying its couplings and fields in the opposite
+/// order — an "equivalent upload" whose wire body is a permutation of
+/// the original's.
+fn rebuilt_in_reverse(m: &IsingModel) -> IsingModel {
+    let n = m.len();
+    let mut r = IsingModel::zeros(n);
+    for i in (0..n).rev() {
+        for k in ((i + 1)..n).rev() {
+            if m.j(i, k) != 0 {
+                r.set_j(i, k, m.j(i, k));
+            }
+        }
+        r.set_h(i, m.h(i));
+    }
+    r
+}
+
+/// Registry hashing is canonical: equivalent uploads built in any row
+/// order collapse to one hash (and one entry, via dedup), while
+/// perturbing a single coupling yields a distinct hash and entry.
+#[test]
+fn prop_registry_hash_order_invariant_and_perturbation_sensitive() {
+    Cases::new(0xE1, 40).run(|rng, size| {
+        let n = (size + 2).min(64);
+        let m = gen::model(rng, n, 9);
+        let reg = Registry::with_defaults();
+        let h1 = reg.put(m.clone()).map_err(|e| e.to_string())?;
+        let h2 = reg.put(rebuilt_in_reverse(&m)).map_err(|e| e.to_string())?;
+        if h1 != h2 {
+            return Err(format!("equivalent uploads hashed apart: {h1} vs {h2}"));
+        }
+        let s = reg.stats();
+        if s.entries != 1 || s.dedup != 1 {
+            return Err(format!("dedup failed: {} entries, {} dedup", s.entries, s.dedup));
+        }
+        // Perturb one off-diagonal coupling: the hash must move.
+        let i = rng.below(40, 0, salt::SITE, n as u32) as usize;
+        let k = (i + 1 + rng.below(41, 0, salt::SITE, (n - 1) as u32) as usize) % n;
+        let mut p = m.clone();
+        p.set_j(i, k, m.j(i, k) + 1 + rng.below(42, 0, salt::PROBLEM, 7) as i32);
+        let h3 = reg.put(p).map_err(|e| e.to_string())?;
+        if h3 == h1 {
+            return Err(format!("perturbed ({i},{k}) but hash unchanged"));
+        }
+        if reg.stats().entries != 2 {
+            return Err("perturbed model should be a second entry".into());
+        }
+        Ok(())
+    });
+}
+
+/// Pin refcounts saturate at zero: arbitrary pin/unpin interleavings
+/// (including over-unpinning) track a non-negative mirror, and a fresh
+/// pin after an over-unpin storm still registers — the count never
+/// went negative underneath.
+#[test]
+fn prop_registry_refcount_never_negative() {
+    Cases::new(0xE2, 40).run(|rng, size| {
+        let n = (size + 2).min(32);
+        let reg = Registry::with_defaults();
+        let h = reg.put(gen::model(rng, n, 5)).map_err(|e| e.to_string())?;
+        let mut mirror: u64 = 0;
+        for t in 0..40u64 {
+            if rng.below(43, t, salt::PROBLEM, 3) == 0 {
+                if !reg.pin(h) {
+                    return Err("pin of a stored hash failed".into());
+                }
+                mirror += 1;
+            } else {
+                reg.unpin(h);
+                mirror = mirror.saturating_sub(1);
+            }
+            let pinned = reg.stats().pinned;
+            if pinned != usize::from(mirror > 0) {
+                return Err(format!("pinned={pinned} but mirror refcount={mirror} at op {t}"));
+            }
+        }
+        for _ in 0..5 {
+            reg.unpin(h);
+        }
+        if !reg.pin(h) || reg.stats().pinned != 1 {
+            return Err("refcount went negative: a fresh pin was swallowed".into());
+        }
+        reg.unpin(h);
+        if reg.stats().pinned != 0 {
+            return Err("final unpin did not release".into());
+        }
+        Ok(())
+    });
+}
+
+/// LRU eviction under a tiny capacity never removes a pinned entry,
+/// however the put/pin sequence interleaves — and it does evict
+/// unpinned ones (the capacity is real).
+#[test]
+fn prop_registry_eviction_never_removes_pinned() {
+    Cases::new(0xE3, 30).run(|rng, size| {
+        let n = (size + 4).min(24);
+        let bytes = IsingModel::approx_bytes_for(n);
+        let reg = Registry::new(bytes * 3, bytes * 2);
+        let base = gen::model(rng, n, 4);
+        let mut pinned = Vec::new();
+        for t in 0..10u64 {
+            // Distinct models of identical size: vary one coupling.
+            let mut m = base.clone();
+            m.set_j(0, 1, 1 + t as i32);
+            m.set_h(0, 1 + t as i32);
+            let h = reg.put(m).map_err(|e| e.to_string())?;
+            if pinned.len() < 2 && rng.below(44, t, salt::PROBLEM, 2) == 0 {
+                if !reg.pin(h) {
+                    return Err("pin right after put failed".into());
+                }
+                pinned.push(h);
+            }
+            for &p in &pinned {
+                if !reg.contains(p) {
+                    return Err(format!("evicted pinned entry after put {t}"));
+                }
+            }
+            if reg.stats().pinned != pinned.len() {
+                return Err("pinned count drifted".into());
+            }
+        }
+        if reg.stats().evictions == 0 {
+            return Err("10 same-size puts into 3 slots must evict".into());
+        }
+        for &p in &pinned {
+            reg.unpin(p);
+        }
+        if reg.stats().pinned != 0 {
+            return Err("unpin-all left pins".into());
+        }
+        Ok(())
+    });
+}
+
+/// Concurrent PUTs of one body from many threads converge to a single
+/// entry, every caller sees the same hash, and the losers all count as
+/// dedups — no duplicate storage, no lost upload.
+#[test]
+fn prop_registry_concurrent_put_yields_one_entry() {
+    Cases::new(0xE4, 8).run(|rng, size| {
+        let n = (size + 4).min(48);
+        let m = gen::model(rng, n, 6);
+        let reg = std::sync::Arc::new(Registry::with_defaults());
+        let threads = 8usize;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let reg = reg.clone();
+                let m = m.clone();
+                std::thread::spawn(move || reg.put(m).expect("concurrent put"))
+            })
+            .collect();
+        let hashes: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        if hashes.iter().any(|&h| h != hashes[0]) {
+            return Err(format!("concurrent puts disagreed on the hash: {hashes:?}"));
+        }
+        let s = reg.stats();
+        if s.entries != 1 {
+            return Err(format!("{} entries after concurrent puts of one body", s.entries));
+        }
+        if s.dedup != (threads - 1) as u64 {
+            return Err(format!("expected {} dedups, saw {}", threads - 1, s.dedup));
         }
         Ok(())
     });

@@ -1,0 +1,203 @@
+//! Registry parity (the tentpole's bit-identity contract):
+//! `SOLVE model=<hash>` must produce results bit-identical to the
+//! equivalent inline `SOLVE` — over the wire and through the direct
+//! API, across modes and selectors — and every concurrent job
+//! referencing one hash must share a single `Arc<IsingModel>`
+//! allocation (one copy in memory, however many jobs run).
+
+use snowball::coordinator::{service, Backend, Coordinator, Dispatch, JobResult, JobSpec, Service};
+use snowball::engine::{Mode, Schedule, SelectorKind};
+use snowball::ising::IsingModel;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn send(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(s, "{req}").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// The wire body of a `PUT` upload for `model`.
+fn put_body(model: &IsingModel) -> String {
+    let mut body = format!("PUT n={}\n", model.len());
+    for i in 0..model.len() {
+        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+            if w != 0 {
+                body.push_str(&format!("{i} {k} {w}\n"));
+            }
+        }
+    }
+    for i in 0..model.len() {
+        if model.h(i) != 0 {
+            body.push_str(&format!("H {i} {}\n", model.h(i)));
+        }
+    }
+    body.push_str("END\n");
+    body
+}
+
+/// SOLVE → WAIT(done) → RESULT best= on an open connection.
+fn solve_best(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> i64 {
+    let reply = send(s, r, req);
+    assert!(reply.starts_with("JOB id="), "{reply}");
+    let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+    let state = send(s, r, &format!("WAIT id={id}"));
+    assert_eq!(state, format!("STATE id={id} state=done"));
+    let res = send(s, r, &format!("RESULT id={id}"));
+    res.split_whitespace()
+        .find_map(|tok| tok.strip_prefix("best="))
+        .unwrap_or_else(|| panic!("no best= in {res}"))
+        .parse()
+        .unwrap()
+}
+
+/// Over the wire: for every mode × selector, uploading the model once
+/// and solving it by hash reports the same best energy as shipping the
+/// matrix inline — same seed, same trajectory, same answer.
+#[test]
+fn by_hash_matches_inline_over_the_wire_across_modes() {
+    let coord = Coordinator::start(2);
+    let addr = Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    let inst = "er:40:160";
+    let seed = 77u64;
+    let (_, model) = service::build_instance(inst, seed).unwrap();
+    s.write_all(put_body(&model).as_bytes()).unwrap();
+    let mut stored = String::new();
+    r.read_line(&mut stored).unwrap();
+    let hash = stored
+        .trim()
+        .strip_prefix("STORED model=")
+        .unwrap_or_else(|| panic!("bad PUT reply: {stored}"))
+        .to_string();
+
+    for mode in ["rwa", "rsa"] {
+        for selector in ["fenwick", "scan"] {
+            let tail =
+                format!("mode={mode} selector={selector} steps=4000 replicas=3 seed={seed}");
+            let inline = solve_best(&mut s, &mut r, &format!("SOLVE instance={inst} {tail}"));
+            let by_hash = solve_best(&mut s, &mut r, &format!("SOLVE model={hash} {tail}"));
+            assert_eq!(
+                by_hash, inline,
+                "by-hash SOLVE diverged from inline for mode={mode} selector={selector}"
+            );
+        }
+    }
+}
+
+fn spec(model: Arc<IsingModel>, steps: u64, seed: u64) -> JobSpec {
+    JobSpec {
+        model,
+        label: "parity".into(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        steps,
+        replicas: 3,
+        seed,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
+        backend: Backend::Native,
+    }
+}
+
+fn triples(r: &JobResult) -> Vec<(u32, i64, u64)> {
+    r.replicas.iter().map(|x| (x.replica, x.best_energy, x.flips)).collect()
+}
+
+/// Direct API: the by-hash path is bit-identical *replica for replica*
+/// (best energy AND flip count per replica), not just on the best.
+/// Also: a sharded (`shards=2`) by-hash job completes — the shared Arc
+/// feeds the shard lanes like any owned model.
+#[test]
+fn by_hash_matches_inline_replica_for_replica() {
+    let coord = Coordinator::start(2);
+    let (_, model) = service::build_instance("er:48:180", 13).unwrap();
+
+    let inline_id = coord.submit(spec(Arc::new(model.clone()), 6_000, 13));
+    let inline = coord.wait(inline_id).expect("inline job result");
+
+    let h = coord.registry().put(model).expect("put");
+    let shared = coord.registry().checkout(h).expect("checkout");
+    let id = coord.submit_spec(spec(shared, 6_000, 13), Some(h)).expect("submit by hash");
+    let by_hash = coord.wait(id).expect("by-hash job result");
+    assert_eq!(triples(&by_hash), triples(&inline), "replica streams diverged");
+
+    // Sharded by-hash job: lanes borrow the same shared model.
+    let sharded = coord.registry().checkout(h).expect("checkout for shards");
+    let mut s = spec(sharded, 50_000, 14);
+    s.shards = 2;
+    let id = coord.submit_spec(s, Some(h)).expect("submit sharded");
+    let r = coord.wait(id).expect("sharded result");
+    assert!(r.completed, "sharded by-hash job must complete");
+    assert_eq!(coord.registry().stats().pinned, 0, "pins released at terminal");
+    coord.shutdown();
+}
+
+/// The memory claim behind the registry: N concurrent jobs referencing
+/// one hash are all backed by the *same* `IsingModel` allocation.
+/// Checkouts are pointer-identical, the strong count grows by exactly
+/// the handles we minted, and the registry stores one entry of one
+/// model's bytes throughout.
+#[test]
+fn one_arc_instance_serves_all_concurrent_jobs() {
+    let coord = Coordinator::start(2);
+    let (_, model) = service::build_instance("er:32:120", 5).unwrap();
+    let bytes = model.approx_bytes();
+    let reg = coord.registry().clone();
+    let h = reg.put(model).expect("put");
+
+    let shared = reg.checkout(h).expect("checkout");
+    let again = reg.checkout(h).expect("second checkout");
+    assert!(Arc::ptr_eq(&shared, &again), "checkouts must return the same allocation");
+    drop(again);
+    reg.unpin(h); // release the second checkout's pin
+    let base = Arc::strong_count(&shared);
+
+    // Long enough that all four jobs coexist (two queued behind two
+    // running on the 2-worker pool) while we count.
+    let jobs = 4usize;
+    let mut ids = Vec::new();
+    for j in 0..jobs {
+        let m = reg.checkout(h).expect("checkout per job");
+        assert!(Arc::ptr_eq(&shared, &m), "job {j} got a different allocation");
+        ids.push(coord.submit_spec(spec(m, 5_000_000, 100 + j as u64), Some(h)).unwrap());
+    }
+    // Every in-flight spec holds a clone of the one allocation: the
+    // count rose by at least the four handles we just minted (replicas
+    // may add more), and the registry still holds exactly one entry of
+    // one model's bytes — no copy per job anywhere.
+    assert!(
+        Arc::strong_count(&shared) >= base + jobs,
+        "strong count {} did not grow by the {jobs} job handles over base {base}",
+        Arc::strong_count(&shared)
+    );
+    let stats = reg.stats();
+    assert_eq!((stats.entries, stats.bytes), (1, bytes), "one entry, one copy");
+    assert_eq!(stats.pinned, 1, "the shared entry is pinned while jobs are in flight");
+
+    for id in ids {
+        coord.wait(id).expect("job result");
+    }
+    // Job pins are released before waiters wake; only our own checkout
+    // pin remains, and releasing it drains the entry completely.
+    assert_eq!(reg.stats().pinned, 1, "only the observation pin should remain");
+    reg.unpin(h);
+    assert_eq!(reg.stats().pinned, 0, "all pins released");
+    // Worker threads may still be unwinding their spec clones for a
+    // moment after `wait` returns; settle, then the registry + this
+    // handle are the only references to the one allocation.
+    let t0 = std::time::Instant::now();
+    while Arc::strong_count(&shared) > 2 && t0.elapsed() < std::time::Duration::from_secs(10) {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(Arc::strong_count(&shared), 2, "only the registry + this handle remain");
+    coord.shutdown();
+}

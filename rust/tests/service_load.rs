@@ -10,14 +10,22 @@
 //!   single-worker reference run of the same spec
 //!   (`pool_determinism.rs`-style), i.e. saturation never leaks between
 //!   jobs or perturbs a replica stream.
+//!
+//! The routed-tier storm at the bottom scales the same discipline to
+//! the dispatch tier: a thousand clients over a 4-worker `Router` with
+//! mixed inline / PUT-then-by-hash / disconnect-churn traffic and a
+//! worker killed mid-storm, asserting zero lost jobs and bit-identical
+//! results throughout.
 
-use snowball::coordinator::{service, Coordinator, ReplicaScheduler, Service};
+use snowball::coordinator::{service, Coordinator, Dispatch, ReplicaScheduler, Router, Service};
 use snowball::coordinator::{Backend, JobSpec};
 use snowball::engine::{Mode, Schedule, SelectorKind};
-use std::collections::BTreeMap;
+use snowball::ising::IsingModel;
+use std::collections::{BTreeMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// 96 solving clients + 8 metrics pollers = 104 concurrent connections.
 const SOLVERS: usize = 96;
@@ -251,4 +259,382 @@ fn disconnect_mid_wait_leaks_no_waiter_state() {
         assert_eq!(state, format!("STATE id={id} state=cancelled"));
     }
     coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Routed dispatch tier: thousand-client churn/kill storm.
+// ---------------------------------------------------------------------------
+
+/// Storm shape: 1024 solving clients (+ pollers) against a 4-worker
+/// dispatch tier. Connection *concurrency* is bounded by [`Gate`] so
+/// the harness stays under default fd limits — every client is still a
+/// real thread holding a real TCP connection for its whole exchange.
+const STORM_INLINE: usize = 400;
+const STORM_BY_HASH: usize = 400;
+const STORM_CHURN: usize = 224;
+const STORM_MODELS: usize = 8;
+const STORM_SOCKETS: usize = 160;
+
+/// A counting semaphore from Mutex + Condvar (the repo bans raw
+/// atomics outside audited files; this needs no speed anyway).
+struct Gate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct Permit(Arc<Gate>);
+
+impl Gate {
+    fn new(n: usize) -> Arc<Gate> {
+        Arc::new(Gate { permits: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    fn acquire(self: &Arc<Gate>) -> Permit {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        Permit(self.clone())
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        *self.0.permits.lock().unwrap() += 1;
+        self.0.cv.notify_one();
+    }
+}
+
+/// Full SOLVE → WAIT → RESULT round trip for an arbitrary request;
+/// returns the job id and the reported best energy.
+fn solve_round_trip(addr: std::net::SocketAddr, req: &str) -> (u64, i64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    solve_on(&mut s, &mut r, req)
+}
+
+/// Same round trip on an already-open connection (so a client can PUT
+/// first and SOLVE by hash on the same socket).
+fn solve_on(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> (u64, i64) {
+    let reply = send(s, r, req);
+    assert!(reply.starts_with("JOB id="), "{reply}");
+    let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+    let state = send(s, r, &format!("WAIT id={id}"));
+    assert_eq!(state, format!("STATE id={id} state=done"));
+    let res = send(s, r, &format!("RESULT id={id}"));
+    let best = res
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("best="))
+        .unwrap_or_else(|| panic!("no best= in {res}"));
+    (id, best.parse().unwrap())
+}
+
+/// The wire body of a `PUT` upload for `model` (couplings then fields,
+/// END-terminated) — what `snowball put` sends.
+fn put_body(model: &IsingModel) -> String {
+    let mut body = format!("PUT n={}\n", model.len());
+    for i in 0..model.len() {
+        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+            if w != 0 {
+                body.push_str(&format!("{i} {k} {w}\n"));
+            }
+        }
+    }
+    for i in 0..model.len() {
+        if model.h(i) != 0 {
+            body.push_str(&format!("H {i} {}\n", model.h(i)));
+        }
+    }
+    body.push_str("END\n");
+    body
+}
+
+/// The `c % STORM_MODELS` shared models of the by-hash cohort: 50
+/// clients reference each, so the registry must hold exactly 8 entries
+/// however the 400 concurrent PUTs interleave.
+fn storm_model(k: usize) -> IsingModel {
+    let (_, model) = service::build_instance(&format!("er:32:{}", 96 + 8 * k), 900 + k as u64)
+        .expect("storm model");
+    model
+}
+
+/// Per-client storm parameters. Seeds are globally distinct so every
+/// job has a unique bit-exact answer; steps stagger so queue drains mix
+/// sizes.
+fn storm_solve_params(c: usize) -> (u64, u64) {
+    (2_000 + (c % 4) as u64 * 500, 5_000 + c as u64)
+}
+
+/// Reference spec mirroring exactly what the service builds for a
+/// storm request (same defaults as the SOLVE handler).
+fn storm_reference_spec(model: IsingModel, steps: u64, seed: u64) -> JobSpec {
+    JobSpec {
+        model: Arc::new(model),
+        label: String::new(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        steps,
+        replicas: 2,
+        seed,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
+        backend: Backend::Native,
+    }
+}
+
+/// Churn cohort jobs run long enough (~tens of ms) that the killed
+/// worker reliably holds several mid-flight, forcing re-dispatch.
+const CHURN_STEPS: u64 = 1_200_000;
+
+fn churn_reference_spec(c: usize) -> JobSpec {
+    let (_, model) = service::build_instance("er:64:256", 80_000 + c as u64).unwrap();
+    storm_reference_spec(model, CHURN_STEPS, 80_000 + c as u64)
+}
+
+/// The ISSUE's headline harness: ≥1000 concurrent TCP clients against
+/// a front-end routing over 4 coordinator workers, mixing
+/// PUT-then-SOLVE-by-hash with inline-SOLVE traffic and
+/// disconnect-mid-WAIT churn, with one worker killed mid-storm.
+///
+/// Asserts, in order: zero lost jobs (every submitted id reaches a
+/// terminal state), every result bit-identical to a single-worker
+/// reference run, exactly [`STORM_MODELS`] registry entries with
+/// dedup/hit/miss counters reconciling the observed traffic, at least
+/// one re-dispatch, and every worker's committed admission weight and
+/// the service waiter gauge drained to zero.
+#[test]
+fn routed_tier_survives_thousand_client_storm_with_worker_kill() {
+    let router = Router::start(4, 2);
+    let metrics = router.metrics.clone();
+    let addr = Service::bind(router.clone(), "127.0.0.1:0").unwrap().serve_in_background();
+    let gate = Gate::new(STORM_SOCKETS);
+
+    // Kill thread: wait until the busiest worker holds a few live jobs
+    // (the storm makes that near-instant), then kill it mid-flight.
+    let killer = {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            loop {
+                let victim = (0..router.worker_count())
+                    .max_by_key(|&w| router.live_jobs_on(w))
+                    .unwrap();
+                if router.live_jobs_on(victim) >= 2 || t0.elapsed() > Duration::from_secs(30) {
+                    router.kill_worker(victim);
+                    return victim;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    // Cohort A: inline SOLVE (the model travels in the request line).
+    let mut inline = Vec::new();
+    for c in 0..STORM_INLINE {
+        let gate = gate.clone();
+        inline.push(std::thread::spawn(move || {
+            let _p = gate.acquire();
+            let (inst, steps, seed) = trace_entry(c);
+            let (id, best) = solve_round_trip(
+                addr,
+                &format!("SOLVE instance={inst} mode=rwa steps={steps} replicas=2 seed={seed}"),
+            );
+            (c, id, best)
+        }));
+    }
+
+    // Cohort B: PUT the model (8 distinct bodies across 400 clients),
+    // then SOLVE it by hash on the same socket.
+    let mut by_hash = Vec::new();
+    for c in 0..STORM_BY_HASH {
+        let gate = gate.clone();
+        by_hash.push(std::thread::spawn(move || {
+            let _p = gate.acquire();
+            let (steps, seed) = storm_solve_params(c);
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            s.write_all(put_body(&storm_model(c % STORM_MODELS)).as_bytes()).unwrap();
+            let mut stored = String::new();
+            r.read_line(&mut stored).unwrap();
+            let hash = stored
+                .trim()
+                .strip_prefix("STORED model=")
+                .unwrap_or_else(|| panic!("bad PUT reply: {stored}"))
+                .to_string();
+            let (id, best) = solve_on(
+                &mut s,
+                &mut r,
+                &format!("SOLVE model={hash} mode=rwa steps={steps} replicas=2 seed={seed}"),
+            );
+            (c, id, best)
+        }));
+    }
+
+    // Cohort C: churn — submit, park in WAIT, hang up without reading
+    // the reply. The jobs must still reach `done` on their own.
+    let mut churn = Vec::new();
+    for c in 0..STORM_CHURN {
+        let gate = gate.clone();
+        churn.push(std::thread::spawn(move || {
+            let _p = gate.acquire();
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let reply = send(
+                &mut s,
+                &mut r,
+                &format!(
+                    "SOLVE instance=er:64:256 mode=rwa steps={CHURN_STEPS} replicas=2 seed={}",
+                    80_000 + c as u64
+                ),
+            );
+            assert!(reply.starts_with("JOB id="), "{reply}");
+            let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+            writeln!(s, "WAIT id={id}").unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            id
+        }));
+    }
+
+    // A few METRICS pollers keep protocol traffic mixed during the storm.
+    let pollers: Vec<_> = (0..8)
+        .map(|_| {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let _p = gate.acquire();
+                metrics_client(addr);
+            })
+        })
+        .collect();
+
+    let inline: Vec<(usize, u64, i64)> = inline.into_iter().map(|h| h.join().unwrap()).collect();
+    let by_hash: Vec<(usize, u64, i64)> = by_hash.into_iter().map(|h| h.join().unwrap()).collect();
+    let churn_ids: Vec<u64> = churn.into_iter().map(|h| h.join().unwrap()).collect();
+    for p in pollers {
+        p.join().unwrap();
+    }
+    let victim = killer.join().unwrap();
+
+    // Zero lost jobs: every churn id reaches a terminal state (done —
+    // nothing cancels them) and reports a result, kill or no kill.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut churn_bests = Vec::new();
+    for (c, &id) in churn_ids.iter().enumerate() {
+        let state = send(&mut s, &mut r, &format!("WAIT id={id}"));
+        assert_eq!(state, format!("STATE id={id} state=done"), "churn job {c} lost");
+        let res = send(&mut s, &mut r, &format!("RESULT id={id}"));
+        let best: i64 = res
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("best="))
+            .unwrap_or_else(|| panic!("no best= in {res}"))
+            .parse()
+            .unwrap();
+        churn_bests.push((c, best));
+    }
+
+    // Router ids are unique across the whole storm.
+    let total = STORM_INLINE + STORM_BY_HASH + STORM_CHURN;
+    let distinct: HashSet<u64> = inline
+        .iter()
+        .map(|&(_, id, _)| id)
+        .chain(by_hash.iter().map(|&(_, id, _)| id))
+        .chain(churn_ids.iter().copied())
+        .collect();
+    assert_eq!(distinct.len(), total, "router ids collided");
+
+    // Bit-identity: every observed best equals a single-worker
+    // reference run of the same spec — including jobs the kill
+    // re-dispatched mid-run (checkpoint resume is deterministic).
+    let mut checks: Vec<(JobSpec, i64)> = Vec::new();
+    for &(c, _, best) in &inline {
+        checks.push((reference_spec(c), best));
+    }
+    for &(c, _, best) in &by_hash {
+        let (steps, seed) = storm_solve_params(c);
+        checks.push((storm_reference_spec(storm_model(c % STORM_MODELS), steps, seed), best));
+    }
+    for &(c, best) in &churn_bests {
+        checks.push((churn_reference_spec(c), best));
+    }
+    let checks = Arc::new(checks);
+    let cursor = Arc::new(Mutex::new(0usize));
+    let verifiers: Vec<_> = (0..8)
+        .map(|_| {
+            let checks = checks.clone();
+            let cursor = cursor.clone();
+            std::thread::spawn(move || {
+                let sched = ReplicaScheduler::new(1);
+                loop {
+                    let i = {
+                        let mut n = cursor.lock().unwrap();
+                        let i = *n;
+                        *n += 1;
+                        i
+                    };
+                    let Some((spec, observed)) = checks.get(i) else { break };
+                    let expect =
+                        sched.run_native(spec).iter().map(|r| r.best_energy).min().unwrap();
+                    assert_eq!(*observed, expect, "storm job {i} diverged from reference");
+                }
+            })
+        })
+        .collect();
+    for v in verifiers {
+        v.join().unwrap();
+    }
+
+    // Registry accounting: 400 uploads of 8 distinct bodies converge to
+    // 8 entries; the rest deduplicate. Every by-hash SOLVE checkout
+    // hit; nothing ever missed; nothing stays pinned after the drain.
+    let stats = router.registry().stats();
+    assert_eq!(stats.entries, STORM_MODELS, "registry entry count");
+    assert_eq!(stats.dedup, (STORM_BY_HASH - STORM_MODELS) as u64, "dedup count");
+    assert_eq!(stats.hits, STORM_BY_HASH as u64, "every by-hash checkout should hit");
+    assert_eq!(stats.misses, 0, "no checkout should miss");
+    assert_eq!(metrics.get("registry_hits"), stats.hits, "metrics/stats hit reconcile");
+    assert_eq!(metrics.get("registry_misses"), 0);
+    assert_eq!(metrics.gauge("registry_entries"), STORM_MODELS as i64);
+
+    // Dispatch accounting: every client's job was admitted exactly
+    // once at the router, the kill re-dispatched at least one job, and
+    // locality kept most by-hash placements on the resident worker.
+    assert_eq!(metrics.get("jobs_submitted"), total as u64);
+    assert_eq!(metrics.get("router_jobs_adopted"), total as u64);
+    assert!(metrics.get("router_redispatches") >= 1, "kill mid-storm must re-dispatch");
+    assert!(
+        metrics.get("router_locality_hits") >= (STORM_BY_HASH as u64) / 2,
+        "locality hits {} too low for {} by-hash jobs",
+        metrics.get("router_locality_hits"),
+        STORM_BY_HASH
+    );
+
+    // Every worker (survivors and victim alike) drains its committed
+    // admission weight, no waiter state leaks, no pin leaks. Bounded
+    // settle loop: cancelled replicas on the victim unwind at their
+    // next stop-token poll.
+    let t0 = Instant::now();
+    let drained = |router: &Router| {
+        (0..router.worker_count()).all(|w| router.worker(w).committed_weight() == 0)
+            && router.registry().stats().pinned == 0
+            && metrics.gauge("service_waiters") == 0
+    };
+    while !drained(&router) && t0.elapsed() < Duration::from_secs(30) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for w in 0..router.worker_count() {
+        assert_eq!(
+            router.worker(w).committed_weight(),
+            0,
+            "worker {w} (victim was {victim}) leaked committed weight"
+        );
+    }
+    assert_eq!(router.registry().stats().pinned, 0, "pins leaked");
+    assert_eq!(metrics.gauge("service_waiters"), 0, "waiter state leaked");
+
+    Dispatch::shutdown(&router);
 }
