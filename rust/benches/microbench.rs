@@ -31,6 +31,22 @@
 //! dispatch tier, writing `BENCH_registry.json`:
 //!
 //!     cargo bench --bench microbench -- --registry [--quick]
+//!
+//! `--portfolio` switches to the **solver portfolio benchmark**: the
+//! full contender roster (Snowball configurations plus every Table
+//! II/III baseline) raced on one sparse and one dense instance under a
+//! shared step budget, writing per-contender quality/throughput and the
+//! winner to `BENCH_portfolio.json`:
+//!
+//!     cargo bench --bench microbench -- --portfolio [--quick]
+//!
+//! `--precision` switches to the **coupling-precision sweep** (paper
+//! challenge 3): one sparse and one dense wide-coefficient instance
+//! quantized to each bit-width in {2..16}, the roster raced per width,
+//! the winner re-scored on the full-precision model, each point paired
+//! with the hwsim plane-count cycle cost — `BENCH_precision.json`:
+//!
+//!     cargo bench --bench microbench -- --precision [--quick]
 
 use snowball::cli::Args;
 use snowball::coordinator::{Backend, Coordinator, Dispatch, JobSpec, Router, Service, WaitOutcome};
@@ -447,6 +463,7 @@ fn bench_registry(quick: bool) {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     };
 
     // Inline lane: the submit loop pays a full O(N²) matrix clone per
@@ -544,10 +561,145 @@ fn bench_registry(quick: bool) {
     }
 }
 
+/// `--portfolio`: race the full contender roster on one sparse and one
+/// dense instance under a shared step budget — the Table-II-style fleet
+/// comparison behind `BENCH_portfolio.json`.
+fn bench_portfolio(quick: bool) {
+    use snowball::portfolio::{race, resolve_roster, roster_names, PortfolioSpec, RaceConfig};
+    use snowball::stop::StopToken;
+
+    let steps: u64 = if quick { 4_000 } else { 40_000 };
+    let rng = StatelessRng::new(41);
+    let sparse = MaxCut::new(generators::erdos_renyi(512, 2_048, &[-1, 1], &rng));
+    let dense =
+        MaxCut::new(generators::complete(if quick { 128 } else { 256 }, &[-1, 1], &rng));
+    let mut blocks = Vec::new();
+    for (label, p) in [("sparse_er", &sparse), ("dense_complete", &dense)] {
+        let m = p.model();
+        let roster = resolve_roster(&PortfolioSpec::Full, m);
+        let cfg = RaceConfig {
+            steps,
+            schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+            seed: 9,
+            target: None,
+            pin_lanes: false,
+        };
+        let start = std::time::Instant::now();
+        let out = race(m, &roster, &cfg, Arc::new(StopToken::new()));
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        println!("{label} (N={}): winner {} | race {wall_ms:.1} ms", m.len(), out.winner_name());
+        let mut rows = Vec::new();
+        for r in &out.reports {
+            println!(
+                "  {:>13}: best {:>8} | {:>10} attempts | {:>9.1} ms",
+                r.name,
+                r.best_energy,
+                r.attempts,
+                r.wall.as_secs_f64() * 1e3
+            );
+            rows.push(format!(
+                "{{\"name\":\"{}\",\"best_energy\":{},\"attempts\":{},\"wall_ms\":{:.1}}}",
+                r.name,
+                r.best_energy,
+                r.attempts,
+                r.wall.as_secs_f64() * 1e3
+            ));
+        }
+        let auto = roster_names(&PortfolioSpec::Auto, m);
+        println!("  auto roster : {}", auto.join(","));
+        blocks.push(format!(
+            "\"{label}\": {{\"n\": {}, \"winner\": \"{}\", \"race_wall_ms\": {wall_ms:.1}, \
+             \"auto_roster\": \"{}\", \"contenders\": [\n    {}\n  ]}}",
+            m.len(),
+            out.winner_name(),
+            auto.join(","),
+            rows.join(",\n    ")
+        ));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.portfolio/v1\",\n  \"profile\": \"{}\",\n  \
+         \"steps\": {steps},\n  {}\n}}\n",
+        if quick { "quick" } else { "full" },
+        blocks.join(",\n  ")
+    );
+    let path = "BENCH_portfolio.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+/// `--precision`: the coupling bit-width sweep behind
+/// `BENCH_precision.json` (paper challenge 3). Quality = the winner's
+/// configuration re-scored on the full-precision model; cost = hwsim
+/// cycles per step at that plane count.
+fn bench_precision(quick: bool) {
+    use snowball::portfolio::{precision, PortfolioSpec};
+
+    let widths: Vec<u32> = if quick { vec![2, 4, 8, 16] } else { vec![2, 3, 4, 6, 8, 12, 16] };
+    let steps: u64 = if quick { 2_000 } else { 20_000 };
+    let spec =
+        PortfolioSpec::List(vec!["rwa".into(), "rsa".into(), "neal".into(), "tabu".into()]);
+    // Wide coefficient palette so low widths genuinely distort the
+    // landscape — a ±1 instance would be quantization-invariant.
+    let palette: &[i32] = &[-100, -73, -31, 7, 45, 100];
+    let rng = StatelessRng::new(43);
+    let sparse = MaxCut::new(generators::erdos_renyi(192, 768, palette, &rng));
+    let dense = MaxCut::new(generators::complete(96, palette, &rng));
+    let mut blocks = Vec::new();
+    for (label, p) in [("sparse_er", &sparse), ("dense_complete", &dense)] {
+        let m = p.model();
+        let pts = precision::sweep(m, &spec, &widths, steps, 17);
+        println!("{label} (N={}):", m.len());
+        let mut rows = Vec::new();
+        for pt in &pts {
+            println!(
+                "  {:>2} bits: winner {:>6} | quantized {:>9} | original {:>9} | \
+                 {:>5} cycles/step",
+                pt.bits, pt.winner, pt.quantized_energy, pt.original_energy, pt.step_cycles
+            );
+            rows.push(format!(
+                "{{\"bits\":{},\"winner\":\"{}\",\"quantized_energy\":{},\
+                 \"original_energy\":{},\"step_cycles\":{},\"end_to_end_seconds\":{:.6}}}",
+                pt.bits,
+                pt.winner,
+                pt.quantized_energy,
+                pt.original_energy,
+                pt.step_cycles,
+                pt.end_to_end_seconds
+            ));
+        }
+        blocks.push(format!(
+            "\"{label}\": {{\"n\": {}, \"points\": [\n    {}\n  ]}}",
+            m.len(),
+            rows.join(",\n    ")
+        ));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.precision/v1\",\n  \"profile\": \"{}\",\n  \
+         \"steps\": {steps},\n  \"widths\": {widths:?},\n  {}\n}}\n",
+        if quick { "quick" } else { "full" },
+        blocks.join(",\n  ")
+    );
+    let path = "BENCH_precision.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
     let smoke = args.flag("smoke");
     let quick = args.flag("quick") || smoke;
+    if args.flag("portfolio") {
+        bench_portfolio(quick);
+        return;
+    }
+    if args.flag("precision") {
+        bench_precision(quick);
+        return;
+    }
     if args.flag("load") {
         bench_service_load(quick);
         return;

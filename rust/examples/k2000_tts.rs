@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,
+            portfolio: None,
         });
         let result = coord.wait(id).ok_or_else(|| anyhow::anyhow!("job failed"))?;
         let est = result.successes(target_energy);

@@ -10,7 +10,7 @@
 //! On non-bipartite graphs the constructor falls back to a greedy
 //! colouring and more colour classes.
 
-use super::common::{Best, Budget, ChainState, SolveResult, Solver};
+use super::common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 use crate::engine::lut::PwlLogistic;
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
@@ -59,7 +59,7 @@ impl Solver for Checkerboard {
         "Checker"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -70,6 +70,9 @@ impl Solver for Checkerboard {
         let iters = budget.sweeps.max(1);
         let mut attempts = 0u64;
         for it in 0..iters {
+            if ctl.should_stop(best.energy) {
+                break;
+            }
             let frac = if iters == 1 { 1.0 } else { it as f64 / (iters - 1) as f64 };
             let temp = self.t0 * (self.t1 / self.t0).powf(frac);
             for (ci, class) in classes.iter().enumerate() {

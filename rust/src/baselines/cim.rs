@@ -11,7 +11,7 @@
 //! injection noise ξ. Readout is `s_i = sign(x_i)`. Gradual pump ramping
 //! reproduces the bifurcation-based search the optics performs.
 
-use super::common::{Budget, SolveResult, Solver};
+use super::common::{Budget, SolveCtl, SolveResult, Solver};
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
 
@@ -33,7 +33,7 @@ impl Solver for Cim {
         "CIM"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -48,10 +48,15 @@ impl Solver for Cim {
             (0..n).map(|i| 0.01 * (rng.unit_f64(60, i as u64, salt::BASELINE) - 0.5)).collect();
         let steps = budget.sweeps.max(1);
         let mut attempts = 0u64;
-        let mut best_energy = i64::MAX;
-        let mut best_spins = SpinVec::all_down(n);
+        // Observe the initial readout so a preempted run still reports a
+        // consistent (energy, spins) pair.
+        let mut best_spins = readout(&x);
+        let mut best_energy = model.energy(&best_spins);
         let check_stride = (steps / 32).max(1);
         for step in 0..steps {
+            if ctl.should_stop(best_energy) {
+                break;
+            }
             let pump = self.p_max * step as f64 / steps as f64;
             for i in 0..n {
                 attempts += 1;

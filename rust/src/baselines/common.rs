@@ -1,6 +1,8 @@
 //! Shared infrastructure for the comparison solvers of Tables II/III.
 
 use crate::ising::{IsingModel, SpinVec};
+use crate::stop::{StopCause, StopToken};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// A compute budget expressed in sweeps (1 sweep = N single-spin update
@@ -31,17 +33,100 @@ pub struct SolveResult {
     pub wall: Duration,
 }
 
+/// Cooperative run control for a [`Solver`]: a per-run [`StopToken`]
+/// plus an optional target energy, checked by implementations once per
+/// sweep (or equivalent outer iteration). The portfolio racer
+/// (`crate::portfolio`) hands every contender one of these so losers
+/// stop within a sweep of the winner finishing; standalone callers use
+/// [`SolveCtl::free`] (what the default [`Solver::solve`] does) and are
+/// unaffected.
+pub struct SolveCtl {
+    stop: Arc<StopToken>,
+    /// An upstream (job-level) token whose cause is forwarded onto
+    /// `stop` at the next [`SolveCtl::should_stop`] check — how a
+    /// coordinator cancel/deadline reaches a racing contender.
+    upstream: Option<Arc<StopToken>>,
+    target: Option<i64>,
+}
+
+impl SolveCtl {
+    /// Uncontrolled: fresh token, no target — the run always completes
+    /// its full budget.
+    pub fn free() -> Self {
+        Self { stop: Arc::new(StopToken::new()), upstream: None, target: None }
+    }
+
+    pub fn new(stop: Arc<StopToken>, target: Option<i64>) -> Self {
+        Self { stop, upstream: None, target }
+    }
+
+    pub fn with_upstream(
+        stop: Arc<StopToken>,
+        upstream: Arc<StopToken>,
+        target: Option<i64>,
+    ) -> Self {
+        Self { stop, upstream: Some(upstream), target }
+    }
+
+    /// This run's own token (what a racer trips to preempt the run).
+    pub fn stop_token(&self) -> &Arc<StopToken> {
+        &self.stop
+    }
+
+    pub fn target(&self) -> Option<i64> {
+        self.target
+    }
+
+    /// Checked by solvers once per sweep: `true` when the run should
+    /// return its best-so-far incumbent now — the token tripped (or the
+    /// upstream token tripped; its cause is forwarded first so
+    /// [`SolveCtl::cause`] reports it), or the incumbent already meets
+    /// the target energy.
+    pub fn should_stop(&self, best: i64) -> bool {
+        if let Some(up) = &self.upstream {
+            if let Some(cause) = up.get() {
+                self.stop.trip(cause);
+            }
+        }
+        if self.stop.is_stopped() {
+            return true;
+        }
+        matches!(self.target, Some(t) if best <= t)
+    }
+
+    /// Why the run was preempted (`None` = ran to completion or stopped
+    /// on its own target).
+    pub fn cause(&self) -> Option<StopCause> {
+        self.stop.get()
+    }
+}
+
 /// A Table II/III comparator.
 ///
 /// `Send + Sync` so harnesses can share one solver across the replica
 /// pool's workers (every implementor is plain configuration data; all
-/// run state lives in `solve`'s locals).
+/// run state lives in `solve_ctl`'s locals).
 pub trait Solver: Send + Sync {
     /// Short name as used in the paper's tables (e.g. "Neal", "SFG").
     fn name(&self) -> &'static str;
 
     /// Minimize `model` within `budget`, deterministically in `seed`.
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult;
+    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+        self.solve_ctl(model, budget, seed, &SolveCtl::free())
+    }
+
+    /// [`Solver::solve`] under cooperative control: implementations
+    /// check `ctl.should_stop(best)` at sweep granularity and return
+    /// the best-so-far incumbent (a valid partial [`SolveResult`])
+    /// when preempted. An unpreempted run is bit-identical to
+    /// [`Solver::solve`].
+    fn solve_ctl(
+        &self,
+        model: &IsingModel,
+        budget: Budget,
+        seed: u64,
+        ctl: &SolveCtl,
+    ) -> SolveResult;
 }
 
 /// Incrementally maintained chain state shared by the local-update

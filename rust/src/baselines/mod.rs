@@ -11,8 +11,9 @@ pub mod sb;
 pub mod statica;
 pub mod tabu;
 
+pub use checkerboard::Checkerboard;
 pub use cim::Cim;
-pub use common::{Best, Budget, ChainState, SolveResult, Solver};
+pub use common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 pub use neal::Neal;
 pub use reaim::{ReAim, Variant};
 pub use sb::SimulatedBifurcation;
@@ -21,6 +22,7 @@ pub use tabu::Tabu;
 
 use crate::engine::{Datapath, EngineConfig, Mode, Schedule, SelectorKind, SnowballEngine};
 use crate::ising::IsingModel;
+use crate::stop::StopCause;
 
 /// Snowball itself, wrapped in the common [`Solver`] interface so the
 /// Table II/III harnesses treat it uniformly. One "sweep" of budget maps
@@ -62,7 +64,7 @@ impl Solver for SnowballSolver {
         }
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &common::SolveCtl) -> SolveResult {
         let n = model.len() as u64;
         let steps = match self.steps_per_sweep {
             Some(sps) => budget.sweeps * sps,
@@ -81,7 +83,16 @@ impl Solver for SnowballSolver {
             pin_lanes: false,
         };
         let mut engine = SnowballEngine::new(model, cfg);
-        let r = engine.run();
+        // The engine has no target notion of its own; target detection
+        // (and upstream-token forwarding) rides the checkpoint callback:
+        // a checkpoint whose incumbent satisfies `ctl` trips this run's
+        // token, and the engine stops at its next stride check.
+        let stride = (steps / 64).clamp(64, 65_536);
+        let r = engine.run_session(ctl.stop_token(), None, stride, |ck| {
+            if ctl.should_stop(ck.best_energy) {
+                ctl.stop_token().trip(StopCause::Cancel);
+            }
+        });
         SolveResult {
             best_energy: r.best_energy,
             best_spins: r.best_spins,

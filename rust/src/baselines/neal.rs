@@ -5,7 +5,7 @@
 //! single-spin Metropolis sweeps under a geometric inverse-temperature
 //! (β) ladder from `beta_min` to `beta_max`, β stepped once per sweep.
 
-use super::common::{Best, Budget, ChainState, SolveResult, Solver};
+use super::common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
 
@@ -28,7 +28,7 @@ impl Solver for Neal {
         "Neal"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -38,6 +38,9 @@ impl Solver for Neal {
         let ratio = self.beta_max / self.beta_min;
         let mut attempts = 0u64;
         for sweep in 0..sweeps {
+            if ctl.should_stop(best.energy) {
+                break;
+            }
             let frac = if sweeps == 1 { 1.0 } else { sweep as f64 / (sweeps - 1) as f64 };
             let beta = self.beta_min * ratio.powf(frac);
             for i in 0..n {

@@ -21,7 +21,7 @@
 //!   from the best-so-far on stall (the "adaptive" restart strategy of
 //!   ReRAM annealers).
 
-use super::common::{Best, Budget, ChainState, SolveResult, Solver};
+use super::common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 use crate::engine::lut::PwlLogistic;
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
@@ -109,7 +109,7 @@ impl Solver for ReAim {
         }
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -124,6 +124,9 @@ impl Solver for ReAim {
         if self.is_single_flip() {
             let total = budget.attempts(n);
             for it in 0..total {
+                if it % (n as u64).max(1) == 0 && ctl.should_stop(best.energy) {
+                    break;
+                }
                 attempts += 1;
                 let frac = if total <= 1 { 1.0 } else { it as f64 / (total - 1) as f64 };
                 let temp = if self.is_greedy() {
@@ -171,6 +174,9 @@ impl Solver for ReAim {
             let iters = budget.sweeps.max(1);
             let mut p = vec![0u32; n];
             for it in 0..iters {
+                if ctl.should_stop(best.energy) {
+                    break;
+                }
                 let frac = if iters <= 1 { 1.0 } else { it as f64 / (iters - 1) as f64 };
                 let temp = if self.is_greedy() {
                     0.0

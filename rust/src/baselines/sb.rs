@@ -12,7 +12,7 @@
 //! convention: the paper's Hamiltonian (Eq. 1) is `−Σ J s s`, so the
 //! coupling drive uses `+J`.
 
-use super::common::{Budget, SolveResult, Solver};
+use super::common::{Budget, SolveCtl, SolveResult, Solver};
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
 
@@ -33,7 +33,7 @@ impl Solver for SimulatedBifurcation {
         "SB"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -58,10 +58,15 @@ impl Solver for SimulatedBifurcation {
         // map 1:1 to SB time steps.
         let steps = budget.sweeps.max(1);
         let mut attempts = 0u64;
-        let mut best_energy = i64::MAX;
-        let mut best_spins = SpinVec::all_down(n);
+        // Observe the initial readout so a preempted run still reports a
+        // consistent (energy, spins) pair.
+        let mut best_spins = readout(&x);
+        let mut best_energy = model.energy(&best_spins);
         let check_stride = (steps / 32).max(1);
         for step in 0..steps {
+            if ctl.should_stop(best_energy) {
+                break;
+            }
             let a = self.a0 * step as f64 / steps as f64;
             // y update with coupling drive (dense mat-vec).
             for i in 0..n {

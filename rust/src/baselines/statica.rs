@@ -12,7 +12,7 @@
 //! period-2 oscillation and matches the chip's reported behaviour of a
 //! few flips per cycle.
 
-use super::common::{Best, Budget, ChainState, SolveResult, Solver};
+use super::common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 use crate::engine::lut::{PwlLogistic, ONE_Q16};
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::{salt, StatelessRng};
@@ -36,7 +36,7 @@ impl Solver for Statica {
         "STATICA"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let rng = StatelessRng::new(seed);
@@ -47,6 +47,9 @@ impl Solver for Statica {
         let mut attempts = 0u64;
         let mut p = vec![0u32; n];
         for it in 0..iters {
+            if ctl.should_stop(best.energy) {
+                break;
+            }
             let frac = if iters == 1 { 1.0 } else { it as f64 / (iters - 1) as f64 };
             let temp = self.t0 * (self.t1 / self.t0).powf(frac);
             // Phase 1: evaluate all spins from the CURRENT configuration.

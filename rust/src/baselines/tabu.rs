@@ -5,7 +5,7 @@
 //! it would beat the best energy seen), then makes it tabu for `tenure`
 //! iterations.
 
-use super::common::{Best, Budget, ChainState, SolveResult, Solver};
+use super::common::{Best, Budget, ChainState, SolveCtl, SolveResult, Solver};
 use crate::ising::{IsingModel, SpinVec};
 use crate::rng::StatelessRng;
 
@@ -26,7 +26,7 @@ impl Solver for Tabu {
         "Tabu"
     }
 
-    fn solve(&self, model: &IsingModel, budget: Budget, seed: u64) -> SolveResult {
+    fn solve_ctl(&self, model: &IsingModel, budget: Budget, seed: u64, ctl: &SolveCtl) -> SolveResult {
         let start = std::time::Instant::now();
         let n = model.len();
         let tenure = if self.tenure == 0 { (n as u64 / 10).max(10) } else { self.tenure };
@@ -38,6 +38,9 @@ impl Solver for Tabu {
         let total = budget.attempts(n) / n as u64; // tabu evaluates all N per move
         let mut attempts = 0u64;
         for it in 0..total.max(1) {
+            if ctl.should_stop(best.energy) {
+                break;
+            }
             // Best admissible move.
             let mut chosen: Option<(usize, i64)> = None;
             for i in 0..n {

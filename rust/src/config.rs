@@ -175,6 +175,7 @@ impl Config {
             target: self.get("job", "target").and_then(|v| v.as_i64()),
             shards: self.i64_or("job", "shards", 1) as u32,
             pin_lanes: self.bool_or("job", "pin_lanes", false),
+            portfolio: self.get("job", "portfolio").and_then(|v| v.as_str()).map(str::to_string),
         })
     }
 }
@@ -195,6 +196,10 @@ pub struct JobConfig {
     pub shards: u32,
     /// Pin shard lane threads to cores (`pin_lanes = true`; Linux).
     pub pin_lanes: bool,
+    /// Portfolio roster (`portfolio = "auto"`, `"full"`, or a
+    /// comma-separated contender list — see `crate::portfolio`).
+    /// `None` runs the single configured engine as usual.
+    pub portfolio: Option<String>,
 }
 
 /// Declarative service description (the `[serve]` section).
@@ -272,6 +277,9 @@ tolerance = 0.25
         assert_eq!(j.target, Some(-65000));
         assert_eq!(j.shards, 1, "sharding defaults off");
         assert!(!j.pin_lanes, "pinning defaults off");
+        assert!(j.portfolio.is_none(), "portfolio defaults off");
+        let cp = Config::parse("[job]\nportfolio = \"rsa,neal,tabu\"\n").unwrap();
+        assert_eq!(cp.job(1).unwrap().portfolio.as_deref(), Some("rsa,neal,tabu"));
         let cs = Config::parse("[job]\nshards = 8\npin_lanes = true\n").unwrap();
         assert_eq!(cs.job(1).unwrap().shards, 8);
         assert!(cs.job(1).unwrap().pin_lanes);

@@ -57,6 +57,15 @@ pub struct JobSpec {
     pub max_retries: u32,
     /// Execution backend for this job.
     pub backend: Backend,
+    /// `Some` turns the job into a solver *race*: instead of `replicas`
+    /// identical engines, the roster's contenders (Snowball
+    /// configurations and baseline heuristics) run concurrently on the
+    /// same instance under one budget, first-to-target wins, and every
+    /// loser is stop-tripped ([`crate::portfolio`]). Each contender
+    /// reports as one [`ReplicaResult`] (indexed in roster order);
+    /// `replicas` is normalized to 1 at admission and `mode` /
+    /// `selector` / `shards` only apply to contenders that use them.
+    pub portfolio: Option<crate::portfolio::PortfolioSpec>,
 }
 
 impl JobSpec {
@@ -78,13 +87,22 @@ pub enum Backend {
     Xla,
 }
 
-/// Per-replica outcome.
+/// Per-replica outcome. For portfolio jobs each roster contender is one
+/// "replica" (in roster order), `flips` counts its attempts, and
+/// `stopped` records whether it lost the race.
 #[derive(Clone, Debug)]
 pub struct ReplicaResult {
     pub replica: u32,
     pub best_energy: i64,
     pub flips: u64,
     pub wall: std::time::Duration,
+    /// Preempted before running its full budget (race loser, cancel,
+    /// deadline, shutdown).
+    pub stopped: bool,
+    /// Shard lane threads this replica pinned to cores (async sharded
+    /// engine with `pin_lanes` only; 0 otherwise). Surfaced as the
+    /// `pinned_lanes` METRICS gauge and RESULT field.
+    pub pinned_lanes: usize,
 }
 
 /// Aggregated job outcome.
@@ -99,6 +117,19 @@ pub struct JobResult {
     /// results are the best-so-far incumbents at preemption time. A
     /// cancelled job preempted before dispatch has `replicas` empty.
     pub completed: bool,
+    /// Race outcome for portfolio jobs (`None` for plain jobs and for
+    /// portfolio jobs preempted before dispatch).
+    pub portfolio: Option<PortfolioOutcome>,
+}
+
+/// Which contender won a portfolio race and who it beat.
+#[derive(Clone, Debug)]
+pub struct PortfolioOutcome {
+    /// Winning contender name (lowest energy; roster order breaks
+    /// ties). Indexes into `JobResult::replicas` via `contenders`.
+    pub winner: String,
+    /// Roster names in replica order.
+    pub contenders: Vec<String>,
 }
 
 impl JobResult {

@@ -60,7 +60,7 @@ pub mod router;
 pub mod scheduler;
 pub mod service;
 
-pub use job::{Backend, JobResult, JobSpec, JobState, ReplicaResult};
+pub use job::{Backend, JobResult, JobSpec, JobState, PortfolioOutcome, ReplicaResult};
 pub use journal::{JobCtl, JobJournal};
 pub use metrics::Metrics;
 pub use registry::{ModelHash, PutError, Registry, RegistryStats};
@@ -412,6 +412,7 @@ impl Coordinator {
     ///     budget_ms: 0,
     ///     max_retries: 0,
     ///     backend: Backend::Native,
+    ///     portfolio: None,
     /// });
     /// let result = coord.wait(id).expect("job completes");
     /// assert_eq!(result.replicas.len(), 2);
@@ -451,18 +452,29 @@ impl Coordinator {
 
     /// A job's admission weight: `replicas × effective shard lanes` —
     /// the thread count the job will actually occupy, so sharded jobs
-    /// cannot slip a multiplied load past a replica-counted cap.
+    /// cannot slip a multiplied load past a replica-counted cap. A
+    /// portfolio job weighs the sum of its roster's lane counts (the
+    /// contenders run concurrently).
     fn admission_weight(&self, spec: &JobSpec) -> usize {
+        if let Some(p) = &spec.portfolio {
+            return crate::portfolio::roster_weight(p, &spec.model);
+        }
         spec.replicas as usize * scheduler::effective_shards(spec, self.inner.worker_budget).max(1)
     }
 
     fn try_submit_inner(
         &self,
-        spec: JobSpec,
+        mut spec: JobSpec,
         enforce: bool,
         journal: Option<Arc<JobJournal>>,
         hash: Option<ModelHash>,
     ) -> Result<u64, AdmissionError> {
+        if spec.portfolio.is_some() {
+            // A race is one unit of dispatch however many contenders it
+            // runs: replica fan-out, lane-weight accounting and the
+            // result fold all key off `replicas == 1`.
+            spec.replicas = 1;
+        }
         let weight = self.admission_weight(&spec);
         {
             let mut committed = self.inner.committed_replicas.lock().unwrap();
@@ -636,7 +648,7 @@ impl Coordinator {
     fn complete(
         &self,
         id: u64,
-        label: String,
+        spec: &JobSpec,
         weight: usize,
         replicas: Vec<ReplicaResult>,
         submitted: Instant,
@@ -644,12 +656,36 @@ impl Coordinator {
         ctl: &JobCtl,
     ) {
         let cause = ctl.stop.get();
+        // Portfolio jobs fold their race outcome in here: contender i
+        // reported as replica i, so the winner is the energy argmin
+        // (roster order breaks ties — same rule as the race itself).
+        let portfolio = spec.portfolio.as_ref().filter(|_| !replicas.is_empty()).map(|p| {
+            let contenders = crate::portfolio::roster_names(p, &spec.model);
+            let winner = replicas
+                .iter()
+                .min_by_key(|r| (r.best_energy, r.replica))
+                .and_then(|r| contenders.get(r.replica as usize).cloned())
+                .unwrap_or_default();
+            PortfolioOutcome { winner, contenders }
+        });
+        if let Some(out) = &portfolio {
+            self.metrics.inc("portfolio_races");
+            self.metrics.add("portfolio_contenders", out.contenders.len() as u64);
+            self.metrics
+                .add("portfolio_losers_stopped", replicas.iter().filter(|r| r.stopped).count() as u64);
+            self.metrics.inc(&format!("portfolio_wins_{}", out.winner));
+        }
+        if spec.pin_lanes {
+            let pinned: usize = replicas.iter().map(|r| r.pinned_lanes).sum();
+            self.metrics.gauge_set("pinned_lanes", pinned as i64);
+        }
         let result = JobResult {
             job_id: id,
-            label,
+            label: spec.label.clone(),
             replicas,
             wall: run_start.elapsed(),
             completed: cause.is_none(),
+            portfolio,
         };
         self.metrics.observe("run", result.wall);
         self.metrics.observe("job_wall", submitted.elapsed());
@@ -822,15 +858,7 @@ impl Coordinator {
                 if ctl.stop.is_stopped() {
                     self.metrics.gauge_add("jobs_running", 1);
                     self.metrics.observe("dispatch", picked_up.elapsed());
-                    self.complete(
-                        id,
-                        spec.label.clone(),
-                        weight,
-                        Vec::new(),
-                        submitted,
-                        picked_up,
-                        &ctl,
-                    );
+                    self.complete(id, &spec, weight, Vec::new(), submitted, picked_up, &ctl);
                     continue;
                 }
                 self.inner.states.lock().unwrap().insert(id, JobState::Running);
@@ -845,13 +873,7 @@ impl Coordinator {
                         let run_start = Instant::now();
                         match scheduler.try_run_native_ctl(&spec, &ctl) {
                             Ok(replicas) => self.complete(
-                                id,
-                                spec.label.clone(),
-                                weight,
-                                replicas,
-                                submitted,
-                                run_start,
-                                &ctl,
+                                id, &spec, weight, replicas, submitted, run_start, &ctl,
                             ),
                             Err(msg) => self.fail(id, weight, msg, &ctl),
                         }
@@ -882,7 +904,8 @@ impl Coordinator {
                             0 => 0,
                             r => weight / r as usize,
                         };
-                        let label = spec.label.clone();
+                        let spec = Arc::new(spec);
+                        let done_spec = spec.clone();
                         let this = self.clone();
                         let per_replica = self.clone();
                         // Observe before handing off: a tiny job may
@@ -893,7 +916,7 @@ impl Coordinator {
                         let run_start = Instant::now();
                         let job_ctl = ctl.clone();
                         scheduler.spawn_native(
-                            Arc::new(spec),
+                            spec,
                             ctl,
                             move || {
                                 per_replica.metrics.gauge_add("replicas_inflight", -1);
@@ -906,7 +929,7 @@ impl Coordinator {
                                 match outcome {
                                     Ok(replicas) => this.complete(
                                         id,
-                                        label,
+                                        &done_spec,
                                         weight,
                                         replicas,
                                         submitted,
@@ -953,6 +976,7 @@ mod tests {
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,
+            portfolio: None,
         }
     }
 

@@ -302,6 +302,7 @@ impl Router {
                             replicas: Vec::new(),
                             wall: Duration::ZERO,
                             completed: false,
+                            portfolio: None,
                         };
                         Self::adopt(
                             &self.inner.registry,
@@ -547,6 +548,7 @@ mod tests {
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,
+            portfolio: None,
         }
     }
 
@@ -647,6 +649,41 @@ mod tests {
         }
         Dispatch::shutdown(&router);
         reference.shutdown();
+    }
+
+    /// A routed portfolio job survives worker death: re-dispatch
+    /// restarts the race on a survivor (races don't checkpoint — their
+    /// contender interleaving is real nondeterminism) and the job still
+    /// terminates `Done` with the full roster of contender results and
+    /// a winner.
+    #[test]
+    fn portfolio_job_survives_kill_worker_redispatch() {
+        let router = Router::start(2, 2);
+        let mut sp = spec("race", 5, 2_500_000);
+        sp.portfolio = Some(crate::portfolio::PortfolioSpec::List(vec![
+            "rsa".into(),
+            "rwa".into(),
+            "neal".into(),
+        ]));
+        let id = router.submit_spec(sp, None).unwrap();
+        let (victim, _) = {
+            let jobs = router.inner.jobs.lock().unwrap();
+            jobs[&id].placement.unwrap()
+        };
+        router.kill_worker(victim);
+        assert_eq!(wait_terminal(&router, id), JobState::Done, "race lost to the kill");
+        let r = Dispatch::result(&router, id).unwrap();
+        assert_eq!(r.replicas.len(), 3, "full roster must report");
+        let p = r.portfolio.expect("portfolio outcome must survive adoption");
+        assert_eq!(
+            p.contenders,
+            vec!["rsa".to_string(), "rwa".to_string(), "neal".to_string()]
+        );
+        assert!(p.contenders.contains(&p.winner), "winner {} not in roster", p.winner);
+        for w in 0..router.worker_count() {
+            assert_eq!(router.worker(w).committed_weight(), 0, "worker {w} budget must drain");
+        }
+        Dispatch::shutdown(&router);
     }
 
     /// CANCEL before a kill is honored across the drain: the job lands

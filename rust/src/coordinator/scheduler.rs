@@ -115,8 +115,10 @@ pub fn run_replica_ctl(
         shards,
         pin_lanes: spec.pin_lanes,
     };
-    let run = if shards > 1 {
-        ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run_with_stop(&ctl.stop).0
+    let (run, pinned_lanes) = if shards > 1 {
+        let (run, stats) =
+            ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run_with_stop(&ctl.stop);
+        (run, stats.pinned_lanes)
     } else {
         // Retryable jobs journal for their own resume; router-managed
         // jobs (ctl.checkpoint) journal so a re-dispatch to another
@@ -132,15 +134,18 @@ pub fn run_replica_ctl(
             None => SnowballEngine::new(&spec.model, cfg),
         };
         let journal = ctl.journal.clone();
-        engine.run_session(&ctl.stop, resume.as_ref(), stride, |ck| {
+        let run = engine.run_session(&ctl.stop, resume.as_ref(), stride, |ck| {
             journal.record(r as u32, ck.clone());
-        })
+        });
+        (run, 0)
     };
     ReplicaResult {
         replica: r as u32,
         best_energy: run.best_energy,
         flips: run.flips,
         wall: run.wall,
+        stopped: run.stopped.is_some(),
+        pinned_lanes,
     }
 }
 
@@ -231,6 +236,9 @@ impl ReplicaScheduler {
         spec: &JobSpec,
         ctl: &JobCtl,
     ) -> Result<Vec<ReplicaResult>, String> {
+        if spec.portfolio.is_some() {
+            return crate::portfolio::run_for_job(spec, &ctl.stop);
+        }
         let budget = self.workers();
         self.pool
             .run_indexed(spec.replicas as usize, |r| run_replica_caught(spec, r, budget, ctl))
@@ -257,6 +265,20 @@ impl ReplicaScheduler {
         F: FnOnce(Result<Vec<ReplicaResult>, String>) + Send + 'static,
         G: Fn() + Send + Sync + 'static,
     {
+        if spec.portfolio.is_some() {
+            // A portfolio race spawns and joins its own contender
+            // threads (std::thread::scope inside `run_for_job`). Running
+            // it as ONE pool work item keeps the pool deadlock-free: if
+            // each contender were its own pool item, a race could occupy
+            // every worker and then wait on contenders that can never be
+            // scheduled.
+            self.pool.spawn(move || {
+                let out = crate::portfolio::run_for_job(&spec, &ctl.stop);
+                on_replica_done();
+                on_done(out);
+            });
+            return;
+        }
         let n = spec.replicas as usize;
         if n == 0 {
             on_done(Ok(Vec::new()));
@@ -321,6 +343,7 @@ mod tests {
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,
+            portfolio: None,
         }
     }
 

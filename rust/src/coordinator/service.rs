@@ -155,6 +155,18 @@ fn handle_put<D: Dispatch>(
             return Err(e);
         }
     };
+    // Body format: `ising` (default; `<i> <k> <J>` / `H <i> <h>`) or
+    // `qubo` (qbsolv entries `<i> <j> <q>`, diagonal = linear term,
+    // converted to Ising at store time — docs/PROTOCOL.md).
+    let qubo = match kv.get("format").copied().unwrap_or("ising") {
+        "ising" => false,
+        "qubo" => true,
+        other => {
+            let msg = format!("format must be ising|qubo (got {other})");
+            drain_put_body(reader)?;
+            anyhow::bail!("{msg}");
+        }
+    };
     let max = coord.registry().max_model_bytes();
     let bytes = IsingModel::approx_bytes_for(n);
     // Refuse before materializing an O(N²) matrix; the registry would
@@ -163,7 +175,8 @@ fn handle_put<D: Dispatch>(
         drain_put_body(reader)?;
         anyhow::bail!("{}", PutError::TooLarge { bytes, max });
     }
-    let mut model = IsingModel::zeros(n);
+    let mut model = IsingModel::zeros(if qubo { 0 } else { n });
+    let mut entries: Vec<(usize, usize, i64)> = Vec::new();
     let mut body_err: Option<String> = None;
     let mut line = String::new();
     loop {
@@ -178,15 +191,52 @@ fn handle_put<D: Dispatch>(
         if body.is_empty() || body_err.is_some() {
             continue; // drain the rest after the first error
         }
-        if let Err(e) = apply_put_line(&mut model, body, n) {
+        let applied = if qubo {
+            apply_qubo_line(&mut entries, body, n)
+        } else {
+            apply_put_line(&mut model, body, n)
+        };
+        if let Err(e) = applied {
             body_err = Some(e);
         }
     }
     if let Some(e) = body_err {
         anyhow::bail!("{e}");
     }
+    if qubo {
+        // The conversion offset is dropped here: jobs report Ising
+        // energies; clients recover the QUBO objective as (H + C) / 4
+        // ([`crate::problems::qubo`]).
+        model = crate::problems::Qubo::from_entries(n, &entries)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .model;
+    }
     let hash = coord.registry().put(model).map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(format!("STORED model={hash}"))
+}
+
+/// One `PUT format=qubo` body line: a qbsolv `<i> <j> <q>` entry
+/// (diagonal = linear term), accumulated for the Ising conversion.
+fn apply_qubo_line(
+    entries: &mut Vec<(usize, usize, i64)>,
+    line: &str,
+    n: usize,
+) -> std::result::Result<(), String> {
+    let malformed = format!("malformed PUT body line '{line}' (expect '<i> <j> <q>' for qubo)");
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.as_slice() {
+        [i, j, v] => {
+            let i: usize = i.parse().map_err(|_| malformed.clone())?;
+            let j: usize = j.parse().map_err(|_| malformed.clone())?;
+            let v: i64 = v.parse().map_err(|_| malformed)?;
+            if i >= n || j >= n {
+                return Err(format!("spin index {} out of range (n={n})", i.max(j)));
+            }
+            entries.push((i, j, v));
+            Ok(())
+        }
+        _ => Err(malformed),
+    }
 }
 
 /// One `PUT` body line into the model under construction.
@@ -341,6 +391,14 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
             // first replica panic.
             let budget_ms: u64 = kv.get("budget_ms").copied().unwrap_or("0").parse()?;
             let max_retries: u32 = kv.get("max_retries").copied().unwrap_or("0").parse()?;
+            // Portfolio racing (docs/PROTOCOL.md): `portfolio=auto|full|
+            // <name>[,<name>...]` turns the job into a contender race.
+            // Both ERR forms come verbatim from `PortfolioSpec::parse`.
+            let portfolio = kv
+                .get("portfolio")
+                .map(|v| crate::portfolio::PortfolioSpec::parse(v))
+                .transpose()
+                .map_err(|e| anyhow::anyhow!(e))?;
             // Resolve the model LAST, after every other field parsed:
             // the registry checkout takes a pin, and doing it here
             // means no earlier `ERR` path can leak one.
@@ -382,6 +440,7 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
                     budget_ms,
                     max_retries,
                     backend: Backend::Native,
+                    portfolio,
                 },
                 hash,
             );
@@ -466,9 +525,31 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
                 }
                 None => (f64::NAN, f64::NAN),
             };
+            // Portfolio jobs append the race outcome: the winner and
+            // one `c<i>=<name>:<energy>:<attempts>:<wall_ms>` field per
+            // contender; any job that pinned shard lanes appends the
+            // total (docs/PROTOCOL.md).
+            let mut extra = String::new();
+            if let Some(p) = &r.portfolio {
+                extra.push_str(&format!(" winner={}", p.winner));
+                for (rep, name) in r.replicas.iter().zip(&p.contenders) {
+                    extra.push_str(&format!(
+                        " c{}={}:{}:{}:{:.3}",
+                        rep.replica,
+                        name,
+                        rep.best_energy,
+                        rep.flips,
+                        rep.wall.as_secs_f64() * 1e3,
+                    ));
+                }
+            }
+            let pinned: usize = r.replicas.iter().map(|x| x.pinned_lanes).sum();
+            if pinned > 0 {
+                extra.push_str(&format!(" pinned_lanes={pinned}"));
+            }
             Ok(Reply::Line(format!(
                 "RESULT id={id} label={} state={state} completed={} best={} replicas={} \
-                 pa={pa:.3} ta_ms={:.3} tts99_ms={:.3}",
+                 pa={pa:.3} ta_ms={:.3} tts99_ms={:.3}{extra}",
                 r.label,
                 r.completed,
                 r.best_energy(),
@@ -584,6 +665,76 @@ mod tests {
         assert!(line.contains("replicas=2"), "{line}");
     }
 
+    /// `portfolio=` flows end to end: the job races its roster, WAIT
+    /// completes, and RESULT carries `winner=` plus one
+    /// `c<i>=<name>:<energy>:<attempts>:<wall_ms>` field per contender.
+    #[test]
+    fn solve_with_portfolio_flows() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "SOLVE instance=er:32:100 steps=2000 seed=3 portfolio=rsa,neal,tabu").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
+        line.clear();
+        writeln!(s, "RESULT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("replicas=3"), "{line}");
+        assert!(line.contains(" winner="), "{line}");
+        for c in ["c0=rsa:", "c1=neal:", "c2=tabu:"] {
+            assert!(line.contains(c), "missing {c} in {line}");
+        }
+        // The two portfolio= ERR forms, verbatim (docs/PROTOCOL.md).
+        assert_eq!(
+            roundtrip(addr, "SOLVE instance=er:8:10 portfolio="),
+            "ERR portfolio must be auto|full|<name>[,<name>...]"
+        );
+        assert_eq!(
+            roundtrip(addr, "SOLVE instance=er:8:10 portfolio=bogus"),
+            format!(
+                "ERR unknown portfolio contender 'bogus' (expected {})",
+                crate::portfolio::KNOWN_CONTENDERS.join("|")
+            )
+        );
+    }
+
+    /// `PUT format=qubo` stores a converted Ising model that solves by
+    /// hash like any other; bad formats and malformed entries ERR.
+    #[test]
+    fn put_qubo_format_flow() {
+        let addr = start();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        write!(s, "PUT n=3 format=qubo\n0 0 -3\n1 1 2\n0 1 4\n1 2 -5\nEND\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STORED model="), "{line}");
+        let hash = line.trim().rsplit('=').next().unwrap().to_string();
+        line.clear();
+        writeln!(s, "SOLVE model={hash} steps=300 replicas=2 seed=3").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("JOB id="), "{line}");
+        let id: u64 = line.trim().rsplit('=').next().unwrap().parse().unwrap();
+        line.clear();
+        writeln!(s, "WAIT id={id}").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), format!("STATE id={id} state=done"));
+        line.clear();
+        write!(s, "PUT n=3 format=wat\n0 0 1\nEND\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR format must be ising|qubo"), "{line}");
+        line.clear();
+        write!(s, "PUT n=3 format=qubo\n0 nope 1\nEND\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR malformed PUT body line"), "{line}");
+    }
+
     /// The saturation ERR form: a coordinator with a tiny replica cap
     /// and rejection enabled refuses the second SOLVE.
     #[test]
@@ -638,6 +789,7 @@ mod tests {
                 budget_ms: 0,
                 max_retries: 0,
                 backend: Backend::Native,
+                portfolio: None,
             }
         };
         bad_spec.model = Arc::new(crate::ising::IsingModel::zeros(0));

@@ -16,6 +16,10 @@
 //! * [`coordinator`] — size-classed admission queue, overlapping job
 //!   dispatch over the shared replica pool, metrics, TCP service
 //!   (`docs/ARCHITECTURE.md`, `docs/PROTOCOL.md`).
+//! * [`portfolio`] — heterogeneous solver racing (Snowball configs vs.
+//!   the baseline fleet under one budget, first-finisher-wins) plus the
+//!   coupling-precision sweep harness
+//!   (`docs/ARCHITECTURE.md` § Portfolio layer).
 //! * [`harness`] — regeneration of every paper table and figure.
 //! * [`sync`] — the concurrency shim: `std::sync` in normal builds,
 //!   loom's instrumented primitives under `--cfg loom`, so the shard
@@ -63,6 +67,8 @@ pub mod harness;
 pub mod hwsim;
 #[forbid(unsafe_code)]
 pub mod ising;
+#[forbid(unsafe_code)]
+pub mod portfolio;
 #[forbid(unsafe_code)]
 pub mod problems;
 #[forbid(unsafe_code)]

@@ -59,6 +59,8 @@ USAGE:
                  [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
                  [--selector scan|fenwick] [--shards S] [--pin-lanes]
                  [--budget-ms MS] [--max-retries K]
+                 [--portfolio auto|full|<name>[,<name>...]]
+                 [--file <path> [--format qubo|mc]]
                     (--shards: 1 = classic engine, >1 = async sharded
                      lanes per replica, 0 = auto by instance size;
                      --pin-lanes: pin lane threads to cores, Linux;
@@ -66,7 +68,14 @@ USAGE:
                      expiry the job is preempted and the best-so-far
                      partial result is reported;
                      --max-retries: re-run panicked replicas from
-                     their last checkpoint up to K times)
+                     their last checkpoint up to K times;
+                     --portfolio: race a roster of solvers on the
+                     instance, first to the target wins and losers
+                     are stopped — prints the winner and the
+                     per-contender stats;
+                     --file: load a qbsolv QUBO (--format qubo) or
+                     Gset-layout Max-Cut (--format mc) text file
+                     instead of --instance)
                  [--addr host:port [--model <hash>]]
                     (--addr: submit over the wire to a running
                      `snowball serve` instead of solving in-process;
@@ -109,7 +118,36 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .or_else(|| fj.map(|j| j.instance.clone()))
         .unwrap_or_else(|| "G11".into());
     let seed: u64 = args.get_parse_or("seed", fj.map(|j| j.seed).unwrap_or(1))?;
-    let (label, model) = service::build_instance(&instance, seed)?;
+    // `--file` loads an on-disk instance instead of a named one:
+    // qbsolv QUBO text (`--format qubo`, converted to Ising) or the
+    // Gset/Biq-Mac Max-Cut layout (`--format mc`); the format defaults
+    // from the extension (`.mc` → mc, anything else → qubo).
+    let (label, model) = match args.get("file") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let fmt = args
+                .get("format")
+                .map(str::to_string)
+                .unwrap_or_else(|| if path.ends_with(".mc") { "mc".into() } else { "qubo".into() });
+            let base = std::path::Path::new(path)
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or(path)
+                .to_string();
+            let model = match fmt.as_str() {
+                "qubo" => {
+                    snowball::problems::Qubo::parse(&text).map_err(|e| anyhow::anyhow!(e))?.model
+                }
+                "mc" => snowball::problems::qubo::parse_maxcut(&text)
+                    .map_err(|e| anyhow::anyhow!(e))?
+                    .model()
+                    .clone(),
+                other => anyhow::bail!("--format must be qubo|mc (got {other})"),
+            };
+            (format!("{fmt}:{base}"), model)
+        }
+        None => service::build_instance(&instance, seed)?,
+    };
     let mode = match args.get("mode") {
         Some(m) => Mode::parse(m)?,
         None => fj.map(|j| j.mode).unwrap_or(Mode::RouletteWheel),
@@ -141,6 +179,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let pin_lanes = args.flag("pin-lanes") || fj.map(|j| j.pin_lanes).unwrap_or(false);
     let budget_ms: u64 = args.get_parse_or("budget-ms", 0u64)?;
     let max_retries: u32 = args.get_parse_or("max-retries", 0u32)?;
+    // Portfolio racing: CLI flag first, then the config file's
+    // `[job] portfolio` — same layering as every other knob.
+    let portfolio = args
+        .get("portfolio")
+        .map(str::to_string)
+        .or_else(|| fj.and_then(|j| j.portfolio.clone()))
+        .map(|v| snowball::portfolio::PortfolioSpec::parse(&v))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
 
     let w_total: i64 = -model.j_matrix().iter().map(|&v| v as i64).sum::<i64>() / 2;
     let coord = Coordinator::start(workers);
@@ -159,6 +206,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         budget_ms,
         max_retries,
         backend: Backend::Native,
+        portfolio,
     });
     let r = coord.wait(id).ok_or_else(|| {
         // Surface the preserved failure detail (replica panic message)
@@ -184,6 +232,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("instance={label} mode={} steps={steps} replicas={replicas}", mode.name());
     println!("best_energy={best} (cut={})", (w_total - best) / 2);
     println!("mean_replica_ms={:.3}", r.mean_replica_seconds() * 1e3);
+    if let Some(p) = &r.portfolio {
+        println!("winner={}", p.winner);
+        for (rep, name) in r.replicas.iter().zip(&p.contenders) {
+            println!(
+                "  {name:14} best={} attempts={} wall_ms={:.3}{}",
+                rep.best_energy,
+                rep.flips,
+                rep.wall.as_secs_f64() * 1e3,
+                if rep.stopped { " (stopped)" } else { "" },
+            );
+        }
+    }
     if let Some(t) = target {
         let est = r.successes(t);
         println!(
@@ -310,6 +370,7 @@ fn cmd_solve_remote(args: &Args, addr: &str) -> Result<()> {
         ("shards", "shards"),
         ("budget-ms", "budget_ms"),
         ("max-retries", "max_retries"),
+        ("portfolio", "portfolio"),
     ] {
         if let Some(v) = args.get(flag) {
             req.push_str(&format!(" {key}={v}"));

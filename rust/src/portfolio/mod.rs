@@ -1,0 +1,485 @@
+//! Heterogeneous solver portfolio: race one instance across a roster of
+//! contenders — Snowball engine configurations (mode × selector ×
+//! datapath × shard count) plus every Table II/III baseline — under one
+//! shared budget, first-finisher-wins (HETRI-style multiprocessing,
+//! arXiv:2410.23517).
+//!
+//! The racer gives each contender its own [`StopToken`] and a
+//! decorrelated child seed. The first contender whose incumbent reaches
+//! the target energy trips *every* token, so losers return their
+//! best-so-far partials within one stop-check stride; a job-level
+//! cancel/deadline/shutdown token is forwarded the same way. The winner
+//! is the argmin over final reported energies (lowest roster index
+//! breaks ties), which makes the outcome deterministic whenever the
+//! race runs to budget — the property `tests/portfolio.rs` pins.
+//!
+//! Submitting is threaded end-to-end like `shards=` was:
+//! [`JobSpec::portfolio`], wire `SOLVE portfolio=auto|full|<list>`,
+//! CLI `solve --portfolio`, `RESULT ... winner=<name> c<i>=<stats>`,
+//! and `portfolio_*` metrics (docs/PROTOCOL.md, docs/ARCHITECTURE.md
+//! § Portfolio layer).
+//!
+//! Submodules: [`profile`] (instance profiling behind `portfolio=auto`)
+//! and [`precision`] (the coupling bit-width sweep harness behind
+//! `BENCH_precision.json` — paper challenge 3).
+
+pub mod precision;
+pub mod profile;
+
+use crate::baselines::{
+    Budget, Checkerboard, Cim, Neal, ReAim, SimulatedBifurcation, SolveCtl, Solver, Statica, Tabu,
+};
+use crate::coordinator::{JobSpec, ReplicaResult};
+use crate::engine::{
+    Datapath, EngineConfig, MergeMode, Mode, Schedule, SelectorKind, ShardedEngine, SnowballEngine,
+};
+use crate::ising::{IsingModel, SpinVec};
+use crate::rng::StatelessRng;
+use crate::stop::{StopCause, StopToken};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How a job picks its roster. Parsed from `SOLVE portfolio=` / CLI
+/// `--portfolio` / config `[job] portfolio`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PortfolioSpec {
+    /// Instance-profile-driven roster ([`profile::auto_roster`]).
+    Auto,
+    /// Every known contender.
+    Full,
+    /// An explicit comma-separated contender list (duplicates allowed —
+    /// they race as independent copies with decorrelated seeds).
+    List(Vec<String>),
+}
+
+impl PortfolioSpec {
+    /// Parse a `portfolio=` value. The two error strings are wire ERR
+    /// forms, pinned verbatim by `tests/portfolio.rs` and
+    /// docs/PROTOCOL.md.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        match s {
+            "" => Err("portfolio must be auto|full|<name>[,<name>...]".to_string()),
+            "auto" => Ok(PortfolioSpec::Auto),
+            "full" => Ok(PortfolioSpec::Full),
+            list => {
+                let names: Vec<String> =
+                    list.split(',').map(|t| t.trim().to_string()).collect();
+                for name in &names {
+                    if contender_by_name(name).is_none() {
+                        return Err(format!(
+                            "unknown portfolio contender '{name}' (expected {})",
+                            KNOWN_CONTENDERS.join("|")
+                        ));
+                    }
+                }
+                Ok(PortfolioSpec::List(names))
+            }
+        }
+    }
+
+    /// The canonical wire form (`parse(x.as_str()) == x`).
+    pub fn as_str(&self) -> String {
+        match self {
+            PortfolioSpec::Auto => "auto".to_string(),
+            PortfolioSpec::Full => "full".to_string(),
+            PortfolioSpec::List(names) => names.join(","),
+        }
+    }
+}
+
+/// Every contender name [`PortfolioSpec::parse`] accepts, in the order
+/// `full` races them.
+pub const KNOWN_CONTENDERS: [&str; 12] = [
+    "rsa",
+    "rwa",
+    "rwa-scan",
+    "rwa-bitplane",
+    "rwa-sharded",
+    "neal",
+    "tabu",
+    "sb",
+    "cim",
+    "reaim",
+    "statica",
+    "checkerboard",
+];
+
+/// One roster slot: a named engine configuration or baseline factory.
+#[derive(Clone, Copy)]
+pub struct Contender {
+    pub name: &'static str,
+    pub kind: ContenderKind,
+}
+
+#[derive(Clone, Copy)]
+pub enum ContenderKind {
+    /// The Snowball engine itself, across its configuration axes.
+    Snowball { mode: Mode, selector: SelectorKind, datapath: Datapath, shards: u32 },
+    /// A Table II/III baseline (factory so the slot stays `Copy`).
+    Baseline(fn() -> Box<dyn Solver>),
+}
+
+impl Contender {
+    /// Thread lanes this contender occupies — what the coordinator's
+    /// admission control charges for it.
+    pub fn lanes(&self) -> usize {
+        match self.kind {
+            ContenderKind::Snowball { shards, .. } => shards.max(1) as usize,
+            ContenderKind::Baseline(_) => 1,
+        }
+    }
+}
+
+/// Look a contender up by wire name.
+pub fn contender_by_name(name: &str) -> Option<Contender> {
+    let snow = |name, mode, selector, datapath, shards| Contender {
+        name,
+        kind: ContenderKind::Snowball { mode, selector, datapath, shards },
+    };
+    let base = |name, f: fn() -> Box<dyn Solver>| Contender { name, kind: ContenderKind::Baseline(f) };
+    Some(match name {
+        "rsa" => snow("rsa", Mode::RandomScan, SelectorKind::Fenwick, Datapath::Dense, 1),
+        "rwa" => snow("rwa", Mode::RouletteWheel, SelectorKind::Fenwick, Datapath::Dense, 1),
+        "rwa-scan" => {
+            snow("rwa-scan", Mode::RouletteWheel, SelectorKind::LinearScan, Datapath::Dense, 1)
+        }
+        "rwa-bitplane" => {
+            snow("rwa-bitplane", Mode::RouletteWheel, SelectorKind::Fenwick, Datapath::BitPlane, 1)
+        }
+        "rwa-sharded" => {
+            snow("rwa-sharded", Mode::RouletteWheel, SelectorKind::Fenwick, Datapath::Dense, 4)
+        }
+        "neal" => base("neal", || Box::new(Neal::default())),
+        "tabu" => base("tabu", || Box::new(Tabu::default())),
+        "sb" => base("sb", || Box::new(SimulatedBifurcation::default())),
+        "cim" => base("cim", || Box::new(Cim::default())),
+        "reaim" => base("reaim", || Box::new(ReAim::asa())),
+        "statica" => base("statica", || Box::new(Statica::default())),
+        "checkerboard" => base("checkerboard", || Box::new(Checkerboard::default())),
+        _ => return None,
+    })
+}
+
+/// Resolve a [`PortfolioSpec`] into its concrete roster for `model`.
+pub fn resolve_roster(spec: &PortfolioSpec, model: &IsingModel) -> Vec<Contender> {
+    match spec {
+        PortfolioSpec::Auto => profile::auto_roster(&profile::InstanceProfile::of(model)),
+        PortfolioSpec::Full => {
+            KNOWN_CONTENDERS.iter().filter_map(|n| contender_by_name(n)).collect()
+        }
+        PortfolioSpec::List(names) => {
+            names.iter().filter_map(|n| contender_by_name(n)).collect()
+        }
+    }
+}
+
+/// Roster names in race order (index-aligned with the job's
+/// `ReplicaResult`s — what `RESULT` prints per contender).
+pub fn roster_names(spec: &PortfolioSpec, model: &IsingModel) -> Vec<String> {
+    resolve_roster(spec, model).iter().map(|c| c.name.to_string()).collect()
+}
+
+/// Total thread lanes a portfolio job occupies — its admission weight.
+pub fn roster_weight(spec: &PortfolioSpec, model: &IsingModel) -> usize {
+    resolve_roster(spec, model).iter().map(|c| c.lanes()).sum::<usize>().max(1)
+}
+
+/// Race parameters shared by every contender.
+#[derive(Clone, Debug)]
+pub struct RaceConfig {
+    /// Engine steps per Snowball contender; baselines get the
+    /// equivalent sweep budget (`steps / N`).
+    pub steps: u64,
+    pub schedule: Schedule,
+    /// Root seed; contender `i` runs under `child(i)`.
+    pub seed: u64,
+    /// First incumbent at or below this energy ends the race.
+    pub target: Option<i64>,
+    /// Pin shard lanes of sharded Snowball contenders.
+    pub pin_lanes: bool,
+}
+
+/// One contender's final report.
+#[derive(Clone, Debug)]
+pub struct ContenderReport {
+    pub name: String,
+    pub best_energy: i64,
+    pub best_spins: SpinVec,
+    /// Single-spin attempts / engine steps actually executed.
+    pub attempts: u64,
+    pub wall: Duration,
+    /// Why the contender was preempted (`None` = ran its full budget,
+    /// or stopped on its own target hit before any token tripped).
+    pub stopped: Option<StopCause>,
+    /// The contender thread panicked; `best_energy` is `i64::MAX` and
+    /// the race carried on without it.
+    pub panicked: bool,
+    /// Shard lanes successfully pinned (sharded contenders with
+    /// `pin_lanes`; 0 otherwise).
+    pub pinned_lanes: usize,
+}
+
+/// The race outcome: per-contender reports (roster order), the winner,
+/// and the deterministic incumbent trajectory.
+#[derive(Clone, Debug)]
+pub struct RaceOutcome {
+    pub reports: Vec<ContenderReport>,
+    /// Roster index of the winner: argmin over reported energies,
+    /// lowest index on ties.
+    pub winner: usize,
+    /// Incumbent improvements folded over reports in roster order:
+    /// `(contender_index, energy)` each time the incumbent improved.
+    pub trajectory: Vec<(usize, i64)>,
+    /// Every contender's stop token, post-race — exposed so the
+    /// loser-cancellation test can assert they all tripped.
+    pub tokens: Vec<Arc<StopToken>>,
+}
+
+impl RaceOutcome {
+    pub fn winner_name(&self) -> &str {
+        &self.reports[self.winner].name
+    }
+}
+
+fn trip_all(tokens: &[Arc<StopToken>], cause: StopCause) {
+    for t in tokens {
+        t.trip(cause);
+    }
+}
+
+/// Race `roster` on `model`. Blocks until every contender has returned
+/// (losers stop within one stop-check stride of a target hit). The
+/// job-level `job_stop` token is forwarded to every contender, so a
+/// coordinator cancel/deadline preempts the whole race.
+pub fn race(
+    model: &IsingModel,
+    roster: &[Contender],
+    cfg: &RaceConfig,
+    job_stop: Arc<StopToken>,
+) -> RaceOutcome {
+    let tokens: Vec<Arc<StopToken>> =
+        (0..roster.len()).map(|_| Arc::new(StopToken::new())).collect();
+    let root = StatelessRng::new(cfg.seed);
+    let reports: Vec<ContenderReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = roster
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let token = tokens[i].clone();
+                let all = &tokens;
+                let seed = root.child(i as u64).seed();
+                s.spawn(move || {
+                    crate::failpoint::hit("portfolio.contender");
+                    run_contender(model, c, cfg, seed, token, all)
+                })
+            })
+            .collect();
+        // Forward a job-level preemption to every contender; once it is
+        // delivered (or everyone finished on their own) just join.
+        loop {
+            if let Some(cause) = job_stop.get() {
+                trip_all(&tokens, cause);
+                break;
+            }
+            if handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| {
+                h.join().unwrap_or_else(|_| ContenderReport {
+                    name: roster[i].name.to_string(),
+                    best_energy: i64::MAX,
+                    best_spins: SpinVec::all_down(model.len()),
+                    attempts: 0,
+                    wall: Duration::ZERO,
+                    stopped: tokens[i].get(),
+                    panicked: true,
+                    pinned_lanes: 0,
+                })
+            })
+            .collect()
+    });
+    let winner = reports
+        .iter()
+        .enumerate()
+        .min_by_key(|&(i, r)| (r.best_energy, i))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut trajectory = Vec::new();
+    let mut incumbent = i64::MAX;
+    for (i, r) in reports.iter().enumerate() {
+        if r.best_energy < incumbent {
+            incumbent = r.best_energy;
+            trajectory.push((i, incumbent));
+        }
+    }
+    RaceOutcome { reports, winner, trajectory, tokens }
+}
+
+/// One contender's run. A target hit trips every token (the race's
+/// finish line); the per-contender token also carries preemption from
+/// the racer or a sibling.
+fn run_contender(
+    model: &IsingModel,
+    c: &Contender,
+    cfg: &RaceConfig,
+    seed: u64,
+    token: Arc<StopToken>,
+    all: &[Arc<StopToken>],
+) -> ContenderReport {
+    let start = Instant::now();
+    let (best_energy, best_spins, attempts, pinned_lanes) = match c.kind {
+        ContenderKind::Baseline(factory) => {
+            let solver = factory();
+            let sweeps = (cfg.steps / model.len().max(1) as u64).max(1);
+            let ctl = SolveCtl::new(token.clone(), cfg.target);
+            let r = solver.solve_ctl(model, Budget::sweeps(sweeps), seed, &ctl);
+            (r.best_energy, r.best_spins, r.attempts, 0)
+        }
+        ContenderKind::Snowball { mode, selector, datapath, shards } => {
+            let ecfg = EngineConfig {
+                mode,
+                datapath,
+                selector,
+                schedule: cfg.schedule.clone(),
+                steps: cfg.steps,
+                seed,
+                planes: None,
+                trace_stride: 0,
+                shards,
+                pin_lanes: cfg.pin_lanes,
+            };
+            if shards > 1 {
+                let (r, stats) =
+                    ShardedEngine::new(model, ecfg, MergeMode::Async).run_with_stop(&token);
+                (r.best_energy, r.best_spins, r.steps, stats.pinned_lanes)
+            } else {
+                let mut engine = SnowballEngine::new(model, ecfg);
+                let stride = (cfg.steps / 64).clamp(64, 65_536);
+                let r = engine.run_session(&token, None, stride, |ck| {
+                    if matches!(cfg.target, Some(t) if ck.best_energy <= t) {
+                        trip_all(all, StopCause::Cancel);
+                    }
+                });
+                (r.best_energy, r.best_spins, r.steps, 0)
+            }
+        }
+    };
+    // The finish line: an incumbent at or below target ends the race for
+    // everyone (losers observe their token within one check stride).
+    if matches!(cfg.target, Some(t) if best_energy <= t) {
+        trip_all(all, StopCause::Cancel);
+    }
+    ContenderReport {
+        name: c.name.to_string(),
+        best_energy,
+        best_spins,
+        attempts,
+        wall: start.elapsed(),
+        stopped: token.get(),
+        panicked: false,
+        pinned_lanes,
+    }
+}
+
+/// Run a portfolio [`JobSpec`] for the scheduler: resolve the roster,
+/// race it, and fold the reports into index-aligned [`ReplicaResult`]s
+/// (replica `i` = roster slot `i`). `Err` only when every contender
+/// panicked — a partial fleet still produces a winner.
+pub fn run_for_job(spec: &JobSpec, job_stop: &Arc<StopToken>) -> Result<Vec<ReplicaResult>, String> {
+    let pspec = spec.portfolio.as_ref().ok_or("not a portfolio job")?;
+    let roster = resolve_roster(pspec, &spec.model);
+    if roster.is_empty() {
+        return Err("portfolio roster resolved empty".to_string());
+    }
+    let cfg = RaceConfig {
+        steps: spec.steps,
+        schedule: spec.schedule.clone(),
+        seed: spec.seed,
+        target: spec.target_energy,
+        pin_lanes: spec.pin_lanes,
+    };
+    let out = race(&spec.model, &roster, &cfg, job_stop.clone());
+    if out.reports.iter().all(|r| r.panicked) {
+        return Err("every portfolio contender panicked".to_string());
+    }
+    Ok(out
+        .reports
+        .iter()
+        .enumerate()
+        .map(|(i, r)| ReplicaResult {
+            replica: i as u32,
+            best_energy: r.best_energy,
+            flips: r.attempts,
+            wall: r.wall,
+            stopped: r.stopped.is_some(),
+            pinned_lanes: r.pinned_lanes,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+
+    fn problem() -> MaxCut {
+        let rng = StatelessRng::new(11);
+        MaxCut::new(generators::erdos_renyi(32, 120, &[-1, 1], &rng))
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["auto", "full", "rsa,neal,tabu"] {
+            let p = PortfolioSpec::parse(s).unwrap();
+            assert_eq!(p.as_str(), s);
+        }
+        assert!(PortfolioSpec::parse("").is_err());
+        let err = PortfolioSpec::parse("bogus").unwrap_err();
+        assert!(err.starts_with("unknown portfolio contender 'bogus'"), "{err}");
+    }
+
+    #[test]
+    fn every_known_contender_resolves() {
+        for name in KNOWN_CONTENDERS {
+            assert!(contender_by_name(name).is_some(), "{name} must resolve");
+        }
+        let p = problem();
+        assert_eq!(
+            resolve_roster(&PortfolioSpec::Full, p.model()).len(),
+            KNOWN_CONTENDERS.len()
+        );
+    }
+
+    #[test]
+    fn race_reports_are_consistent() {
+        let p = problem();
+        let m = p.model();
+        let roster = resolve_roster(
+            &PortfolioSpec::List(vec!["rsa".into(), "neal".into(), "tabu".into()]),
+            m,
+        );
+        let cfg = RaceConfig {
+            steps: 2_000,
+            schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+            seed: 7,
+            target: None,
+            pin_lanes: false,
+        };
+        let out = race(m, &roster, &cfg, Arc::new(StopToken::new()));
+        assert_eq!(out.reports.len(), 3);
+        for r in &out.reports {
+            assert!(!r.panicked);
+            assert_eq!(r.best_energy, m.energy(&r.best_spins), "{}", r.name);
+        }
+        // No target, no preemption: every contender ran to completion.
+        assert!(out.reports.iter().all(|r| r.stopped.is_none()));
+        assert_eq!(out.trajectory.last().unwrap().1, out.reports[out.winner].best_energy);
+    }
+}

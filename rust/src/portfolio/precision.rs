@@ -1,0 +1,98 @@
+//! Coupling-precision sweep (paper challenge 3, §III-C): quantize an
+//! instance to each bit-width, race the portfolio roster on the
+//! quantized model, and score the winner's configuration on the
+//! *original* model — quality-vs-bits — alongside the `hwsim` cycle
+//! cost of a datapath with that many bit-planes. `benches/microbench.rs
+//! --precision` turns the points into `BENCH_precision.json`.
+
+use super::{race, resolve_roster, PortfolioSpec, RaceConfig};
+use crate::engine::Schedule;
+use crate::hwsim::{Geometry, HwModel};
+use crate::ising::IsingModel;
+use crate::problems::quantize;
+use crate::stop::StopToken;
+use std::sync::Arc;
+
+/// One (instance, bit-width) measurement.
+#[derive(Clone, Debug)]
+pub struct PrecisionPoint {
+    /// Magnitude bits the quantized couplings kept.
+    pub bits: u32,
+    /// Roster winner at this width.
+    pub winner: String,
+    /// Winner's best energy on the quantized model it actually solved.
+    pub quantized_energy: i64,
+    /// Winner's configuration re-scored on the full-precision model —
+    /// the quality axis (how much the distorted landscape misleads).
+    pub original_energy: i64,
+    /// `hwsim` cycles for one Mode II step at this plane count.
+    pub step_cycles: u64,
+    /// `hwsim` end-to-end seconds for the full step budget.
+    pub end_to_end_seconds: f64,
+}
+
+/// Sweep `widths`, racing `spec`'s roster per width. Widths at or above
+/// the instance's native precision race the unmodified coefficients
+/// (shift 0), so the curve plateaus at full quality.
+pub fn sweep(
+    model: &IsingModel,
+    spec: &PortfolioSpec,
+    widths: &[u32],
+    steps: u64,
+    seed: u64,
+) -> Vec<PrecisionPoint> {
+    let native = quantize::required_bits(model);
+    let hw = HwModel::default();
+    widths
+        .iter()
+        .map(|&bits| {
+            let shift = native.saturating_sub(bits.max(1));
+            let quantized = quantize::arithmetic_shift(model, shift);
+            let roster = resolve_roster(spec, &quantized);
+            let cfg = RaceConfig {
+                steps,
+                schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+                seed,
+                target: None,
+                pin_lanes: false,
+            };
+            let out = race(&quantized, &roster, &cfg, Arc::new(StopToken::new()));
+            let win = &out.reports[out.winner];
+            let g = Geometry { n: model.len(), planes: bits.max(1) };
+            let report = hw.roulette_run(g, steps);
+            PrecisionPoint {
+                bits,
+                winner: win.name.clone(),
+                quantized_energy: win.best_energy,
+                original_energy: model.energy(&win.best_spins),
+                step_cycles: report.step_cycles / steps.max(1),
+                end_to_end_seconds: report.end_to_end_seconds,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    #[test]
+    fn sweep_covers_widths_and_scores_on_original() {
+        let rng = StatelessRng::new(21);
+        // Wide coefficient range so low widths genuinely distort.
+        let p = MaxCut::new(generators::erdos_renyi(24, 90, &[-100, -31, 7, 100], &rng));
+        let spec = PortfolioSpec::List(vec!["rsa".into(), "tabu".into()]);
+        let pts = sweep(p.model(), &spec, &[2, 8], 1_200, 5);
+        assert_eq!(pts.len(), 2);
+        for pt in &pts {
+            assert!(!pt.winner.is_empty());
+            assert!(pt.step_cycles > 0);
+            assert!(pt.end_to_end_seconds > 0.0);
+        }
+        // More planes cost more per step in the bit-plane datapath.
+        assert!(pts[1].step_cycles >= pts[0].step_cycles);
+    }
+}

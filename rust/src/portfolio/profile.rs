@@ -1,0 +1,107 @@
+//! Instance profiling behind `portfolio=auto`: measure the structural
+//! features that predict which engines are competitive (size, coupling
+//! density, precision bits, external fields — the
+//! algorithm-per-instance-profile selection argument of
+//! arXiv:2605.12959) and derive a default roster from them.
+
+use super::{contender_by_name, Contender};
+use crate::ising::IsingModel;
+use crate::problems::quantize;
+
+/// Structural features of one instance.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceProfile {
+    pub n: usize,
+    /// Nonzero couplings over N·(N−1)/2.
+    pub density: f64,
+    /// Signed bits needed to represent the widest coefficient
+    /// ([`quantize::required_bits`]) — the paper's challenge-3 axis.
+    pub bits: u32,
+    /// Any nonzero external field h_i.
+    pub has_fields: bool,
+}
+
+impl InstanceProfile {
+    pub fn of(model: &IsingModel) -> Self {
+        Self {
+            n: model.len(),
+            density: model.density(),
+            bits: quantize::required_bits(model),
+            has_fields: (0..model.len()).any(|i| model.h(i) != 0),
+        }
+    }
+}
+
+/// The `portfolio=auto` roster policy. Always races both Snowball
+/// modes; the rest of the roster follows the profile:
+///
+/// * small instances (N ≤ 256) add the strong sequential heuristics
+///   (`tabu`, `neal`) — their Θ(N) move scans are still cheap;
+/// * dense instances (≥ 25% of couplings present) add the mat-vec
+///   solvers (`sb`, `statica`) that amortize full-row work;
+/// * sparse instances add `checkerboard` (few colour classes) and
+///   `reaim`;
+/// * large instances (N ≥ 2048) add the sharded engine;
+/// * narrow coefficients (≤ 6 signed bits) add the bit-plane datapath,
+///   whose per-step cost scales with plane count.
+pub fn auto_roster(p: &InstanceProfile) -> Vec<Contender> {
+    let mut names: Vec<&str> = vec!["rwa", "rsa"];
+    if p.n <= 256 {
+        names.push("tabu");
+        names.push("neal");
+    }
+    if p.density >= 0.25 {
+        names.push("sb");
+        names.push("statica");
+    } else {
+        names.push("checkerboard");
+        names.push("reaim");
+    }
+    if p.n >= 2048 {
+        names.push("rwa-sharded");
+    }
+    if p.bits <= 6 {
+        names.push("rwa-bitplane");
+    }
+    names.into_iter().filter_map(contender_by_name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    #[test]
+    fn profile_measures_structure() {
+        let rng = StatelessRng::new(3);
+        let p = MaxCut::new(generators::erdos_renyi(64, 300, &[-3, 3], &rng));
+        let prof = InstanceProfile::of(p.model());
+        assert_eq!(prof.n, 64);
+        assert!(prof.density > 0.0 && prof.density <= 1.0);
+        assert_eq!(prof.bits, 2); // max |J| = 3 → 2 magnitude bits
+        assert!(!prof.has_fields);
+    }
+
+    #[test]
+    fn auto_roster_tracks_profile() {
+        let sparse_small =
+            InstanceProfile { n: 128, density: 0.05, bits: 2, has_fields: false };
+        let names: Vec<&str> =
+            auto_roster(&sparse_small).iter().map(|c| c.name).collect();
+        assert!(names.contains(&"rwa") && names.contains(&"rsa"));
+        assert!(names.contains(&"tabu") && names.contains(&"checkerboard"));
+        assert!(names.contains(&"rwa-bitplane"));
+        assert!(!names.contains(&"rwa-sharded"));
+
+        let dense_large =
+            InstanceProfile { n: 4096, density: 0.5, bits: 12, has_fields: true };
+        let names: Vec<&str> =
+            auto_roster(&dense_large).iter().map(|c| c.name).collect();
+        assert!(names.contains(&"sb") && names.contains(&"statica"));
+        assert!(names.contains(&"rwa-sharded"));
+        assert!(!names.contains(&"rwa-bitplane"));
+        assert!(!names.contains(&"tabu"));
+    }
+}

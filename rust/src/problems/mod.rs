@@ -6,7 +6,9 @@ pub mod landscape;
 pub mod maxcut;
 pub mod partition;
 pub mod quantize;
+pub mod qubo;
 pub mod tsp;
 
 pub use maxcut::MaxCut;
 pub use partition::GraphPartition;
+pub use qubo::Qubo;

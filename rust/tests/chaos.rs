@@ -66,6 +66,7 @@ fn spec(label: &str, seed: u64, steps: u64) -> JobSpec {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 

@@ -107,6 +107,7 @@ fn coordinator_direct_api_with_target_statistics() {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     });
     let res = coord.wait(id).unwrap();
     assert_eq!(res.replicas.len(), 8);

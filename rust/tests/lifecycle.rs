@@ -35,6 +35,7 @@ fn long_job(label: &str, seed: u64, steps: u64, budget_ms: u64) -> JobSpec {
         budget_ms,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 

@@ -77,6 +77,7 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 

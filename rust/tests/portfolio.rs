@@ -1,0 +1,153 @@
+//! Portfolio-layer integration tests: winner optimality across the
+//! roster, seeded determinism of a full-budget race, loser cancellation
+//! on a target hit, admission-budget conservation through the
+//! coordinator, and (under `--features failpoints`) a panicking
+//! contender not failing the race.
+
+use snowball::coordinator::{Backend, Coordinator, JobSpec};
+use snowball::engine::{Mode, Schedule, SelectorKind};
+use snowball::graph::generators;
+use snowball::ising::IsingModel;
+use snowball::portfolio::{race, resolve_roster, PortfolioSpec, RaceConfig};
+use snowball::problems::{landscape, MaxCut};
+use snowball::rng::StatelessRng;
+use snowball::stop::StopToken;
+use std::sync::Arc;
+
+/// The failpoint registry is process-global, so the failpoint test must
+/// not overlap any other race in this binary. Every test takes this
+/// lock; the races are small, so serializing them costs nothing.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn model(n: usize, m: usize, seed: u64) -> IsingModel {
+    let rng = StatelessRng::new(seed);
+    MaxCut::new(generators::erdos_renyi(n, m, &[-1, 1], &rng)).model().clone()
+}
+
+fn cfg(steps: u64, seed: u64, target: Option<i64>) -> RaceConfig {
+    RaceConfig {
+        steps,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        seed,
+        target,
+        pin_lanes: false,
+    }
+}
+
+fn list(names: &[&str]) -> PortfolioSpec {
+    PortfolioSpec::List(names.iter().map(|s| s.to_string()).collect())
+}
+
+/// The winner is the argmin: no contender may beat it, and every
+/// reported energy must be consistent with the reported spins.
+#[test]
+fn winner_energy_is_minimal_across_contenders() {
+    let _g = serial();
+    let roster_spec = list(&["rwa", "rsa", "neal", "tabu", "sb"]);
+    for seed in [1u64, 2, 3] {
+        let m = model(32, 120, seed);
+        let roster = resolve_roster(&roster_spec, &m);
+        let out = race(&m, &roster, &cfg(3_000, seed, None), Arc::new(StopToken::new()));
+        let best = out.reports[out.winner].best_energy;
+        for r in &out.reports {
+            assert!(!r.panicked, "{} panicked", r.name);
+            assert_eq!(r.best_energy, m.energy(&r.best_spins), "{} spins/energy", r.name);
+            assert!(best <= r.best_energy, "winner beaten by {} (seed {seed})", r.name);
+        }
+    }
+}
+
+/// With no target the race always runs to budget, so the same seed and
+/// roster must reproduce the winner, every report, and the incumbent
+/// trajectory bit-for-bit.
+#[test]
+fn seeded_race_is_deterministic() {
+    let _g = serial();
+    let m = model(40, 150, 9);
+    let roster = resolve_roster(&list(&["rsa", "rwa", "neal", "tabu"]), &m);
+    let run = || race(&m, &roster, &cfg(4_000, 9, None), Arc::new(StopToken::new()));
+    let (a, b) = (run(), run());
+    assert_eq!(a.winner, b.winner);
+    assert_eq!(a.trajectory, b.trajectory);
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.best_energy, rb.best_energy, "{}", ra.name);
+        assert_eq!(ra.attempts, rb.attempts, "{}", ra.name);
+        assert!(ra.stopped.is_none(), "{} preempted without a target", ra.name);
+    }
+}
+
+/// First incumbent at the ground state ends the race: every stop token
+/// (winner's included) is tripped, and the winning energy reaches the
+/// target.
+#[test]
+fn target_hit_trips_every_loser() {
+    let _g = serial();
+    let m = model(16, 40, 4);
+    let (_, optimum) = landscape::ground_state(&m);
+    let roster = resolve_roster(&list(&["tabu", "rwa", "neal", "rsa"]), &m);
+    let out = race(&m, &roster, &cfg(50_000, 7, Some(optimum)), Arc::new(StopToken::new()));
+    assert_eq!(out.reports[out.winner].best_energy, optimum, "16 spins must reach optimum");
+    assert!(
+        out.tokens.iter().all(|t| t.is_stopped()),
+        "target hit must trip every contender token"
+    );
+}
+
+/// A portfolio job through the coordinator: `replicas` is normalized to
+/// one race, the result carries one `ReplicaResult` per roster slot plus
+/// the `PortfolioOutcome`, and the admission budget fully drains.
+#[test]
+fn coordinator_portfolio_job_conserves_admission_budget() {
+    let _g = serial();
+    let m = model(32, 100, 6);
+    let coord = Coordinator::start(2);
+    let id = coord.submit(JobSpec {
+        model: Arc::new(m),
+        label: "race".into(),
+        mode: Mode::RouletteWheel,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        steps: 2_000,
+        replicas: 7, // normalized away: a portfolio job is one race
+        seed: 3,
+        target_energy: None,
+        shards: 1,
+        pin_lanes: false,
+        budget_ms: 0,
+        max_retries: 0,
+        backend: Backend::Native,
+        portfolio: Some(list(&["rsa", "neal", "tabu"])),
+    });
+    let r = coord.wait(id).expect("portfolio job completes");
+    assert_eq!(r.replicas.len(), 3, "one ReplicaResult per roster slot");
+    let p = r.portfolio.as_ref().expect("portfolio outcome present");
+    assert_eq!(p.contenders, vec!["rsa".to_string(), "neal".into(), "tabu".into()]);
+    assert!(p.contenders.contains(&p.winner), "winner from the roster: {}", p.winner);
+    let best = r.best_energy();
+    let widx = p.contenders.iter().position(|c| *c == p.winner).unwrap();
+    assert_eq!(r.replicas[widx].best_energy, best, "winner is the argmin replica");
+    assert_eq!(coord.committed_weight(), 0, "admission budget must drain");
+    coord.shutdown();
+}
+
+/// One contender dying mid-race (the `portfolio.contender` failpoint)
+/// costs its slot, not the race: the survivors still elect a winner.
+#[cfg(feature = "failpoints")]
+#[test]
+fn panicking_contender_does_not_fail_the_race() {
+    let _g = serial();
+    snowball::failpoint::disarm_all();
+    snowball::failpoint::arm_panic("portfolio.contender", 0);
+    let m = model(24, 60, 5);
+    let roster = resolve_roster(&list(&["rwa", "neal", "tabu"]), &m);
+    let out = race(&m, &roster, &cfg(2_000, 3, None), Arc::new(StopToken::new()));
+    snowball::failpoint::disarm_all();
+    let dead = out.reports.iter().filter(|r| r.panicked).count();
+    assert_eq!(dead, 1, "the one-shot failpoint kills exactly one contender");
+    let w = &out.reports[out.winner];
+    assert!(!w.panicked, "a panicked slot never wins");
+    assert_eq!(w.best_energy, m.energy(&w.best_spins));
+}

@@ -413,6 +413,7 @@ fn prop_job_state_transitions_are_legal() {
                 budget_ms: if rng.below(32, j as u64, salt::PROBLEM, 3) == 0 { 5 } else { 0 },
                 max_retries: 0,
                 backend: Backend::Native,
+                portfolio: None,
             }));
         }
         let mut last: Vec<Option<JobState>> = vec![None; jobs];

@@ -105,6 +105,7 @@ fn spec(model: Arc<IsingModel>, steps: u64, seed: u64) -> JobSpec {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 

@@ -63,6 +63,7 @@ fn reference_spec(c: usize) -> JobSpec {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 
@@ -384,6 +385,7 @@ fn storm_reference_spec(model: IsingModel, steps: u64, seed: u64) -> JobSpec {
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
+        portfolio: None,
     }
 }
 

@@ -1,6 +1,15 @@
-//! `cargo run -p xtask -- lint-safety` — the repo's unsafe-code and
-//! atomics policy gate (CI job `lint-safety`; policy rationale in
-//! `docs/ARCHITECTURE.md` § Concurrency correctness).
+//! Repo task runner. Two subcommands:
+//!
+//! * `cargo run -p xtask -- lint-safety` — the unsafe-code and atomics
+//!   policy gate (CI job `lint-safety`; rationale in
+//!   `docs/ARCHITECTURE.md` § Concurrency correctness);
+//! * `cargo run -p xtask -- kick-tires [--smoke|--full]` — regenerate
+//!   every `BENCH_*.json` report by driving the microbench suites in
+//!   sequence (engine, shards, registry, load, portfolio, precision).
+//!   `--smoke` (the default) uses the quick profiles; `--full` runs the
+//!   real campaign.
+//!
+//! # The lint-safety gate
 //!
 //! The compiler already enforces the hard boundary (`#![deny(unsafe_code)]`
 //! at the crate root, re-escalated to `forbid` on every non-audited
@@ -67,11 +76,59 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint-safety") => lint_safety(),
+        Some("kick-tires") => kick_tires(args.get(1).map(String::as_str)),
         _ => {
-            eprintln!("usage: cargo run -p xtask -- lint-safety");
+            eprintln!("usage: cargo run -p xtask -- lint-safety | kick-tires [--smoke|--full]");
             ExitCode::from(2)
         }
     }
+}
+
+/// `kick-tires`: drive every microbench suite so the `BENCH_*.json`
+/// reports are regenerated in one command (what the CI bench lane and a
+/// fresh checkout both want). Stops at the first failing suite.
+fn kick_tires(profile: Option<&str>) -> ExitCode {
+    let full = match profile {
+        None | Some("--smoke") => false,
+        Some("--full") => true,
+        Some(other) => {
+            eprintln!("kick-tires: unknown profile '{other}' (expected --smoke|--full)");
+            return ExitCode::from(2);
+        }
+    };
+    let rust_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust");
+    let suites: &[&[&str]] = &[
+        &[], // engine hot paths → BENCH_engine.json
+        &["--shards"],
+        &["--registry"],
+        &["--load"],
+        &["--portfolio"],
+        &["--precision"],
+    ];
+    for suite in suites {
+        let mut cmd = std::process::Command::new("cargo");
+        cmd.args(["bench", "--bench", "microbench", "--"]).args(*suite);
+        if !full {
+            // The engine suite has a dedicated smoke profile; the rest
+            // use their quick profile.
+            cmd.arg(if suite.is_empty() { "--smoke" } else { "--quick" });
+        }
+        cmd.current_dir(&rust_root);
+        println!("kick-tires: microbench {}", if suite.is_empty() { "(engine)" } else { suite[0] });
+        match cmd.status() {
+            Ok(s) if s.success() => {}
+            Ok(s) => {
+                eprintln!("kick-tires: suite failed with {s}");
+                return ExitCode::FAILURE;
+            }
+            Err(e) => {
+                eprintln!("kick-tires: cannot spawn cargo: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    println!("kick-tires: all BENCH_*.json reports refreshed under rust/");
+    ExitCode::SUCCESS
 }
 
 fn lint_safety() -> ExitCode {
