@@ -66,6 +66,7 @@ fn main() {
                 trace_stride: 0,
                 shards: 1,
                 pin_lanes: false,
+                local_rows: false,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let start = std::time::Instant::now();

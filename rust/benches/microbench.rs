@@ -47,6 +47,16 @@
 //! with the hwsim plane-count cycle cost — `BENCH_precision.json`:
 //!
 //!     cargo bench --bench microbench -- --precision [--quick]
+//!
+//! `--locality` switches to the **memory-bandwidth benchmark** behind
+//! the precision-packed coupling store and the NUMA-local lane rows:
+//! packed (i8) vs force-widened i32 storage on the N = 4096 dense and
+//! sparse workloads — after a bit-identity guard, so every ratio
+//! compares provably identical MCMC work — plus the pinned/unpinned ×
+//! local-rows-on/off grid on the async sharded engine, writing
+//! `BENCH_locality.json`:
+//!
+//!     cargo bench --bench microbench -- --locality [--quick]
 
 use snowball::cli::Args;
 use snowball::coordinator::{Backend, Coordinator, Dispatch, JobSpec, Router, Service, WaitOutcome};
@@ -95,6 +105,7 @@ fn run_engine(p: &MaxCut, mode: Mode, dp: Datapath, sel: SelectorKind, steps: u6
         trace_stride: 0,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let mut e = SnowballEngine::new(p.model(), cfg);
     let start = std::time::Instant::now();
@@ -132,6 +143,7 @@ fn bench_fenwick_vs_scan(n: usize, edges: usize, steps: u64) -> (f64, f64) {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let start = std::time::Instant::now();
@@ -275,6 +287,7 @@ fn bench_shards(quick: bool) {
             trace_stride: 0,
             shards,
             pin_lanes: false,
+            local_rows: false,
         };
         let want = SnowballEngine::new(p.model(), cfg(1)).run();
         let got = ShardedEngine::new(p.model(), cfg(5), MergeMode::VirtualTime).run();
@@ -305,6 +318,7 @@ fn bench_shards(quick: bool) {
         trace_stride: 0,
         shards,
         pin_lanes: false,
+        local_rows: false,
     };
     let single = {
         let mut e = SnowballEngine::new(p.model(), mk_cfg(1));
@@ -362,6 +376,7 @@ fn bench_shards(quick: bool) {
             trace_stride: 0,
             shards,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut rows = Vec::new();
         for s in [1usize, 4, 8] {
@@ -460,6 +475,7 @@ fn bench_registry(quick: bool) {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
@@ -583,6 +599,7 @@ fn bench_portfolio(quick: bool) {
             seed: 9,
             target: None,
             pin_lanes: false,
+            local_rows: false,
         };
         let start = std::time::Instant::now();
         let out = race(m, &roster, &cfg, Arc::new(StopToken::new()));
@@ -655,18 +672,27 @@ fn bench_precision(quick: bool) {
         for pt in &pts {
             println!(
                 "  {:>2} bits: winner {:>6} | quantized {:>9} | original {:>9} | \
-                 {:>5} cycles/step",
-                pt.bits, pt.winner, pt.quantized_energy, pt.original_energy, pt.step_cycles
-            );
-            rows.push(format!(
-                "{{\"bits\":{},\"winner\":\"{}\",\"quantized_energy\":{},\
-                 \"original_energy\":{},\"step_cycles\":{},\"end_to_end_seconds\":{:.6}}}",
+                 {:>5} cycles/step | {:>8} B ({})",
                 pt.bits,
                 pt.winner,
                 pt.quantized_energy,
                 pt.original_energy,
                 pt.step_cycles,
-                pt.end_to_end_seconds
+                pt.model_bytes,
+                pt.tier
+            );
+            rows.push(format!(
+                "{{\"bits\":{},\"winner\":\"{}\",\"quantized_energy\":{},\
+                 \"original_energy\":{},\"step_cycles\":{},\"end_to_end_seconds\":{:.6},\
+                 \"model_bytes\":{},\"tier\":\"{}\"}}",
+                pt.bits,
+                pt.winner,
+                pt.quantized_energy,
+                pt.original_energy,
+                pt.step_cycles,
+                pt.end_to_end_seconds,
+                pt.model_bytes,
+                pt.tier
             ));
         }
         blocks.push(format!(
@@ -682,6 +708,178 @@ fn bench_precision(quick: bool) {
         blocks.join(",\n  ")
     );
     let path = "BENCH_precision.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+/// `--locality`: the memory-bandwidth numbers behind
+/// `BENCH_locality.json` (precision-packed store + NUMA-local lane
+/// rows). Every packed-vs-i32 comparison runs behind a full-signature
+/// bit-identity guard, so equal flip counts make the bytes/step ratio
+/// exact — the speedup (if any) and the traffic cut can never come
+/// from diverging work.
+fn bench_locality(quick: bool) {
+    use snowball::ising::Tier;
+
+    let n = 4096usize;
+    let steps: u64 = if quick { 8_000 } else { 24_000 };
+    let mk_cfg = |steps: u64, shards: usize, pin: bool, local: bool| EngineConfig {
+        mode: Mode::RouletteWheel,
+        datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 8.0, t1: 0.05 },
+        steps,
+        seed: 7,
+        planes: None,
+        trace_stride: 0,
+        shards,
+        pin_lanes: pin,
+        local_rows: local,
+    };
+    let widened = |m: &IsingModel| {
+        let mut w = m.clone();
+        w.force_tier(Tier::I32);
+        w
+    };
+    let timed = |m: &IsingModel| {
+        let mut e = SnowballEngine::new(m, mk_cfg(steps, 1, false, false));
+        let start = std::time::Instant::now();
+        let r = e.run();
+        (steps as f64 / start.elapsed().as_secs_f64(), r)
+    };
+    let sig = |r: &snowball::engine::RunResult| {
+        (
+            r.best_energy,
+            r.best_step,
+            r.final_energy,
+            r.flips,
+            r.fallbacks,
+            r.nulls,
+            r.best_spins.to_spins(),
+            r.final_spins.to_spins(),
+        )
+    };
+
+    // Dense section: N = 4096 all-to-all ±1 (the paper's workload
+    // shape). Every flip walks a full N-element row of the packed
+    // store, so the per-step coupling traffic is flips/steps × N ×
+    // element width — the tier cut lands directly on the hot loop.
+    let rng = StatelessRng::new(5);
+    let dense = MaxCut::new(generators::complete(n, &[-1, 1], &rng));
+    let dense_packed = dense.model();
+    assert_eq!(dense_packed.tier(), Tier::I8, "±1 all-to-all must pack as i8");
+    let dense_wide = widened(dense_packed);
+    let (dense_sps_packed, rp) = timed(dense_packed);
+    let (dense_sps_i32, rw) = timed(&dense_wide);
+    assert_eq!(sig(&rp), sig(&rw), "dense: packed vs i32 diverged — benchmark void");
+    let row_traffic = |r: &snowball::engine::RunResult, tier: Tier| {
+        r.flips as f64 / steps as f64 * n as f64 * tier.bytes_per_coupling() as f64
+    };
+    let dense_bps_packed = row_traffic(&rp, dense_packed.tier());
+    let dense_bps_i32 = row_traffic(&rw, Tier::I32);
+    let dense_ratio = dense_bps_i32 / dense_bps_packed;
+    println!(
+        "dense       : N={n} {steps} steps | packed({}) {dense_sps_packed:>10.0} steps/s \
+         {dense_bps_packed:>8.0} B/step | i32 {dense_sps_i32:>10.0} steps/s \
+         {dense_bps_i32:>8.0} B/step | {dense_ratio:.1}x less traffic",
+        dense_packed.tier().label()
+    );
+    // The acceptance line this benchmark exists for: the packed dense
+    // row walk must move at least 2x fewer coupling bytes per step
+    // (it is exactly 4x for i8 — flip counts are equal by the guard).
+    assert!(
+        dense_ratio >= 2.0,
+        "packed dense traffic only {dense_ratio:.2}x lighter than i32 — tentpole regressed"
+    );
+
+    // Sparse section: N = 4096, average degree 8. The hot loop here
+    // runs on the CSR adjacency slabs, whose index+weight layout is
+    // tier-invariant — what the packed store cuts is the resident
+    // model footprint (and with it registry capacity and lane-copy
+    // cost), so that is what the section records.
+    let edges = 16_384usize;
+    let rng = StatelessRng::new(9);
+    let sparse = MaxCut::new(generators::erdos_renyi(n, edges, &[-1, 1], &rng));
+    let sparse_packed = sparse.model();
+    assert_eq!(sparse_packed.tier(), Tier::I8);
+    let sparse_wide = widened(sparse_packed);
+    let (sparse_sps_packed, rp) = timed(sparse_packed);
+    let (sparse_sps_i32, rw) = timed(&sparse_wide);
+    assert_eq!(sig(&rp), sig(&rw), "sparse: packed vs i32 diverged — benchmark void");
+    let sparse_bytes_packed = sparse_packed.approx_bytes();
+    let sparse_bytes_i32 = sparse_wide.approx_bytes();
+    let sparse_bytes_ratio = sparse_bytes_i32 as f64 / sparse_bytes_packed as f64;
+    println!(
+        "sparse      : N={n} |E|={edges} {steps} steps | packed {sparse_sps_packed:>10.0} \
+         steps/s {sparse_bytes_packed} resident B | i32 {sparse_sps_i32:>10.0} steps/s \
+         {sparse_bytes_i32} resident B | {sparse_bytes_ratio:.1}x smaller"
+    );
+
+    // NUMA grid: the async sharded engine on the dense instance,
+    // pinned/unpinned x local-rows-on/off. Async lanes are
+    // real-nondeterministic, so the guard here is exactness of the
+    // distributed bookkeeping, not bit-identity.
+    let shards = 2usize;
+    let grid_steps: u64 = if quick { 8_000 } else { 24_000 };
+    let mut cells = Vec::new();
+    for (pin, local) in [(false, false), (false, true), (true, false), (true, true)] {
+        let mut e = ShardedEngine::new(
+            dense_packed,
+            mk_cfg(grid_steps, shards, pin, local),
+            MergeMode::Async,
+        )
+        .with_window(64);
+        let start = std::time::Instant::now();
+        let (r, stats) = e.run_with_stats();
+        let sps = r.steps as f64 / start.elapsed().as_secs_f64();
+        assert_eq!(
+            r.final_energy,
+            dense_packed.energy(&r.final_spins),
+            "pin={pin} local={local}: distributed bookkeeping drifted"
+        );
+        if local {
+            assert!(stats.local_row_bytes > 0, "local_rows on but no lane materialized a copy");
+        } else {
+            assert_eq!(stats.local_row_bytes, 0, "local_rows off but lanes copied rows");
+        }
+        println!(
+            "numa grid   : pin={pin:<5} local_rows={local:<5} | {sps:>10.0} steps/s | \
+             {} pinned lanes | {} local row bytes",
+            stats.pinned_lanes, stats.local_row_bytes
+        );
+        cells.push(format!(
+            "{{\"pin_lanes\":{pin},\"local_rows\":{local},\"steps_per_sec\":{sps:.1},\
+             \"pinned_lanes\":{},\"local_row_bytes\":{}}}",
+            stats.pinned_lanes, stats.local_row_bytes
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"schema\": \"snowball.bench.locality/v1\",\n  \"profile\": \"{}\",\n  \
+         \"n\": {n},\n  \"steps\": {steps},\n  \"bit_identity\": true,\n  \
+         \"dense\": {{\"tier\": \"{}\", \
+         \"steps_per_sec_packed\": {dense_sps_packed:.1}, \
+         \"steps_per_sec_i32\": {dense_sps_i32:.1}, \
+         \"coupling_bytes_per_step_packed\": {dense_bps_packed:.1}, \
+         \"coupling_bytes_per_step_i32\": {dense_bps_i32:.1}, \
+         \"bytes_per_step_ratio\": {dense_ratio:.2}}},\n  \
+         \"sparse\": {{\"tier\": \"{}\", \"edges\": {edges}, \
+         \"steps_per_sec_packed\": {sparse_sps_packed:.1}, \
+         \"steps_per_sec_i32\": {sparse_sps_i32:.1}, \
+         \"model_bytes_packed\": {sparse_bytes_packed}, \
+         \"model_bytes_i32\": {sparse_bytes_i32}, \
+         \"model_bytes_ratio\": {sparse_bytes_ratio:.2}, \
+         \"csr_traffic_tier_invariant\": true}},\n  \
+         \"numa_grid\": {{\"shards\": {shards}, \"steps\": {grid_steps}, \"cells\": [\n    \
+         {}\n  ]}}\n}}\n",
+        if quick { "quick" } else { "full" },
+        dense_packed.tier().label(),
+        sparse_packed.tier().label(),
+        cells.join(",\n    ")
+    );
+    let path = "BENCH_locality.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("failed to write {path}: {e}"),
@@ -710,6 +908,10 @@ fn main() {
     }
     if args.flag("registry") {
         bench_registry(quick);
+        return;
+    }
+    if args.flag("locality") {
+        bench_locality(quick);
         return;
     }
     let sizes: Vec<usize> = if smoke {
@@ -803,6 +1005,7 @@ fn main() {
                     trace_stride: 0,
                     shards: 1,
                     pin_lanes: false,
+                    local_rows: false,
                 };
                 SnowballEngine::new(p.model(), cfg).run().best_energy
             });

@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         trace_stride: 0,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let mut engine = SnowballEngine::new(problem.model(), cfg);
     let checkpoints = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];

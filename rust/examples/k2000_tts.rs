@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
             target_energy: Some(target_energy),
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,

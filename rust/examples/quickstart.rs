@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut engine = SnowballEngine::new(problem.model(), cfg);
         let run = engine.run();

@@ -61,7 +61,7 @@ impl Solver for Cim {
             for i in 0..n {
                 attempts += 1;
                 let mut inj = model.h(i) as f64;
-                for (k, &jv) in model.j_row(i).iter().enumerate() {
+                for (k, jv) in model.j_row(i).iter().enumerate() {
                     if jv != 0 {
                         inj += jv as f64 * x[k];
                     }

@@ -157,9 +157,7 @@ impl ChainState {
         let s_old = self.spins.flip(i);
         self.energy += de;
         let factor = 2 * s_old as i64;
-        for (u, &jv) in self.u.iter_mut().zip(model.j_row(i).iter()) {
-            *u -= factor * jv as i64;
-        }
+        model.j_row(i).fold_delta(factor, &mut self.u);
     }
 }
 

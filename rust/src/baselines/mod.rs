@@ -81,6 +81,7 @@ impl Solver for SnowballSolver {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut engine = SnowballEngine::new(model, cfg);
         // The engine has no target notion of its own; target detection

@@ -41,7 +41,7 @@ impl Solver for SimulatedBifurcation {
         let mut sq = 0f64;
         let mut cnt = 0usize;
         for i in 0..n {
-            for &v in model.j_row(i) {
+            for v in model.j_row(i).iter() {
                 if v != 0 {
                     sq += (v as f64) * (v as f64);
                     cnt += 1;
@@ -72,7 +72,7 @@ impl Solver for SimulatedBifurcation {
             for i in 0..n {
                 attempts += 1;
                 let mut drive = 0f64;
-                for (k, &jv) in model.j_row(i).iter().enumerate() {
+                for (k, jv) in model.j_row(i).iter().enumerate() {
                     if jv != 0 {
                         drive += jv as f64 * x[k];
                     }

@@ -43,7 +43,7 @@ impl BitPlanes {
         };
         for i in 0..n {
             let row = model.j_row(i);
-            for (j, &v) in row.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
                 if v == 0 {
                     continue;
                 }

@@ -175,6 +175,7 @@ impl Config {
             target: self.get("job", "target").and_then(|v| v.as_i64()),
             shards: self.i64_or("job", "shards", 1) as u32,
             pin_lanes: self.bool_or("job", "pin_lanes", false),
+            local_rows: self.bool_or("job", "local_rows", false),
             portfolio: self.get("job", "portfolio").and_then(|v| v.as_str()).map(str::to_string),
         })
     }
@@ -196,6 +197,9 @@ pub struct JobConfig {
     pub shards: u32,
     /// Pin shard lane threads to cores (`pin_lanes = true`; Linux).
     pub pin_lanes: bool,
+    /// Materialize NUMA-local per-lane coupling rows
+    /// (`local_rows = true`; pair with `pin_lanes`).
+    pub local_rows: bool,
     /// Portfolio roster (`portfolio = "auto"`, `"full"`, or a
     /// comma-separated contender list — see `crate::portfolio`).
     /// `None` runs the single configured engine as usual.
@@ -283,6 +287,9 @@ tolerance = 0.25
         let cs = Config::parse("[job]\nshards = 8\npin_lanes = true\n").unwrap();
         assert_eq!(cs.job(1).unwrap().shards, 8);
         assert!(cs.job(1).unwrap().pin_lanes);
+        assert!(!j.local_rows, "local rows default off");
+        let cl = Config::parse("[job]\nshards = 8\npin_lanes = true\nlocal_rows = true\n").unwrap();
+        assert!(cl.job(1).unwrap().local_rows);
         assert!(matches!(j.mode, crate::engine::Mode::RouletteWheel));
         // Defaults to the Fenwick selection path; `selector = "scan"`
         // switches to the legacy prefix scan.

@@ -43,6 +43,12 @@ pub struct JobSpec {
     /// replicas only; Linux `sched_setaffinity`, no-op elsewhere — see
     /// [`crate::engine::shard::affinity`]).
     pub pin_lanes: bool,
+    /// Materialize per-lane coupling-row copies on the lanes' own
+    /// (pinned) threads — first-touch NUMA placement of the hot row
+    /// walks (async sharded replicas only, pair with `pin_lanes`; see
+    /// [`crate::engine::shard::placement`]). Bit-identical results;
+    /// footprint surfaces as [`ReplicaResult::local_row_bytes`].
+    pub local_rows: bool,
     /// Wall-clock budget in milliseconds (`0` = none). When it elapses
     /// the coordinator's deadline wheel trips the job's stop token; the
     /// replicas return their best-so-far incumbents and the job lands
@@ -103,6 +109,11 @@ pub struct ReplicaResult {
     /// engine with `pin_lanes` only; 0 otherwise). Surfaced as the
     /// `pinned_lanes` METRICS gauge and RESULT field.
     pub pinned_lanes: usize,
+    /// Bytes of lane-local coupling-row copies this replica's shard
+    /// lanes materialized (async sharded engine with `local_rows` only;
+    /// 0 otherwise). Surfaced as the `local_row_bytes` METRICS gauge
+    /// and RESULT field.
+    pub local_row_bytes: usize,
 }
 
 /// Aggregated job outcome.

@@ -409,6 +409,7 @@ impl Coordinator {
     ///     target_energy: None,
     ///     shards: 1,
     ///     pin_lanes: false,
+    ///     local_rows: false,
     ///     budget_ms: 0,
     ///     max_retries: 0,
     ///     backend: Backend::Native,
@@ -678,6 +679,10 @@ impl Coordinator {
         if spec.pin_lanes {
             let pinned: usize = replicas.iter().map(|r| r.pinned_lanes).sum();
             self.metrics.gauge_set("pinned_lanes", pinned as i64);
+        }
+        if spec.local_rows {
+            let local: usize = replicas.iter().map(|r| r.local_row_bytes).sum();
+            self.metrics.gauge_set("local_row_bytes", local as i64);
         }
         let result = JobResult {
             job_id: id,
@@ -973,6 +978,7 @@ mod tests {
             target_energy: None,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,

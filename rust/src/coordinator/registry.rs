@@ -21,7 +21,7 @@
 //! the unsafe/atomics policy in docs/ARCHITECTURE.md).
 
 use super::Metrics;
-use crate::ising::IsingModel;
+use crate::ising::{IsingModel, Tier};
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::{Arc, Mutex};
@@ -317,6 +317,23 @@ impl Registry {
         if let Some(m) = m {
             m.gauge_set("registry_bytes", inner.bytes as i64);
             m.gauge_set("registry_entries", inner.map.len() as i64);
+            // Occupancy by coupling-storage tier: how much of the store
+            // the precision packing is actually saving (an i8 entry
+            // materializes 4× fewer coupling bytes than its i32 form).
+            // O(entries) per publish, and the registry is never on the
+            // per-step hot path.
+            let mut by_tier = [0usize; 3];
+            for e in inner.map.values() {
+                let slot = match e.model.tier() {
+                    Tier::I8 => 0,
+                    Tier::I16 => 1,
+                    Tier::I32 => 2,
+                };
+                by_tier[slot] += e.bytes;
+            }
+            m.gauge_set("coupling_bytes_i8", by_tier[0] as i64);
+            m.gauge_set("coupling_bytes_i16", by_tier[1] as i64);
+            m.gauge_set("coupling_bytes_i32", by_tier[2] as i64);
         }
     }
 }
@@ -364,7 +381,10 @@ mod tests {
         assert_eq!(h1, h2);
         let s = reg.stats();
         assert_eq!((s.entries, s.dedup), (1, 1));
-        assert_eq!(s.bytes, IsingModel::approx_bytes_for(8));
+        // Accounted at the packed footprint (±3 couplings pack as i8),
+        // not the conservative i32 worst case.
+        assert_eq!(s.bytes, model(8, 3).approx_bytes());
+        assert!(s.bytes < IsingModel::approx_bytes_for(8));
         let a = reg.checkout(h1).unwrap();
         let b = reg.checkout(h1).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "checkout must share one instance");
@@ -378,30 +398,37 @@ mod tests {
 
     #[test]
     fn oversized_put_is_refused() {
-        let reg = Registry::new(1 << 20, IsingModel::approx_bytes_for(8));
+        // The limit is checked against the PACKED footprint: an 8-spin
+        // i8 model fits a max sized exactly to it, a 9-spin one does
+        // not (the wire layer's pre-allocation check still uses the
+        // conservative i32 bound, `approx_bytes_for`).
+        let max = model(8, 1).approx_bytes();
+        let reg = Registry::new(1 << 20, max);
         assert!(reg.put(model(8, 1)).is_ok());
+        let bytes = model(9, 1).approx_bytes();
+        assert!(bytes > max);
         let err = reg.put(model(9, 1)).unwrap_err();
-        assert_eq!(
-            err,
-            PutError::TooLarge {
-                bytes: IsingModel::approx_bytes_for(9),
-                max: IsingModel::approx_bytes_for(8)
-            }
-        );
+        assert_eq!(err, PutError::TooLarge { bytes, max });
         assert_eq!(
             err.to_string(),
-            format!(
-                "model too large: {} bytes exceeds max_model_bytes {}",
-                IsingModel::approx_bytes_for(9),
-                IsingModel::approx_bytes_for(8)
-            )
+            format!("model too large: {bytes} bytes exceeds max_model_bytes {max}")
         );
+        // Widening the same instance to i32 quadruples the coupling
+        // footprint past the limit — the tier, not just N, decides.
+        let mut wide = model(8, 1);
+        wide.force_tier(crate::ising::Tier::I32);
+        assert_eq!(reg.put(wide).unwrap_err(), PutError::TooLarge {
+            bytes: IsingModel::approx_bytes_for(8),
+            max,
+        });
     }
 
     #[test]
     fn lru_eviction_skips_pins_and_the_incoming_entry() {
-        // Capacity fits exactly two 8-spin models.
-        let per = IsingModel::approx_bytes_for(8);
+        // Capacity fits exactly two 8-spin models (packed footprint —
+        // every model(8, _) here has i8 couplings, so they all weigh
+        // the same).
+        let per = model(8, 1).approx_bytes();
         let reg = Registry::new(2 * per, per);
         let h1 = reg.put(model(8, 1)).unwrap();
         let h2 = reg.put(model(8, 2)).unwrap();
@@ -424,6 +451,33 @@ mod tests {
         let h5 = reg.put(model(8, 5)).unwrap();
         assert!(reg.contains(h5));
         assert_eq!(reg.stats().bytes, 2 * per);
+    }
+
+    /// The per-tier occupancy gauges track inserts AND evictions, so
+    /// operators can read how much the precision packing saves.
+    #[test]
+    fn tier_gauges_track_store_contents() {
+        use crate::coordinator::Metrics;
+        let narrow = model(8, 3); // i8
+        let mid = model(8, 1_000); // i16
+        let wide = model(8, 100_000); // i32
+        let per = narrow.approx_bytes();
+        // Capacity sized so the i32 insert must evict both smaller
+        // entries (they are LRU and unpinned).
+        let reg = Registry::new(wide.approx_bytes(), wide.approx_bytes());
+        let metrics = Arc::new(Metrics::new());
+        reg.attach_metrics(metrics.clone());
+        reg.put(narrow).unwrap();
+        reg.put(mid.clone()).unwrap();
+        assert_eq!(metrics.gauge("coupling_bytes_i8"), per as i64);
+        assert_eq!(metrics.gauge("coupling_bytes_i16"), mid.approx_bytes() as i64);
+        assert_eq!(metrics.gauge("coupling_bytes_i32"), 0);
+        let h = reg.put(wide.clone()).unwrap();
+        assert!(reg.contains(h));
+        assert_eq!(metrics.gauge("coupling_bytes_i8"), 0, "i8 entry evicted");
+        assert_eq!(metrics.gauge("coupling_bytes_i16"), 0, "i16 entry evicted");
+        assert_eq!(metrics.gauge("coupling_bytes_i32"), wide.approx_bytes() as i64);
+        assert_eq!(metrics.gauge("registry_bytes"), wide.approx_bytes() as i64);
     }
 
     #[test]

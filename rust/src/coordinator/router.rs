@@ -545,6 +545,7 @@ mod tests {
             target_energy: None,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,

@@ -114,11 +114,12 @@ pub fn run_replica_ctl(
         trace_stride: 0,
         shards,
         pin_lanes: spec.pin_lanes,
+        local_rows: spec.local_rows,
     };
-    let (run, pinned_lanes) = if shards > 1 {
+    let (run, pinned_lanes, local_row_bytes) = if shards > 1 {
         let (run, stats) =
             ShardedEngine::new(&spec.model, cfg, MergeMode::Async).run_with_stop(&ctl.stop);
-        (run, stats.pinned_lanes)
+        (run, stats.pinned_lanes, stats.local_row_bytes)
     } else {
         // Retryable jobs journal for their own resume; router-managed
         // jobs (ctl.checkpoint) journal so a re-dispatch to another
@@ -137,7 +138,7 @@ pub fn run_replica_ctl(
         let run = engine.run_session(&ctl.stop, resume.as_ref(), stride, |ck| {
             journal.record(r as u32, ck.clone());
         });
-        (run, 0)
+        (run, 0, 0)
     };
     ReplicaResult {
         replica: r as u32,
@@ -146,6 +147,7 @@ pub fn run_replica_ctl(
         wall: run.wall,
         stopped: run.stopped.is_some(),
         pinned_lanes,
+        local_row_bytes,
     }
 }
 
@@ -340,6 +342,7 @@ mod tests {
             target_energy: None,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
             budget_ms: 0,
             max_retries: 0,
             backend: Backend::Native,

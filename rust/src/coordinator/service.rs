@@ -382,6 +382,13 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
                 Some("1") | Some("true") => true,
                 Some(other) => anyhow::bail!("pin_lanes must be 0|1|true|false (got {other})"),
             };
+            // NUMA-local lane rows (async sharded replicas only, pair
+            // with pin_lanes=1; docs/PROTOCOL.md). Same strictness.
+            let local_rows: bool = match kv.get("local_rows").copied() {
+                None | Some("0") | Some("false") => false,
+                Some("1") | Some("true") => true,
+                Some(other) => anyhow::bail!("local_rows must be 0|1|true|false (got {other})"),
+            };
             let schedule = match kv.get("schedule") {
                 Some(s) => Schedule::parse(s)?,
                 None => Schedule::Geometric { t0: 8.0, t1: 0.05 },
@@ -437,6 +444,7 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
                     target_energy: target,
                     shards,
                     pin_lanes,
+                    local_rows,
                     budget_ms,
                     max_retries,
                     backend: Backend::Native,
@@ -546,6 +554,12 @@ fn handle_line<D: Dispatch>(coord: &D, line: &str, stream: &TcpStream) -> Result
             let pinned: usize = r.replicas.iter().map(|x| x.pinned_lanes).sum();
             if pinned > 0 {
                 extra.push_str(&format!(" pinned_lanes={pinned}"));
+            }
+            // Likewise for NUMA-local row copies: jobs run with
+            // local_rows=1 report the total resident footprint.
+            let local: usize = r.replicas.iter().map(|x| x.local_row_bytes).sum();
+            if local > 0 {
+                extra.push_str(&format!(" local_row_bytes={local}"));
             }
             Ok(Reply::Line(format!(
                 "RESULT id={id} label={} state={state} completed={} best={} replicas={} \
@@ -786,6 +800,7 @@ mod tests {
                 target_energy: None,
                 shards: 1,
                 pin_lanes: false,
+                local_rows: false,
                 budget_ms: 0,
                 max_retries: 0,
                 backend: Backend::Native,

@@ -33,6 +33,7 @@
 
 use super::lut::{LaneCtx, PwlLogistic};
 use super::select::Fenwick;
+use super::shard::placement::LocalRows;
 use crate::bitplane::BitPlanes;
 use crate::ising::{Adjacency, IsingModel, SpinVec};
 use std::ops::Range;
@@ -116,6 +117,10 @@ pub struct LaneKernel {
     /// evaluate + prefix scan every step (`SelectorKind::LinearScan`,
     /// or a mode that never selects by roulette).
     sel: Option<SelState>,
+    /// Lane-local copy of this range's coupling rows
+    /// ([`materialize_local_rows`](Self::materialize_local_rows));
+    /// `None` walks the shared matrix / CSR directly.
+    local: Option<LocalRows>,
 }
 
 impl LaneKernel {
@@ -142,7 +147,26 @@ impl LaneKernel {
             u: init_u[range].to_vec(),
             p_q16: vec![0; n],
             sel: incremental.then(|| SelState::new(n, lut)),
+            local: None,
         }
+    }
+
+    /// Copy this kernel's coupling-row window into lane-owned memory
+    /// (dense column slab or CSR segments — whichever form the flip
+    /// path walks, per `adj`), returning the copy's resident bytes.
+    /// Call on the lane's pinned thread: first-touch page placement
+    /// puts the copy on that thread's NUMA node
+    /// (`engine::shard::placement`). Values are identical to the
+    /// shared sources, so flips stay bit-identical.
+    pub fn materialize_local_rows(
+        &mut self,
+        model: &IsingModel,
+        adj: Option<&Adjacency>,
+    ) -> usize {
+        let local = LocalRows::build(model, adj, self.lo..self.hi);
+        let bytes = local.resident_bytes();
+        self.local = Some(local);
+        bytes
     }
 
     /// The global index range this kernel owns.
@@ -341,8 +365,13 @@ impl LaneKernel {
             }
         } else if let Some(adj) = adj {
             // Sparse: Θ(deg ∩ range) CSR slice walk; the touched set is
-            // the in-range row.
-            let (neigh, vals) = adj.row_range(j, self.lo..self.hi);
+            // the in-range row. A materialized lane-local slab serves
+            // the identical slices from node-local memory (and skips
+            // the per-flip binary searches).
+            let (neigh, vals) = match &self.local {
+                Some(local) => local.csr_row(j),
+                None => adj.row_range(j, self.lo..self.hi),
+            };
             match self.sel.as_mut() {
                 Some(st) => {
                     for (&i, &jv) in neigh.iter().zip(vals.iter()) {
@@ -359,13 +388,16 @@ impl LaneKernel {
             }
         } else {
             // Dense-row fast path: contiguous Θ(hi−lo) walk
-            // (u_i ← u_i − 2 J_ij s_j_old, J symmetric); nearly every
-            // lane changes, so the incremental state takes one bulk
-            // refresh instead of n individual marks.
-            let row = &model.j_row(j)[self.lo..self.hi];
-            for (ui, &jv) in self.u.iter_mut().zip(row.iter()) {
-                *ui -= factor * jv as i64;
-            }
+            // (u_i ← u_i − 2 J_ij s_j_old, J symmetric) through the
+            // packed typed row — AVX2-widened when available, and
+            // served from a lane-local slab when one is materialized;
+            // nearly every lane changes, so the incremental state
+            // takes one bulk refresh instead of n individual marks.
+            let row = match &self.local {
+                Some(local) => local.dense_row(j),
+                None => model.j_row(j).slice(self.lo..self.hi),
+            };
+            row.fold_delta(factor, &mut self.u);
             if let Some(st) = self.sel.as_mut() {
                 st.all_dirty = true;
             }
@@ -565,6 +597,49 @@ mod tests {
             assert_eq!(t.fields(), &whole.fields()[r.clone()], "tile {r:?} fields");
             for k in 0..t.n_local() {
                 assert_eq!(t.spin(k), whole.spin(r.start + k), "tile {r:?} spin {k}");
+            }
+        }
+    }
+
+    /// A kernel with materialized lane-local rows must stay
+    /// bit-identical to one walking the shared sources, through both
+    /// the CSR and the dense flip paths, across local and remote flips.
+    #[test]
+    fn materialized_local_rows_are_bit_identical() {
+        let p = sparse_instance(64, 17);
+        let m = p.model();
+        let adj = m.adjacency();
+        let lut = PwlLogistic::default();
+        let rng = StatelessRng::new(18);
+        for (label, use_adj) in [("csr", true), ("dense", false)] {
+            let adj = use_adj.then_some(&adj);
+            let mut spins = SpinVec::random(64, &rng);
+            let u = m.local_fields(&spins);
+            let range = 11usize..49;
+            let mut shared = LaneKernel::new(range.clone(), &spins, &u, &lut, true);
+            let mut local = LaneKernel::new(range.clone(), &spins, &u, &lut, true);
+            let bytes = local.materialize_local_rows(m, adj);
+            assert!(bytes > 0, "{label}: copy reports resident bytes");
+            for step in 0..30u64 {
+                let temp = if step % 2 == 0 { 1.1 } else { 0.7 };
+                let j = rng.below(20 + step, 0, salt::SITE, 64) as usize;
+                if range.contains(&j) {
+                    let a = shared.flip_local(m, adj, None, j - range.start);
+                    let b = local.flip_local(m, adj, None, j - range.start);
+                    assert_eq!(a, b, "{label}: local flip at step {step}");
+                    spins.flip(j);
+                } else {
+                    let s_old = spins.flip(j);
+                    shared.apply_remote(m, adj, None, j, s_old);
+                    local.apply_remote(m, adj, None, j, s_old);
+                }
+                assert_eq!(
+                    shared.sync_weights(&lut, temp),
+                    local.sync_weights(&lut, temp),
+                    "{label}: aggregate W at step {step}"
+                );
+                assert_eq!(shared.fields(), local.fields(), "{label}: fields at step {step}");
+                assert_eq!(shared.weights(), local.weights(), "{label}: weights at step {step}");
             }
         }
     }

@@ -36,7 +36,10 @@
 //! [`plan_parallelism`] policy decides which level gets the machine.
 //! With [`EngineConfig::pin_lanes`] each lane thread additionally pins
 //! itself round-robin to a core ([`affinity`]), so long async runs keep
-//! their partition rows and mailbox lines cache-local.
+//! their partition rows and mailbox lines cache-local; with
+//! [`EngineConfig::local_rows`] on top, each lane copies its own
+//! coupling-row window on that pinned thread so first-touch page
+//! placement makes the hot row walks NUMA-node-local ([`placement`]).
 //!
 //! Each lane's per-step selection/update state is a range-restricted
 //! [`LaneKernel`] — the same kernel the single-lane engine runs — so
@@ -65,6 +68,8 @@ pub mod affinity;
 #[forbid(unsafe_code)]
 pub mod gate;
 pub mod mailbox;
+#[forbid(unsafe_code)]
+pub mod placement;
 
 use self::gate::{GateAborted, SyncGate};
 use self::mailbox::{Flip, MailboxGrid};
@@ -171,6 +176,11 @@ pub struct ShardStats {
     /// ([`EngineConfig::pin_lanes`]; 0 when pinning is off, on
     /// non-Linux hosts, or in the single-threaded virtual-time mode).
     pub pinned_lanes: usize,
+    /// Bytes of lane-local coupling rows materialized by
+    /// [`EngineConfig::local_rows`] (first-touch NUMA placement, see
+    /// [`placement`]), summed over lanes. 0 when the knob is off, in
+    /// virtual-time mode, or on the bit-plane datapath.
+    pub local_row_bytes: usize,
 }
 
 /// The sharded engine over one Ising instance.
@@ -417,6 +427,7 @@ impl<'m> ShardedEngine<'m> {
             per_shard_flips: vec![0; s_count], // interleaved, not per-lane
             sync_points: 0,
             pinned_lanes: 0,
+            local_row_bytes: 0,
         };
         (result, stats)
     }
@@ -463,6 +474,7 @@ impl<'m> ShardedEngine<'m> {
             per_shard_flips: vec![0; s_count],
             sync_points: 0,
             pinned_lanes: 0,
+            local_row_bytes: 0,
         };
         if steps_local == 0 || n == 0 {
             result.wall = start.elapsed();
@@ -506,6 +518,7 @@ impl<'m> ShardedEngine<'m> {
                 max_lag: 0,
                 steps_done: 0,
                 pinned: false,
+                local_bytes: 0,
             })
             .collect();
         // Round-robin pin targets come from the kernel's OWN report of
@@ -539,6 +552,14 @@ impl<'m> ShardedEngine<'m> {
                     // via ShardStats.pinned_lanes).
                     if let Some(&cpu) = pins_ref.get(lane.index % pins_ref.len().max(1)) {
                         lane.pinned = affinity::pin_current_thread(cpu);
+                    }
+                    // Materialize the lane's row window AFTER the pin,
+                    // on this thread, so first-touch places the copy's
+                    // pages on the lane's node (see `placement`). The
+                    // bit-plane datapath keeps its shared column store.
+                    if cfg.local_rows && planes_ref.is_none() {
+                        lane.local_bytes =
+                            lane.kernel.materialize_local_rows(model_ref, adj_ref);
                     }
                     let outcome =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -588,6 +609,7 @@ impl<'m> ShardedEngine<'m> {
             stats.per_shard_flips[lane.index] = lane.flips;
             stats.max_lag = stats.max_lag.max(lane.max_lag);
             stats.pinned_lanes += lane.pinned as usize;
+            stats.local_row_bytes += lane.local_bytes;
         }
         result.stopped = gate.stop_cause();
         if result.stopped.is_some() {
@@ -636,6 +658,8 @@ struct Lane {
     steps_done: u64,
     /// Whether this lane's thread was pinned to a core.
     pinned: bool,
+    /// Resident bytes of the lane-local row copy (0 = not materialized).
+    local_bytes: usize,
 }
 
 impl Lane {
@@ -915,6 +939,7 @@ mod tests {
             trace_stride: 0,
             shards,
             pin_lanes: false,
+            local_rows: false,
         }
     }
 
@@ -1089,6 +1114,39 @@ mod tests {
         let (_, vstats) =
             ShardedEngine::new(p.model(), c, MergeMode::VirtualTime).run_with_stats();
         assert_eq!(vstats.pinned_lanes, 0, "virtual mode runs unpinned on the caller");
+    }
+
+    /// `local_rows` materializes per-lane row copies (CSR and dense),
+    /// reports their footprint, keeps runs exact, and stays inert in
+    /// virtual-time mode and on the bit-plane datapath.
+    #[test]
+    fn local_rows_is_plumbed_and_harmless() {
+        let rng = StatelessRng::new(48);
+        // Sparse instance → CSR slabs; complete graph → dense slabs.
+        let sparse = MaxCut::new(generators::erdos_renyi(96, 380, &[-1, 1], &rng));
+        let dense = MaxCut::new(generators::complete(96, &[-1, 1], &rng));
+        for p in [&sparse, &dense] {
+            let mut c = cfg(Mode::RouletteWheel, 2_000, 3, 3);
+            c.pin_lanes = true;
+            c.local_rows = true;
+            let (r, stats) = ShardedEngine::new(p.model(), c.clone(), MergeMode::Async)
+                .with_window(16)
+                .run_with_stats();
+            assert_eq!(r.final_energy, p.model().energy(&r.final_spins));
+            assert_eq!(r.best_energy, p.model().energy(&r.best_spins));
+            assert!(stats.local_row_bytes > 0, "copies must be reported");
+            // Virtual-time mode never materializes.
+            let (_, vstats) =
+                ShardedEngine::new(p.model(), c.clone(), MergeMode::VirtualTime).run_with_stats();
+            assert_eq!(vstats.local_row_bytes, 0);
+            // The bit-plane datapath keeps its shared column store.
+            c.datapath = Datapath::BitPlane;
+            let (rb, bstats) = ShardedEngine::new(p.model(), c, MergeMode::Async)
+                .with_window(16)
+                .run_with_stats();
+            assert_eq!(rb.final_energy, p.model().energy(&rb.final_spins));
+            assert_eq!(bstats.local_row_bytes, 0, "bit-plane runs must not copy rows");
+        }
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! First-touch NUMA placement of per-lane coupling rows
+//! (`EngineConfig::local_rows`).
+//!
+//! A pinned shard lane spends its life walking the same column window
+//! `[lo, hi)` of the coupling matrix — every local flip and every
+//! remote flip folds one row segment into its fields. With the matrix
+//! allocated once by the coordinator, those segments live wherever the
+//! allocator's first writer touched them, which on a multi-socket host
+//! is usually one node serving every lane across the interconnect.
+//!
+//! [`LocalRows`] is the fix, with no libnuma dependency: each lane
+//! *copies* its own row slice — dense rows as a packed column slab at
+//! the model's storage tier, CSR rows as `row_range` segments — and
+//! the copy is built **on the lane's pinned thread**, so Linux's
+//! default first-touch page placement lands the pages on that thread's
+//! NUMA node. The async shard engine materializes the copy whenever
+//! `local_rows` is on — pair it with `pin_lanes`, since an unpinned
+//! lane can migrate away from its copy (leaving only the
+//! pre-sliced-row win: CSR windows keep their two binary searches
+//! paid once at build either way);
+//! the bit-plane datapath keeps its shared column store and never
+//! copies. The values are byte-for-byte the shared matrix's, so runs
+//! are bit-identical with the knob on or off — `local_rows` trades
+//! `ShardStats::local_row_bytes` of duplicated memory (the dense slabs
+//! across all lanes sum to one extra matrix copy) for node-local row
+//! walks.
+
+use crate::ising::{Adjacency, IsingModel, JRow, Tier};
+use std::ops::Range;
+
+/// A lane-local copy of the coupling rows restricted to the lane's
+/// column window — see the module docs for the placement contract.
+pub struct LocalRows {
+    slab: Slab,
+}
+
+enum Slab {
+    /// Dense column slab: row `j` of the model, columns `lo..hi`,
+    /// packed contiguously at the model's tier (`n` rows of `width`).
+    Dense { width: usize, data: DenseData },
+    /// CSR segments: row `j`'s in-window entries, global column
+    /// indices, `i32` weights — the exact `Adjacency::row_range`
+    /// output, concatenated.
+    Csr { offsets: Vec<usize>, cols: Vec<u32>, vals: Vec<i32> },
+}
+
+enum DenseData {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+impl LocalRows {
+    /// Copy the rows for a lane owning `range`. CSR when the engine
+    /// built an adjacency (sparse instances), dense otherwise — the
+    /// same gate (`MAX_CSR_DENSITY`) the flip path dispatches on, so
+    /// the materialized form always matches the walk that consumes it.
+    /// Call this on the lane's pinned thread: the copy's pages are
+    /// placed by first touch.
+    pub fn build(model: &IsingModel, adj: Option<&Adjacency>, range: Range<usize>) -> Self {
+        let n = model.len();
+        let slab = match adj {
+            Some(adj) => {
+                let mut offsets = Vec::with_capacity(n + 1);
+                offsets.push(0usize);
+                let mut cols = Vec::new();
+                let mut vals = Vec::new();
+                for j in 0..n {
+                    let (neigh, w) = adj.row_range(j, range.clone());
+                    cols.extend_from_slice(neigh);
+                    vals.extend_from_slice(w);
+                    offsets.push(cols.len());
+                }
+                Slab::Csr { offsets, cols, vals }
+            }
+            None => {
+                let width = range.len();
+                let mut data = match model.tier() {
+                    Tier::I8 => DenseData::I8(Vec::with_capacity(n * width)),
+                    Tier::I16 => DenseData::I16(Vec::with_capacity(n * width)),
+                    Tier::I32 => DenseData::I32(Vec::with_capacity(n * width)),
+                };
+                for j in 0..n {
+                    match (model.j_row(j).slice(range.clone()), &mut data) {
+                        (JRow::I8(s), DenseData::I8(v)) => v.extend_from_slice(s),
+                        (JRow::I16(s), DenseData::I16(v)) => v.extend_from_slice(s),
+                        (JRow::I32(s), DenseData::I32(v)) => v.extend_from_slice(s),
+                        // The tier is fixed for the model borrow's
+                        // lifetime (stores widen only on mutation).
+                        _ => unreachable!("model tier changed mid-build"),
+                    }
+                }
+                Slab::Dense { width, data }
+            }
+        };
+        Self { slab }
+    }
+
+    /// Row `j`'s dense column window as a typed slice — identical
+    /// values to `model.j_row(j).slice(lo..hi)`, lane-local memory.
+    /// Only valid for dense-built rows.
+    #[inline(always)]
+    pub fn dense_row(&self, j: usize) -> JRow<'_> {
+        match &self.slab {
+            Slab::Dense { width, data } => {
+                let (a, b) = (j * width, (j + 1) * width);
+                match data {
+                    DenseData::I8(v) => JRow::I8(&v[a..b]),
+                    DenseData::I16(v) => JRow::I16(&v[a..b]),
+                    DenseData::I32(v) => JRow::I32(&v[a..b]),
+                }
+            }
+            Slab::Csr { .. } => panic!("dense_row on a CSR-built LocalRows"),
+        }
+    }
+
+    /// Row `j`'s in-window CSR segment — identical slices to
+    /// `adj.row_range(j, lo..hi)`, lane-local memory, O(1) lookup
+    /// (the two binary searches were paid once at build). Only valid
+    /// for CSR-built rows.
+    #[inline(always)]
+    pub fn csr_row(&self, j: usize) -> (&[u32], &[i32]) {
+        match &self.slab {
+            Slab::Csr { offsets, cols, vals } => {
+                let (a, b) = (offsets[j], offsets[j + 1]);
+                (&cols[a..b], &vals[a..b])
+            }
+            Slab::Dense { .. } => panic!("csr_row on a dense-built LocalRows"),
+        }
+    }
+
+    /// Bytes this copy keeps resident on the lane's node — what
+    /// `ShardStats::local_row_bytes` aggregates.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.slab {
+            Slab::Dense { data, .. } => match data {
+                DenseData::I8(v) => v.len(),
+                DenseData::I16(v) => v.len() * 2,
+                DenseData::I32(v) => v.len() * 4,
+            },
+            Slab::Csr { offsets, cols, vals } => {
+                offsets.len() * std::mem::size_of::<usize>() + cols.len() * 4 + vals.len() * 4
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::problems::MaxCut;
+    use crate::rng::StatelessRng;
+
+    #[test]
+    fn dense_slab_matches_model_rows() {
+        let rng = StatelessRng::new(41);
+        // Dense-ish instance; tier i8 (±1 weights).
+        let p = MaxCut::new(generators::complete(40, &[-1, 1], &rng));
+        let m = p.model();
+        for range in [0usize..13, 13..40, 0..40, 20..20] {
+            let local = LocalRows::build(m, None, range.clone());
+            let mut want_bytes = 0usize;
+            for j in 0..m.len() {
+                let got: Vec<i32> = local.dense_row(j).iter().collect();
+                let want: Vec<i32> = m.j_row(j).slice(range.clone()).iter().collect();
+                assert_eq!(got, want, "row {j}, range {range:?}");
+                want_bytes += range.len() * m.tier().bytes_per_coupling();
+            }
+            assert_eq!(local.resident_bytes(), want_bytes, "range {range:?}");
+        }
+    }
+
+    #[test]
+    fn csr_slab_matches_row_range() {
+        let rng = StatelessRng::new(43);
+        let p = MaxCut::new(generators::erdos_renyi(60, 150, &[-2, -1, 1, 2], &rng));
+        let m = p.model();
+        let adj = m.adjacency();
+        for range in [0usize..21, 21..47, 47..60, 0..60] {
+            let local = LocalRows::build(m, Some(&adj), range.clone());
+            for j in 0..m.len() {
+                let (gn, gv) = local.csr_row(j);
+                let (wn, wv) = adj.row_range(j, range.clone());
+                assert_eq!((gn, gv), (wn, wv), "row {j}, range {range:?}");
+            }
+            assert!(local.resident_bytes() > 0);
+        }
+    }
+}

@@ -110,6 +110,16 @@ pub struct EngineConfig {
     /// async sharded engine consults this; the single-lane engine and
     /// the virtual-time merge run on the caller's thread.
     pub pin_lanes: bool,
+    /// Materialize each shard lane's coupling-row window into memory
+    /// the lane's own (pinned) thread first-touches, so multi-socket
+    /// hosts serve row walks from the local NUMA node
+    /// ([`crate::engine::shard::placement`]). Bit-identical results
+    /// either way; only the async sharded engine consults this, and it
+    /// is intended to pair with `pin_lanes` (an unpinned lane can
+    /// migrate away from its copy, keeping only the pre-sliced-row
+    /// win). Ignored by the bit-plane datapath, which keeps its shared
+    /// column store.
+    pub local_rows: bool,
 }
 
 impl EngineConfig {
@@ -127,6 +137,7 @@ impl EngineConfig {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         }
     }
 

@@ -109,6 +109,7 @@ impl ParallelTempering {
                     trace_stride: 0,
                     shards: 1,
                     pin_lanes: false,
+                    local_rows: false,
                 };
                 SnowballEngine::new(model, cfg)
             })

@@ -346,6 +346,7 @@ pub fn fig15(seed: u64) -> Fig15Result {
         trace_stride: 500,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let mut engine = SnowballEngine::new(&model, cfg);
     let run = engine.run();
@@ -448,6 +449,7 @@ pub fn fig4(steps: u64, seed: u64) -> (f64, Vec<(u64, i64)>, (usize, usize)) {
         trace_stride: (steps / 64).max(1),
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let mut engine = SnowballEngine::new(p.model(), cfg);
     let run = engine.run();

@@ -1,10 +1,20 @@
-//! Ising-model substrate: dense all-to-all instances and bit-packed spin
+//! Ising-model substrate: dense all-to-all instances, the
+//! precision-packed coupling store behind them, and bit-packed spin
 //! configurations (paper §II-B).
 
+// `store` is the ising layer's audited-unsafe member (the AVX2
+// widening row kernels behind `JRow::fold_delta`) and stays under the
+// crate-level `deny`; every other submodule is re-escalated to
+// `forbid`, which a file-local allow cannot override.
+#[forbid(unsafe_code)]
 pub mod model;
+#[forbid(unsafe_code)]
 pub mod partition;
+#[forbid(unsafe_code)]
 pub mod spins;
+pub mod store;
 
 pub use model::{Adjacency, IsingModel};
 pub use partition::Partition;
 pub use spins::SpinVec;
+pub use store::{CouplingStore, JRow, Tier};

@@ -2,21 +2,28 @@
 //!
 //! `H(s) = -Σ_{i<j} J_ij s_i s_j - Σ_i h_i s_i`  (Eq. 1)
 //!
-//! Couplings and fields are stored as `i32` integers — Snowball is a
-//! *digital* machine and all combinatorial-optimization encodings used in
-//! the paper (Max-Cut, graph partitioning) produce integer coefficients.
-//! Energies and local fields are accumulated in `i64`, which cannot
-//! overflow for any instance with `N · max|J| < 2^31` (K2000 uses
-//! `N = 2000`, `|J| = 1`).
+//! Couplings and fields are integer-valued — Snowball is a *digital*
+//! machine and all combinatorial-optimization encodings used in the
+//! paper (Max-Cut, graph partitioning) produce integer coefficients.
+//! The coupling matrix lives in a precision-packed [`CouplingStore`]:
+//! the narrowest exact integer tier (`i8`/`i16`/`i32`) selected at
+//! construction, so the bandwidth-bound row walks stream up to 4×
+//! fewer bytes while every value stays exactly representable. Energies
+//! and local fields are accumulated in `i64`, which cannot overflow
+//! for any instance with `N · max|J| < 2^31` (K2000 uses `N = 2000`,
+//! `|J| = 1`) — and because widening loads are exact, every engine
+//! output is bit-identical across storage tiers.
 
 use super::spins::SpinVec;
+use super::store::{CouplingStore, JRow, Tier};
 
 /// A dense, symmetric Ising instance over `n` spins.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct IsingModel {
     n: usize,
-    /// Row-major `n × n` coupling matrix; symmetric, zero diagonal.
-    j: Vec<i32>,
+    /// Row-major `n × n` coupling matrix, packed to the narrowest
+    /// exact tier; symmetric, zero diagonal.
+    j: CouplingStore,
     /// External fields, length `n`.
     h: Vec<i32>,
 }
@@ -24,7 +31,7 @@ pub struct IsingModel {
 impl IsingModel {
     /// A model with all-zero couplings and fields.
     pub fn zeros(n: usize) -> Self {
-        Self { n, j: vec![0; n * n], h: vec![0; n] }
+        Self { n, j: CouplingStore::zeros(n), h: vec![0; n] }
     }
 
     /// Build from a dense row-major coupling matrix and field vector.
@@ -40,7 +47,7 @@ impl IsingModel {
                 assert_eq!(j[i * n + k], j[k * n + i], "J must be symmetric at ({i},{k})");
             }
         }
-        Self { n, j, h }
+        Self { n, j: CouplingStore::from_dense(n, j), h }
     }
 
     /// Number of spins.
@@ -57,18 +64,34 @@ impl IsingModel {
     /// Coupling `J_ij`.
     #[inline(always)]
     pub fn j(&self, i: usize, k: usize) -> i32 {
-        self.j[i * self.n + k]
+        self.j.get(i, k)
     }
 
-    /// Row `i` of the coupling matrix.
+    /// Row `i` of the coupling matrix as a typed packed slice — match
+    /// once on the tier, then walk a monomorphized loop (or call the
+    /// widening [`JRow::iter`] on cold paths).
     #[inline(always)]
-    pub fn j_row(&self, i: usize) -> &[i32] {
-        &self.j[i * self.n..(i + 1) * self.n]
+    pub fn j_row(&self, i: usize) -> JRow<'_> {
+        self.j.row(i)
     }
 
-    /// The full row-major coupling matrix.
-    pub fn j_matrix(&self) -> &[i32] {
-        &self.j
+    /// The full row-major coupling matrix, widened to the legacy dense
+    /// `i32` layout (interop / verification; allocates Θ(n²)).
+    pub fn j_matrix(&self) -> Vec<i32> {
+        self.j.to_vec_i32()
+    }
+
+    /// The storage tier of the packed coupling store.
+    pub fn tier(&self) -> Tier {
+        self.j.tier()
+    }
+
+    /// Widen the coupling store to (at least) `tier` — values are
+    /// preserved exactly, so every engine output is unchanged. For
+    /// benches and parity tests that need an unpacked `i32` baseline
+    /// of a naturally-narrow instance.
+    pub fn force_tier(&mut self, tier: Tier) {
+        self.j.force_tier(tier);
     }
 
     /// External field `h_i`.
@@ -82,18 +105,20 @@ impl IsingModel {
         &self.h
     }
 
-    /// Set a symmetric coupling pair `J_ij = J_ji = v` (i ≠ j).
+    /// Set a symmetric coupling pair `J_ij = J_ji = v` (i ≠ j). The
+    /// store widens on demand if `v` exceeds the current tier.
     pub fn set_j(&mut self, i: usize, k: usize, v: i32) {
         assert_ne!(i, k, "diagonal couplings are not allowed");
-        self.j[i * self.n + k] = v;
-        self.j[k * self.n + i] = v;
+        self.j.set(i, k, v);
+        self.j.set(k, i, v);
     }
 
     /// Add to a symmetric coupling pair.
     pub fn add_j(&mut self, i: usize, k: usize, v: i32) {
         assert_ne!(i, k);
-        self.j[i * self.n + k] += v;
-        self.j[k * self.n + i] += v;
+        let v = self.j.get(i, k) + v;
+        self.j.set(i, k, v);
+        self.j.set(k, i, v);
     }
 
     /// Set external field `h_i = v`.
@@ -101,9 +126,10 @@ impl IsingModel {
         self.h[i] = v;
     }
 
-    /// Largest absolute coefficient (used to size bit-planes).
+    /// Largest absolute coefficient (used to size bit-planes; the
+    /// coupling part also drives the store's tier selection).
     pub fn max_abs_coeff(&self) -> i32 {
-        let jm = self.j.iter().map(|v| v.abs()).max().unwrap_or(0);
+        let jm = self.j.max_abs();
         let hm = self.h.iter().map(|v| v.abs()).max().unwrap_or(0);
         jm.max(hm)
     }
@@ -112,11 +138,11 @@ impl IsingModel {
     pub fn coupling_count(&self) -> usize {
         let mut c = 0;
         for i in 0..self.n {
-            for k in (i + 1)..self.n {
-                if self.j[i * self.n + k] != 0 {
+            self.j.row(i).for_each_nonzero(|k, _| {
+                if k > i {
                     c += 1;
                 }
-            }
+            });
         }
         c
     }
@@ -128,7 +154,7 @@ impl IsingModel {
         if self.n == 0 {
             return 0.0;
         }
-        let nnz = self.j.iter().filter(|&&v| v != 0).count();
+        let nnz: usize = (0..self.n).map(|i| self.j.row(i).count_nonzero()).sum();
         nnz as f64 / (self.n * self.n) as f64
     }
 
@@ -149,12 +175,7 @@ impl IsingModel {
         let mut pair = 0i64;
         for i in 0..self.n {
             let si = s.get(i) as i64;
-            let row = self.j_row(i);
-            let mut acc = 0i64;
-            for k in (i + 1)..self.n {
-                acc += row[k] as i64 * s.get(k) as i64;
-            }
-            pair += si * acc;
+            pair += si * self.j_row(i).dot_spins(s, i + 1);
         }
         let field: i64 = (0..self.n).map(|i| self.h[i] as i64 * s.get(i) as i64).sum();
         -pair - field
@@ -162,13 +183,8 @@ impl IsingModel {
 
     /// Local field `u_i = h_i + Σ_{j≠i} J_ij s_j` (defined below Eq. 2).
     pub fn local_field(&self, s: &SpinVec, i: usize) -> i64 {
-        let row = self.j_row(i);
-        let mut acc = self.h[i] as i64;
-        for k in 0..self.n {
-            // J_ii == 0 so no need to exclude k == i.
-            acc += row[k] as i64 * s.get(k) as i64;
-        }
-        acc
+        // J_ii == 0 so no need to exclude k == i.
+        self.h[i] as i64 + self.j_row(i).dot_spins(s, 0)
     }
 
     /// All local fields, Θ(N²) from-scratch (the "initialization" path;
@@ -204,14 +220,17 @@ impl IsingModel {
             a = mix(a, x);
             b = mix(b, x.rotate_left(17));
         };
+        // Values are widened to `i32` by the row view, so the digest is
+        // invariant to the storage tier: the same matrix hashes
+        // identically whether it sits packed at i8 or unpacked at i32
+        // (pinned by `tests/properties.rs`).
         for i in 0..self.n {
-            let row = self.j_row(i);
-            for k in (i + 1)..self.n {
-                if row[k] != 0 {
+            self.j_row(i).for_each_nonzero(|k, v| {
+                if k > i {
                     absorb(((i as u64) << 32) | k as u64);
-                    absorb(row[k] as i64 as u64);
+                    absorb(v as i64 as u64);
                 }
-            }
+            });
         }
         for (i, &h) in self.h.iter().enumerate() {
             if h != 0 {
@@ -222,17 +241,21 @@ impl IsingModel {
         ((a as u128) << 64) | b as u128
     }
 
-    /// Bytes a dense `n`-spin model materializes: the `n × n` `i32`
-    /// coupling matrix plus the field vector. This is what the registry
-    /// charges against its capacity and what `PUT` checks against
-    /// `max_model_bytes` *before* allocating anything.
+    /// Worst-case bytes a dense `n`-spin model can materialize: the
+    /// `n × n` coupling matrix at the widest (`i32`) tier plus the
+    /// field vector. This is the conservative bound `PUT` checks
+    /// against `max_model_bytes` *before* parsing or allocating
+    /// anything — the tier is unknown until the values are seen.
     pub fn approx_bytes_for(n: usize) -> usize {
         n * n * 4 + n * 4
     }
 
-    /// [`Self::approx_bytes_for`] of this model.
+    /// Bytes *this* model actually materializes: the packed coupling
+    /// store at its selected tier plus the `i32` field vector. At most
+    /// [`Self::approx_bytes_for`]`(n)`; 4× less for i8-tier instances.
+    /// This is what the registry charges against its capacity.
     pub fn approx_bytes(&self) -> usize {
-        Self::approx_bytes_for(self.n)
+        self.j.bytes() + self.n * 4
     }
 
     /// Flip energy change `ΔE_i = H(s^(i→-i)) − H(s) = 2 s_i u_i` (Eq. 2).
@@ -287,7 +310,7 @@ impl Adjacency {
         let mut neighbors = Vec::new();
         let mut weights = Vec::new();
         for i in 0..n {
-            for (k, &v) in model.j_row(i).iter().enumerate() {
+            for (k, v) in model.j_row(i).iter().enumerate() {
                 if v != 0 {
                     if neighbors.len() == max_nnz {
                         return None;
@@ -434,8 +457,8 @@ mod tests {
                 .j_row(i)
                 .iter()
                 .enumerate()
-                .filter(|(_, &v)| v != 0)
-                .map(|(k, &v)| (k as u32, v))
+                .filter(|&(_, v)| v != 0)
+                .map(|(k, v)| (k as u32, v))
                 .collect();
             let csr: Vec<(u32, i32)> = neigh.iter().copied().zip(vals.iter().copied()).collect();
             assert_eq!(csr, dense, "row {i}");
@@ -508,8 +531,20 @@ mod tests {
         p.set_h(1, 1);
         assert_ne!(m.content_digest(), p.content_digest());
         assert_ne!(IsingModel::zeros(4).content_digest(), IsingModel::zeros(5).content_digest());
-        assert_eq!(m.approx_bytes(), 4 * 4 * 4 + 4 * 4);
-        assert_eq!(IsingModel::approx_bytes_for(4), m.approx_bytes());
+        // max |J| = 3 → the store packs at i8: 1 byte per coupling
+        // plus the i32 field vector; the static bound stays the
+        // worst-case i32 layout.
+        assert_eq!(m.tier(), crate::ising::Tier::I8);
+        assert_eq!(m.approx_bytes(), 4 * 4 + 4 * 4);
+        assert_eq!(IsingModel::approx_bytes_for(4), 4 * 4 * 4 + 4 * 4);
+        assert!(m.approx_bytes() <= IsingModel::approx_bytes_for(4));
+        // Widening the tier changes the footprint but nothing else —
+        // not the digest, not the values, not equality.
+        let mut wide = m.clone();
+        wide.force_tier(crate::ising::Tier::I32);
+        assert_eq!(wide.approx_bytes(), IsingModel::approx_bytes_for(4));
+        assert_eq!(wide.content_digest(), m.content_digest());
+        assert_eq!(wide, m);
     }
 
     #[test]

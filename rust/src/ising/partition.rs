@@ -49,7 +49,7 @@ impl Partition {
         prefix.push(0u64);
         let mut acc = 0u64;
         for i in 0..n {
-            let deg = model.j_row(i).iter().filter(|&&v| v != 0).count() as u64;
+            let deg = model.j_row(i).count_nonzero() as u64;
             acc += deg + 1;
             prefix.push(acc);
         }
@@ -117,7 +117,7 @@ impl Partition {
         (0..self.shards())
             .map(|s| {
                 self.range(s)
-                    .map(|i| model.j_row(i).iter().filter(|&&v| v != 0).count() as u64 + 1)
+                    .map(|i| model.j_row(i).count_nonzero() as u64 + 1)
                     .sum()
             })
             .collect()

@@ -1,0 +1,719 @@
+//! Precision-packed coupling store: the `n × n` matrix behind
+//! [`IsingModel`](super::IsingModel), held at the narrowest integer
+//! tier (`i8` / `i16` / `i32`) that represents every coefficient
+//! *exactly*.
+//!
+//! The engine hot path — the dense row walk that updates local fields
+//! after a flip — is memory-bandwidth bound, and the paper's benchmark
+//! encodings (Max-Cut ±1 weights, 4–8-bit quantized QUBOs) rarely need
+//! more than a byte per coupling. Packing cuts bytes-per-step up to 4×
+//! while keeping every arithmetic result bit-identical: values are
+//! required to fit their tier (widening is exact, narrowing never
+//! happens implicitly), rows widen to `i64` on load, and all
+//! accumulation stays in `i64` exactly as the unpacked `Vec<i32>`
+//! datapath did. Consumers read rows through [`JRow`] — a typed-slice
+//! enum dispatched *once per row*, so per-element code is monomorphized
+//! with no per-element branching.
+
+// AUDITED UNSAFE ALLOWLIST MEMBER (see docs/ARCHITECTURE.md
+// § Concurrency correctness): the only unsafe here is the AVX2
+// widening row kernel behind [`JRow::fold_delta`] —
+// `#[target_feature]` dispatch (feature presence verified at runtime
+// before every call) and bounds-checked-by-construction SIMD
+// loads/stores, the same pattern as `engine::lut::eval_lanes`. Every
+// unsafe operation carries a `SAFETY:` comment (enforced by
+// `cargo run -p xtask -- lint-safety`), and each tier's kernel is
+// pinned bit-identical to the safe scalar path by
+// `simd_fold_delta_matches_scalar`.
+#![allow(unsafe_code)]
+
+/// Storage width of a [`CouplingStore`]. Ordered narrow → wide so
+/// `max`/comparisons pick the widest tier a value set needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// 1 byte per coupling, `|J| ≤ 127`.
+    I8,
+    /// 2 bytes per coupling, `|J| ≤ 32767`.
+    I16,
+    /// 4 bytes per coupling — the legacy unpacked width.
+    I32,
+}
+
+impl Tier {
+    /// Narrowest tier that represents `v` exactly.
+    #[inline]
+    pub fn for_value(v: i32) -> Tier {
+        if i8::try_from(v).is_ok() {
+            Tier::I8
+        } else if i16::try_from(v).is_ok() {
+            Tier::I16
+        } else {
+            Tier::I32
+        }
+    }
+
+    /// Bytes one coupling occupies at this tier.
+    #[inline]
+    pub fn bytes_per_coupling(self) -> usize {
+        match self {
+            Tier::I8 => 1,
+            Tier::I16 => 2,
+            Tier::I32 => 4,
+        }
+    }
+
+    /// Stable label for metrics gauges and bench JSON
+    /// (`coupling_bytes_{i8,i16,i32}`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::I8 => "i8",
+            Tier::I16 => "i16",
+            Tier::I32 => "i32",
+        }
+    }
+}
+
+/// The tier-specific backing storage. Row-major `n × n`, symmetric,
+/// zero diagonal — the invariants [`IsingModel`](super::IsingModel)
+/// enforces above this layer.
+#[derive(Clone, Debug)]
+enum Packed {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+/// A dense symmetric coupling matrix packed to the narrowest exact
+/// integer tier. Tier selection happens at construction (and widens
+/// on demand when a wider value is written); it never narrows, so a
+/// row handed out as [`JRow`] stays valid for the borrow's lifetime.
+#[derive(Clone, Debug)]
+pub struct CouplingStore {
+    n: usize,
+    data: Packed,
+}
+
+impl CouplingStore {
+    /// An all-zero `n × n` store at the narrowest tier.
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: Packed::I8(vec![0; n * n]) }
+    }
+
+    /// Pack a dense row-major `i32` matrix at the narrowest tier that
+    /// holds every value exactly. The caller (the model constructor)
+    /// has already validated shape and symmetry.
+    pub fn from_dense(n: usize, j: Vec<i32>) -> Self {
+        assert_eq!(j.len(), n * n, "J must be n×n");
+        let tier = j.iter().map(|&v| Tier::for_value(v)).max().unwrap_or(Tier::I8);
+        Self { n, data: pack(tier, j) }
+    }
+
+    /// Number of rows (= columns = spins).
+    #[inline(always)]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The storage tier currently in use.
+    #[inline]
+    pub fn tier(&self) -> Tier {
+        match &self.data {
+            Packed::I8(_) => Tier::I8,
+            Packed::I16(_) => Tier::I16,
+            Packed::I32(_) => Tier::I32,
+        }
+    }
+
+    /// Bytes the coupling matrix occupies at its current tier.
+    pub fn bytes(&self) -> usize {
+        self.n * self.n * self.tier().bytes_per_coupling()
+    }
+
+    /// Linear-index read, widened to `i32`.
+    #[inline(always)]
+    fn at(&self, idx: usize) -> i32 {
+        match &self.data {
+            Packed::I8(v) => v[idx] as i32,
+            Packed::I16(v) => v[idx] as i32,
+            Packed::I32(v) => v[idx],
+        }
+    }
+
+    /// `J[i][k]`, widened to `i32`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, k: usize) -> i32 {
+        self.at(i * self.n + k)
+    }
+
+    /// Write one cell, widening the whole store first if `v` does not
+    /// fit the current tier. At most two widenings can ever happen over
+    /// a store's lifetime (i8 → i16 → i32), so incremental model
+    /// construction via `set_j`/`add_j` stays O(n²) total.
+    pub fn set(&mut self, i: usize, k: usize, v: i32) {
+        let need = Tier::for_value(v);
+        if need > self.tier() {
+            self.widen_to(need);
+        }
+        let idx = i * self.n + k;
+        match &mut self.data {
+            Packed::I8(d) => d[idx] = v as i8,
+            Packed::I16(d) => d[idx] = v as i16,
+            Packed::I32(d) => d[idx] = v,
+        }
+    }
+
+    /// Force the store to (at least) `tier`, widening only — values are
+    /// preserved exactly. Used by benches and parity tests to build an
+    /// unpacked `i32` baseline of a naturally-narrow instance; it never
+    /// changes any arithmetic result.
+    pub fn force_tier(&mut self, tier: Tier) {
+        assert!(tier >= self.tier(), "force_tier can only widen (store is {:?})", self.tier());
+        self.widen_to(tier);
+    }
+
+    fn widen_to(&mut self, tier: Tier) {
+        if tier <= self.tier() {
+            return;
+        }
+        let wide = self.to_vec_i32();
+        self.data = pack(tier, wide);
+    }
+
+    /// Row `i` as a typed slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> JRow<'_> {
+        let (a, b) = (i * self.n, (i + 1) * self.n);
+        match &self.data {
+            Packed::I8(v) => JRow::I8(&v[a..b]),
+            Packed::I16(v) => JRow::I16(&v[a..b]),
+            Packed::I32(v) => JRow::I32(&v[a..b]),
+        }
+    }
+
+    /// Largest absolute coupling (saturating at `i32::MAX`).
+    pub fn max_abs(&self) -> i32 {
+        let m = match &self.data {
+            Packed::I8(v) => v.iter().map(|&x| (x as i32).unsigned_abs()).max().unwrap_or(0),
+            Packed::I16(v) => v.iter().map(|&x| (x as i32).unsigned_abs()).max().unwrap_or(0),
+            Packed::I32(v) => v.iter().map(|&x| x.unsigned_abs()).max().unwrap_or(0),
+        };
+        m.min(i32::MAX as u32) as i32
+    }
+
+    /// The full matrix widened back to the legacy dense `i32` layout
+    /// (interop / verification; Θ(n²) allocation).
+    pub fn to_vec_i32(&self) -> Vec<i32> {
+        match &self.data {
+            Packed::I8(v) => v.iter().map(|&x| x as i32).collect(),
+            Packed::I16(v) => v.iter().map(|&x| x as i32).collect(),
+            Packed::I32(v) => v.clone(),
+        }
+    }
+}
+
+fn pack(tier: Tier, j: Vec<i32>) -> Packed {
+    // Every value has been checked to fit `tier`, so the `as` casts
+    // below are exact (no truncation).
+    match tier {
+        Tier::I8 => Packed::I8(j.into_iter().map(|v| v as i8).collect()),
+        Tier::I16 => Packed::I16(j.into_iter().map(|v| v as i16).collect()),
+        Tier::I32 => Packed::I32(j),
+    }
+}
+
+/// Value equality regardless of tier: a store that was widened by a
+/// transient large write and then overwritten back can sit one tier
+/// above a freshly-packed equal matrix, and the two must still compare
+/// equal (the model's derived `PartialEq` depends on this).
+impl PartialEq for CouplingStore {
+    fn eq(&self, other: &Self) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (Packed::I8(a), Packed::I8(b)) => a == b,
+            (Packed::I16(a), Packed::I16(b)) => a == b,
+            (Packed::I32(a), Packed::I32(b)) => a == b,
+            _ => (0..self.n * self.n).all(|idx| self.at(idx) == other.at(idx)),
+        }
+    }
+}
+
+impl Eq for CouplingStore {}
+
+/// One coupling row as a typed slice: match once, then run a
+/// monomorphized loop — no per-element branching, and the narrow tiers
+/// stream 2–4× fewer bytes through the cache hierarchy than the
+/// unpacked `i32` walk.
+#[derive(Clone, Copy, Debug)]
+pub enum JRow<'a> {
+    /// 1-byte couplings.
+    I8(&'a [i8]),
+    /// 2-byte couplings.
+    I16(&'a [i16]),
+    /// 4-byte couplings (legacy width).
+    I32(&'a [i32]),
+}
+
+impl<'a> JRow<'a> {
+    /// Number of entries.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        match self {
+            JRow::I8(r) => r.len(),
+            JRow::I16(r) => r.len(),
+            JRow::I32(r) => r.len(),
+        }
+    }
+
+    /// True when the row has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entry `k`, widened to `i32`.
+    #[inline(always)]
+    pub fn get(&self, k: usize) -> i32 {
+        match self {
+            JRow::I8(r) => r[k] as i32,
+            JRow::I16(r) => r[k] as i32,
+            JRow::I32(r) => r[k],
+        }
+    }
+
+    /// Sub-slice `range` of the row (e.g. a shard lane's `lo..hi`
+    /// column window).
+    #[inline(always)]
+    pub fn slice(self, range: std::ops::Range<usize>) -> JRow<'a> {
+        match self {
+            JRow::I8(r) => JRow::I8(&r[range]),
+            JRow::I16(r) => JRow::I16(&r[range]),
+            JRow::I32(r) => JRow::I32(&r[range]),
+        }
+    }
+
+    /// Widening iterator over the row, yielding `i32` by value.
+    /// Convenience for cold paths (construction, digesting, tests);
+    /// the hot walks below are monomorphized per tier instead.
+    pub fn iter(self) -> JRowIter<'a> {
+        JRowIter { row: self, pos: 0 }
+    }
+
+    /// Call `f(k, J_ik)` for every nonzero entry, in ascending `k` —
+    /// the visit order every datapath shares.
+    #[inline]
+    pub fn for_each_nonzero(self, f: impl FnMut(usize, i32)) {
+        fn walk<T: Copy + Into<i32>>(r: &[T], mut f: impl FnMut(usize, i32)) {
+            for (k, &v) in r.iter().enumerate() {
+                let v: i32 = v.into();
+                if v != 0 {
+                    f(k, v);
+                }
+            }
+        }
+        match self {
+            JRow::I8(r) => walk(r, f),
+            JRow::I16(r) => walk(r, f),
+            JRow::I32(r) => walk(r, f),
+        }
+    }
+
+    /// Number of nonzero entries.
+    pub fn count_nonzero(self) -> usize {
+        fn count<T: Copy + Into<i32>>(r: &[T]) -> usize {
+            r.iter().filter(|&&v| Into::<i32>::into(v) != 0).count()
+        }
+        match self {
+            JRow::I8(r) => count(r),
+            JRow::I16(r) => count(r),
+            JRow::I32(r) => count(r),
+        }
+    }
+
+    /// `Σ_{k ≥ from} J_ik · s_k` in `i64` — the energy / local-field
+    /// inner product (`from = i+1` for the upper-triangle energy sum,
+    /// `from = 0` for local fields; `J_ii = 0` makes self-exclusion
+    /// unnecessary).
+    #[inline]
+    pub fn dot_spins(self, s: &crate::ising::spins::SpinVec, from: usize) -> i64 {
+        fn dot<T: Copy + Into<i64>>(r: &[T], s: &crate::ising::spins::SpinVec, from: usize) -> i64 {
+            let mut acc = 0i64;
+            for (k, &v) in r.iter().enumerate().skip(from) {
+                acc += Into::<i64>::into(v) * s.get(k) as i64;
+            }
+            acc
+        }
+        match self {
+            JRow::I8(r) => dot(r, s, from),
+            JRow::I16(r) => dot(r, s, from),
+            JRow::I32(r) => dot(r, s, from),
+        }
+    }
+
+    /// The dense field-delta walk: `u[k] -= factor · J[k]` over
+    /// `min(u.len(), row.len())` entries — the hot kernel behind every
+    /// lane's post-flip field update (`u_i ← u_i − 2 J_ij s_j_old`).
+    ///
+    /// With the `simd` cargo feature on x86-64 this runs through an
+    /// AVX2 widening kernel (runtime-detected, 4 × i64 lanes per
+    /// iteration); the scalar fallback is bit-identical. `factor` must
+    /// fit `i32` for the SIMD path (it is always `±2` in the engines);
+    /// wider factors fall back to scalar rather than truncate.
+    #[inline]
+    pub fn fold_delta(self, factor: i64, u: &mut [i64]) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if i32::try_from(factor).is_ok() && is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 presence verified at runtime; `factor`
+                // fits i32 so the 32×32→64 multiply is exact.
+                unsafe {
+                    match self {
+                        JRow::I8(r) => fold_delta_avx2_i8(r, factor, u),
+                        JRow::I16(r) => fold_delta_avx2_i16(r, factor, u),
+                        JRow::I32(r) => fold_delta_avx2_i32(r, factor, u),
+                    }
+                }
+                return;
+            }
+        }
+        self.fold_delta_scalar(factor, u)
+    }
+
+    fn fold_delta_scalar(self, factor: i64, u: &mut [i64]) {
+        fn fold<T: Copy + Into<i64>>(r: &[T], factor: i64, u: &mut [i64]) {
+            for (ui, &jv) in u.iter_mut().zip(r.iter()) {
+                *ui -= factor * Into::<i64>::into(jv);
+            }
+        }
+        match self {
+            JRow::I8(r) => fold(r, factor, u),
+            JRow::I16(r) => fold(r, factor, u),
+            JRow::I32(r) => fold(r, factor, u),
+        }
+    }
+}
+
+/// Widening row iterator ([`JRow::iter`]), yielding `i32` by value.
+pub struct JRowIter<'a> {
+    row: JRow<'a>,
+    pos: usize,
+}
+
+impl Iterator for JRowIter<'_> {
+    type Item = i32;
+
+    #[inline]
+    fn next(&mut self) -> Option<i32> {
+        if self.pos >= self.row.len() {
+            return None;
+        }
+        let v = self.row.get(self.pos);
+        self.pos += 1;
+        Some(v)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.row.len() - self.pos;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for JRowIter<'_> {}
+
+/// AVX2 widening kernel for the `i8` tier: load 4 bytes, sign-extend
+/// to 4 × i64, multiply by `factor` (32×32→64, exact because both
+/// operands fit `i32`), subtract from the `u` quad in place. Tail
+/// entries run the scalar loop. Bit-identical to
+/// [`JRow::fold_delta_scalar`] — same widening, same `i64` arithmetic,
+/// same visit order.
+///
+/// # Safety
+///
+/// The caller must verify the CPU supports AVX2 (e.g. via
+/// `is_x86_feature_detected!("avx2")`) before calling, and must pass a
+/// `factor` that fits `i32` (the multiply reads only the low 32 bits
+/// of each 64-bit lane).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_delta_avx2_i8(row: &[i8], factor: i64, u: &mut [i64]) {
+    use std::arch::x86_64::*;
+    let n = u.len().min(row.len());
+    let mut k = 0usize;
+    // SAFETY: the fn-level contract guarantees AVX2 is present, so
+    // every intrinsic is executable. The 4-byte row read is a safe
+    // slice index; the unaligned load/store on `u[k..k + 4]` are in
+    // bounds because the loop condition holds `k + 4 <= n <= u.len()`.
+    unsafe {
+        let f = _mm256_set1_epi64x(factor);
+        while k + 4 <= n {
+            let b = &row[k..k + 4];
+            let bits = i32::from_le_bytes([b[0] as u8, b[1] as u8, b[2] as u8, b[3] as u8]);
+            let jv = _mm256_cvtepi8_epi64(_mm_cvtsi32_si128(bits));
+            let prod = _mm256_mul_epi32(jv, f);
+            let uv = _mm256_loadu_si256(u.as_ptr().add(k) as *const __m256i);
+            _mm256_storeu_si256(u.as_mut_ptr().add(k) as *mut __m256i, _mm256_sub_epi64(uv, prod));
+            k += 4;
+        }
+    }
+    while k < n {
+        u[k] -= factor * row[k] as i64;
+        k += 1;
+    }
+}
+
+/// AVX2 widening kernel for the `i16` tier — see [`fold_delta_avx2_i8`].
+///
+/// # Safety
+///
+/// Same contract as [`fold_delta_avx2_i8`]: AVX2 verified at runtime,
+/// `factor` fits `i32`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_delta_avx2_i16(row: &[i16], factor: i64, u: &mut [i64]) {
+    use std::arch::x86_64::*;
+    let n = u.len().min(row.len());
+    let mut k = 0usize;
+    // SAFETY: AVX2 presence per the fn contract. The 8-byte unaligned
+    // load reads `row[k..k + 4]` (4 × i16), in bounds because
+    // `k + 4 <= n <= row.len()`; the `u` load/store quad is in bounds
+    // for the same reason.
+    unsafe {
+        let f = _mm256_set1_epi64x(factor);
+        while k + 4 <= n {
+            let jv =
+                _mm256_cvtepi16_epi64(_mm_loadl_epi64(row.as_ptr().add(k) as *const __m128i));
+            let prod = _mm256_mul_epi32(jv, f);
+            let uv = _mm256_loadu_si256(u.as_ptr().add(k) as *const __m256i);
+            _mm256_storeu_si256(u.as_mut_ptr().add(k) as *mut __m256i, _mm256_sub_epi64(uv, prod));
+            k += 4;
+        }
+    }
+    while k < n {
+        u[k] -= factor * row[k] as i64;
+        k += 1;
+    }
+}
+
+/// AVX2 widening kernel for the `i32` tier — see [`fold_delta_avx2_i8`].
+///
+/// # Safety
+///
+/// Same contract as [`fold_delta_avx2_i8`]: AVX2 verified at runtime,
+/// `factor` fits `i32`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_delta_avx2_i32(row: &[i32], factor: i64, u: &mut [i64]) {
+    use std::arch::x86_64::*;
+    let n = u.len().min(row.len());
+    let mut k = 0usize;
+    // SAFETY: AVX2 presence per the fn contract. The 16-byte unaligned
+    // load reads `row[k..k + 4]` (4 × i32), in bounds because
+    // `k + 4 <= n <= row.len()`; the `u` load/store quad is in bounds
+    // for the same reason.
+    unsafe {
+        let f = _mm256_set1_epi64x(factor);
+        while k + 4 <= n {
+            let jv =
+                _mm256_cvtepi32_epi64(_mm_loadu_si128(row.as_ptr().add(k) as *const __m128i));
+            let prod = _mm256_mul_epi32(jv, f);
+            let uv = _mm256_loadu_si256(u.as_ptr().add(k) as *const __m256i);
+            _mm256_storeu_si256(u.as_mut_ptr().add(k) as *mut __m256i, _mm256_sub_epi64(uv, prod));
+            k += 4;
+        }
+    }
+    while k < n {
+        u[k] -= factor * row[k] as i64;
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{salt, StatelessRng};
+
+    fn reference(n: usize, seed: u64, span: i32) -> Vec<i32> {
+        let rng = StatelessRng::new(seed);
+        let mut j = vec![0i32; n * n];
+        let mut idx = 0u64;
+        for i in 0..n {
+            for k in (i + 1)..n {
+                let v = rng.below(1, idx, salt::PROBLEM, (2 * span + 1) as u64) as i32 - span;
+                idx += 1;
+                j[i * n + k] = v;
+                j[k * n + i] = v;
+            }
+        }
+        j
+    }
+
+    #[test]
+    fn tier_selection_is_tight() {
+        assert_eq!(Tier::for_value(0), Tier::I8);
+        assert_eq!(Tier::for_value(127), Tier::I8);
+        assert_eq!(Tier::for_value(-128), Tier::I8);
+        assert_eq!(Tier::for_value(128), Tier::I16);
+        assert_eq!(Tier::for_value(-129), Tier::I16);
+        assert_eq!(Tier::for_value(32_767), Tier::I16);
+        assert_eq!(Tier::for_value(-32_768), Tier::I16);
+        assert_eq!(Tier::for_value(32_768), Tier::I32);
+        assert_eq!(Tier::for_value(i32::MIN), Tier::I32);
+        for (span, tier, bpc) in
+            [(3, Tier::I8, 1usize), (1_000, Tier::I16, 2), (100_000, Tier::I32, 4)]
+        {
+            let j = reference(12, 5, span);
+            let s = CouplingStore::from_dense(12, j.clone());
+            assert_eq!(s.tier(), tier, "span {span}");
+            assert_eq!(s.bytes(), 12 * 12 * bpc);
+            assert_eq!(s.to_vec_i32(), j, "span {span} round-trips exactly");
+        }
+    }
+
+    #[test]
+    fn set_widens_on_demand_and_preserves_values() {
+        let mut s = CouplingStore::zeros(4);
+        assert_eq!(s.tier(), Tier::I8);
+        s.set(0, 1, 100);
+        assert_eq!(s.tier(), Tier::I8);
+        s.set(1, 2, 1_000);
+        assert_eq!(s.tier(), Tier::I16);
+        assert_eq!(s.get(0, 1), 100, "widening preserves existing values");
+        s.set(2, 3, 1 << 20);
+        assert_eq!(s.tier(), Tier::I32);
+        assert_eq!((s.get(0, 1), s.get(1, 2), s.get(2, 3)), (100, 1_000, 1 << 20));
+        // Overwriting with a small value never narrows…
+        s.set(2, 3, 1);
+        assert_eq!(s.tier(), Tier::I32);
+        // …and tier-mismatched equal stores still compare equal.
+        let mut t = CouplingStore::zeros(4);
+        t.set(0, 1, 100);
+        t.set(1, 2, 1_000);
+        t.set(2, 3, 1);
+        assert_eq!(s, t);
+        assert_ne!(s.tier(), t.tier());
+    }
+
+    #[test]
+    fn force_tier_widens_exactly_and_rejects_narrowing() {
+        let j = reference(10, 9, 2);
+        let mut s = CouplingStore::from_dense(10, j.clone());
+        assert_eq!(s.tier(), Tier::I8);
+        s.force_tier(Tier::I32);
+        assert_eq!(s.tier(), Tier::I32);
+        assert_eq!(s.to_vec_i32(), j);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.force_tier(Tier::I8);
+        }));
+        assert!(r.is_err(), "narrowing must panic");
+    }
+
+    #[test]
+    fn row_views_match_reference_across_tiers() {
+        use crate::ising::SpinVec;
+        let n = 23;
+        for (seed, span) in [(1u64, 2i32), (2, 900), (3, 70_000)] {
+            let j = reference(n, seed, span);
+            let s = CouplingStore::from_dense(n, j.clone());
+            let spins = SpinVec::random(n, &StatelessRng::new(seed ^ 0xabc));
+            for i in 0..n {
+                let row = s.row(i);
+                assert_eq!(row.len(), n);
+                let want = &j[i * n..(i + 1) * n];
+                let got: Vec<i32> = row.iter().collect();
+                assert_eq!(got, want, "iter, row {i}");
+                for k in 0..n {
+                    assert_eq!(row.get(k), want[k]);
+                }
+                let sl: Vec<i32> = row.slice(5..17).iter().collect();
+                assert_eq!(sl, &want[5..17], "slice, row {i}");
+                assert_eq!(
+                    row.count_nonzero(),
+                    want.iter().filter(|&&v| v != 0).count(),
+                    "count_nonzero, row {i}"
+                );
+                let mut nz = Vec::new();
+                row.for_each_nonzero(|k, v| nz.push((k, v)));
+                let want_nz: Vec<(usize, i32)> = want
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v != 0)
+                    .map(|(k, &v)| (k, v))
+                    .collect();
+                assert_eq!(nz, want_nz, "for_each_nonzero, row {i}");
+                for from in [0usize, i + 1, n] {
+                    let want_dot: i64 = (from..n)
+                        .map(|k| want[k] as i64 * spins.get(k) as i64)
+                        .sum();
+                    assert_eq!(row.dot_spins(&spins, from), want_dot, "dot, row {i} from {from}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_delta_matches_naive_loop_across_tiers() {
+        let n = 37;
+        for (seed, span) in [(11u64, 3i32), (12, 500), (13, 40_000)] {
+            let j = reference(n, seed, span);
+            let s = CouplingStore::from_dense(n, j.clone());
+            for factor in [-2i64, 2, 0, 6] {
+                for (lo, hi) in [(0usize, n), (0, 13), (13, n), (5, 9)] {
+                    let base: Vec<i64> =
+                        (0..hi - lo).map(|k| (k as i64 - 7) * 1_000_003).collect();
+                    let mut got = base.clone();
+                    s.row(3).slice(lo..hi).fold_delta(factor, &mut got);
+                    let mut want = base;
+                    for (off, w) in want.iter_mut().enumerate() {
+                        *w -= factor * j[3 * n + lo + off] as i64;
+                    }
+                    assert_eq!(got, want, "seed {seed}, factor {factor}, {lo}..{hi}");
+                }
+            }
+        }
+    }
+
+    /// With the `simd` feature on, every tier's AVX2 kernel (when the
+    /// CPU has it) must agree with the scalar kernel bit for bit —
+    /// including extreme values (`i8::MIN`, `i16::MIN`) and
+    /// non-multiple-of-4 lengths.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn simd_fold_delta_matches_scalar() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let rng = StatelessRng::new(21);
+        for n in [1usize, 3, 4, 7, 64, 129] {
+            for (tag, span) in [(0u64, 127i32), (1, 32_767), (2, 1 << 30)] {
+                let vals: Vec<i32> = (0..n)
+                    .map(|k| {
+                        let r =
+                            rng.below(tag, k as u64, salt::PROBLEM, (2 * span as u64) + 1) as i64;
+                        (r - span as i64) as i32
+                    })
+                    .collect();
+                // Include the exact type minimum, which |x| handling
+                // gets wrong more often than any other value.
+                let mut vals = vals;
+                if n > 1 {
+                    vals[0] = -span - 1;
+                }
+                let store = {
+                    let mut flat = vec![0i32; n * n];
+                    flat[..n].copy_from_slice(&vals);
+                    CouplingStore::from_dense(n, flat)
+                };
+                for factor in [-2i64, 2, 1 - (1i64 << 31)] {
+                    let base: Vec<i64> = (0..n).map(|k| k as i64 * 17 - 40).collect();
+                    let mut scalar = base.clone();
+                    store.row(0).fold_delta_scalar(factor, &mut scalar);
+                    let mut simd = base;
+                    // `fold_delta` dispatches to AVX2 under the guard
+                    // above (factor always fits i32 here).
+                    store.row(0).fold_delta(factor, &mut simd);
+                    assert_eq!(scalar, simd, "n={n}, span={span}, factor={factor}");
+                }
+            }
+        }
+    }
+}

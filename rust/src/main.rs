@@ -4,7 +4,7 @@
 //!   solve  --instance <id|er:n:m> [--mode rsa|rwa] [--steps N] [--replicas R]
 //!          [--seed S] [--schedule kind:t0:t1[:stages]] [--target E]
 //!          [--workers W] [--selector scan|fenwick] [--shards S] [--pin-lanes]
-//!          [--budget-ms MS] [--max-retries K]
+//!          [--local-rows] [--budget-ms MS] [--max-retries K]
 //!          [--addr host:port [--model <hash>]]   (submit to a remote service)
 //!   serve  [--addr host:port] [--workers W] [--dispatch-workers D]
 //!          [--max-inflight-replicas N] [--reject-saturated]
@@ -58,12 +58,14 @@ USAGE:
                  [--steps N] [--replicas R] [--seed S]
                  [--schedule kind:t0:t1[:stages]] [--target E] [--workers W]
                  [--selector scan|fenwick] [--shards S] [--pin-lanes]
-                 [--budget-ms MS] [--max-retries K]
+                 [--local-rows] [--budget-ms MS] [--max-retries K]
                  [--portfolio auto|full|<name>[,<name>...]]
                  [--file <path> [--format qubo|mc]]
                     (--shards: 1 = classic engine, >1 = async sharded
                      lanes per replica, 0 = auto by instance size;
                      --pin-lanes: pin lane threads to cores, Linux;
+                     --local-rows: materialize NUMA-local per-lane
+                     coupling rows (pair with --pin-lanes);
                      --budget-ms: wall-clock budget, 0 = none — on
                      expiry the job is preempted and the best-so-far
                      partial result is reported;
@@ -177,6 +179,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         snowball::engine::shard::MAX_SHARDS
     );
     let pin_lanes = args.flag("pin-lanes") || fj.map(|j| j.pin_lanes).unwrap_or(false);
+    let local_rows = args.flag("local-rows") || fj.map(|j| j.local_rows).unwrap_or(false);
     let budget_ms: u64 = args.get_parse_or("budget-ms", 0u64)?;
     let max_retries: u32 = args.get_parse_or("max-retries", 0u32)?;
     // Portfolio racing: CLI flag first, then the config file's
@@ -203,6 +206,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         target_energy: target,
         shards,
         pin_lanes,
+        local_rows,
         budget_ms,
         max_retries,
         backend: Backend::Native,
@@ -326,7 +330,7 @@ fn cmd_put(args: &Args) -> Result<()> {
     let (label, model) = service::build_instance(name, seed)?;
     let mut body = format!("PUT n={}\n", model.len());
     for i in 0..model.len() {
-        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+        for (k, w) in model.j_row(i).iter().enumerate().skip(i + 1) {
             if w != 0 {
                 body.push_str(&format!("{i} {k} {w}\n"));
             }
@@ -378,6 +382,9 @@ fn cmd_solve_remote(args: &Args, addr: &str) -> Result<()> {
     }
     if args.flag("pin-lanes") {
         req.push_str(" pin_lanes=1");
+    }
+    if args.flag("local-rows") {
+        req.push_str(" local_rows=1");
     }
     let mut stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);

@@ -198,6 +198,9 @@ pub struct RaceConfig {
     pub target: Option<i64>,
     /// Pin shard lanes of sharded Snowball contenders.
     pub pin_lanes: bool,
+    /// Materialize lane-local coupling-row copies in sharded Snowball
+    /// contenders (first-touch NUMA placement, pair with `pin_lanes`).
+    pub local_rows: bool,
 }
 
 /// One contender's final report.
@@ -218,6 +221,9 @@ pub struct ContenderReport {
     /// Shard lanes successfully pinned (sharded contenders with
     /// `pin_lanes`; 0 otherwise).
     pub pinned_lanes: usize,
+    /// Bytes of lane-local coupling rows materialized (sharded
+    /// contenders with `local_rows`; 0 otherwise).
+    pub local_row_bytes: usize,
 }
 
 /// The race outcome: per-contender reports (roster order), the winner,
@@ -300,6 +306,7 @@ pub fn race(
                     stopped: tokens[i].get(),
                     panicked: true,
                     pinned_lanes: 0,
+                    local_row_bytes: 0,
                 })
             })
             .collect()
@@ -333,13 +340,13 @@ fn run_contender(
     all: &[Arc<StopToken>],
 ) -> ContenderReport {
     let start = Instant::now();
-    let (best_energy, best_spins, attempts, pinned_lanes) = match c.kind {
+    let (best_energy, best_spins, attempts, pinned_lanes, local_row_bytes) = match c.kind {
         ContenderKind::Baseline(factory) => {
             let solver = factory();
             let sweeps = (cfg.steps / model.len().max(1) as u64).max(1);
             let ctl = SolveCtl::new(token.clone(), cfg.target);
             let r = solver.solve_ctl(model, Budget::sweeps(sweeps), seed, &ctl);
-            (r.best_energy, r.best_spins, r.attempts, 0)
+            (r.best_energy, r.best_spins, r.attempts, 0, 0)
         }
         ContenderKind::Snowball { mode, selector, datapath, shards } => {
             let ecfg = EngineConfig {
@@ -353,11 +360,12 @@ fn run_contender(
                 trace_stride: 0,
                 shards,
                 pin_lanes: cfg.pin_lanes,
+                local_rows: cfg.local_rows,
             };
             if shards > 1 {
                 let (r, stats) =
                     ShardedEngine::new(model, ecfg, MergeMode::Async).run_with_stop(&token);
-                (r.best_energy, r.best_spins, r.steps, stats.pinned_lanes)
+                (r.best_energy, r.best_spins, r.steps, stats.pinned_lanes, stats.local_row_bytes)
             } else {
                 let mut engine = SnowballEngine::new(model, ecfg);
                 let stride = (cfg.steps / 64).clamp(64, 65_536);
@@ -366,7 +374,7 @@ fn run_contender(
                         trip_all(all, StopCause::Cancel);
                     }
                 });
-                (r.best_energy, r.best_spins, r.steps, 0)
+                (r.best_energy, r.best_spins, r.steps, 0, 0)
             }
         }
     };
@@ -384,6 +392,7 @@ fn run_contender(
         stopped: token.get(),
         panicked: false,
         pinned_lanes,
+        local_row_bytes,
     }
 }
 
@@ -403,6 +412,7 @@ pub fn run_for_job(spec: &JobSpec, job_stop: &Arc<StopToken>) -> Result<Vec<Repl
         seed: spec.seed,
         target: spec.target_energy,
         pin_lanes: spec.pin_lanes,
+        local_rows: spec.local_rows,
     };
     let out = race(&spec.model, &roster, &cfg, job_stop.clone());
     if out.reports.iter().all(|r| r.panicked) {
@@ -419,6 +429,7 @@ pub fn run_for_job(spec: &JobSpec, job_stop: &Arc<StopToken>) -> Result<Vec<Repl
             wall: r.wall,
             stopped: r.stopped.is_some(),
             pinned_lanes: r.pinned_lanes,
+            local_row_bytes: r.local_row_bytes,
         })
         .collect())
 }
@@ -471,6 +482,7 @@ mod tests {
             seed: 7,
             target: None,
             pin_lanes: false,
+            local_rows: false,
         };
         let out = race(m, &roster, &cfg, Arc::new(StopToken::new()));
         assert_eq!(out.reports.len(), 3);

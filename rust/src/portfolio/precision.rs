@@ -29,6 +29,13 @@ pub struct PrecisionPoint {
     pub step_cycles: u64,
     /// `hwsim` end-to-end seconds for the full step budget.
     pub end_to_end_seconds: f64,
+    /// What the quantized model actually occupies in memory: its
+    /// precision-packed [`CouplingStore`](crate::ising::CouplingStore)
+    /// footprint. Narrow widths land in the i8/i16 tiers, so this is
+    /// the software-side memory axis next to the hwsim cycle axis.
+    pub model_bytes: usize,
+    /// The packed storage tier's label (`"i8"`/`"i16"`/`"i32"`).
+    pub tier: &'static str,
 }
 
 /// Sweep `widths`, racing `spec`'s roster per width. Widths at or above
@@ -55,6 +62,7 @@ pub fn sweep(
                 seed,
                 target: None,
                 pin_lanes: false,
+                local_rows: false,
             };
             let out = race(&quantized, &roster, &cfg, Arc::new(StopToken::new()));
             let win = &out.reports[out.winner];
@@ -67,6 +75,8 @@ pub fn sweep(
                 original_energy: model.energy(&win.best_spins),
                 step_cycles: report.step_cycles / steps.max(1),
                 end_to_end_seconds: report.end_to_end_seconds,
+                model_bytes: quantized.approx_bytes(),
+                tier: quantized.tier().label(),
             }
         })
         .collect()
@@ -91,6 +101,11 @@ mod tests {
             assert!(!pt.winner.is_empty());
             assert!(pt.step_cycles > 0);
             assert!(pt.end_to_end_seconds > 0.0);
+            // ±100 magnitudes pack as i8 at every width here, and the
+            // footprint is the real packed store, not an i32 bound.
+            assert_eq!(pt.tier, "i8");
+            assert!(pt.model_bytes > 0);
+            assert!(pt.model_bytes < IsingModel::approx_bytes_for(p.model().len()));
         }
         // More planes cost more per step in the bit-plane datapath.
         assert!(pts[1].step_cycles >= pts[0].step_cycles);

@@ -209,6 +209,7 @@ mod tests {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut e = SnowballEngine::new(tsp.model(), cfg);
         let r = e.run();

@@ -92,7 +92,7 @@ mod runner {
             let mut jf = vec![0f32; rt_n * rt_n];
             for i in 0..n {
                 let row = model.j_row(i);
-                for (k, &v) in row.iter().enumerate() {
+                for (k, v) in row.iter().enumerate() {
                     jf[i * rt_n + k] = v as f32;
                 }
             }

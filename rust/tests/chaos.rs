@@ -63,6 +63,7 @@ fn spec(label: &str, seed: u64, steps: u64) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

@@ -104,6 +104,7 @@ fn coordinator_direct_api_with_target_statistics() {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

@@ -47,6 +47,7 @@ fn rwa_converges_in_fewer_steps_than_rsa() {
                 trace_stride: 0,
                 shards: 1,
                 pin_lanes: false,
+                local_rows: false,
             };
             let mut e = SnowballEngine::new(p.model(), cfg);
             let r = e.run();
@@ -102,6 +103,7 @@ fn uniformized_null_rate_tracks_weight() {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut e = SnowballEngine::new(p.model(), cfg);
         let r = e.run();

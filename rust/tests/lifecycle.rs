@@ -32,6 +32,7 @@ fn long_job(label: &str, seed: u64, steps: u64, budget_ms: u64) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms,
         max_retries: 0,
         backend: Backend::Native,

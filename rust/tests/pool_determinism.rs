@@ -74,6 +74,7 @@ fn job(label: &str, seed: u64, replicas: u32) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

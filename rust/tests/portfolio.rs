@@ -34,6 +34,7 @@ fn cfg(steps: u64, seed: u64, target: Option<i64>) -> RaceConfig {
         seed,
         target,
         pin_lanes: false,
+        local_rows: false,
     }
 }
 
@@ -116,6 +117,7 @@ fn coordinator_portfolio_job_conserves_admission_budget() {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

@@ -178,6 +178,7 @@ fn prop_engine_state_consistency() {
             trace_stride: 0,
             shards: 1,
             pin_lanes: false,
+            local_rows: false,
         };
         let mut e = SnowballEngine::new(&m, cfg);
         e.run();
@@ -409,6 +410,7 @@ fn prop_job_state_transitions_are_legal() {
                 target_energy: None,
                 shards: 1,
                 pin_lanes: false,
+                local_rows: false,
                 // A third of the jobs carry a tight deadline.
                 budget_ms: if rng.below(32, j as u64, salt::PROBLEM, 3) == 0 { 5 } else { 0 },
                 max_retries: 0,
@@ -541,6 +543,36 @@ fn prop_registry_hash_order_invariant_and_perturbation_sensitive() {
     });
 }
 
+/// The content digest is storage-tier invariant: force-widening a
+/// packed model to i16/i32 changes its memory footprint but neither
+/// its hash nor its equality — by-hash dispatch cannot fork on how a
+/// client happened to pack its upload.
+#[test]
+fn prop_registry_hash_is_tier_invariant() {
+    use snowball::ising::Tier;
+    Cases::new(0xE5, 40).run(|rng, size| {
+        let n = (size + 2).min(64);
+        let m = gen::model(rng, n, 9); // ±9 couplings pack as i8
+        if m.tier() != Tier::I8 {
+            return Err(format!("expected an i8 instance, got {:?}", m.tier()));
+        }
+        for tier in [Tier::I16, Tier::I32] {
+            let mut wide = m.clone();
+            wide.force_tier(tier);
+            if wide.content_digest() != m.content_digest() {
+                return Err(format!("digest moved when widening to {tier:?}"));
+            }
+            if wide != m {
+                return Err(format!("equality broke when widening to {tier:?}"));
+            }
+            if wide.approx_bytes() <= m.approx_bytes() {
+                return Err(format!("widening to {tier:?} did not grow the footprint"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Pin refcounts saturate at zero: arbitrary pin/unpin interleavings
 /// (including over-unpinning) track a non-negative mirror, and a fresh
 /// pin after an over-unpin storm still registers — the count never
@@ -588,9 +620,12 @@ fn prop_registry_refcount_never_negative() {
 fn prop_registry_eviction_never_removes_pinned() {
     Cases::new(0xE3, 30).run(|rng, size| {
         let n = (size + 4).min(24);
-        let bytes = IsingModel::approx_bytes_for(n);
-        let reg = Registry::new(bytes * 3, bytes * 2);
         let base = gen::model(rng, n, 4);
+        // Size slots from the PACKED footprint (every model below stays
+        // at base's i8 tier) — the i32 worst case would leave the
+        // capacity 4× too roomy to ever evict.
+        let bytes = base.approx_bytes();
+        let reg = Registry::new(bytes * 3, bytes * 2);
         let mut pinned = Vec::new();
         for t in 0..10u64 {
             // Distinct models of identical size: vary one coupling.

@@ -23,7 +23,7 @@ fn send(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> String {
 fn put_body(model: &IsingModel) -> String {
     let mut body = format!("PUT n={}\n", model.len());
     for i in 0..model.len() {
-        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+        for (k, w) in model.j_row(i).iter().enumerate().skip(i + 1) {
             if w != 0 {
                 body.push_str(&format!("{i} {k} {w}\n"));
             }
@@ -102,6 +102,7 @@ fn spec(model: Arc<IsingModel>, steps: u64, seed: u64) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

@@ -36,6 +36,7 @@ fn run_signature(
         trace_stride: 0,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let mut e = SnowballEngine::new(model, cfg);
     let r = e.run();

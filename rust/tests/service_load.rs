@@ -60,6 +60,7 @@ fn reference_spec(c: usize) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,
@@ -336,7 +337,7 @@ fn solve_on(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> (u64,
 fn put_body(model: &IsingModel) -> String {
     let mut body = format!("PUT n={}\n", model.len());
     for i in 0..model.len() {
-        for (k, &w) in model.j_row(i).iter().enumerate().skip(i + 1) {
+        for (k, w) in model.j_row(i).iter().enumerate().skip(i + 1) {
             if w != 0 {
                 body.push_str(&format!("{i} {k} {w}\n"));
             }
@@ -382,6 +383,7 @@ fn storm_reference_spec(model: IsingModel, steps: u64, seed: u64) -> JobSpec {
         target_energy: None,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
         budget_ms: 0,
         max_retries: 0,
         backend: Backend::Native,

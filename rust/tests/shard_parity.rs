@@ -29,6 +29,7 @@ fn cfg(mode: Mode, steps: u64, seed: u64, shards: usize) -> EngineConfig {
         trace_stride: 97,
         shards,
         pin_lanes: false,
+        local_rows: false,
     }
 }
 

@@ -1,0 +1,219 @@
+//! The precision-packed coupling store's bit-identity contract
+//! (ising/store): a model whose couplings pack as i8 or i16 must
+//! produce runs **byte-identical** to the same model force-widened to
+//! i32 storage — across every deterministic execution path the repo
+//! pins elsewhere (single-lane engine, virtual-time sharded merge,
+//! both selectors, both datapaths; the same matrix
+//! rust/tests/shard_parity.rs runs), plus the by-hash dispatch leg:
+//! tier never reaches the content digest, so a widened upload dedups
+//! to the same registry entry and serves the same jobs.
+
+use snowball::coordinator::{service, Coordinator, Service};
+use snowball::engine::{
+    Datapath, EngineConfig, MergeMode, Mode, Schedule, SelectorKind, ShardedEngine, SnowballEngine,
+};
+use snowball::graph::generators;
+use snowball::ising::{IsingModel, Tier};
+use snowball::problems::MaxCut;
+use snowball::rng::StatelessRng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn cfg(mode: Mode, steps: u64, seed: u64, shards: usize) -> EngineConfig {
+    EngineConfig {
+        mode,
+        datapath: Datapath::Dense,
+        selector: SelectorKind::Fenwick,
+        schedule: Schedule::Geometric { t0: 5.0, t1: 0.08 },
+        steps,
+        seed,
+        planes: None,
+        trace_stride: 97,
+        shards,
+        pin_lanes: false,
+        local_rows: false,
+    }
+}
+
+type Signature = (i64, u64, i64, u64, u64, u64, Vec<(u64, i64)>, Vec<i8>, Vec<i8>);
+
+fn signature(r: snowball::engine::RunResult) -> Signature {
+    (
+        r.best_energy,
+        r.best_step,
+        r.final_energy,
+        r.flips,
+        r.fallbacks,
+        r.nulls,
+        r.trace,
+        r.best_spins.to_spins(),
+        r.final_spins.to_spins(),
+    )
+}
+
+/// The same instance with its coupling store force-widened to i32 —
+/// identical values, 4×/2× the bytes.
+fn widened(m: &IsingModel) -> IsingModel {
+    let mut w = m.clone();
+    w.force_tier(Tier::I32);
+    assert_eq!(w.tier(), Tier::I32);
+    w
+}
+
+/// The tentpole guarantee: packed storage never changes a run. For the
+/// exact instance/mode/seed/selector/datapath/shard matrix
+/// shard_parity.rs pins, the packed model and its force-widened i32
+/// twin produce identical signatures — best/final energy and spins,
+/// flip/fallback/null counters, and the full energy trace — through
+/// the single-lane engine and the deterministic virtual-time sharded
+/// merge.
+#[test]
+fn packed_tiers_are_bit_identical_to_i32_across_the_matrix() {
+    let sparse = MaxCut::new(generators::erdos_renyi(128, 260, &[-1, 1], &StatelessRng::new(71)));
+    let dense = MaxCut::new(generators::complete(64, &[-1, 1], &StatelessRng::new(72)));
+    let mid = MaxCut::new(generators::erdos_renyi(96, 240, &[-700, 700], &StatelessRng::new(74)));
+    assert_eq!(sparse.model().tier(), Tier::I8);
+    assert_eq!(dense.model().tier(), Tier::I8);
+    assert_eq!(mid.model().tier(), Tier::I16);
+    for (label, p) in [("sparse/i8", &sparse), ("dense/i8", &dense), ("sparse/i16", &mid)] {
+        let packed = p.model();
+        let wide = widened(packed);
+        assert_eq!(&wide, packed, "widening must preserve every coupling");
+        for mode in [Mode::RandomScan, Mode::RouletteWheel, Mode::RouletteUniformized] {
+            for seed in [3u64, 11] {
+                for selector in [SelectorKind::Fenwick, SelectorKind::LinearScan] {
+                    for dp in [Datapath::Dense, Datapath::BitPlane] {
+                        // Single-lane engine.
+                        let mut c = cfg(mode, 1_200, seed, 1);
+                        c.selector = selector;
+                        c.datapath = dp;
+                        let want = signature(SnowballEngine::new(packed, c.clone()).run());
+                        let got = signature(SnowballEngine::new(&wide, c).run());
+                        assert_eq!(
+                            got, want,
+                            "{label}/{mode:?}/{selector:?}/{dp:?}/seed {seed}: \
+                             packed vs i32 diverged in the single-lane engine"
+                        );
+                        // Virtual-time sharded merge, every pinned
+                        // shard count.
+                        for shards in [2usize, 3, 5, 8] {
+                            let mut c = cfg(mode, 1_200, seed, shards);
+                            c.selector = selector;
+                            c.datapath = dp;
+                            let want = signature(
+                                ShardedEngine::new(packed, c.clone(), MergeMode::VirtualTime)
+                                    .run(),
+                            );
+                            let got = signature(
+                                ShardedEngine::new(&wide, c, MergeMode::VirtualTime).run(),
+                            );
+                            assert_eq!(
+                                got, want,
+                                "{label}/{mode:?}/{selector:?}/{dp:?}/seed {seed}/{shards} \
+                                 shards: packed vs i32 diverged in the virtual-time merge"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Energy/field oracles are tier-invariant on arbitrary spin
+/// configurations — the packed row walks accumulate in the same order
+/// with the same widened i64 terms.
+#[test]
+fn oracles_are_tier_invariant() {
+    let rng = StatelessRng::new(75);
+    let p = MaxCut::new(generators::erdos_renyi(80, 320, &[-3, -1, 1, 3], &rng));
+    let packed = p.model();
+    let wide = widened(packed);
+    for k in 0..8u64 {
+        let s = snowball::ising::SpinVec::random(packed.len(), &StatelessRng::new(100 + k));
+        assert_eq!(wide.energy(&s), packed.energy(&s));
+        assert_eq!(wide.local_fields(&s), packed.local_fields(&s));
+    }
+    assert_eq!(wide.j_matrix(), packed.j_matrix());
+    assert_eq!(wide.coupling_count(), packed.coupling_count());
+    assert_eq!(wide.max_abs_coeff(), packed.max_abs_coeff());
+}
+
+fn send(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(s, "{req}").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// SOLVE → WAIT(done) → RESULT best= on an open connection.
+fn solve_best(s: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> i64 {
+    let reply = send(s, r, req);
+    assert!(reply.starts_with("JOB id="), "{reply}");
+    let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+    let state = send(s, r, &format!("WAIT id={id}"));
+    assert_eq!(state, format!("STATE id={id} state=done"));
+    let res = send(s, r, &format!("RESULT id={id}"));
+    res.split_whitespace()
+        .find_map(|tok| tok.strip_prefix("best="))
+        .unwrap_or_else(|| panic!("no best= in {res}"))
+        .parse()
+        .unwrap()
+}
+
+/// The by-hash leg: the content digest ignores the storage tier, so a
+/// force-widened copy of an uploaded model dedups to the SAME registry
+/// entry (accounted at the packed footprint), and a wire `SOLVE
+/// model=<hash>` reports the same answer as the inline submission.
+#[test]
+fn by_hash_dispatch_is_tier_invariant() {
+    let coord = Coordinator::start(2);
+    let reg = coord.registry().clone();
+    let inst = "er:40:160";
+    let seed = 77u64;
+    let (_, model) = service::build_instance(inst, seed).unwrap();
+    assert_eq!(model.tier(), Tier::I8, "±1 instance packs as i8");
+    let packed_bytes = model.approx_bytes();
+
+    let h1 = reg.put(model.clone()).expect("put packed");
+    let h2 = reg.put(widened(&model)).expect("put widened");
+    assert_eq!(h1, h2, "tier reached the content digest");
+    let stats = reg.stats();
+    assert_eq!((stats.entries, stats.dedup), (1, 1), "widened upload must dedup");
+    assert_eq!(stats.bytes, packed_bytes, "the FIRST (packed) body is what stays stored");
+
+    let addr = Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let tail = format!("mode=rwa selector=fenwick steps=4000 replicas=2 seed={seed}");
+    let inline = solve_best(&mut s, &mut r, &format!("SOLVE instance={inst} {tail}"));
+    let by_hash = solve_best(&mut s, &mut r, &format!("SOLVE model={} {tail}", h1.to_hex()));
+    assert_eq!(by_hash, inline, "by-hash SOLVE diverged from inline");
+}
+
+/// Strict SOLVE parsing for the new knob, exact ERR form (the string
+/// docs/PROTOCOL.md specifies) — and the happy path right after on the
+/// same connection, proving the refusal left the line protocol
+/// synchronized.
+#[test]
+fn malformed_local_rows_err_form_is_exact() {
+    let coord = Coordinator::start(1);
+    let addr = Service::bind(coord, "127.0.0.1:0").unwrap().serve_in_background();
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for bad in ["yes", "2", "TRUE"] {
+        let got = send(&mut s, &mut r, &format!("SOLVE instance=er:16:40 local_rows={bad}"));
+        assert_eq!(got, format!("ERR local_rows must be 0|1|true|false (got {bad})"));
+    }
+    for ok in ["0", "1", "true", "false"] {
+        let reply = send(
+            &mut s,
+            &mut r,
+            &format!("SOLVE instance=er:16:40 steps=200 replicas=1 seed=5 local_rows={ok}"),
+        );
+        assert!(reply.starts_with("JOB id="), "local_rows={ok}: {reply}");
+        let id: u64 = reply.rsplit('=').next().unwrap().parse().unwrap();
+        let state = send(&mut s, &mut r, &format!("WAIT id={id}"));
+        assert_eq!(state, format!("STATE id={id} state=done"));
+    }
+}

@@ -57,6 +57,7 @@ fn chunked_xla_run_matches_native_engine_bit_for_bit() {
         trace_stride: 0,
         shards: 1,
         pin_lanes: false,
+        local_rows: false,
     };
     let init_spins = SpinVec::random(256, &StatelessRng::new(seed));
     let mut native = SnowballEngine::with_spins(p.model(), cfg, init_spins.clone());
